@@ -1,0 +1,67 @@
+//! Routing & capacity explorer: interactively sweep the simulator's policy
+//! knobs — routing policy (§3.3 prefix-aware vs alternatives), prefill pool
+//! width, admission cap — and print the resulting serving metrics.  The
+//! DESIGN.md ablation bench in example form.
+//!
+//! Run: `cargo run --release --example routing_explorer`
+//!      (optional: --rate R --duration S --workload react|reflexion)
+
+use prefillshare::engine::config::{ClusterConfig, RoutingPolicy, SystemKind};
+use prefillshare::engine::sim::simulate;
+use prefillshare::util::cli::Args;
+use prefillshare::workload::{generate_trace, workload_by_name};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let rate = args.get_f64("rate", 4.0);
+    let dur = args.get_f64("duration", 180.0);
+    let wl = workload_by_name(args.get_or("workload", "react")).expect("workload");
+
+    println!("workload {} @ {rate} sess/s for {dur}s\n", wl.name);
+    println!(
+        "{:<28} {:>10} {:>10} {:>9} {:>8} {:>8}",
+        "configuration", "p95_lat_s", "tput_tok/s", "ttft_p95", "hit_pct", "staged"
+    );
+
+    // 1. Routing policy ablation (PrefillShare).
+    for (name, pol) in [
+        ("ps/prefix-aware", RoutingPolicy::PrefixAware),
+        ("ps/round-robin", RoutingPolicy::RoundRobin),
+        ("ps/random", RoutingPolicy::Random),
+    ] {
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.routing = pol;
+        let r = simulate(cfg, generate_trace(&wl, rate, dur, 0));
+        print_row(name, &r);
+    }
+
+    // 2. Prefill pool width (PrefillShare flexibility the baseline lacks).
+    for width in [2usize, 4, 6, 8] {
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.n_prefill_workers = width;
+        let r = simulate(cfg, generate_trace(&wl, rate, dur, 0));
+        print_row(&format!("ps/{width} prefill workers"), &r);
+    }
+
+    // 3. Admission cap (the Fig-4 knob) on both systems.
+    for cc in [24usize, 64, 128] {
+        for system in [SystemKind::Baseline, SystemKind::PrefillShare] {
+            let mut cfg = ClusterConfig::paper_default(system);
+            cfg.max_concurrent_sessions = cc;
+            let r = simulate(cfg, generate_trace(&wl, rate, dur, 0));
+            print_row(&format!("{}/cc={cc}", system.label()), &r);
+        }
+    }
+}
+
+fn print_row(name: &str, r: &prefillshare::engine::sim::SimResult) {
+    println!(
+        "{:<28} {:>10.2} {:>10.0} {:>9.3} {:>8.1} {:>8}",
+        name,
+        r.p95_session_latency,
+        r.throughput_tok_s,
+        r.ttft_p95,
+        100.0 * r.prefix_hit_ratio,
+        r.staging_events
+    );
+}

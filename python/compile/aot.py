@@ -1,0 +1,371 @@
+"""AOT pipeline: lower every (program × size × bucket) to HLO *text* and
+emit ``artifacts/manifest.json`` + seeded initial parameters (PSPM binary).
+
+HLO text — NOT ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the rust ``xla`` crate's XLA (xla_extension 0.5.1) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the rust binary is self-contained after.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--sizes tiny,small,medium]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Training batch geometry (shared by all sizes; see DESIGN.md).
+TRAIN_B = 8
+TRAIN_S = 128
+
+# Serving buckets.
+PREFILL_BUCKETS = {"tiny": [32, 64, 128, 256], "small": [64, 128], "medium": [64, 128]}
+DECODE_BATCHES = {"tiny": [1, 2, 4], "small": [1], "medium": [1]}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# PSPM parameter container (shared binary format with rust/src/model/pspm.rs)
+# ---------------------------------------------------------------------------
+
+PSPM_MAGIC = b"PSPM"
+DTYPE_CODE = {"f32": 0, "i32": 1}
+
+
+def write_pspm(path: str, named_tensors):
+    """named_tensors: iterable of (name, np.ndarray-like float32/int32)."""
+    import numpy as np
+
+    with open(path, "wb") as f:
+        items = list(named_tensors)
+        f.write(PSPM_MAGIC)
+        f.write(struct.pack("<II", 1, len(items)))
+        for name, arr in items:
+            arr = np.asarray(arr)
+            if arr.dtype == np.float32:
+                code = DTYPE_CODE["f32"]
+            elif arr.dtype == np.int32:
+                code = DTYPE_CODE["i32"]
+            else:
+                raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Spec helpers
+# ---------------------------------------------------------------------------
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, sds):
+    return {"name": name, "dtype": {"float32": "f32", "int32": "i32"}[str(sds.dtype)], "shape": list(sds.shape)}
+
+
+def param_io(cfg, prefix):
+    return [
+        {"name": f"{prefix}{n}", "dtype": dt, "shape": list(s)}
+        for n, s, dt in M.param_specs(cfg)
+    ]
+
+
+def param_sds(cfg):
+    return [_spec(s) for _, s, _ in M.param_specs(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Program builders: each returns (callable, example_args, input_io, output_io)
+# ---------------------------------------------------------------------------
+
+
+def build_prefill(cfg, batch, seq):
+    def fn(tokens, valid_len, *params):
+        return M.prefill_program(cfg, tokens, valid_len, *params)
+
+    args = [_spec((batch, seq), jnp.int32), _spec((batch,), jnp.int32)] + param_sds(cfg)
+    l, b, h, dh = cfg.n_layers, batch, cfg.n_heads, cfg.d_head
+    inputs = [
+        {"name": "tokens", "dtype": "i32", "shape": [batch, seq]},
+        {"name": "valid_len", "dtype": "i32", "shape": [batch]},
+    ] + param_io(cfg, "param:")
+    outputs = [
+        {"name": "logits", "dtype": "f32", "shape": [batch, seq, cfg.vocab]},
+        {"name": "k_cache", "dtype": "f32", "shape": [l, b, h, seq, dh]},
+        {"name": "v_cache", "dtype": "f32", "shape": [l, b, h, seq, dh]},
+    ]
+    return fn, args, inputs, outputs
+
+
+def build_decode(cfg, batch):
+    l, h, dh, sm = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.s_max
+
+    def fn(token, pos, k_cache, v_cache, *params):
+        return M.decode_program(cfg, token, pos, k_cache, v_cache, *params)
+
+    args = [
+        _spec((batch,), jnp.int32),
+        _spec((batch,), jnp.int32),
+        _spec((l, batch, h, sm, dh)),
+        _spec((l, batch, h, sm, dh)),
+    ] + param_sds(cfg)
+    inputs = [
+        {"name": "token", "dtype": "i32", "shape": [batch]},
+        {"name": "pos", "dtype": "i32", "shape": [batch]},
+        {"name": "k_cache", "dtype": "f32", "shape": [l, batch, h, sm, dh]},
+        {"name": "v_cache", "dtype": "f32", "shape": [l, batch, h, sm, dh]},
+    ] + param_io(cfg, "param:")
+    outputs = [
+        {"name": "logits", "dtype": "f32", "shape": [batch, cfg.vocab]},
+        {"name": "k_cache", "dtype": "f32", "shape": [l, batch, h, sm, dh]},
+        {"name": "v_cache", "dtype": "f32", "shape": [l, batch, h, sm, dh]},
+    ]
+    return fn, args, inputs, outputs
+
+
+def _train_common_io():
+    return [
+        {"name": "step", "dtype": "f32", "shape": []},
+        {"name": "lr", "dtype": "f32", "shape": []},
+        {"name": "tokens", "dtype": "i32", "shape": [TRAIN_B, TRAIN_S]},
+        {"name": "prompt_len", "dtype": "i32", "shape": [TRAIN_B]},
+        {"name": "total_len", "dtype": "i32", "shape": [TRAIN_B]},
+    ]
+
+
+def _train_common_sds():
+    return [
+        _spec(()),
+        _spec(()),
+        _spec((TRAIN_B, TRAIN_S), jnp.int32),
+        _spec((TRAIN_B,), jnp.int32),
+        _spec((TRAIN_B,), jnp.int32),
+    ]
+
+
+def build_train_full(cfg):
+    np_ = len(M.param_specs(cfg))
+
+    def fn(*flat):
+        params = list(flat[:np_])
+        m = list(flat[np_ : 2 * np_])
+        v = list(flat[2 * np_ : 3 * np_])
+        step, lr, tokens, prompt_len, total_len = flat[3 * np_ :]
+        return M.train_full_step(cfg, params, m, v, step, lr, tokens, prompt_len, total_len)
+
+    args = param_sds(cfg) * 3 + _train_common_sds()
+    inputs = (
+        param_io(cfg, "param:") + param_io(cfg, "m:") + param_io(cfg, "v:") + _train_common_io()
+    )
+    outputs = (
+        [{"name": "loss", "dtype": "f32", "shape": []}]
+        + param_io(cfg, "param:")
+        + param_io(cfg, "m:")
+        + param_io(cfg, "v:")
+    )
+    return fn, args, inputs, outputs
+
+
+def build_train_cc(cfg):
+    np_ = len(M.param_specs(cfg))
+
+    def fn(*flat):
+        base = list(flat[:np_])
+        dec = list(flat[np_ : 2 * np_])
+        m = list(flat[2 * np_ : 3 * np_])
+        v = list(flat[3 * np_ : 4 * np_])
+        step, lr, tokens, prompt_len, total_len = flat[4 * np_ :]
+        return M.train_cc_step(cfg, base, dec, m, v, step, lr, tokens, prompt_len, total_len)
+
+    args = param_sds(cfg) * 4 + _train_common_sds()
+    inputs = (
+        param_io(cfg, "base:")
+        + param_io(cfg, "param:")
+        + param_io(cfg, "m:")
+        + param_io(cfg, "v:")
+        + _train_common_io()
+    )
+    outputs = (
+        [{"name": "loss", "dtype": "f32", "shape": []}]
+        + param_io(cfg, "param:")
+        + param_io(cfg, "m:")
+        + param_io(cfg, "v:")
+    )
+    return fn, args, inputs, outputs
+
+
+def build_eval_full(cfg):
+    np_ = len(M.param_specs(cfg))
+
+    def fn(*flat):
+        params = list(flat[:np_])
+        tokens, prompt_len, total_len = flat[np_:]
+        return M.eval_full_loss(cfg, params, tokens, prompt_len, total_len)
+
+    args = param_sds(cfg) + [
+        _spec((TRAIN_B, TRAIN_S), jnp.int32),
+        _spec((TRAIN_B,), jnp.int32),
+        _spec((TRAIN_B,), jnp.int32),
+    ]
+    inputs = param_io(cfg, "param:") + [
+        {"name": "tokens", "dtype": "i32", "shape": [TRAIN_B, TRAIN_S]},
+        {"name": "prompt_len", "dtype": "i32", "shape": [TRAIN_B]},
+        {"name": "total_len", "dtype": "i32", "shape": [TRAIN_B]},
+    ]
+    outputs = [{"name": "loss", "dtype": "f32", "shape": []}]
+    return fn, args, inputs, outputs
+
+
+def build_eval_cc(cfg):
+    np_ = len(M.param_specs(cfg))
+
+    def fn(*flat):
+        base = list(flat[:np_])
+        dec = list(flat[np_ : 2 * np_])
+        tokens, prompt_len, total_len = flat[2 * np_ :]
+        return M.eval_cc_loss(cfg, base, dec, tokens, prompt_len, total_len)
+
+    args = param_sds(cfg) * 2 + [
+        _spec((TRAIN_B, TRAIN_S), jnp.int32),
+        _spec((TRAIN_B,), jnp.int32),
+        _spec((TRAIN_B,), jnp.int32),
+    ]
+    inputs = (
+        param_io(cfg, "base:")
+        + param_io(cfg, "param:")
+        + [
+            {"name": "tokens", "dtype": "i32", "shape": [TRAIN_B, TRAIN_S]},
+            {"name": "prompt_len", "dtype": "i32", "shape": [TRAIN_B]},
+            {"name": "total_len", "dtype": "i32", "shape": [TRAIN_B]},
+        ]
+    )
+    outputs = [{"name": "loss", "dtype": "f32", "shape": []}]
+    return fn, args, inputs, outputs
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def programs_for(size: str):
+    cfg = M.CONFIGS[size]
+    progs = []
+    for s in PREFILL_BUCKETS[size]:
+        progs.append((f"prefill_{size}_s{s}", "prefill", build_prefill(cfg, 1, s), {"seq": s, "batch": 1}))
+    for b in DECODE_BATCHES[size]:
+        progs.append((f"decode_{size}_b{b}", "decode", build_decode(cfg, b), {"batch": b, "s_max": cfg.s_max}))
+    progs.append((f"train_full_{size}", "train_full", build_train_full(cfg), {"batch": TRAIN_B, "seq": TRAIN_S}))
+    progs.append((f"train_cc_{size}", "train_cc", build_train_cc(cfg), {"batch": TRAIN_B, "seq": TRAIN_S}))
+    progs.append((f"eval_full_{size}", "eval_full", build_eval_full(cfg), {"batch": TRAIN_B, "seq": TRAIN_S}))
+    progs.append((f"eval_cc_{size}", "eval_cc", build_eval_cc(cfg), {"batch": TRAIN_B, "seq": TRAIN_S}))
+    return progs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,small,medium")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    sizes = [s for s in args.sizes.split(",") if s]
+
+    manifest = {
+        "version": 1,
+        "train": {"batch": TRAIN_B, "seq": TRAIN_S},
+        "vocab": {"size": M.VOCAB_SIZE, "bos": M.BOS_ID, "eos": M.EOS_ID, "pad": M.PAD_ID},
+        "models": {},
+        "programs": [],
+    }
+
+    for size in sizes:
+        cfg = M.CONFIGS[size]
+        manifest["models"][size] = {
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+            "d_ff": cfg.d_ff,
+            "s_max": cfg.s_max,
+            "vocab": cfg.vocab,
+            "n_params": int(cfg.num_params()),
+            "n_tensors": len(M.param_specs(cfg)),
+            "init_params": f"params_init_{size}.bin",
+            "param_specs": [
+                {"name": n, "shape": list(s), "dtype": dt} for n, s, dt in M.param_specs(cfg)
+            ],
+        }
+
+        # Seeded init weights — the "pretraining" starting point for the rust
+        # training driver (it pretrains the base in-situ; see rust/src/training).
+        t0 = time.time()
+        params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+        names = [n for n, _, _ in M.param_specs(cfg)]
+        write_pspm(os.path.join(args.out_dir, f"params_init_{size}.bin"), zip(names, params))
+        print(f"[aot] {size}: init params ({cfg.num_params():,}) in {time.time()-t0:.1f}s", flush=True)
+
+        for name, kind, (fn, sds, inputs, outputs), meta in programs_for(size):
+            t0 = time.time()
+            # keep_unused=True: jit would otherwise prune parameters that are
+            # dead in a given program (e.g. the frozen base's lm_head inside
+            # train_cc — only its KV cache is consumed), which would silently
+            # change the positional input interface the rust driver feeds.
+            lowered = jax.jit(fn, keep_unused=True).lower(*sds)
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["programs"].append(
+                {
+                    "name": name,
+                    "kind": kind,
+                    "model": size,
+                    "file": f"{name}.hlo.txt",
+                    "meta": meta,
+                    "inputs": inputs,
+                    "outputs": outputs,
+                }
+            )
+            print(
+                f"[aot] lowered {name} ({len(text)/1e6:.2f} MB HLO) in {time.time()-t0:.1f}s",
+                flush=True,
+            )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest['programs'])} programs")
+
+
+if __name__ == "__main__":
+    main()

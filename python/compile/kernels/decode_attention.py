@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: single-step decode attention over a padded KV cache.
+
+TPU re-think of PagedAttention (DESIGN.md §Hardware-Adaptation): the block
+-table indirection of the paper's CUDA kernel lives in the L3 rust block
+manager; the kernel itself sees a *contiguous padded* cache
+``[B, H, S_max, d]`` plus a per-batch valid length ``cur_len``, which keeps
+the HBM→VMEM schedule fully static (every grid cell streams the same tile
+sequence).  One query row per (batch, head) attends to ``cache[:cur_len]``
+with an online-softmax scan over ``block_k`` tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .flash_attention import NEG_INF
+
+
+def _decode_attention_kernel(
+    len_ref,  # [1] int32       number of valid cache entries for this row
+    q_ref,    # [d]             the single query row
+    k_ref,    # [S_max, d]
+    v_ref,    # [S_max, d]
+    o_ref,    # [d]
+    *,
+    block_k: int,
+    sm_scale: float,
+):
+    d = q_ref.shape[-1]
+    s_max = k_ref.shape[0]
+    num_kb = s_max // block_k
+    cur_len = len_ref[0]
+
+    q = q_ref[...].astype(jnp.float32)[None, :] * sm_scale  # [1, d]
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        k_idx = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+
+        s = q @ k.T  # [1, block_k]
+        s = jnp.where((k_idx < cur_len)[None, :], s, NEG_INF)
+
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((1, d), jnp.float32)
+    m0 = jnp.full((1,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+
+    l_safe = jnp.where(l_i == 0.0, 1.0, l_i)
+    o_ref[...] = (acc / l_safe[:, None])[0].astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # [B, H, d]       one query token per batch row
+    k_cache: jax.Array,  # [B, H, S_max, d]
+    v_cache: jax.Array,  # [B, H, S_max, d]
+    cur_len: jax.Array,  # [B] int32 — cache entries >= cur_len are masked
+    *,
+    block_k: int = 128,
+    sm_scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-token attention against a padded per-session KV cache."""
+    batch, heads, d = q.shape
+    s_max = k_cache.shape[2]
+    block_k = min(block_k, s_max)
+    # Snap down to a divisor of s_max so the static tile schedule covers the
+    # cache exactly (e.g. s_max=192 -> block_k=64).
+    while s_max % block_k:
+        block_k //= 2
+    if block_k == 0:
+        raise ValueError(f"no power-of-two block divides s_max {s_max}")
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+
+    kernel = functools.partial(
+        _decode_attention_kernel, block_k=block_k, sm_scale=sm_scale
+    )
+    grid = (batch, heads)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+            pl.BlockSpec((None, None, d), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, None, s_max, d), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, s_max, d), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, d), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(cur_len.astype(jnp.int32), q, k_cache, v_cache)
+    return out

@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: blocked causal flash attention for the prefill phase.
+
+This is the TPU re-think of the paper's CUDA FlashAttention dependency
+(DESIGN.md §Hardware-Adaptation): Q is tiled into ``(block_q, d_head)``
+VMEM tiles via ``BlockSpec``; the kernel scans K/V in ``(block_k, d_head)``
+tiles with an online-softmax accumulator, so the full ``S×S`` score matrix
+is never materialized.  The MXU sees ``(block_q×d)·(d×block_k)`` matmuls.
+
+The kernel supports *padded* prompts: a per-batch ``valid_len`` input masks
+key positions ``>= valid_len`` in addition to the causal mask, which is how
+the serving path runs bucketed sequence lengths (S ∈ {32, 64, 128, 256}).
+
+All Pallas here is lowered with ``interpret=True``: the CPU PJRT plugin the
+rust runtime uses cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md).  Real-TPU perf is estimated from the VMEM
+footprint of these block shapes in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Large-but-finite mask value.  -inf produces NaNs when an entire row is
+# masked (fully-padded query positions); a finite value keeps the softmax
+# well-defined and the garbage rows are dropped by the caller's loss mask.
+NEG_INF = -1e30
+
+
+def _flash_attention_kernel(
+    len_ref,  # [1] int32            valid key length for this batch row
+    q_ref,    # [block_q, d]         current Q tile
+    k_ref,    # [S, d]               full K for this (batch, head)
+    v_ref,    # [S, d]               full V for this (batch, head)
+    o_ref,    # [block_q, d]         output tile
+    *,
+    block_k: int,
+    sm_scale: float,
+    causal: bool,
+):
+    block_q, d = q_ref.shape
+    seq_len = k_ref.shape[0]
+    num_kb = seq_len // block_k
+
+    q_blk = pl.program_id(2)
+    q_idx = q_blk * block_q + jax.lax.iota(jnp.int32, block_q)  # [block_q]
+    valid_len = len_ref[0]
+
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        k_idx = kb * block_k + jax.lax.iota(jnp.int32, block_k)  # [block_k]
+
+        s = q @ k.T  # [block_q, block_k] on the MXU
+        mask = k_idx[None, :] < valid_len
+        if causal:
+            mask = mask & (k_idx[None, :] <= q_idx[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+
+        # Online softmax (the FlashAttention recurrence).
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))  # [block_q]
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+
+    # Rows whose mask was empty everywhere have l_i == 0; guard the divide.
+    l_safe = jnp.where(l_i == 0.0, 1.0, l_i)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,          # [B, H, S, d]
+    k: jax.Array,          # [B, H, S, d]
+    v: jax.Array,          # [B, H, S, d]
+    valid_len: jax.Array,  # [B] int32 — keys >= valid_len are masked
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    sm_scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked causal attention with per-batch length masking.
+
+    Grid is ``(B, H, S / block_q)``; each cell owns one Q tile and scans the
+    K/V sequence in ``block_k`` tiles.  Block sizes are clamped to S so the
+    small bucketed sequence lengths divide evenly.
+    """
+    batch, heads, seq_len, d = q.shape
+    block_q = min(block_q, seq_len)
+    block_k = min(block_k, seq_len)
+    if seq_len % block_q or seq_len % block_k:
+        raise ValueError(f"seq_len {seq_len} must divide blocks {block_q}/{block_k}")
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+
+    kernel = functools.partial(
+        _flash_attention_kernel,
+        block_k=block_k,
+        sm_scale=sm_scale,
+        causal=causal,
+    )
+    grid = (batch, heads, seq_len // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i: (b,)),  # valid_len (per-batch)
+            # `None` squeezes the picked batch/head dims out of the ref.
+            pl.BlockSpec((None, None, block_q, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, seq_len, d), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, seq_len, d), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, d), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(valid_len.astype(jnp.int32), q, k, v)

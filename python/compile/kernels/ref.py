@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite asserts the kernels against
+(``assert_allclose``), and they are also what the *training* artifacts use
+for attention: ``pallas_call`` has no autodiff rule, and the paper itself
+trains with a standard stack (LMFlow) while only *serving* runs the
+optimized kernels — we mirror that split (DESIGN.md §Perf L2 notes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,          # [B, H, S, d]
+    k: jax.Array,          # [B, H, S, d]
+    v: jax.Array,          # [B, H, S, d]
+    valid_len: jax.Array,  # [B] int32
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Naive softmax attention with causal + per-batch length masking."""
+    b, h, s, d = q.shape
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * sm_scale
+
+    k_idx = jnp.arange(s)
+    mask = k_idx[None, None, None, :] < valid_len[:, None, None, None]
+    if causal:
+        q_idx = jnp.arange(s)
+        mask = mask & (k_idx[None, None, None, :] <= q_idx[None, None, :, None])
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,        # [B, H, d]
+    k_cache: jax.Array,  # [B, H, S_max, d]
+    v_cache: jax.Array,  # [B, H, S_max, d]
+    cur_len: jax.Array,  # [B] int32
+    *,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Single-query attention over a padded cache, length-masked."""
+    b, h, d = q.shape
+    s_max = k_cache.shape[2]
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    scores = jnp.einsum(
+        "bhd,bhkd->bhk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * sm_scale
+    k_idx = jnp.arange(s_max)
+    mask = k_idx[None, None, :] < cur_len[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", w, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

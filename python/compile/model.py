@@ -1,0 +1,440 @@
+"""L2: the PrefillShare transformer in JAX — prefill, decode-step, and the
+two training programs (full fine-tuning and cache-conditioned fine-tuning).
+
+Everything in this file is *build-time only*: ``aot.py`` lowers each program
+once to HLO text and the rust coordinator executes the artifacts through
+PJRT.  Weights are **runtime inputs**, never baked constants, so a single
+prefill artifact serves the frozen base model and every fine-tuned variant —
+that is what makes cross-model prefill sharing executable for real
+(DESIGN.md "Artifact set").
+
+Model: decoder-only transformer, byte-level vocab (256 bytes + BOS/EOS/PAD),
+RoPE, pre-LN, GELU MLP.  The KV cache stores *post-RoPE* keys, exactly like
+production serving stacks, so a cache handoff carries everything a decode
+module needs.
+
+PrefillShare factorization (paper §3.1/§3.2):
+  * prefill module  = the frozen base parameterization; it owns prompt
+    positions ``0 .. plen-2`` of the KV cache.
+  * decode module   = task parameterization; it consumes the base cache and
+    owns positions ``plen-1 ..`` (the last prompt token is re-fed as the
+    decode module's first input so the first generated token is produced by
+    the *decode* parameters, matching Eq. (5): the base model "computes the
+    KV cache but does not participate in generation").
+
+Attention flavours:
+  * serving artifacts (prefill / decode-step) call the L1 Pallas kernels;
+  * training artifacts use the pure-jnp oracle from ``kernels/ref.py``
+    because ``pallas_call`` has no autodiff rule (the paper also trains on a
+    standard stack and only serves through the optimized path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attention import flash_attention
+from .kernels.decode_attention import decode_attention
+from .kernels.ref import attention_ref, decode_attention_ref
+
+# ---------------------------------------------------------------------------
+# Vocabulary (byte-level)
+# ---------------------------------------------------------------------------
+
+VOCAB_BYTES = 256
+BOS_ID = 256
+EOS_ID = 257
+PAD_ID = 258
+VOCAB_SIZE = 259
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for one backbone size."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    s_max: int          # decode-time KV cache capacity (tokens)
+    vocab: int = VOCAB_SIZE
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def num_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s, _ in param_specs(self))
+
+
+# The three backbone sizes used for the Table-2 scale sweep.  "tiny" is also
+# the real-execution serving backbone (examples/, real backend).
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", d_model=64, n_layers=2, n_heads=2, d_ff=256, s_max=256),
+    "small": ModelConfig("small", d_model=128, n_layers=4, n_heads=4, d_ff=512, s_max=192),
+    "medium": ModelConfig("medium", d_model=256, n_layers=6, n_heads=8, d_ff=1024, s_max=192),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters: a *named, ordered* flat list so the rust side can address each
+# tensor by name in the PSPM binary format and as HLO inputs by position.
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """(name, shape, dtype) for every parameter, in canonical order."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    specs: List[Tuple[str, Tuple[int, ...], str]] = [("tok_emb", (v, d), "f32")]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        specs += [
+            (p + "ln1_scale", (d,), "f32"),
+            (p + "ln1_bias", (d,), "f32"),
+            (p + "wq", (d, d), "f32"),
+            (p + "wk", (d, d), "f32"),
+            (p + "wv", (d, d), "f32"),
+            (p + "wo", (d, d), "f32"),
+            (p + "ln2_scale", (d,), "f32"),
+            (p + "ln2_bias", (d,), "f32"),
+            (p + "w1", (d, f), "f32"),
+            (p + "b1", (f,), "f32"),
+            (p + "w2", (f, d), "f32"),
+            (p + "b2", (d,), "f32"),
+        ]
+    specs += [
+        ("ln_f_scale", (d,), "f32"),
+        ("ln_f_bias", (d,), "f32"),
+        ("lm_head", (d, v), "f32"),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """Scaled-normal init; scale/bias tensors get 1/0."""
+    params = []
+    for name, shape, _ in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("bias", "b1", "b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = fan_in ** -0.5
+            if name.endswith("wo") or name.endswith("w2"):
+                std /= (2 * cfg.n_layers) ** 0.5  # GPT-2 style residual scaling
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def params_as_dict(cfg: ModelConfig, flat: List[jax.Array]) -> Dict[str, jax.Array]:
+    names = [n for n, _, _ in param_specs(cfg)]
+    assert len(names) == len(flat), (len(names), len(flat))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def rope_angles(positions: jax.Array, d_head: int) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for RoPE at the given integer positions ([...]->[..., d/2])."""
+    half = d_head // 2
+    inv_freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (x1,x2) -> (x1 cos - x2 sin, x1 sin + x2 cos).
+
+    x: [..., d]; cos/sin broadcastable to [..., d/2].
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    # [B, S, D] -> [B, H, S, dh]
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    # [B, H, S, dh] -> [B, S, D]
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward_seq(
+    cfg: ModelConfig,
+    tokens: jax.Array,       # [B, S] int32
+    valid_len: jax.Array,    # [B] int32 (attention length mask)
+    params: Dict[str, jax.Array],
+    *,
+    use_pallas: bool,
+    kv_override: Tuple[jax.Array, jax.Array] | None = None,
+    override_mask: jax.Array | None = None,  # [B, S] bool: True -> use override KV
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence forward (prefill / teacher-forced training).
+
+    Returns (logits [B,S,V], K [L,B,H,S,dh], V [L,B,H,S,dh]).
+
+    ``kv_override``/``override_mask`` implement cache-conditioned execution:
+    at positions where the mask is True, the attention keys/values are taken
+    from the override cache (the frozen base module's cache) instead of the
+    ones this parameterization just computed.  This is Eq. (7)'s
+    "conditioning on C_base" expressed as a masked mix, and it also powers
+    the Fig-2 naive-sharing sweep (arbitrary per-position mixing).
+    """
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["tok_emb"][tokens]  # [B, S, D]
+    pos = jnp.arange(s)
+    cos, sin = rope_angles(pos, dh)  # [S, dh/2]
+
+    attn = flash_attention if use_pallas else attention_ref
+
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        xn = layer_norm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        q = _split_heads(xn @ params[p + "wq"], h)  # [B,H,S,dh]
+        k = _split_heads(xn @ params[p + "wk"], h)
+        v = _split_heads(xn @ params[p + "wv"], h)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+        if kv_override is not None:
+            kb, vb = kv_override  # [L,B,H,S,dh]
+            m = override_mask[:, None, :, None]  # [B,1,S,1]
+            k = jnp.where(m, kb[l], k)
+            v = jnp.where(m, vb[l], v)
+
+        ks.append(k)
+        vs.append(v)
+        o = attn(q, k, v, valid_len, causal=True)
+        x = x + _merge_heads(o) @ params[p + "wo"]
+
+        xn = layer_norm(x, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        hdn = jax.nn.gelu(xn @ params[p + "w1"] + params[p + "b1"])
+        x = x + hdn @ params[p + "w2"] + params[p + "b2"]
+
+    x = layer_norm(x, params["ln_f_scale"], params["ln_f_bias"])
+    logits = x @ params["lm_head"]  # [B, S, V]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    token: jax.Array,     # [B] int32  current input token
+    pos: jax.Array,       # [B] int32  its position (cache write slot)
+    k_cache: jax.Array,   # [L, B, H, S_max, dh]
+    v_cache: jax.Array,   # [L, B, H, S_max, dh]
+    params: Dict[str, jax.Array],
+    *,
+    use_pallas: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One autoregressive step: write KV at ``pos``, attend over ``0..pos``.
+
+    Returns (logits [B,V], k_cache', v_cache').  The caller guarantees
+    ``pos < s_max``; padded cache slots beyond ``pos`` are never attended
+    because the kernel masks ``idx >= pos+1``.
+    """
+    b = token.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["tok_emb"][token]  # [B, D]
+    cos, sin = rope_angles(pos, dh)  # [B, dh/2]
+
+    attn = decode_attention if use_pallas else decode_attention_ref
+    cur_len = pos + 1
+
+    def write(cache_l, new_bhd, p):
+        # cache_l [B,H,S,dh], new [B,H,dh] -> write row at per-batch position.
+        def one(cb, nb, pb):
+            return jax.lax.dynamic_update_slice(cb, nb[:, None, :], (0, pb, 0))
+        return jax.vmap(one)(cache_l, new_bhd, p)
+
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        xn = layer_norm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        q = (xn @ params[p + "wq"]).reshape(b, h, dh)
+        k = (xn @ params[p + "wk"]).reshape(b, h, dh)
+        v = (xn @ params[p + "wv"]).reshape(b, h, dh)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+        kc = write(k_cache[l], k, pos)
+        vc = write(v_cache[l], v, pos)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        o = attn(q, kc, vc, cur_len)  # [B,H,dh]
+        x = x + o.reshape(b, h * dh) @ params[p + "wo"]
+
+        xn = layer_norm(x, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        hdn = jax.nn.gelu(xn @ params[p + "w1"] + params[p + "b1"])
+        x = x + hdn @ params[p + "w2"] + params[p + "b2"]
+
+    x = layer_norm(x, params["ln_f_scale"], params["ln_f_bias"])
+    logits = x @ params["lm_head"]  # [B, V]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def _target_loss(
+    logits: jax.Array,      # [B, S, V]
+    tokens: jax.Array,      # [B, S]
+    prompt_len: jax.Array,  # [B]
+    total_len: jax.Array,   # [B]
+) -> jax.Array:
+    """Mean CE over target positions: predict tokens[t] from logits[t-1] for
+    t in [prompt_len, total_len) — i.e. supervised-fine-tuning masking."""
+    b, s, v = logits.shape
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]  # predicted at position t-1
+    lp = jnp.take_along_axis(logp[:, :-1, :], tgt[..., None], axis=-1)[..., 0]
+    t_idx = jnp.arange(1, s)[None, :]
+    mask = (t_idx >= prompt_len[:, None]) & (t_idx < total_len[:, None])
+    mask = mask.astype(jnp.float32)
+    return -(lp * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_full(cfg, flat_params, tokens, prompt_len, total_len):
+    params = params_as_dict(cfg, flat_params)
+    logits, _, _ = forward_seq(cfg, tokens, total_len, params, use_pallas=False)
+    return _target_loss(logits, tokens, prompt_len, total_len)
+
+
+def loss_cache_conditioned(cfg, flat_dec, base_k, base_v, tokens, prompt_len, total_len):
+    """Eq. (7): decode-module CE conditioned on the *base* prompt cache.
+
+    The base cache owns positions ``0 .. plen-2``; the decode module owns
+    ``plen-1 ..`` (it re-processes the last prompt token to emit the first
+    target token, see module docstring).
+    """
+    params = params_as_dict(cfg, flat_dec)
+    override = jnp.arange(tokens.shape[1])[None, :] < (prompt_len[:, None] - 1)
+    logits, _, _ = forward_seq(
+        cfg, tokens, total_len, params,
+        use_pallas=False, kv_override=(base_k, base_v), override_mask=override,
+    )
+    return _target_loss(logits, tokens, prompt_len, total_len)
+
+
+def base_prompt_cache(cfg, flat_base, tokens, total_len):
+    """Frozen prefill-module pass: just the KV cache, gradients never flow
+    here (the train step takes grads w.r.t. decode params only)."""
+    params = params_as_dict(cfg, flat_base)
+    _, kb, vb = forward_seq(cfg, tokens, total_len, params, use_pallas=False)
+    return jax.lax.stop_gradient(kb), jax.lax.stop_gradient(vb)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (in-graph optimizer — the train-step artifacts carry their own update)
+# ---------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.1  # paper Appendix A
+
+
+def adamw_update(cfg, flat_params, grads, m, v, step, lr):
+    """One AdamW step (Loshchilov & Hutter); decay only on >=2-D tensors."""
+    names = [n for n, _, _ in param_specs(cfg)]
+    t = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_p, new_m, new_v = [], [], []
+    for name, p, g, mi, vi in zip(names, flat_params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        if p.ndim >= 2:
+            upd = upd + WEIGHT_DECAY * p
+        new_p.append(p - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Train / eval programs (these exact functions are lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def train_full_step(cfg, flat_params, m, v, step, lr, tokens, prompt_len, total_len):
+    """Full fine-tuning baseline: update every parameter."""
+    loss, grads = jax.value_and_grad(
+        lambda fp: loss_full(cfg, fp, tokens, prompt_len, total_len)
+    )(flat_params)
+    new_p, new_m, new_v = adamw_update(cfg, flat_params, grads, m, v, step, lr)
+    return (loss, *new_p, *new_m, *new_v)
+
+
+def train_cc_step(cfg, flat_base, flat_dec, m, v, step, lr, tokens, prompt_len, total_len):
+    """Cache-conditioned fine-tuning (PrefillShare): the base cache is
+    computed in-graph, treated as a constant, and only decode params move."""
+    base_k, base_v = base_prompt_cache(cfg, flat_base, tokens, total_len)
+    loss, grads = jax.value_and_grad(
+        lambda fp: loss_cache_conditioned(
+            cfg, fp, base_k, base_v, tokens, prompt_len, total_len
+        )
+    )(flat_dec)
+    new_p, new_m, new_v = adamw_update(cfg, flat_dec, grads, m, v, step, lr)
+    return (loss, *new_p, *new_m, *new_v)
+
+
+def eval_full_loss(cfg, flat_params, tokens, prompt_len, total_len):
+    return (loss_full(cfg, flat_params, tokens, prompt_len, total_len),)
+
+
+def eval_cc_loss(cfg, flat_base, flat_dec, tokens, prompt_len, total_len):
+    base_k, base_v = base_prompt_cache(cfg, flat_base, tokens, total_len)
+    return (
+        loss_cache_conditioned(cfg, flat_dec, base_k, base_v, tokens, prompt_len, total_len),
+    )
+
+
+def prefill_program(cfg, tokens, valid_len, *flat_params):
+    """Serving prefill: Pallas flash attention, returns full-seq logits + cache."""
+    params = params_as_dict(cfg, list(flat_params))
+    logits, k, v = forward_seq(cfg, tokens, valid_len, params, use_pallas=True)
+    return logits, k, v
+
+
+def decode_program(cfg, token, pos, k_cache, v_cache, *flat_params):
+    """Serving decode step: Pallas decode attention over the padded cache."""
+    params = params_as_dict(cfg, list(flat_params))
+    logits, k, v = decode_step(cfg, token, pos, k_cache, v_cache, params, use_pallas=True)
+    return logits, k, v

@@ -1,0 +1,103 @@
+"""AOT pipeline sanity: PSPM round-trip, manifest/program spec shape checks,
+and an HLO-text lowering smoke test (the rust loader's input contract)."""
+
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import compile.aot as A
+import compile.model as M
+
+
+def read_pspm(path):
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == A.PSPM_MAGIC
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = int(np.prod(dims)) if ndim else 1
+            dt = {0: np.float32, 1: np.int32}[code]
+            out[name] = np.frombuffer(f.read(n * 4), dt).reshape(dims)
+    return out
+
+
+def test_pspm_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "p.bin")
+        a = np.arange(12, dtype=np.float32).reshape(3, 4)
+        b = np.array([1, 2, 3], dtype=np.int32)
+        s = np.float32(7.5).reshape(())  # 0-d tensor
+        A.write_pspm(path, [("a", a), ("b", b), ("s", s)])
+        got = read_pspm(path)
+        np.testing.assert_array_equal(got["a"], a)
+        np.testing.assert_array_equal(got["b"], b)
+        assert got["s"].shape == ()
+
+
+def test_init_params_match_specs():
+    cfg = M.CONFIGS["tiny"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    specs = M.param_specs(cfg)
+    assert len(params) == len(specs)
+    for (name, shape, _), p in zip(specs, params):
+        assert p.shape == tuple(shape), name
+    # deterministic given the seed
+    again = M.init_params(cfg, jax.random.PRNGKey(0))
+    for p, q in zip(params, again):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+def test_program_builders_cover_io():
+    """Every builder's declared input spec count must match its example args."""
+    cfg = M.CONFIGS["tiny"]
+    for build in [
+        lambda: A.build_prefill(cfg, 1, 32),
+        lambda: A.build_decode(cfg, 2),
+        lambda: A.build_train_full(cfg),
+        lambda: A.build_train_cc(cfg),
+        lambda: A.build_eval_full(cfg),
+        lambda: A.build_eval_cc(cfg),
+    ]:
+        fn, sds, inputs, outputs = build()
+        assert len(sds) == len(inputs)
+        for spec, io in zip(sds, inputs):
+            assert list(spec.shape) == io["shape"], io["name"]
+
+
+def test_lowering_produces_parseable_hlo_text():
+    cfg = M.CONFIGS["tiny"]
+    fn, sds, inputs, outputs = A.build_prefill(cfg, 1, 32)
+    text = A.to_hlo_text(jax.jit(fn).lower(*sds))
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+    # `parameter(` also appears in nested fusion computations, so entry
+    # params are a lower bound; the entry layout must carry the token shape.
+    assert text.count("parameter(") >= len(inputs)
+    assert "s32[1,32]" in text  # tokens input in entry_computation_layout
+
+
+def test_manifest_written(tmp_path=None):
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        import pytest
+
+        pytest.skip("artifacts not built yet (run `make artifacts`)")
+    man = json.load(open(mpath))
+    assert man["vocab"]["size"] == M.VOCAB_SIZE
+    for prog in man["programs"]:
+        assert os.path.exists(os.path.join(art, prog["file"])), prog["name"]
+        assert prog["kind"] in {"prefill", "decode", "train_full", "train_cc", "eval_full", "eval_cc"}
+    for size, mm in man["models"].items():
+        assert os.path.exists(os.path.join(art, mm["init_params"]))
+        assert mm["n_tensors"] == len(mm["param_specs"])

@@ -1,0 +1,164 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, block sizes and length masks — the CORE
+correctness signal for the serving artifacts (DESIGN.md: the rust hot path
+executes exactly these kernels via the lowered HLO).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ref import attention_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash_attention (prefill)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    heads=st.integers(1, 4),
+    seq_pow=st.integers(4, 7),        # S in {16..128}
+    d_head=st.sampled_from([8, 16, 32]),
+    block_pow=st.integers(3, 5),      # blocks in {8..32}
+    data=st.data(),
+)
+def test_flash_attention_matches_ref(batch, heads, seq_pow, d_head, block_pow, data):
+    seq = 2 ** seq_pow
+    block = min(2 ** block_pow, seq)
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 2**31 - 1)))
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (batch, heads, seq, d_head), jnp.float32)
+    k = rand(kk, (batch, heads, seq, d_head), jnp.float32)
+    v = rand(kv, (batch, heads, seq, d_head), jnp.float32)
+    valid = jnp.array(
+        [data.draw(st.integers(1, seq)) for _ in range(batch)], jnp.int32
+    )
+    out = flash_attention(q, k, v, valid, block_q=block, block_k=block)
+    ref = attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOLS[jnp.float32])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    shape = (2, 2, 64, 16)
+    q, k, v = rand(kq, shape, dtype), rand(kk, shape, dtype), rand(kv, shape, dtype)
+    valid = jnp.array([64, 33], jnp.int32)
+    out = flash_attention(q, k, v, valid, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, valid)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOLS[dtype]
+    )
+
+
+def test_flash_attention_causality():
+    """Changing token j must not affect outputs at positions < j."""
+    key = jax.random.PRNGKey(1)
+    kq, kk, kv = jax.random.split(key, 3)
+    shape = (1, 2, 32, 8)
+    q, k, v = rand(kq, shape, jnp.float32), rand(kk, shape, jnp.float32), rand(kv, shape, jnp.float32)
+    valid = jnp.array([32], jnp.int32)
+    base = flash_attention(q, k, v, valid, block_q=8, block_k=8)
+    k2 = k.at[:, :, 20, :].add(3.0)
+    v2 = v.at[:, :, 20, :].add(-2.0)
+    pert = flash_attention(q, k2, v2, valid, block_q=8, block_k=8)
+    np.testing.assert_allclose(
+        np.asarray(base[:, :, :20]), np.asarray(pert[:, :, :20]), rtol=1e-6, atol=1e-6
+    )
+    assert not np.allclose(np.asarray(base[:, :, 20:]), np.asarray(pert[:, :, 20:]))
+
+
+def test_flash_attention_length_mask_equals_truncation():
+    """Attention over a padded sequence with valid_len=n must equal attention
+    over the n-token truncation (the bucketed-prefill invariant)."""
+    key = jax.random.PRNGKey(2)
+    kq, kk, kv = jax.random.split(key, 3)
+    full = (1, 2, 64, 16)
+    q, k, v = rand(kq, full, jnp.float32), rand(kk, full, jnp.float32), rand(kv, full, jnp.float32)
+    n = 40
+    out_pad = flash_attention(q, k, v, jnp.array([n], jnp.int32), block_q=16, block_k=16)
+    out_cut = attention_ref(q[:, :, :n], k[:, :, :n], v[:, :, :n], jnp.array([n], jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(out_pad[:, :, :n]), np.asarray(out_cut), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_flash_attention_rejects_bad_blocks():
+    q = jnp.zeros((1, 1, 48, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        flash_attention(q, q, q, jnp.array([48], jnp.int32), block_q=32, block_k=32)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention (single step)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 4),
+    heads=st.integers(1, 4),
+    smax_pow=st.integers(4, 8),
+    d_head=st.sampled_from([8, 16, 32]),
+    block_pow=st.integers(3, 6),
+    data=st.data(),
+)
+def test_decode_attention_matches_ref(batch, heads, smax_pow, d_head, block_pow, data):
+    s_max = 2 ** smax_pow
+    block = min(2 ** block_pow, s_max)
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 2**31 - 1)))
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (batch, heads, d_head), jnp.float32)
+    kc = rand(kk, (batch, heads, s_max, d_head), jnp.float32)
+    vc = rand(kv, (batch, heads, s_max, d_head), jnp.float32)
+    cur = jnp.array([data.draw(st.integers(1, s_max)) for _ in range(batch)], jnp.int32)
+    out = decode_attention(q, kc, vc, cur, block_k=block)
+    ref = decode_attention_ref(q, kc, vc, cur)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_ignores_padding_garbage():
+    """Slots >= cur_len must not influence the output (handoff invariant:
+    decode workers receive caches whose tail is uninitialized)."""
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (2, 2, 16), jnp.float32)
+    kc = rand(kk, (2, 2, 64, 16), jnp.float32)
+    vc = rand(kv, (2, 2, 64, 16), jnp.float32)
+    cur = jnp.array([10, 30], jnp.int32)
+    base = decode_attention(q, kc, vc, cur, block_k=16)
+    kc2 = kc.at[:, :, 50:, :].set(1e9)
+    vc2 = vc.at[:, :, 50:, :].set(-1e9)
+    pert = decode_attention(q, kc2, vc2, cur, block_k=16)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pert), rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_single_valid_slot():
+    """cur_len == 1 reduces to v[0] exactly (softmax over one key)."""
+    key = jax.random.PRNGKey(4)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (1, 2, 8), jnp.float32)
+    kc = rand(kk, (1, 2, 32, 8), jnp.float32)
+    vc = rand(kv, (1, 2, 32, 8), jnp.float32)
+    out = decode_attention(q, kc, vc, jnp.array([1], jnp.int32), block_k=8)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(vc[0, :, 0, :]), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,267 @@
+"""L2 model correctness: the invariants the whole serving design rests on.
+
+The crucial ones:
+  * prefill/decode consistency — running the prompt through ``forward_seq``
+    then generating with ``decode_step`` must equal teacher-forced full-seq
+    logits (this is what makes a handed-off cache *valid*);
+  * cross-parameterization cache consistency — a decode module consuming a
+    *base* cache inside ``decode_step`` must match the mixed-cache
+    ``forward_seq`` the CC training loss uses (training/serving alignment,
+    paper §3.2 "matches the inference-time cache usage");
+  * CC gradients move only decode params and the loss actually decreases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig("test", d_model=32, n_layers=2, n_heads=2, d_ff=64, s_max=48)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def params2():
+    return M.init_params(CFG, jax.random.PRNGKey(1))
+
+
+def tokens_for(text_len, batch=1, seed=0, seq=32):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (batch, seq), 0, 255)
+    # pad beyond text_len
+    idx = jnp.arange(seq)[None, :]
+    return jnp.where(idx < text_len, toks, M.PAD_ID).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Structural pieces
+# ---------------------------------------------------------------------------
+
+
+def test_param_specs_count_and_order(params):
+    specs = M.param_specs(CFG)
+    assert len(specs) == 3 + 1 + 12 * CFG.n_layers
+    assert specs[0][0] == "tok_emb"
+    assert specs[-1][0] == "lm_head"
+    for (name, shape, dt), p in zip(specs, params):
+        assert tuple(shape) == p.shape, name
+        assert dt == "f32"
+
+
+def test_rope_is_rotation():
+    """RoPE preserves norms and relative-position inner products."""
+    d = 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, d))
+    for pos in [0, 3, 17]:
+        cos, sin = M.rope_angles(jnp.array([pos]), d)
+        y = M.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(y), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1),
+            rtol=1e-5,
+        )
+    # <rope(q,m), rope(k,n)> depends only on m-n
+    q = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    k = jax.random.normal(jax.random.PRNGKey(2), (d,))
+
+    def dot(m, n):
+        cm, sm = M.rope_angles(jnp.array([m]), d)
+        cn, sn = M.rope_angles(jnp.array([n]), d)
+        return float(M.apply_rope(q, cm[0], sm[0]) @ M.apply_rope(k, cn[0], sn[0]))
+
+    assert abs(dot(5, 3) - dot(9, 7)) < 1e-4
+    assert abs(dot(5, 3) - dot(6, 3)) > 1e-4  # genuinely position-dependent
+
+
+def test_layer_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 8)) * 5 + 2
+    y = M.layer_norm(x, jnp.ones(8), jnp.zeros(8))
+    np.testing.assert_allclose(np.asarray(y.mean(-1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y.var(-1)), 1.0, atol=1e-3)
+
+
+def test_forward_padding_invariance(params):
+    """Logits at valid positions must not depend on what sits in the pad."""
+    pd = M.params_as_dict(CFG, params)
+    n = 10
+    t1 = tokens_for(n, seed=3)
+    t2 = jnp.where(jnp.arange(32)[None, :] < n, t1, 42).astype(jnp.int32)
+    vl = jnp.array([n], jnp.int32)
+    l1, k1, _ = M.forward_seq(CFG, t1, vl, pd, use_pallas=False)
+    l2, k2, _ = M.forward_seq(CFG, t2, vl, pd, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(l1[:, :n]), np.asarray(l2[:, :n]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(k1[:, :, :, :n]), np.asarray(k2[:, :, :, :n]), rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_and_ref_forward_agree(params):
+    pd = M.params_as_dict(CFG, params)
+    t = tokens_for(20, seed=4)
+    vl = jnp.array([20], jnp.int32)
+    l1, k1, v1 = M.forward_seq(CFG, t, vl, pd, use_pallas=False)
+    l2, k2, v2 = M.forward_seq(CFG, t, vl, pd, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(l1[:, :20]), np.asarray(l2[:, :20]), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k2), rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Prefill/decode consistency — the cache-handoff contract
+# ---------------------------------------------------------------------------
+
+
+def _prefill_then_decode(params_prefill, params_decode, tokens_1d, n_prompt, n_steps):
+    """Prefill prompt[:n_prompt-1] with one parameterization, then feed
+    prompt[n_prompt-1:] + generated through decode_step with another.
+    Returns per-step decode logits."""
+    pd_pre = M.params_as_dict(CFG, params_prefill)
+    pd_dec = M.params_as_dict(CFG, params_decode)
+    seq = tokens_1d.shape[0]
+    s_max = CFG.s_max
+
+    pre = tokens_1d[: n_prompt - 1][None, :]
+    pad = jnp.full((1, 32 - (n_prompt - 1)), M.PAD_ID, jnp.int32)
+    pre_padded = jnp.concatenate([pre, pad], axis=1)
+    _, k, v = M.forward_seq(CFG, pre_padded, jnp.array([n_prompt - 1], jnp.int32), pd_pre, use_pallas=False)
+
+    # Stage into the s_max decode cache.
+    L, B, H, S, dh = k.shape
+    kc = jnp.zeros((L, B, H, s_max, dh), jnp.float32).at[:, :, :, :S].set(k)
+    vc = jnp.zeros((L, B, H, s_max, dh), jnp.float32).at[:, :, :, :S].set(v)
+
+    logits_steps = []
+    for i in range(n_steps):
+        pos = n_prompt - 1 + i
+        tok = tokens_1d[pos][None]
+        lg, kc, vc = M.decode_step(CFG, tok, jnp.array([pos], jnp.int32), kc, vc, pd_dec, use_pallas=False)
+        logits_steps.append(lg[0])
+    return jnp.stack(logits_steps)
+
+
+def test_prefill_decode_consistency_same_params(params):
+    """Same parameterization: incremental decode == teacher-forced logits."""
+    pd = M.params_as_dict(CFG, params)
+    toks = tokens_for(24, seed=5)[0]
+    n_prompt, n_steps = 12, 8
+    dec_logits = _prefill_then_decode(params, params, toks, n_prompt, n_steps)
+    full, _, _ = M.forward_seq(CFG, toks[None, :], jnp.array([24], jnp.int32), pd, use_pallas=False)
+    want = full[0, n_prompt - 1 : n_prompt - 1 + n_steps]
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_cross_model_cache_matches_cc_training_view(params, params2):
+    """THE PrefillShare alignment invariant: serving-style decode over a
+    *base* cache equals the mixed-cache forward the CC loss trains on."""
+    base, dec = params, params2
+    toks = tokens_for(24, seed=6)[0]
+    n_prompt, n_steps = 12, 8
+    dec_logits = _prefill_then_decode(base, dec, toks, n_prompt, n_steps)
+
+    # Training view: forward_seq with kv_override for positions < n_prompt-1.
+    pd_dec = M.params_as_dict(CFG, dec)
+    kb, vb = M.base_prompt_cache(CFG, base, toks[None, :], jnp.array([24], jnp.int32))
+    override = (jnp.arange(toks.shape[0])[None, :] < (n_prompt - 1))
+    mixed, _, _ = M.forward_seq(
+        CFG, toks[None, :], jnp.array([24], jnp.int32), pd_dec,
+        use_pallas=False, kv_override=(kb, vb), override_mask=override,
+    )
+    want = mixed[0, n_prompt - 1 : n_prompt - 1 + n_steps]
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Losses + training steps
+# ---------------------------------------------------------------------------
+
+
+def _batch(seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (4, 32), 0, 255).astype(jnp.int32)
+    plen = jnp.array([8, 10, 6, 12], jnp.int32)
+    tlen = jnp.array([20, 24, 16, 30], jnp.int32)
+    return toks, plen, tlen
+
+
+def test_cc_loss_with_zero_override_equals_full_loss(params):
+    """Sharing ratio 0 degenerates to plain fine-tuning loss (Fig 2 x=0)."""
+    toks, plen, tlen = _batch()
+    lf = M.loss_full(CFG, params, toks, plen, tlen)
+    kb, vb = M.base_prompt_cache(CFG, params, toks, tlen)
+    # base == dec params here, so the override is a no-op by value too; check
+    # the stronger statement with a *different* base but empty mask via plen=1.
+    lcc_same = M.loss_cache_conditioned(CFG, params, kb, vb, toks, plen, tlen)
+    np.testing.assert_allclose(float(lf), float(lcc_same), rtol=1e-5)
+
+
+def test_cc_loss_differs_for_different_base(params, params2):
+    toks, plen, tlen = _batch()
+    kb, vb = M.base_prompt_cache(CFG, params2, toks, tlen)
+    lf = M.loss_full(CFG, params, toks, plen, tlen)
+    lcc = M.loss_cache_conditioned(CFG, params, kb, vb, toks, plen, tlen)
+    assert abs(float(lf) - float(lcc)) > 1e-4
+
+
+def test_loss_ignores_prompt_and_pad(params):
+    """Perturbing pad-region tokens must not change the loss."""
+    toks, plen, tlen = _batch()
+    l1 = M.loss_full(CFG, params, toks, plen, tlen)
+    idx = jnp.arange(32)[None, :]
+    toks2 = jnp.where(idx >= tlen[:, None], (toks + 7) % 255, toks)
+    l2 = M.loss_full(CFG, params, toks2, plen, tlen)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_train_full_step_decreases_loss(params):
+    toks, plen, tlen = _batch(1)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    p = params
+    losses = []
+    for step in range(8):
+        out = M.train_full_step(
+            CFG, p, m, v, jnp.float32(step), jnp.float32(3e-3), toks, plen, tlen
+        )
+        loss, rest = out[0], out[1:]
+        n = len(p)
+        p, m, v = list(rest[:n]), list(rest[n : 2 * n]), list(rest[2 * n :])
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_train_cc_step_decreases_loss_and_freezes_base(params, params2):
+    toks, plen, tlen = _batch(2)
+    base = params2
+    p = params
+    m = [jnp.zeros_like(x) for x in p]
+    v = [jnp.zeros_like(x) for x in p]
+    losses = []
+    for step in range(8):
+        out = M.train_cc_step(
+            CFG, base, p, m, v, jnp.float32(step), jnp.float32(3e-3), toks, plen, tlen
+        )
+        loss, rest = out[0], out[1:]
+        n = len(p)
+        p, m, v = list(rest[:n]), list(rest[n : 2 * n]), list(rest[2 * n :])
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+    # base params are inputs only; confirm the step has no base outputs
+    assert len(out) == 1 + 3 * len(p)
+
+
+def test_cc_gradient_does_not_flow_to_base(params, params2):
+    """d(loss_cc)/d(base) must be exactly zero (stop_gradient contract)."""
+    toks, plen, tlen = _batch(3)
+
+    def f(base_flat):
+        kb, vb = M.base_prompt_cache(CFG, base_flat, toks, tlen)
+        return M.loss_cache_conditioned(CFG, params, kb, vb, toks, plen, tlen)
+
+    grads = jax.grad(f)(params2)
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in grads)
+    assert total == 0.0

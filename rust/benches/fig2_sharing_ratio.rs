@@ -1,0 +1,44 @@
+//! Bench: regenerate paper Fig 2 — task accuracy as a function of the
+//! KV-cache sharing ratio between the base (prefill-module) and fine-tuned
+//! models.  Naive sharing (a Full-FT model consuming base cache) collapses
+//! at high ratios; cache-conditioned fine-tuning stays near Full-FT even at
+//! 100% sharing.
+//!
+//! Uses cached checkpoints from `prefillshare accuracy` when present (train
+//! time is minutes otherwise).  Requires `make artifacts`.
+//!
+//! Run: `cargo bench --bench fig2_sharing_ratio [-- --steps N --model M]`
+
+use std::rc::Rc;
+
+use prefillshare::runtime::XlaRuntime;
+use prefillshare::training::data::Task;
+use prefillshare::training::experiments::{fig2, TrainRecipe};
+use prefillshare::util::cli::Args;
+
+fn main() {
+    // Bounded bench runtime: smaller eval set unless the caller overrides.
+    if std::env::var("PREFILLSHARE_EVAL_N").is_err() {
+        std::env::set_var("PREFILLSHARE_EVAL_N", "30");
+    }
+    let args = Args::parse(std::env::args().skip(1));
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "small");
+    let rt = Rc::new(XlaRuntime::new(artifacts).expect("artifacts missing — run `make artifacts`"));
+    let mut recipe = TrainRecipe::default_for(model);
+    recipe.task_steps = args.get_usize("steps", 400);
+
+    let task = Task::by_name(args.get_or("task", "arith")).expect("task");
+    let rows = fig2(&rt, &recipe, task, args.has_flag("refresh"), true).expect("fig2");
+    println!("== Fig 2: accuracy vs KV sharing ratio ({model}, {} task) ==", task.name());
+    println!("{:>8} {:>14} {:>14}", "ratio", "naive(FullFT)", "PrefillShare");
+    for (r, naive, ps) in &rows {
+        println!("{:>8.2} {:>14.1} {:>14.1}", r, naive, ps);
+    }
+    let (_, naive_at_1, ps_at_1) = rows.last().unwrap();
+    let (_, naive_at_0, _) = rows.first().unwrap();
+    println!(
+        "naive degradation at 100% sharing: {:.1} -> {:.1} pts; PrefillShare holds {:.1}",
+        naive_at_0, naive_at_1, ps_at_1
+    );
+}

@@ -1,0 +1,50 @@
+//! Bench: regenerate paper Fig 4 — prefix-cache hit ratio and throughput vs
+//! max concurrent sessions (ReAct at fixed offered load, LLaMA8B-class).
+//!
+//! Expected shape (paper §4.3): the baseline's hit ratio peaks (~60%) then
+//! collapses beyond ~40–60 sessions, dragging throughput down; PrefillShare
+//! stays ~89–90% flat and its throughput rises until decode-side KV staging
+//! (App. B.2) causes a rollover — NOT a cache-hit effect.
+//!
+//! Run: `cargo bench --bench fig4_concurrency_sweep`
+
+use prefillshare::engine::experiments::fig4;
+use prefillshare::engine::report::{format_row, header, save_rows};
+
+fn main() {
+    let seed = 0;
+    let rows = fig4(seed);
+    println!("== Fig 4: hit ratio + throughput vs max concurrent sessions ==");
+    println!("{}", header("max_sessions"));
+    for r in &rows {
+        println!("{}", format_row(r));
+    }
+
+    // Shape summary: knee positions and hit-ratio floors.
+    let base: Vec<_> = rows.iter().filter(|r| r.system == "baseline").collect();
+    let ps: Vec<_> = rows.iter().filter(|r| r.system == "prefillshare").collect();
+    let base_peak = base
+        .iter()
+        .max_by(|a, b| a.result.throughput_tok_s.partial_cmp(&b.result.throughput_tok_s).unwrap())
+        .unwrap();
+    let ps_peak = ps
+        .iter()
+        .max_by(|a, b| a.result.throughput_tok_s.partial_cmp(&b.result.throughput_tok_s).unwrap())
+        .unwrap();
+    let base_hit_min = base.iter().map(|r| r.result.prefix_hit_ratio).fold(1.0f64, f64::min);
+    let ps_hit_min = ps.iter().map(|r| r.result.prefix_hit_ratio).fold(1.0f64, f64::min);
+    println!(
+        "baseline: tput peaks at {} sessions ({:.0} tok/s), hit ratio collapses to {:.0}%",
+        base_peak.x, base_peak.result.throughput_tok_s, 100.0 * base_hit_min
+    );
+    println!(
+        "prefillshare: tput peaks at {} sessions ({:.0} tok/s), hit ratio never below {:.0}%, \
+         staging events at max concurrency: {}",
+        ps_peak.x,
+        ps_peak.result.throughput_tok_s,
+        100.0 * ps_hit_min,
+        ps.last().unwrap().result.staging_events
+    );
+    save_rows("reports/fig4.json", &rows).expect("save");
+    println!("saved reports/fig4.json");
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate paper Fig 5 + Fig 6 — the Appendix B.3 replication of
+//! Figs 3/4 with the Qwen3-14B backbone (heavier weights, more layers, less
+//! KV headroom per GPU; all workload/protocol settings identical).
+//!
+//! Run: `cargo bench --bench fig5_fig6_qwen14b`
+
+use prefillshare::engine::experiments::{fig5, fig6};
+use prefillshare::engine::report::{format_row, header, save_rows};
+
+fn main() {
+    let seed = 0;
+    println!("== Fig 5: arrival sweep, Qwen3-14B backbone ==");
+    let rows5 = fig5(seed);
+    println!("{}", header("rate"));
+    for r in &rows5 {
+        println!("{}", format_row(r));
+    }
+    save_rows("reports/fig5.json", &rows5).expect("save");
+
+    println!("\n== Fig 6: concurrency sweep, Qwen3-14B backbone ==");
+    let rows6 = fig6(seed);
+    println!("{}", header("max_sessions"));
+    for r in &rows6 {
+        println!("{}", format_row(r));
+    }
+    save_rows("reports/fig6.json", &rows6).expect("save");
+    println!("saved reports/fig5.json, reports/fig6.json");
+}

@@ -1,0 +1,166 @@
+//! Microbenchmarks for the L3 hot paths (§Perf targets, DESIGN.md):
+//!   * radix prefix-cache match/insert at serving-realistic key lengths
+//!   * block-pool alloc/release churn
+//!   * discrete-event queue throughput (≥ 1M events/s target)
+//!   * end-to-end simulator events/sec
+//!   * decode-step host-side overhead of the real engine (when artifacts
+//!     are present): everything around the PJRT execute call.
+//!
+//! Run: `cargo bench --bench microbench`
+
+use prefillshare::engine::config::{ClusterConfig, SystemKind};
+use prefillshare::engine::sim::simulate;
+use prefillshare::kvcache::block::BlockPool;
+use prefillshare::kvcache::radix::RadixCache;
+use prefillshare::simtime::EventQueue;
+use prefillshare::util::bench::bench;
+use prefillshare::util::rng::Rng;
+use prefillshare::workload::{generate_trace, react};
+
+fn main() {
+    // Radix: 2k-token contexts, 64 sessions resident.
+    let r = bench("radix match+insert (2k-token key)", 3, 200, || {
+        let mut c = RadixCache::new(512 * 1024);
+        let mut total = 0usize;
+        for sid in 0..64u64 {
+            let key: Vec<u64> = (0..2048).map(|i| (sid << 32) | i).collect();
+            let h = c.match_prefix(&key);
+            total += h.matched_tokens;
+            c.unlock(&h);
+            c.insert(&key);
+        }
+        total
+    });
+    r.print();
+    let per_op = r.p50_s / 64.0;
+    println!("  -> {:.1} µs per match+insert pair", per_op * 1e6);
+
+    bench("radix repeat-match hot path (2k key)", 3, 200, || {
+        let mut c = RadixCache::new(512 * 1024);
+        let key: Vec<u64> = (0..2048).collect();
+        c.insert(&key);
+        let mut total = 0;
+        for _ in 0..64 {
+            let h = c.match_prefix(&key);
+            total += h.matched_tokens;
+            c.unlock(&h);
+        }
+        total
+    })
+    .print();
+
+    bench("block pool alloc/release (1k blocks)", 3, 500, || {
+        let mut p = BlockPool::new(4096, 16);
+        let mut held = Vec::new();
+        for _ in 0..64 {
+            held.push(p.alloc(16).unwrap());
+        }
+        for h in &held {
+            p.release_all(h);
+        }
+        p.free_blocks()
+    })
+    .print();
+
+    // Event queue raw throughput.
+    let n_events = 100_000usize;
+    let r = bench("event queue push+pop (100k events)", 2, 20, || {
+        let mut q = EventQueue::new();
+        let mut rng = Rng::new(7);
+        for i in 0..n_events {
+            q.schedule((rng.next_u64() % 1_000_000) + i as u64, i);
+        }
+        let mut acc = 0usize;
+        while let Some((_, e)) = q.pop() {
+            acc += e;
+        }
+        acc
+    });
+    r.print();
+    println!(
+        "  -> {:.2} M events/s (target >= 1 M/s)",
+        n_events as f64 / r.p50_s / 1e6
+    );
+
+    // Real decode-loop step overhead (needs artifacts; skipped otherwise).
+    real_decode_bench();
+
+    // Whole-simulator throughput.
+    let trace = generate_trace(&react(), 4.0, 120.0, 0);
+    let n_calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
+    let r = bench("full cluster sim (120s trace @ 4 sess/s)", 1, 10, || {
+        let cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        simulate(cfg, generate_trace(&react(), 4.0, 120.0, 0)).sessions_completed
+    });
+    r.print();
+    println!(
+        "  -> {:.0} simulated agent-calls/s of bench wall time",
+        n_calls as f64 / r.p50_s
+    );
+}
+
+/// §Perf L3 real path: per-token decode step, cached-literal hot path vs the
+/// naive per-step tensor->literal conversion path (the before/after of the
+/// weight-literal caching optimization recorded in EXPERIMENTS.md §Perf).
+fn real_decode_bench() {
+    use prefillshare::model::{ByteTokenizer, KvCache, LanguageModel};
+    use prefillshare::runtime::{HostTensor, XlaRuntime};
+    use std::rc::Rc;
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("(real decode bench skipped: run `make artifacts`)");
+        return;
+    }
+    let rt = Rc::new(XlaRuntime::new("artifacts").unwrap());
+    let lm = LanguageModel::with_init_params(rt.clone(), "tiny").unwrap();
+    let tok = ByteTokenizer;
+    let prompt = tok.encode("[ctx] microbench prompt for decode stepping");
+    let (cache0, _) = lm.prefill(&prompt).unwrap();
+
+    // Hot path: decode_step (weights pre-converted once).
+    let mut cache = cache0.clone();
+    let mut pos = cache.len;
+    let r = bench("real decode step (cached literals)", 5, 60, || {
+        if pos >= lm.spec.s_max {
+            cache = cache0.clone();
+            pos = cache.len;
+        }
+        let l = lm.decode_step(&mut cache, 65, pos).unwrap();
+        pos += 1;
+        l[0]
+    });
+    r.print();
+
+    // Naive path: full HostTensor conversion per step via Program::run.
+    let prog = format!("decode_{}_b1", lm.spec.name);
+    let mut cache = cache0.clone();
+    let mut pos = cache.len;
+    let r2 = bench("real decode step (naive per-step convert)", 5, 60, || {
+        if pos >= lm.spec.s_max {
+            cache = cache0.clone();
+            pos = cache.len;
+        }
+        let (kt, vt) = cache.to_tensors();
+        let inputs: Vec<HostTensor> = [
+            HostTensor::i32(vec![1], vec![65]),
+            HostTensor::i32(vec![1], vec![pos as i32]),
+            kt,
+            vt,
+        ]
+        .into_iter()
+        .chain(lm.params.values().cloned())
+        .collect();
+        let out = rt.run(&prog, &inputs).unwrap();
+        let mut c2 = KvCache::empty(&lm.spec);
+        c2.update_from(&out[1], &out[2]).unwrap();
+        cache = c2;
+        cache.len = pos + 1;
+        pos += 1;
+        out[0].as_f32().unwrap()[0]
+    });
+    r2.print();
+    println!(
+        "  -> literal caching speedup: {:.2}x per step",
+        r2.p50_s / r.p50_s
+    );
+}

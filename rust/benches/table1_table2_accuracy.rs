@@ -1,0 +1,40 @@
+//! Bench: regenerate paper Table 1 (tasks × backbones) and Table 2 (model
+//! size scaling) — Full-FT vs PrefillShare (cache-conditioned FT) accuracy.
+//!
+//! Substitutions (DESIGN.md): backbones are the tiny/small/medium byte-level
+//! transformers; tasks are arith/transform/toolcall; scoring is exact match.
+//! Trained checkpoints cache under `checkpoints/`.
+//!
+//! Run: `cargo bench --bench table1_table2_accuracy [-- --steps N]`
+
+use std::rc::Rc;
+
+use prefillshare::runtime::XlaRuntime;
+use prefillshare::training::experiments::{table1, table2};
+use prefillshare::util::cli::Args;
+
+fn main() {
+    // Bounded bench runtime: smaller eval set unless the caller overrides.
+    if std::env::var("PREFILLSHARE_EVAL_N").is_err() {
+        std::env::set_var("PREFILLSHARE_EVAL_N", "30");
+    }
+    let args = Args::parse(std::env::args().skip(1));
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let steps = args.get_usize("steps", 400);
+    let refresh = args.has_flag("refresh");
+    let rt = Rc::new(XlaRuntime::new(artifacts).expect("artifacts missing — run `make artifacts`"));
+
+    println!("== Table 1: accuracy on the three task domains ==");
+    let rows = table1(&rt, &["tiny", "small"], steps, refresh, true).expect("table1");
+    println!("{:<8} {:<10} {:<17} {:<14} {:>7}", "model", "task", "config", "kv-sharing", "acc%");
+    for r in &rows {
+        println!("{:<8} {:<10} {:<17} {:<14} {:>7.1}", r.model, r.task, r.config, r.sharing, r.acc_pct);
+    }
+
+    println!("\n== Table 2: accuracy across model sizes (arith) ==");
+    let rows = table2(&rt, &["tiny", "small", "medium"], steps, refresh, true).expect("table2");
+    println!("{:<8} {:<10} {:<17} {:<14} {:>7}", "model", "task", "config", "kv-sharing", "acc%");
+    for r in &rows {
+        println!("{:<8} {:<10} {:<17} {:<14} {:>7.1}", r.model, r.task, r.config, r.sharing, r.acc_pct);
+    }
+}

@@ -1,0 +1,244 @@
+//! Analytic A100 cost model for the cluster simulator.
+//!
+//! The paper's testbed is a single 8×A100-SXM4-80G node serving
+//! LLaMA3.1-8B (main) and Qwen3-14B (Appendix B.3).  We model per-operation
+//! *durations* from first principles — FLOPs over effective compute for the
+//! compute-bound prefill, bytes over effective HBM bandwidth for the
+//! memory-bound decode, and link bandwidth + latency for KV movement — so
+//! the simulator reproduces the *shape* of Figs 3–6 without pretending to
+//! cycle-accuracy (DESIGN.md "Substitutions").
+
+/// GPU hardware profile.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub peak_flops_f16: f64, // dense fp16/bf16 FLOP/s
+    pub hbm_bytes_per_s: f64,
+    pub mem_bytes: f64,
+    /// Achievable fraction of peak for big prefill GEMMs (MFU).
+    pub prefill_mfu: f64,
+    /// Achievable fraction of HBM bandwidth during decode.
+    pub decode_membw_eff: f64,
+}
+
+pub const A100_80G: GpuSpec = GpuSpec {
+    name: "A100-SXM4-80G",
+    peak_flops_f16: 312e12,
+    hbm_bytes_per_s: 2.039e12,
+    mem_bytes: 80e9,
+    prefill_mfu: 0.55,
+    decode_membw_eff: 0.75,
+};
+
+/// LLM backbone profile (the *served* model class, not our tiny replica).
+#[derive(Debug, Clone, Copy)]
+pub struct LlmSpec {
+    pub name: &'static str,
+    pub n_params: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub bytes_per_el: usize, // fp16 weights + fp16 KV
+}
+
+/// LLaMA3.1-8B (GQA: 8 KV heads).
+pub const LLAMA8B: LlmSpec = LlmSpec {
+    name: "llama3.1-8b",
+    n_params: 8.03e9,
+    n_layers: 32,
+    d_model: 4096,
+    n_kv_heads: 8,
+    d_head: 128,
+    bytes_per_el: 2,
+};
+
+/// Qwen3-14B (App. B.3 backbone; GQA: 8 KV heads, 40 layers).
+pub const QWEN14B: LlmSpec = LlmSpec {
+    name: "qwen3-14b",
+    n_params: 14.8e9,
+    n_layers: 40,
+    d_model: 5120,
+    n_kv_heads: 8,
+    d_head: 128,
+    bytes_per_el: 2,
+};
+
+impl LlmSpec {
+    pub fn by_name(name: &str) -> Option<LlmSpec> {
+        match name {
+            "llama3.1-8b" | "llama8b" => Some(LLAMA8B),
+            "qwen3-14b" | "qwen14b" => Some(QWEN14B),
+            _ => None,
+        }
+    }
+
+    /// KV bytes per cached token: K+V for every layer's KV heads.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.n_layers * self.n_kv_heads * self.d_head * self.bytes_per_el) as f64
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_params * self.bytes_per_el as f64
+    }
+}
+
+/// Interconnect profile for KV movement.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSpec {
+    /// Prefill→decode handoff (NVLink-class via the vLLM connector).
+    pub handoff_bytes_per_s: f64,
+    pub handoff_latency_s: f64,
+    /// CPU↔GPU staging path (PCIe Gen4 x16), used at high concurrency.
+    pub staging_bytes_per_s: f64,
+    pub staging_latency_s: f64,
+}
+
+pub const DEFAULT_LINK: LinkSpec = LinkSpec {
+    handoff_bytes_per_s: 64e9,
+    handoff_latency_s: 0.8e-3,
+    staging_bytes_per_s: 12e9,
+    staging_latency_s: 0.3e-3,
+};
+
+/// Full cost model = GPU + served-LLM + links (+ fixed overheads).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub gpu: GpuSpec,
+    pub llm: LlmSpec,
+    pub link: LinkSpec,
+    /// Fixed per-batch scheduling/kernel-launch overhead per decode step.
+    pub decode_step_overhead_s: f64,
+    /// Fixed per-prefill overhead (tokenization, scheduling, launch).
+    pub prefill_overhead_s: f64,
+}
+
+impl CostModel {
+    pub fn new(gpu: GpuSpec, llm: LlmSpec) -> CostModel {
+        CostModel {
+            gpu,
+            llm,
+            link: DEFAULT_LINK,
+            decode_step_overhead_s: 200e-6,
+            prefill_overhead_s: 1.5e-3,
+        }
+    }
+
+    /// Prefill duration for `new_tokens` appended after `past_tokens` of
+    /// already-cached context (partial prefill: attention still spans the
+    /// full context, linear layers only the new tokens).
+    pub fn prefill_secs(&self, new_tokens: usize, past_tokens: usize) -> f64 {
+        if new_tokens == 0 {
+            return 0.0;
+        }
+        let n = new_tokens as f64;
+        let past = past_tokens as f64;
+        // Linear/GEMM work: 2 FLOPs per param per token.
+        let linear = 2.0 * self.llm.n_params * n;
+        // Attention score+value FLOPs: 4 * d_model * L * sum over new tokens
+        // of their visible context (past + i).
+        let visible_sum = n * past + n * (n - 1.0) / 2.0 + n; // Σ (past + i + 1)
+        let attn = 4.0 * (self.llm.d_model * self.llm.n_layers) as f64 * visible_sum;
+        (linear + attn) / (self.gpu.peak_flops_f16 * self.gpu.prefill_mfu)
+            + self.prefill_overhead_s
+    }
+
+    /// One decode step for a batch: reads all weights once plus every
+    /// sequence's KV so far.  `kv_tokens_total` = Σ context length over the
+    /// batch.
+    pub fn decode_step_secs(&self, batch: usize, kv_tokens_total: usize) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let bytes = self.llm.weight_bytes()
+            + kv_tokens_total as f64 * self.llm.kv_bytes_per_token();
+        bytes / (self.gpu.hbm_bytes_per_s * self.gpu.decode_membw_eff)
+            + self.decode_step_overhead_s
+    }
+
+    /// KV handoff (prefill worker → decode worker) for `tokens` of cache.
+    pub fn handoff_secs(&self, tokens: usize) -> f64 {
+        let bytes = tokens as f64 * self.llm.kv_bytes_per_token();
+        self.link.handoff_latency_s + bytes / self.link.handoff_bytes_per_s
+    }
+
+    /// Staging one direction (GPU→CPU or CPU→GPU) for `tokens` of cache.
+    pub fn staging_secs(&self, tokens: usize) -> f64 {
+        let bytes = tokens as f64 * self.llm.kv_bytes_per_token();
+        self.link.staging_latency_s + bytes / self.link.staging_bytes_per_s
+    }
+
+    /// KV capacity (tokens) a worker GPU can hold next to the weights,
+    /// with a fraction reserved for activations/fragmentation.
+    pub fn kv_capacity_tokens(&self, reserve_frac: f64) -> usize {
+        let budget = (self.gpu.mem_bytes - self.llm.weight_bytes()) * (1.0 - reserve_frac);
+        (budget / self.llm.kv_bytes_per_token()).max(0.0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel::new(A100_80G, LLAMA8B)
+    }
+
+    #[test]
+    fn prefill_scales_superlinearly_with_context() {
+        let c = cm();
+        let t1k = c.prefill_secs(1024, 0);
+        let t2k = c.prefill_secs(2048, 0);
+        assert!(t2k > 1.9 * t1k, "{t1k} vs {t2k}");
+        // 1k-token prefill on 8B @ A100 should be O(100ms)
+        assert!(t1k > 0.05 && t1k < 0.3, "{t1k}");
+    }
+
+    #[test]
+    fn partial_prefill_is_much_cheaper() {
+        let c = cm();
+        let full = c.prefill_secs(2048, 0);
+        let partial = c.prefill_secs(128, 1920);
+        assert!(partial < full / 5.0, "partial {partial} vs full {full}");
+    }
+
+    #[test]
+    fn decode_step_is_memory_bound_scale() {
+        let c = cm();
+        // bs=1, no KV: dominated by weight read: 16GB / (2TB/s*0.75) ~ 10.5ms
+        let t = c.decode_step_secs(1, 0);
+        assert!(t > 0.008 && t < 0.015, "{t}");
+        // batching amortizes weights: 16 seqs with 1k ctx each still ~1 weight read
+        let tb = c.decode_step_secs(16, 16 * 1024);
+        assert!(tb < 2.0 * t, "batched step {tb} vs single {t}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_llama8b() {
+        // 2 * 32 layers * 8 kv heads * 128 dh * 2B = 131072
+        assert_eq!(LLAMA8B.kv_bytes_per_token(), 131072.0);
+    }
+
+    #[test]
+    fn kv_capacity_is_tens_of_gb() {
+        let c = cm();
+        let cap = c.kv_capacity_tokens(0.1);
+        // (80GB - 16GB) * 0.9 / 128KiB ≈ 440k tokens
+        assert!(cap > 300_000 && cap < 600_000, "{cap}");
+    }
+
+    #[test]
+    fn handoff_faster_than_staging() {
+        let c = cm();
+        assert!(c.handoff_secs(4096) < c.staging_secs(4096));
+    }
+
+    #[test]
+    fn qwen_heavier_than_llama() {
+        let cq = CostModel::new(A100_80G, QWEN14B);
+        let cl = cm();
+        assert!(cq.prefill_secs(1024, 0) > cl.prefill_secs(1024, 0));
+        assert!(cq.decode_step_secs(1, 1024) > cl.decode_step_secs(1, 1024));
+        assert!(cq.kv_capacity_tokens(0.1) < cl.kv_capacity_tokens(0.1));
+    }
+}

@@ -1,0 +1,146 @@
+//! Cluster topology + policy configuration for the serving engines.
+
+use crate::costmodel::{CostModel, LlmSpec, A100_80G, LLAMA8B, QWEN14B};
+use crate::workload::NUM_AGENTS;
+
+/// Which serving system (paper Fig 1 right).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    /// Per-model isolated prefill/decode pairs (4 models -> 8 GPUs).
+    Baseline,
+    /// Shared prefill pool (base model) + per-model decode workers
+    /// (4 prefill + 4 decode GPUs — same total budget).
+    PrefillShare,
+}
+
+impl SystemKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SystemKind::Baseline => "baseline",
+            SystemKind::PrefillShare => "prefillshare",
+        }
+    }
+}
+
+/// How the proxy assigns prefill work (paper §3.3 "Prefix-Aware Routing";
+/// the alternatives exist for the ablation benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Pin each session to one prefill worker (prefix-cache locality).
+    PrefixAware,
+    /// Spread requests round-robin (destroys locality — ablation).
+    RoundRobin,
+    /// Uniform random worker per request (ablation).
+    Random,
+}
+
+impl RoutingPolicy {
+    pub fn by_name(name: &str) -> Option<RoutingPolicy> {
+        match name {
+            "prefix" | "prefix-aware" => Some(RoutingPolicy::PrefixAware),
+            "rr" | "round-robin" => Some(RoutingPolicy::RoundRobin),
+            "random" => Some(RoutingPolicy::Random),
+            _ => None,
+        }
+    }
+}
+
+/// Full simulator configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub system: SystemKind,
+    pub routing: RoutingPolicy,
+    pub cost: CostModel,
+    /// Prefill workers.  PrefillShare: a shared pool (default 4).
+    /// Baseline: forced to `n_models` (one per model).
+    pub n_prefill_workers: usize,
+    pub n_models: usize,
+    /// Admission control: max sessions active in the system (Fig 4 knob).
+    pub max_concurrent_sessions: usize,
+    /// Iteration-level decode batching cap per worker.
+    pub max_decode_batch: usize,
+    /// Prefix-cache (radix) capacity per prefill worker, in KV tokens.
+    ///
+    /// Calibration: an 80G A100 next to 16GB of 8B-fp16 weights leaves
+    /// ~56GB at vLLM's 0.9 utilization; activation workspace for chunked
+    /// prefill, CUDA graphs and fragmentation land the *usable* prefix pool
+    /// near 0.65 of that — ≈290k tokens at 128KiB/token.  DESIGN.md §Perf.
+    pub prefill_kv_tokens: usize,
+    /// Resident-KV capacity per decode worker, in tokens; beyond this,
+    /// arriving handoffs are staged through host memory (App. B.2).
+    pub decode_kv_tokens: usize,
+    pub seed: u64,
+}
+
+impl ClusterConfig {
+    /// The paper's main testbed: LLaMA3.1-8B on one 8×A100 node.
+    pub fn paper_default(system: SystemKind) -> ClusterConfig {
+        Self::for_llm(system, LLAMA8B)
+    }
+
+    /// Appendix B.3 testbed: Qwen3-14B, identical topology.
+    pub fn paper_qwen14b(system: SystemKind) -> ClusterConfig {
+        Self::for_llm(system, QWEN14B)
+    }
+
+    pub fn for_llm(system: SystemKind, llm: LlmSpec) -> ClusterConfig {
+        let cost = CostModel::new(A100_80G, llm);
+        let per_token = llm.kv_bytes_per_token();
+        let weight = llm.weight_bytes();
+        let usable = (A100_80G.mem_bytes * 0.9 - weight).max(1e9);
+        let prefill_kv_tokens = (usable * 0.30 / per_token) as usize;
+        // Decode side reserves more headroom (activations for wide batches,
+        // sampling state, transfer buffers) — the App. B.2 staging regime
+        // begins when resident session KV exceeds this pool.
+        let decode_kv_tokens = (usable * 0.20 / per_token) as usize;
+        ClusterConfig {
+            system,
+            routing: RoutingPolicy::PrefixAware,
+            cost,
+            n_prefill_workers: NUM_AGENTS,
+            n_models: NUM_AGENTS,
+            max_concurrent_sessions: 64,
+            max_decode_batch: 48,
+            prefill_kv_tokens,
+            decode_kv_tokens,
+            seed: 0,
+        }
+    }
+
+    /// Baseline forces one prefill worker per model.
+    pub fn effective_prefill_workers(&self) -> usize {
+        match self.system {
+            SystemKind::Baseline => self.n_models,
+            SystemKind::PrefillShare => self.n_prefill_workers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_capacities_are_sane() {
+        let c = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        assert!(c.prefill_kv_tokens > 80_000 && c.prefill_kv_tokens < 500_000,
+            "{}", c.prefill_kv_tokens);
+        assert!(c.decode_kv_tokens < c.prefill_kv_tokens);
+    }
+
+    #[test]
+    fn qwen_has_less_kv_room() {
+        let l = ClusterConfig::paper_default(SystemKind::Baseline);
+        let q = ClusterConfig::paper_qwen14b(SystemKind::Baseline);
+        assert!(q.prefill_kv_tokens < l.prefill_kv_tokens);
+    }
+
+    #[test]
+    fn baseline_prefill_workers_equal_models() {
+        let mut c = ClusterConfig::paper_default(SystemKind::Baseline);
+        c.n_prefill_workers = 7;
+        assert_eq!(c.effective_prefill_workers(), c.n_models);
+        c.system = SystemKind::PrefillShare;
+        assert_eq!(c.effective_prefill_workers(), 7);
+    }
+}

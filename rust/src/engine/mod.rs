@@ -1,0 +1,13 @@
+//! Serving engines: the discrete-event cluster simulator (Figs 3–6) and the
+//! real-execution engine that serves the tiny backbone through PJRT
+//! (examples / end-to-end validation).  Both share the router, prefix-cache,
+//! workload and metrics substrates.
+
+pub mod config;
+pub mod experiments;
+pub mod real;
+pub mod report;
+pub mod sim;
+
+pub use config::{ClusterConfig, RoutingPolicy, SystemKind};
+pub use sim::{simulate, SimResult, Simulator};

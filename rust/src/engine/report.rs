@@ -1,0 +1,77 @@
+//! Experiment report formatting: paper-style table rows + JSON export.
+
+use crate::engine::sim::SimResult;
+use crate::util::json::{self, Json};
+
+/// One (system, workload, sweep-point) row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub system: String,
+    pub workload: String,
+    pub x_name: String,
+    pub x: f64,
+    pub result: SimResult,
+}
+
+pub fn header(x_name: &str) -> String {
+    format!(
+        "{:<13} {:<10} {:>8} | {:>10} {:>10} {:>10} {:>9} {:>8} {:>9} {:>8}",
+        "system", "workload", x_name, "p95_lat_s", "mean_lat_s", "tput_tok_s", "ttft_p95", "hit_pct", "staged", "prefillU"
+    )
+}
+
+pub fn format_row(r: &Row) -> String {
+    format!(
+        "{:<13} {:<10} {:>8.2} | {:>10.2} {:>10.2} {:>10.0} {:>9.3} {:>8.1} {:>9} {:>8.2}",
+        r.system,
+        r.workload,
+        r.x,
+        r.result.p95_session_latency,
+        r.result.mean_session_latency,
+        r.result.throughput_tok_s,
+        r.result.ttft_p95,
+        100.0 * r.result.prefix_hit_ratio,
+        r.result.staging_events,
+        r.result.prefill_util,
+    )
+}
+
+pub fn rows_to_json(rows: &[Row]) -> Json {
+    json::arr(
+        rows.iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("system", json::s(&r.system)),
+                    ("workload", json::s(&r.workload)),
+                    (&r.x_name.clone(), json::num(r.x)),
+                    ("p95_session_latency_s", json::num(r.result.p95_session_latency)),
+                    ("p50_session_latency_s", json::num(r.result.p50_session_latency)),
+                    ("mean_session_latency_s", json::num(r.result.mean_session_latency)),
+                    ("throughput_tok_s", json::num(r.result.throughput_tok_s)),
+                    ("ttft_mean_s", json::num(r.result.ttft_mean)),
+                    ("ttft_p95_s", json::num(r.result.ttft_p95)),
+                    ("prefix_hit_ratio", json::num(r.result.prefix_hit_ratio)),
+                    ("prefill_computed_tokens", json::num(r.result.prefill_computed_tokens as f64)),
+                    ("staging_events", json::num(r.result.staging_events as f64)),
+                    ("sessions_completed", json::num(r.result.sessions_completed as f64)),
+                    ("makespan_s", json::num(r.result.makespan_s)),
+                    ("prefill_util", json::num(r.result.prefill_util)),
+                    ("decode_util", json::num(r.result.decode_util)),
+                    (
+                        "peak_decode_resident_tokens",
+                        json::num(r.result.peak_decode_resident_tokens as f64),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write rows to a JSON file (reports land in `reports/`).
+pub fn save_rows(path: &str, rows: &[Row]) -> anyhow::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, rows_to_json(rows).to_string_pretty())?;
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! Paged KV block pool — the vLLM-style allocation substrate.
+//!
+//! The pool hands out fixed-size blocks (`block_size` tokens of KV each),
+//! refcounted so a block can back multiple sequences (copy-on-write prefix
+//! sharing).  The serving layers account *capacity* here; the actual cache
+//! payloads live either in the cost-model (sim backend) or in `KvCache`
+//! host tensors (real backend).
+
+use std::collections::VecDeque;
+
+/// Identifier of one block in the pool.
+pub type BlockId = u32;
+
+#[derive(Debug)]
+pub struct BlockPool {
+    pub block_size: usize, // tokens per block
+    capacity: usize,       // total blocks
+    refcounts: Vec<u32>,
+    free: VecDeque<BlockId>,
+    allocated: usize,
+}
+
+impl BlockPool {
+    pub fn new(capacity_blocks: usize, block_size: usize) -> BlockPool {
+        assert!(block_size > 0);
+        BlockPool {
+            block_size,
+            capacity: capacity_blocks,
+            refcounts: vec![0; capacity_blocks],
+            free: (0..capacity_blocks as BlockId).collect(),
+            allocated: 0,
+        }
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    /// Allocate `n` fresh blocks (refcount 1 each); None if insufficient.
+    pub fn alloc(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        if self.free.len() < n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = self.free.pop_front().unwrap();
+            debug_assert_eq!(self.refcounts[id as usize], 0);
+            self.refcounts[id as usize] = 1;
+            out.push(id);
+        }
+        self.allocated += n;
+        Some(out)
+    }
+
+    /// Share an existing block (prefix reuse): bump its refcount.
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.refcounts[id as usize] > 0, "retain of free block {id}");
+        self.refcounts[id as usize] += 1;
+    }
+
+    /// Drop one reference; the block returns to the free list at zero.
+    pub fn release(&mut self, id: BlockId) {
+        let rc = &mut self.refcounts[id as usize];
+        assert!(*rc > 0, "release of free block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push_back(id);
+        }
+    }
+
+    pub fn release_all(&mut self, ids: &[BlockId]) {
+        for &id in ids {
+            self.release(id);
+        }
+    }
+
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.refcounts[id as usize]
+    }
+
+    /// Invariant check used by the property tests: every block is either in
+    /// the free list with rc==0 or out with rc>0, exactly once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.capacity];
+        for &id in &self.free {
+            if seen[id as usize] {
+                return Err(format!("block {id} twice in free list"));
+            }
+            seen[id as usize] = true;
+            if self.refcounts[id as usize] != 0 {
+                return Err(format!("free block {id} has rc {}", self.refcounts[id as usize]));
+            }
+        }
+        for (id, &rc) in self.refcounts.iter().enumerate() {
+            if !seen[id] && rc == 0 {
+                return Err(format!("block {id} leaked (rc 0, not free)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut p = BlockPool::new(4, 16);
+        let a = p.alloc(3).unwrap();
+        assert_eq!(p.free_blocks(), 1);
+        assert!(p.alloc(2).is_none());
+        p.release_all(&a);
+        assert_eq!(p.free_blocks(), 4);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_via_refcount() {
+        let mut p = BlockPool::new(2, 16);
+        let a = p.alloc(1).unwrap();
+        p.retain(a[0]);
+        p.release(a[0]);
+        assert_eq!(p.free_blocks(), 1, "still referenced");
+        p.release(a[0]);
+        assert_eq!(p.free_blocks(), 2);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let p = BlockPool::new(10, 16);
+        assert_eq!(p.blocks_for(0), 0);
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(16), 1);
+        assert_eq!(p.blocks_for(17), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_release_panics() {
+        let mut p = BlockPool::new(1, 16);
+        let a = p.alloc(1).unwrap();
+        p.release(a[0]);
+        p.release(a[0]);
+    }
+}

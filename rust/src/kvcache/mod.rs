@@ -1,0 +1,11 @@
+//! KV cache management substrate: paged block pool (vLLM-style) and the
+//! radix-tree prefix index (SGLang-style) used by prefill workers for
+//! cross-request prefix reuse — the mechanism whose *per-model duplication*
+//! the paper identifies as the baseline's failure mode, and whose *sharing*
+//! PrefillShare enables.
+
+pub mod block;
+pub mod radix;
+
+pub use block::{BlockId, BlockPool};
+pub use radix::{MatchHandle, RadixCache, RadixStats};

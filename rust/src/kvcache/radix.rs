@@ -1,0 +1,418 @@
+//! Radix-tree prefix cache (SGLang-style RadixAttention index).
+//!
+//! Maps token sequences to cached-KV extents at *token* granularity:
+//! `match_prefix` returns how many leading tokens of a request are already
+//! resident; `insert` adds the remainder; LRU leaf eviction keeps the
+//! resident token count under `capacity_tokens`.  In-flight extents are
+//! pinned via path locks so eviction never pulls KV out from under an
+//! active prefill/decode.
+//!
+//! Tokens are `u64`: the real backend feeds byte-tokenizer ids, the cluster
+//! simulator feeds synthetic ids encoding (session, position) — the tree is
+//! agnostic.
+
+use std::collections::HashMap;
+
+type NodeId = usize;
+
+#[derive(Debug)]
+struct Node {
+    /// Edge label: the token run between parent and this node.
+    edge: Vec<u64>,
+    children: HashMap<u64, NodeId>, // keyed by first token of child's edge
+    parent: Option<NodeId>,
+    /// LRU stamp (monotone counter maintained by the tree).
+    last_access: u64,
+    /// Number of active pins on this node (in-flight requests using it).
+    locks: u32,
+}
+
+impl Node {
+    fn len(&self) -> usize {
+        self.edge.len()
+    }
+}
+
+/// A matched path through the tree; holding it pins the extent.
+#[derive(Debug, Clone)]
+pub struct MatchHandle {
+    nodes: Vec<NodeId>,
+    pub matched_tokens: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RadixStats {
+    pub lookups: u64,
+    pub hit_tokens: u64,
+    pub miss_tokens: u64,
+    pub inserted_tokens: u64,
+    pub evicted_tokens: u64,
+}
+
+impl RadixStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hit_tokens + self.miss_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.hit_tokens as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct RadixCache {
+    nodes: Vec<Node>,
+    free_nodes: Vec<NodeId>,
+    root: NodeId,
+    clock: u64,
+    resident_tokens: usize,
+    capacity_tokens: usize,
+    pub stats: RadixStats,
+}
+
+impl RadixCache {
+    pub fn new(capacity_tokens: usize) -> RadixCache {
+        let root = Node {
+            edge: Vec::new(),
+            children: HashMap::new(),
+            parent: None,
+            last_access: 0,
+            locks: 0,
+        };
+        RadixCache {
+            nodes: vec![root],
+            free_nodes: Vec::new(),
+            root: 0,
+            clock: 0,
+            resident_tokens: 0,
+            capacity_tokens,
+            stats: RadixStats::default(),
+        }
+    }
+
+    pub fn resident_tokens(&self) -> usize {
+        self.resident_tokens
+    }
+
+    pub fn capacity_tokens(&self) -> usize {
+        self.capacity_tokens
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn new_node(&mut self, node: Node) -> NodeId {
+        if let Some(id) = self.free_nodes.pop() {
+            self.nodes[id] = node;
+            id
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Longest cached prefix of `tokens`.  Touches (LRU) and pins the path;
+    /// callers MUST `unlock` the handle when the request completes.
+    pub fn match_prefix(&mut self, tokens: &[u64]) -> MatchHandle {
+        let now = self.tick();
+        let mut cur = self.root;
+        let mut matched = 0usize;
+        let mut path = vec![self.root];
+        self.nodes[self.root].last_access = now;
+
+        loop {
+            if matched == tokens.len() {
+                break;
+            }
+            let Some(&child) = self.nodes[cur].children.get(&tokens[matched]) else {
+                break;
+            };
+            let elen = self.nodes[child].len();
+            let common = common_len(&self.nodes[child].edge, &tokens[matched..]);
+            self.nodes[child].last_access = now;
+            if common == elen {
+                matched += elen;
+                path.push(child);
+                cur = child;
+            } else {
+                // Partial edge match: count it, but pin only up to `cur`;
+                // splitting happens on insert.
+                matched += common;
+                path.push(child);
+                break;
+            }
+        }
+
+        for &n in &path {
+            self.nodes[n].locks += 1;
+        }
+        self.stats.lookups += 1;
+        self.stats.hit_tokens += matched as u64;
+        self.stats.miss_tokens += (tokens.len() - matched) as u64;
+        MatchHandle { nodes: path, matched_tokens: matched }
+    }
+
+    /// Release the pins of a match handle.
+    pub fn unlock(&mut self, handle: &MatchHandle) {
+        for &n in &handle.nodes {
+            assert!(self.nodes[n].locks > 0, "unlock of unpinned node");
+            self.nodes[n].locks -= 1;
+        }
+    }
+
+    /// Insert `tokens`, reusing any cached prefix; returns the number of NEW
+    /// tokens added to the tree.  Evicts LRU leaves as needed; if the
+    /// sequence cannot fit even after eviction (everything pinned), inserts
+    /// only what fits and returns that count.
+    pub fn insert(&mut self, tokens: &[u64]) -> usize {
+        let now = self.tick();
+        let mut cur = self.root;
+        let mut pos = 0usize;
+
+        loop {
+            if pos == tokens.len() {
+                return 0; // fully present
+            }
+            let next = self.nodes[cur].children.get(&tokens[pos]).copied();
+            let Some(child) = next else { break };
+            let elen = self.nodes[child].len();
+            let common = common_len(&self.nodes[child].edge, &tokens[pos..]);
+            self.nodes[child].last_access = now;
+            if common == elen {
+                pos += elen;
+                cur = child;
+            } else {
+                // Split the edge at `common`.
+                let tail: Vec<u64> = self.nodes[child].edge.split_off(common);
+                let grandchildren = std::mem::take(&mut self.nodes[child].children);
+                let locks = self.nodes[child].locks;
+                let tail_first = tail[0];
+                let tail_node = self.new_node(Node {
+                    edge: tail,
+                    children: grandchildren,
+                    parent: Some(child),
+                    last_access: now,
+                    locks,
+                });
+                // fix grandchildren parents
+                let gc: Vec<NodeId> = self.nodes[tail_node].children.values().copied().collect();
+                for g in gc {
+                    self.nodes[g].parent = Some(tail_node);
+                }
+                self.nodes[child].children.insert(tail_first, tail_node);
+                pos += common;
+                cur = child;
+                break;
+            }
+        }
+
+        // Append the remainder as one new leaf under `cur`.
+        let remainder = &tokens[pos..];
+        if remainder.is_empty() {
+            return 0;
+        }
+        let need = remainder.len();
+        // Pin the attachment point: if `cur` is itself an unpinned leaf, the
+        // eviction pass below could otherwise free it and we would attach
+        // the new node to a dead slot (caught by the property tests).
+        self.nodes[cur].locks += 1;
+        let freed_enough = self.ensure_capacity(need);
+        self.nodes[cur].locks -= 1;
+        let take = if freed_enough { need } else { self.capacity_tokens.saturating_sub(self.resident_tokens).min(need) };
+        if take == 0 {
+            return 0;
+        }
+        let leaf = self.new_node(Node {
+            edge: remainder[..take].to_vec(),
+            children: HashMap::new(),
+            parent: Some(cur),
+            last_access: now,
+            locks: 0,
+        });
+        self.nodes[cur].children.insert(remainder[0], leaf);
+        self.resident_tokens += take;
+        self.stats.inserted_tokens += take as u64;
+        take
+    }
+
+    /// Evict LRU unpinned leaves until `need` extra tokens fit.  Returns
+    /// whether the space was obtained.
+    fn ensure_capacity(&mut self, need: usize) -> bool {
+        while self.resident_tokens + need > self.capacity_tokens {
+            let Some(victim) = self.lru_evictable_leaf() else {
+                return false;
+            };
+            self.remove_leaf(victim);
+        }
+        true
+    }
+
+    fn lru_evictable_leaf(&self) -> Option<NodeId> {
+        let mut best: Option<(u64, NodeId)> = None;
+        for (id, n) in self.nodes.iter().enumerate() {
+            if id == self.root || n.edge.is_empty() {
+                continue; // root or freed slot
+            }
+            if !n.children.is_empty() || n.locks > 0 {
+                continue;
+            }
+            if best.map(|(t, _)| n.last_access < t).unwrap_or(true) {
+                best = Some((n.last_access, id));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    fn remove_leaf(&mut self, id: NodeId) {
+        debug_assert!(self.nodes[id].children.is_empty() && self.nodes[id].locks == 0);
+        let first = self.nodes[id].edge[0];
+        let parent = self.nodes[id].parent.expect("leaf has parent");
+        self.nodes[parent].children.remove(&first);
+        let freed = self.nodes[id].len();
+        self.resident_tokens -= freed;
+        self.stats.evicted_tokens += freed as u64;
+        self.nodes[id].edge.clear();
+        self.nodes[id].parent = None;
+        self.free_nodes.push(id);
+    }
+
+    /// Drop everything unpinned (used when a worker's budget is reassigned).
+    pub fn clear_unpinned(&mut self) {
+        while let Some(v) = self.lru_evictable_leaf() {
+            self.remove_leaf(v);
+        }
+    }
+
+    /// Property-test invariant: resident == sum of edges; children keyed by
+    /// first token; no orphan locks on freed slots.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut total = 0usize;
+        let mut stack = vec![self.root];
+        let mut visited = 0usize;
+        while let Some(id) = stack.pop() {
+            visited += 1;
+            let n = &self.nodes[id];
+            total += n.len();
+            for (&k, &c) in &n.children {
+                let ce = &self.nodes[c];
+                if ce.edge.first() != Some(&k) {
+                    return Err(format!("child {c} keyed {k} but edge starts {:?}", ce.edge.first()));
+                }
+                if ce.parent != Some(id) {
+                    return Err(format!("child {c} parent wrong"));
+                }
+                stack.push(c);
+            }
+        }
+        if total != self.resident_tokens {
+            return Err(format!("resident {} != tree sum {}", self.resident_tokens, total));
+        }
+        let live = self.nodes.len() - self.free_nodes.len();
+        if visited != live {
+            return Err(format!("visited {visited} != live {live}"));
+        }
+        Ok(())
+    }
+}
+
+fn common_len(a: &[u64], b: &[u64]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(v: &[u64]) -> Vec<u64> {
+        v.to_vec()
+    }
+
+    #[test]
+    fn insert_then_full_hit() {
+        let mut c = RadixCache::new(1000);
+        let s = toks(&[1, 2, 3, 4, 5]);
+        assert_eq!(c.insert(&s), 5);
+        let h = c.match_prefix(&s);
+        assert_eq!(h.matched_tokens, 5);
+        c.unlock(&h);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_splits_edge() {
+        let mut c = RadixCache::new(1000);
+        c.insert(&[1, 2, 3, 4]);
+        c.insert(&[1, 2, 9, 9]);
+        let h = c.match_prefix(&[1, 2, 9, 9, 7]);
+        assert_eq!(h.matched_tokens, 4);
+        c.unlock(&h);
+        assert_eq!(c.resident_tokens(), 6); // [1,2] + [3,4] + [9,9]
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extension_adds_only_new_tokens() {
+        let mut c = RadixCache::new(1000);
+        c.insert(&[1, 2, 3]);
+        assert_eq!(c.insert(&[1, 2, 3, 4, 5]), 2);
+        let h = c.match_prefix(&[1, 2, 3, 4, 5]);
+        assert_eq!(h.matched_tokens, 5);
+        c.unlock(&h);
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity_and_locks() {
+        let mut c = RadixCache::new(6);
+        c.insert(&[1, 2, 3]);
+        c.insert(&[7, 8, 9]);
+        assert_eq!(c.resident_tokens(), 6);
+        // Pin the first sequence; inserting a third must evict the second.
+        let h = c.match_prefix(&[1, 2, 3]);
+        c.insert(&[20, 21, 22]);
+        assert_eq!(c.resident_tokens(), 6);
+        let h2 = c.match_prefix(&[7, 8, 9]);
+        assert_eq!(h2.matched_tokens, 0, "unpinned LRU was evicted");
+        let h3 = c.match_prefix(&[1, 2, 3]);
+        assert_eq!(h3.matched_tokens, 3, "pinned survived");
+        c.unlock(&h);
+        c.unlock(&h2);
+        c.unlock(&h3);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_with_everything_pinned_inserts_partially() {
+        let mut c = RadixCache::new(4);
+        c.insert(&[1, 2, 3, 4]);
+        let h = c.match_prefix(&[1, 2, 3, 4]);
+        let added = c.insert(&[9, 9, 9]);
+        assert_eq!(added, 0, "no room, all pinned");
+        c.unlock(&h);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stats_track_hits_and_misses() {
+        let mut c = RadixCache::new(100);
+        c.insert(&[1, 2, 3, 4]);
+        let h = c.match_prefix(&[1, 2, 5, 6]);
+        assert_eq!(h.matched_tokens, 2);
+        c.unlock(&h);
+        assert_eq!(c.stats.hit_tokens, 2);
+        assert_eq!(c.stats.miss_tokens, 2);
+        assert!((c.stats.hit_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_edge_match_counts_tokens() {
+        let mut c = RadixCache::new(100);
+        c.insert(&[1, 2, 3, 4, 5, 6]);
+        let h = c.match_prefix(&[1, 2, 3, 9]);
+        assert_eq!(h.matched_tokens, 3);
+        c.unlock(&h);
+        c.check_invariants().unwrap();
+    }
+}

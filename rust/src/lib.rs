@@ -1,0 +1,24 @@
+//! PrefillShare — a reproduction of "PrefillShare: A Shared Prefill Module
+//! for KV Reuse in Multi-LLM Disaggregated Serving" (Woo, Kim, et al. 2026).
+//!
+//! Three-layer architecture (DESIGN.md): this crate is Layer 3, the rust
+//! coordinator — routing, batching, KV block management, disaggregated
+//! prefill/decode pools, the discrete-event cluster simulator, and the
+//! training driver for cache-conditioned fine-tuning.  Layers 2 (JAX model)
+//! and 1 (Pallas kernels) are AOT-compiled to `artifacts/*.hlo.txt` and
+//! executed through [`runtime`]; python never runs on the request path.
+
+pub mod costmodel;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod simtime;
+pub mod training;
+pub mod util;
+pub mod workload;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,203 @@
+//! PrefillShare CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   serve          real-execution serving demo over PJRT (tiny backbone)
+//!   bench-serving  regenerate Fig 3/4/5/6 rows (cluster simulator)
+//!   ablation       routing-policy ablation (DESIGN.md)
+//!   accuracy       regenerate Fig 2 / Table 1 / Table 2 (training driver)
+//!   train          one fine-tuning run (full or cache-conditioned)
+//!   workload       print a sampled trace's shape statistics
+//!
+//! Examples:
+//!   prefillshare bench-serving --experiment fig4 --out reports/fig4.json
+//!   prefillshare accuracy --experiment table2 --steps 300
+//!   prefillshare serve --sessions 4 --system prefillshare
+
+use anyhow::{bail, Result};
+
+use prefillshare::engine::experiments as sx;
+use prefillshare::engine::report::{format_row, header, save_rows};
+use prefillshare::util::cli::Args;
+use prefillshare::workload::{generate_trace, workload_by_name};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "bench-serving" => cmd_bench_serving(&args),
+        "ablation" => cmd_ablation(&args),
+        "accuracy" => cmd_accuracy(&args),
+        "train" => cmd_train(&args),
+        "workload" => cmd_workload(&args),
+        "version" => {
+            println!("prefillshare {}", prefillshare::version());
+            Ok(())
+        }
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "prefillshare {} — PrefillShare reproduction (see README.md)\n\n\
+         USAGE: prefillshare <serve|bench-serving|ablation|accuracy|train|workload> [--options]\n\n\
+         bench-serving --experiment fig3|fig4|fig5|fig6 [--seed N] [--out file.json]\n\
+         accuracy      --experiment fig2|table1|table2 [--steps N] [--artifacts DIR]\n\
+         train         --model tiny|small|medium --method full|cc --task arith|transform|toolcall\n\
+         serve         [--system baseline|prefillshare] [--sessions N] [--artifacts DIR]\n\
+         workload      [--workload react|reflexion] [--rate R] [--duration S]",
+        prefillshare::version()
+    );
+}
+
+fn cmd_bench_serving(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 0);
+    let exp = args.get_or("experiment", "fig3");
+    let rows = match exp {
+        "fig3" => sx::fig3(seed),
+        "fig4" => sx::fig4(seed),
+        "fig5" => sx::fig5(seed),
+        "fig6" => sx::fig6(seed),
+        other => bail!("unknown serving experiment `{other}`"),
+    };
+    let x_name = rows.first().map(|r| r.x_name.clone()).unwrap_or_default();
+    println!("== {exp} (seed {seed}) ==");
+    println!("{}", header(&x_name));
+    for r in &rows {
+        println!("{}", format_row(r));
+    }
+    if let Some(out) = args.get("out") {
+        save_rows(out, &rows)?;
+        println!("saved {} rows to {out}", rows.len());
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 0);
+    let rows = sx::routing_ablation(seed);
+    println!("== routing ablation (PrefillShare, ReAct @ 3 sess/s) ==");
+    println!("{}", header("rate"));
+    for r in &rows {
+        println!("{}", format_row(r));
+    }
+    if let Some(out) = args.get("out") {
+        save_rows(out, &rows)?;
+    }
+    Ok(())
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    let name = args.get_or("workload", "react");
+    let wl = workload_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?;
+    let rate = args.get_f64("rate", 2.0);
+    let dur = args.get_f64("duration", 120.0);
+    let trace = generate_trace(&wl, rate, dur, args.get_u64("seed", 0));
+    let n = trace.sessions.len();
+    let calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
+    let out_tokens: usize = trace.sessions.iter().map(|s| s.total_output_tokens()).sum();
+    let final_ctx: Vec<usize> = trace
+        .sessions
+        .iter()
+        .map(|s| s.context_len_after(&wl, s.calls.len() - 1))
+        .collect();
+    let mean_ctx = final_ctx.iter().sum::<usize>() as f64 / n.max(1) as f64;
+    println!(
+        "workload {name}: {n} sessions, {calls} calls, {out_tokens} output tokens, \
+         mean final context {mean_ctx:.0} tokens, sys prompt {} tokens",
+        wl.sys_prompt_tokens
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    serve_impl::run(args)
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    prefillshare::training::experiments::run_accuracy_cli(args)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    prefillshare::training::experiments::run_train_cli(args)
+}
+
+/// Real-serving subcommand (split out to keep main slim).
+mod serve_impl {
+    use super::*;
+    use prefillshare::engine::config::SystemKind;
+    use prefillshare::engine::real::{RealCall, RealEngine, RealEngineConfig, RealSessionScript};
+    use prefillshare::model::{ByteTokenizer, ParamSet};
+    use prefillshare::runtime::XlaRuntime;
+    use std::rc::Rc;
+
+    pub fn run(args: &Args) -> Result<()> {
+        let artifacts = args.get_or("artifacts", "artifacts");
+        let system = match args.get_or("system", "prefillshare") {
+            "baseline" => SystemKind::Baseline,
+            _ => SystemKind::PrefillShare,
+        };
+        let n_sessions = args.get_usize("sessions", 3);
+        let model = args.get_or("model", "tiny");
+
+        let rt = Rc::new(XlaRuntime::new(artifacts)?);
+        let spec = rt.manifest.model(model)?.clone();
+        let base = ParamSet::load_init(&spec)?;
+        // Task models: use fine-tuned checkpoints if present, else base.
+        let tasks: Vec<ParamSet> = (0..4)
+            .map(|i| {
+                let p = format!("checkpoints/{model}_task{i}.bin");
+                if std::path::Path::new(&p).exists() {
+                    ParamSet::load(&spec, &p)
+                } else {
+                    Ok(base.clone())
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let cfg = RealEngineConfig { system, ..Default::default() };
+        let mut engine = RealEngine::new(rt, model, base, tasks, cfg)?;
+
+        let tok = ByteTokenizer;
+        let scripts: Vec<RealSessionScript> = (0..n_sessions as u64)
+            .map(|id| RealSessionScript {
+                id,
+                prompt_tokens: tok.encode(&format!(
+                    "[system] you are a team of agents solving task #{id}. [task] data={id}"
+                )),
+                calls: (0..8).map(|c| RealCall { model: c % 4, max_out_tokens: 12 }).collect(),
+            })
+            .collect();
+
+        let report = engine.serve(&scripts)?;
+        println!("== real serving ({}) ==", system.label());
+        println!(
+            "sessions {}  calls {}  generated {} tokens in {:.2}s  ({:.1} tok/s)",
+            report.sessions, report.calls, report.generated_tokens, report.wall_secs,
+            report.throughput_tok_s
+        );
+        println!(
+            "phase split: prefill {:.2}s  decode {:.2}s  handoff {:.2}s",
+            report.prefill_secs, report.decode_secs, report.handoff_secs
+        );
+        let reuse = report.reuse_ratio();
+        let mut ttft = report.ttft;
+        let mut lat = report.call_latency;
+        println!(
+            "ttft mean {:.3}s p95 {:.3}s | call latency p95 {:.3}s | prefix reuse {:.1}%",
+            ttft.mean(),
+            ttft.p95(),
+            lat.p95(),
+            100.0 * reuse,
+        );
+        println!(
+            "peak resident session-KV: {}",
+            prefillshare::util::fmt_bytes(report.peak_resident_kv_bytes as u64)
+        );
+        Ok(())
+    }
+}

@@ -1,0 +1,200 @@
+//! Serving metrics: latency histograms (p50/p95/p99), counters, and
+//! throughput accounting — the quantities Figs 3–6 report.
+
+/// Sample-accumulating histogram with exact quantiles (runs are bounded, so
+/// we keep the raw samples; quantile sorts lazily).
+#[derive(Debug, Default, Clone)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Quantile by linear interpolation; NaN on empty.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            self.samples[lo]
+        } else {
+            let w = pos - lo as f64;
+            self.samples[lo] * (1.0 - w) + self.samples[hi] * w
+        }
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            f64::NAN
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    pub fn max(&mut self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        *self.samples.last().unwrap()
+    }
+}
+
+/// Tokens-over-time throughput meter.
+#[derive(Debug, Default, Clone)]
+pub struct ThroughputMeter {
+    pub tokens: u64,
+    pub first_event: Option<f64>,
+    pub last_event: Option<f64>,
+}
+
+impl ThroughputMeter {
+    pub fn record(&mut self, at_secs: f64, tokens: u64) {
+        self.tokens += tokens;
+        if self.first_event.is_none() {
+            self.first_event = Some(at_secs);
+        }
+        self.last_event = Some(at_secs);
+    }
+
+    /// tokens/sec over the active window (or over `horizon` if provided).
+    pub fn tokens_per_sec(&self, horizon_secs: Option<f64>) -> f64 {
+        let span = match (horizon_secs, self.first_event, self.last_event) {
+            (Some(h), _, _) => h,
+            (None, Some(a), Some(b)) if b > a => b - a,
+            _ => return 0.0,
+        };
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / span
+        }
+    }
+}
+
+/// The full per-run metric bundle the serving report prints.
+#[derive(Debug, Default, Clone)]
+pub struct ServingMetrics {
+    /// End-to-end session latency (arrival -> last agent-call completion).
+    pub session_latency: Histogram,
+    /// Per-model-invocation TTFT (request issued -> first output token).
+    pub ttft: Histogram,
+    /// Per-invocation end-to-end latency.
+    pub request_latency: Histogram,
+    pub generated: ThroughputMeter,
+    pub sessions_completed: u64,
+    pub sessions_arrived: u64,
+    pub requests_completed: u64,
+    /// Prefix-cache hits/misses in tokens, aggregated over prefill workers.
+    pub prefix_hit_tokens: u64,
+    pub prefix_miss_tokens: u64,
+    /// Prefill tokens actually computed (recompute burden).
+    pub prefill_computed_tokens: u64,
+    /// KV staging events + bytes (App. B.2 overflow behaviour).
+    pub staging_events: u64,
+    pub staged_tokens: u64,
+    /// KV handoffs performed (PrefillShare pipeline step 3).
+    pub handoffs: u64,
+    pub handoff_tokens: u64,
+}
+
+impl ServingMetrics {
+    pub fn prefix_hit_ratio(&self) -> f64 {
+        let total = self.prefix_hit_tokens + self.prefix_miss_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_exact_on_uniform() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert!((h.p50() - 50.5).abs() < 1e-9);
+        assert!((h.p95() - 95.05).abs() < 0.1);
+        assert_eq!(h.max(), 100.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_single_sample() {
+        let mut h = Histogram::new();
+        h.record(7.0);
+        assert_eq!(h.p50(), 7.0);
+        assert_eq!(h.p99(), 7.0);
+    }
+
+    #[test]
+    fn empty_histogram_nan() {
+        let mut h = Histogram::new();
+        assert!(h.p95().is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn throughput_window() {
+        let mut t = ThroughputMeter::default();
+        t.record(10.0, 100);
+        t.record(20.0, 300);
+        assert!((t.tokens_per_sec(None) - 40.0).abs() < 1e-9);
+        assert!((t.tokens_per_sec(Some(100.0)) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hit_ratio() {
+        let mut m = ServingMetrics::default();
+        m.prefix_hit_tokens = 60;
+        m.prefix_miss_tokens = 40;
+        assert!((m.prefix_hit_ratio() - 0.6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,217 @@
+//! Host-side KV cache container + the cache surgery the PrefillShare data
+//! path needs: staging a prefill-bucket cache into a decode-capacity cache,
+//! handing off between workers, and *mixing* two parameterizations' caches
+//! by position (the Fig-2 sharing-ratio sweep and the shared-prefill serve
+//! path are both "first n positions from the base cache").
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::tensor::HostTensor;
+
+/// A dense KV cache for ONE sequence: layout `[L, 1, H, s_max, dh]` to match
+/// the decode artifacts' cache operands, plus the number of valid positions.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub s_max: usize,
+    pub len: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn empty(spec: &ModelSpec) -> KvCache {
+        let n = spec.n_layers * spec.n_heads * spec.s_max * spec.d_head;
+        KvCache {
+            n_layers: spec.n_layers,
+            n_heads: spec.n_heads,
+            d_head: spec.d_head,
+            s_max: spec.s_max,
+            len: 0,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    /// Stage a prefill output (`[L, 1, H, S_bucket, dh]`, `n_valid` real
+    /// positions) into a fresh decode-capacity cache.
+    pub fn from_prefill(spec: &ModelSpec, k: &HostTensor, v: &HostTensor, n_valid: usize) -> Result<KvCache> {
+        let shape = k.shape();
+        if shape.len() != 5 || shape[0] != spec.n_layers || shape[2] != spec.n_heads || shape[4] != spec.d_head {
+            bail!("unexpected prefill cache shape {:?}", shape);
+        }
+        let s_bucket = shape[3];
+        if n_valid > s_bucket || n_valid > spec.s_max {
+            bail!("n_valid {n_valid} exceeds bucket {s_bucket} or s_max {}", spec.s_max);
+        }
+        let mut cache = KvCache::empty(spec);
+        cache.write_rows(k.as_f32()?, v.as_f32()?, s_bucket, 0, n_valid);
+        cache.len = n_valid;
+        Ok(cache)
+    }
+
+    /// Copy rows `[0, n)` of a `[L,1,H,s_src,dh]` source into self at
+    /// position offset `dst_at`.
+    fn write_rows(&mut self, k_src: &[f32], v_src: &[f32], s_src: usize, dst_at: usize, n: usize) {
+        let dh = self.d_head;
+        for l in 0..self.n_layers {
+            for h in 0..self.n_heads {
+                let src_base = ((l * self.n_heads) + h) * s_src * dh;
+                let dst_base = ((l * self.n_heads) + h) * self.s_max * dh;
+                let src = src_base..src_base + n * dh;
+                let dst = dst_base + dst_at * dh..dst_base + (dst_at + n) * dh;
+                self.k[dst.clone()].copy_from_slice(&k_src[src.clone()]);
+                self.v[dst].copy_from_slice(&v_src[src]);
+            }
+        }
+    }
+
+    /// PrefillShare cache mixing: positions `[0, n_base)` come from `base`,
+    /// the rest (up to `own.len`) from `own`.  Both caches must share
+    /// geometry and have `len >= n_base`.  `n_base = len-?` at serve time is
+    /// "100% sharing"; the Fig-2 sweep varies it.
+    pub fn mixed(base: &KvCache, own: &KvCache, n_base: usize) -> Result<KvCache> {
+        if base.geometry() != own.geometry() {
+            bail!("cache geometry mismatch");
+        }
+        if n_base > base.len || base.len != own.len {
+            bail!("mix bounds: n_base {n_base}, base {}, own {}", base.len, own.len);
+        }
+        let mut out = own.clone();
+        let dh = out.d_head;
+        for l in 0..out.n_layers {
+            for h in 0..out.n_heads {
+                let b = ((l * out.n_heads) + h) * out.s_max * dh;
+                let r = b..b + n_base * dh;
+                out.k[r.clone()].copy_from_slice(&base.k[r.clone()]);
+                out.v[r.clone()].copy_from_slice(&base.v[r]);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn geometry(&self) -> (usize, usize, usize, usize) {
+        (self.n_layers, self.n_heads, self.s_max, self.d_head)
+    }
+
+    /// As decode-program operands (`[L, 1, H, s_max, dh]`).
+    pub fn to_tensors(&self) -> (HostTensor, HostTensor) {
+        let shape = vec![self.n_layers, 1, self.n_heads, self.s_max, self.d_head];
+        (
+            HostTensor::f32(shape.clone(), self.k.clone()),
+            HostTensor::f32(shape, self.v.clone()),
+        )
+    }
+
+    /// Absorb updated cache operands returned by a decode step.
+    pub fn update_from(&mut self, k: &HostTensor, v: &HostTensor) -> Result<()> {
+        let kf = k.as_f32()?;
+        let vf = v.as_f32()?;
+        anyhow::ensure!(kf.len() == self.k.len(), "cache size drift");
+        self.k.copy_from_slice(kf);
+        self.v.copy_from_slice(vf);
+        Ok(())
+    }
+
+    /// Bytes this cache occupies for `len` valid tokens (metrics/memory eq).
+    pub fn valid_bytes(&self) -> usize {
+        2 * self.n_layers * self.n_heads * self.len * self.d_head * 4
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        2 * (self.k.len()) * 4
+    }
+}
+
+/// Per-token KV bytes for a model (the unit the block manager and the cost
+/// model both account in — paper Eq. (8)/(9)).
+pub fn kv_bytes_per_token(spec: &ModelSpec) -> usize {
+    2 * spec.n_layers * spec.n_heads * spec.d_head * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, ModelSpec, TensorSpec};
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ff: 16,
+            s_max: 8,
+            vocab: 259,
+            n_params: 0,
+            init_params_file: "/dev/null".into(),
+            param_specs: vec![],
+        }
+    }
+
+    fn prefill_tensor(s_bucket: usize, val: f32) -> HostTensor {
+        let sp = spec();
+        let n = sp.n_layers * sp.n_heads * s_bucket * sp.d_head;
+        HostTensor::f32(vec![sp.n_layers, 1, sp.n_heads, s_bucket, sp.d_head], vec![val; n])
+    }
+
+    #[test]
+    fn stage_prefill_into_cache() {
+        let sp = spec();
+        let k = prefill_tensor(4, 1.0);
+        let v = prefill_tensor(4, 2.0);
+        let c = KvCache::from_prefill(&sp, &k, &v, 3).unwrap();
+        assert_eq!(c.len, 3);
+        // position 0..3 populated, rest zero — check layer 1, head 1.
+        let dh = sp.d_head;
+        let base = ((1 * sp.n_heads) + 1) * sp.s_max * dh;
+        assert_eq!(c.k[base], 1.0);
+        assert_eq!(c.k[base + 2 * dh], 1.0);
+        assert_eq!(c.k[base + 3 * dh], 0.0); // beyond n_valid
+        assert_eq!(c.v[base + dh], 2.0);
+    }
+
+    #[test]
+    fn mixing_takes_prefix_from_base() {
+        let sp = spec();
+        let base = KvCache::from_prefill(&sp, &prefill_tensor(8, 10.0), &prefill_tensor(8, 10.0), 6).unwrap();
+        let own = KvCache::from_prefill(&sp, &prefill_tensor(8, 20.0), &prefill_tensor(8, 20.0), 6).unwrap();
+        let mix = KvCache::mixed(&base, &own, 4).unwrap();
+        let dh = sp.d_head;
+        // head (0,0): rows 0..4 = base, 4..6 = own
+        assert_eq!(mix.k[0], 10.0);
+        assert_eq!(mix.k[3 * dh], 10.0);
+        assert_eq!(mix.k[4 * dh], 20.0);
+        assert_eq!(mix.k[5 * dh], 20.0);
+        assert_eq!(mix.len, 6);
+    }
+
+    #[test]
+    fn mix_rejects_bad_bounds() {
+        let sp = spec();
+        let a = KvCache::from_prefill(&sp, &prefill_tensor(8, 1.0), &prefill_tensor(8, 1.0), 5).unwrap();
+        let b = KvCache::from_prefill(&sp, &prefill_tensor(8, 2.0), &prefill_tensor(8, 2.0), 5).unwrap();
+        assert!(KvCache::mixed(&a, &b, 6).is_err());
+    }
+
+    #[test]
+    fn valid_bytes_tracks_len() {
+        let sp = spec();
+        let c = KvCache::from_prefill(&sp, &prefill_tensor(4, 0.0), &prefill_tensor(4, 0.0), 4).unwrap();
+        assert_eq!(c.valid_bytes(), 2 * 2 * 2 * 4 * 4 * 4);
+        assert_eq!(kv_bytes_per_token(&sp) * c.len, c.valid_bytes());
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let sp = spec();
+        let mut c = KvCache::from_prefill(&sp, &prefill_tensor(4, 3.0), &prefill_tensor(4, 4.0), 2).unwrap();
+        let (kt, vt) = c.to_tensors();
+        c.update_from(&kt, &vt).unwrap();
+        assert_eq!(c.k[0], 3.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Model hosting: weights (PSPM/ParamSet), byte tokenizer, KV cache
+//! container, and the `LanguageModel` facade over the PJRT runtime.
+
+pub mod kv;
+pub mod lm;
+pub mod params;
+pub mod pspm;
+pub mod tokenizer;
+
+pub use kv::{kv_bytes_per_token, KvCache};
+pub use lm::{argmax, LanguageModel, Sampler};
+pub use params::ParamSet;
+pub use tokenizer::{ByteTokenizer, BOS, EOS, PAD, VOCAB_SIZE};

@@ -1,0 +1,127 @@
+//! `ParamSet`: one model's weights as an ordered, named tensor list that
+//! matches the manifest's `param_specs` exactly.  The ordering is the wire
+//! contract with every lowered program (params are positional HLO inputs).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::pspm;
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::tensor::HostTensor;
+
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub model: String,
+    tensors: Vec<(String, HostTensor)>,
+}
+
+impl ParamSet {
+    /// Build from named tensors, validating names/shapes/order against the
+    /// model spec (tolerates arbitrary input order; output order is spec
+    /// order).
+    pub fn new(spec: &ModelSpec, mut named: Vec<(String, HostTensor)>) -> Result<ParamSet> {
+        let mut tensors = Vec::with_capacity(spec.param_specs.len());
+        for ps in &spec.param_specs {
+            let idx = named
+                .iter()
+                .position(|(n, _)| n == &ps.name)
+                .with_context(|| format!("missing parameter `{}` for model `{}`", ps.name, spec.name))?;
+            let (name, t) = named.swap_remove(idx);
+            t.check(ps)?;
+            tensors.push((name, t));
+        }
+        if !named.is_empty() {
+            bail!(
+                "unexpected extra tensors for `{}`: {:?}",
+                spec.name,
+                named.iter().map(|(n, _)| n).collect::<Vec<_>>()
+            );
+        }
+        Ok(ParamSet { model: spec.name.clone(), tensors })
+    }
+
+    pub fn load(spec: &ModelSpec, path: impl AsRef<Path>) -> Result<ParamSet> {
+        ParamSet::new(spec, pspm::read_pspm(path)?)
+    }
+
+    pub fn load_init(spec: &ModelSpec) -> Result<ParamSet> {
+        ParamSet::load(spec, &spec.init_params_file)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        pspm::write_pspm(path, &self.tensors)
+    }
+
+    /// Zero-valued clone (Adam moment buffers).
+    pub fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            model: self.model.clone(),
+            tensors: self
+                .tensors
+                .iter()
+                .map(|(n, t)| (n.clone(), HostTensor::zeros_f32(t.shape().to_vec())))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn tensors(&self) -> &[(String, HostTensor)] {
+        &self.tensors
+    }
+
+    /// Ordered tensor views for feeding a program's `param:` input block.
+    pub fn values(&self) -> impl Iterator<Item = &HostTensor> {
+        self.tensors.iter().map(|(_, t)| t)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Replace all tensors from program outputs (train-step results), which
+    /// arrive in spec order without names.
+    pub fn replace_from(&mut self, outputs: &[HostTensor]) -> Result<()> {
+        anyhow::ensure!(
+            outputs.len() == self.tensors.len(),
+            "expected {} tensors, got {}",
+            self.tensors.len(),
+            outputs.len()
+        );
+        for ((_, slot), out) in self.tensors.iter_mut().zip(outputs) {
+            anyhow::ensure!(
+                slot.shape() == out.shape(),
+                "shape drift in train-step output"
+            );
+            *slot = out.clone();
+        }
+        Ok(())
+    }
+
+    /// Total parameter count (sanity against manifest `n_params`).
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.elements()).sum()
+    }
+
+    /// L2 distance to another set (tests: fine-tuning actually moved weights;
+    /// frozen base actually did not).
+    pub fn l2_distance(&self, other: &ParamSet) -> f64 {
+        let mut acc = 0.0f64;
+        for ((_, a), (_, b)) in self.tensors.iter().zip(&other.tensors) {
+            if let (Ok(xa), Ok(xb)) = (a.as_f32(), b.as_f32()) {
+                for (x, y) in xa.iter().zip(xb) {
+                    let d = (*x - *y) as f64;
+                    acc += d * d;
+                }
+            }
+        }
+        acc.sqrt()
+    }
+}

@@ -1,0 +1,154 @@
+//! PSPM: the tiny binary tensor-container format shared with
+//! `python/compile/aot.py::write_pspm`.  Used for initial weights emitted at
+//! artifact-build time and for fine-tuned checkpoints the training driver
+//! saves/loads.
+//!
+//! Layout (little-endian):
+//!   magic "PSPM" | u32 version=1 | u32 count
+//!   per tensor: u16 name_len | name utf8 | u8 dtype (0=f32,1=i32) |
+//!               u8 ndim | u32 dims[ndim] | payload (4 bytes/elt)
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::HostTensor;
+
+const MAGIC: &[u8; 4] = b"PSPM";
+
+pub fn read_pspm(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a PSPM file", path.display());
+    }
+    let version = read_u32(&mut f)?;
+    if version != 1 {
+        bail!("unsupported PSPM version {version}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        f.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).context("tensor name utf8")?;
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let (code, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut payload = vec![0u8; n * 4];
+        f.read_exact(&mut payload)?;
+        let tensor = match code {
+            0 => HostTensor::f32(
+                shape,
+                payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            1 => HostTensor::i32(
+                shape,
+                payload
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            other => bail!("unknown dtype code {other} for `{name}`"),
+        };
+        out.push((name, tensor));
+    }
+    Ok(out)
+}
+
+pub fn write_pspm(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<()> {
+    let path = path.as_ref();
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        let code: u8 = match t {
+            HostTensor::F32 { .. } => 0,
+            HostTensor::I32 { .. } => 1,
+        };
+        f.write_all(&[code, t.shape().len() as u8])?;
+        for &d in t.shape() {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            HostTensor::F32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            HostTensor::I32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pspm_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let tensors = vec![
+            ("a".to_string(), HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect())),
+            ("b.c".to_string(), HostTensor::i32(vec![4], vec![1, -2, 3, -4])),
+            ("scalar".to_string(), HostTensor::scalar_f32(7.5)),
+        ];
+        write_pspm(&path, &tensors).unwrap();
+        let back = read_pspm(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((n1, t1), (n2, t2)) in tensors.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("pspm_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_pspm(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

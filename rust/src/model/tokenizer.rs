@@ -1,0 +1,83 @@
+//! Byte-level tokenizer: ids 0..=255 are raw bytes, then BOS/EOS/PAD.
+//! Mirrors `python/compile/model.py` vocabulary constants; the manifest
+//! carries them too and `ByteTokenizer::from_vocab` asserts agreement.
+
+use crate::runtime::manifest::VocabSpec;
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+pub const VOCAB_SIZE: usize = 259;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn from_vocab(v: &VocabSpec) -> ByteTokenizer {
+        assert_eq!(v.size, VOCAB_SIZE, "manifest vocab size drifted");
+        assert_eq!((v.bos, v.eos, v.pad), (BOS, EOS, PAD), "special ids drifted");
+        ByteTokenizer
+    }
+
+    /// Encode text as BOS + bytes (BOS anchors the shared prefix so every
+    /// session's radix path starts identically).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(text.bytes().map(|b| b as i32));
+        out
+    }
+
+    /// Encode without BOS (continuation segments appended to a context).
+    pub fn encode_continuation(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// Decode ids to text; stops at EOS, skips BOS/PAD, lossy on bad UTF-8.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len());
+        for &id in ids {
+            match id {
+                EOS => break,
+                BOS | PAD => continue,
+                0..=255 => bytes.push(id as u8),
+                _ => {} // out-of-range ids are dropped (sampled garbage guard)
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = ByteTokenizer;
+        let ids = t.encode("hello, Привет");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(t.decode(&ids), "hello, Привет");
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = ByteTokenizer;
+        let mut ids = t.encode("ab");
+        ids.push(EOS);
+        ids.extend_from_slice(&[99, 99]);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn continuation_has_no_bos() {
+        let t = ByteTokenizer;
+        assert_eq!(t.encode_continuation("xy"), vec![120, 121]);
+    }
+
+    #[test]
+    fn pad_skipped() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[PAD, 104, PAD, 105]), "hi");
+    }
+}

@@ -1,0 +1,161 @@
+//! PJRT execution engine: loads `artifacts/*.hlo.txt`, compiles each program
+//! once on the CPU client, and executes with validated host tensors.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* interchange, compiled
+//! via `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile`.  Programs are compiled lazily and cached, so a
+//! binary that only serves never pays for the training programs.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Manifest, ProgramSpec};
+use super::tensor::HostTensor;
+
+/// Statistics about engine usage (reported by examples and §Perf runs).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// A compiled program plus its manifest signature.
+pub struct Program {
+    pub spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    /// Execute with host tensors; validates every input against the spec and
+    /// returns outputs unpacked per the spec (the AOT side lowers with
+    /// `return_tuple=True`, so there is always exactly one result tuple).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "program `{}` wants {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            t.check(spec)
+                .with_context(|| format!("input to `{}`", self.spec.name))?;
+            lits.push(t.to_literal()?);
+        }
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        self.run_literals(&refs)
+    }
+
+    /// Hot-path variant: execute with pre-built literals (§Perf L3 — lets
+    /// callers cache the conversion of tensors that don't change between
+    /// steps, e.g. model weights in the decode loop).  Shape validation is
+    /// the compiled executable's own check.
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "program `{}` wants {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let result = self.exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "program `{}` returned {} outputs, spec wants {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// The runtime: one PJRT CPU client + a lazy program cache.
+pub struct XlaRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    programs: RefCell<BTreeMap<String, Rc<Program>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl XlaRuntime {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime {
+            manifest,
+            client,
+            programs: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    /// Fetch (compiling on first use) a program by manifest name.
+    pub fn program(&self, name: &str) -> Result<Rc<Program>> {
+        if let Some(p) = self.programs.borrow().get(name) {
+            return Ok(p.clone());
+        }
+        let spec = self.manifest.program(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling `{name}`"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_secs += dt;
+        }
+        let prog = Rc::new(Program { spec, exe });
+        self.programs.borrow_mut().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Execute a program by name, tracking wall time in the engine stats.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let prog = self.program(name)?;
+        let t0 = Instant::now();
+        let out = prog.run(inputs);
+        let dt = t0.elapsed().as_secs_f64();
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_secs += dt;
+        out
+    }
+
+    /// Hot-path execute with pre-built literals (see [`Program::run_literals`]).
+    pub fn run_literals(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<HostTensor>> {
+        let prog = self.program(name)?;
+        let t0 = Instant::now();
+        let out = prog.run_literals(inputs);
+        let dt = t0.elapsed().as_secs_f64();
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_secs += dt;
+        out
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,253 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! python AOT pipeline and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype `{other}`"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One named tensor in a program signature (or a model's parameter list).
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name").as_str().context("spec name")?.to_string(),
+            dtype: DType::parse(j.req("dtype").as_str().context("spec dtype")?)?,
+            shape: j
+                .req("shape")
+                .as_arr()
+                .context("spec shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Kinds of lowered programs (mirrors aot.py `programs_for`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProgramKind {
+    Prefill,
+    Decode,
+    TrainFull,
+    TrainCc,
+    EvalFull,
+    EvalCc,
+}
+
+impl ProgramKind {
+    fn parse(s: &str) -> Result<ProgramKind> {
+        Ok(match s {
+            "prefill" => ProgramKind::Prefill,
+            "decode" => ProgramKind::Decode,
+            "train_full" => ProgramKind::TrainFull,
+            "train_cc" => ProgramKind::TrainCc,
+            "eval_full" => ProgramKind::EvalFull,
+            "eval_cc" => ProgramKind::EvalCc,
+            other => bail!("unknown program kind `{other}`"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub kind: ProgramKind,
+    pub model: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// kind-specific metadata: seq / batch / s_max buckets.
+    pub meta: BTreeMap<String, usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub s_max: usize,
+    pub vocab: usize,
+    pub n_params: usize,
+    pub init_params_file: PathBuf,
+    pub param_specs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct VocabSpec {
+    pub size: usize,
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: VocabSpec,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let vocab = VocabSpec {
+            size: j.req("vocab").req("size").as_usize().context("vocab")?,
+            bos: j.req("vocab").req("bos").as_i64().context("bos")? as i32,
+            eos: j.req("vocab").req("eos").as_i64().context("eos")? as i32,
+            pad: j.req("vocab").req("pad").as_i64().context("pad")? as i32,
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").as_obj().context("models")? {
+            let param_specs = m
+                .req("param_specs")
+                .as_arr()
+                .context("param_specs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    d_model: m.req("d_model").as_usize().unwrap(),
+                    n_layers: m.req("n_layers").as_usize().unwrap(),
+                    n_heads: m.req("n_heads").as_usize().unwrap(),
+                    d_head: m.req("d_head").as_usize().unwrap(),
+                    d_ff: m.req("d_ff").as_usize().unwrap(),
+                    s_max: m.req("s_max").as_usize().unwrap(),
+                    vocab: m.req("vocab").as_usize().unwrap(),
+                    n_params: m.req("n_params").as_usize().unwrap(),
+                    init_params_file: dir.join(m.req("init_params").as_str().unwrap()),
+                    param_specs,
+                },
+            );
+        }
+
+        let mut programs = BTreeMap::new();
+        for p in j.req("programs").as_arr().context("programs")? {
+            let name = p.req("name").as_str().unwrap().to_string();
+            let mut meta = BTreeMap::new();
+            if let Some(m) = p.req("meta").as_obj() {
+                for (k, v) in m {
+                    if let Some(n) = v.as_usize() {
+                        meta.insert(k.clone(), n);
+                    }
+                }
+            }
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    name,
+                    kind: ProgramKind::parse(p.req("kind").as_str().unwrap())?,
+                    model: p.req("model").as_str().unwrap().to_string(),
+                    file: dir.join(p.req("file").as_str().unwrap()),
+                    inputs: p
+                        .req("inputs")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: p
+                        .req("outputs")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    meta,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            vocab,
+            train_batch: j.req("train").req("batch").as_usize().unwrap(),
+            train_seq: j.req("train").req("seq").as_usize().unwrap(),
+            models,
+            programs,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model `{name}` not in manifest"))
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .with_context(|| format!("program `{name}` not in manifest"))
+    }
+
+    /// All prefill bucket lengths available for a model, ascending.
+    pub fn prefill_buckets(&self, model: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .programs
+            .values()
+            .filter(|p| p.kind == ProgramKind::Prefill && p.model == model)
+            .filter_map(|p| p.meta.get("seq").copied())
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// All decode batch sizes available for a model, ascending.
+    pub fn decode_batches(&self, model: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .programs
+            .values()
+            .filter(|p| p.kind == ProgramKind::Decode && p.model == model)
+            .filter_map(|p| p.meta.get("batch").copied())
+            .collect();
+        v.sort();
+        v
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client wrapper over the `xla` crate.
+//!
+//! Load path (see /opt/xla-example/load_hlo and aot_recipe):
+//! `artifacts/<prog>.hlo.txt` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! Python never runs here — artifacts are produced once by `make artifacts`.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{EngineStats, Program, XlaRuntime};
+pub use manifest::{DType, Manifest, ModelSpec, ProgramKind, ProgramSpec, TensorSpec};
+pub use tensor::HostTensor;

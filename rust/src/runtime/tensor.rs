@@ -1,0 +1,176 @@
+//! Host-side tensors and their conversion to/from `xla::Literal`.
+//!
+//! Everything the coordinator feeds to or reads from a PJRT executable goes
+//! through `HostTensor`; shapes are validated against the manifest specs so
+//! a drifted artifact fails loudly instead of silently misreading memory.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A dense host tensor (f32 or i32; everything in the artifact set is 4-byte).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if !self.matches(spec) {
+            bail!(
+                "tensor mismatch for `{}`: expected {:?} {:?}, got {:?} {:?}",
+                spec.name,
+                spec.dtype,
+                spec.shape,
+                self.dtype(),
+                self.shape()
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to an `xla::Literal` for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Read a `Literal` back into a host tensor, given its expected spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        let t = match spec.dtype {
+            DType::F32 => HostTensor::F32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<f32>().context("literal -> f32 vec")?,
+            },
+            DType::I32 => HostTensor::I32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<i32>().context("literal -> i32 vec")?,
+            },
+        };
+        if t.elements() != spec.elements() {
+            bail!(
+                "literal for `{}` has {} elements, spec wants {}",
+                spec.name,
+                t.elements(),
+                spec.elements()
+            );
+        }
+        Ok(t)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.elements() * 4
+    }
+}
+
+/// Row-major strides for a shape (helper for host-side cache surgery).
+pub fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_guard() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.size_bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = TensorSpec { name: "x".into(), dtype: DType::F32, shape: vec![2, 2] };
+        assert!(HostTensor::zeros_f32(vec![2, 2]).check(&spec).is_ok());
+        assert!(HostTensor::zeros_f32(vec![4]).check(&spec).is_err());
+        assert!(HostTensor::i32(vec![2, 2], vec![0; 4]).check(&spec).is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+        assert!(strides(&[]).is_empty());
+    }
+}

@@ -1,0 +1,258 @@
+//! Synthetic task families standing in for the paper's fine-tuning datasets
+//! (DESIGN.md "Substitutions"):
+//!   * `Arith`     ≈ MetaMathQA → GSM8K   : two-operand addition, exact-match
+//!   * `Transform` ≈ EvolInstruct → HumanEval : per-character string rewriting
+//!   * `Toolcall`  ≈ xLAM → BFCL          : keyword→structured call emission
+//!
+//! Every prompt carries the same short shared preamble (the "shared context"
+//! of the multi-agent setting) followed by a task query; targets are short
+//! and scored by exact match, mirroring GSM8K/BFCL-style scoring.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Arith,
+    Transform,
+    Toolcall,
+}
+
+impl Task {
+    pub fn by_name(name: &str) -> Option<Task> {
+        match name {
+            "arith" => Some(Task::Arith),
+            "transform" => Some(Task::Transform),
+            "toolcall" => Some(Task::Toolcall),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Arith => "arith",
+            Task::Transform => "transform",
+            Task::Toolcall => "toolcall",
+        }
+    }
+
+    pub fn all() -> [Task; 3] {
+        [Task::Arith, Task::Transform, Task::Toolcall]
+    }
+}
+
+/// Shared multi-agent session preamble (identical across examples/tasks).
+pub const PREAMBLE: &str = "[ctx] agent session. ";
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub prompt: String,
+    pub target: String,
+}
+
+/// Tool vocabulary for the `Toolcall` task.
+const TOOLS: [(&str, &str); 8] = [
+    ("SEARCH", "search"),
+    ("FETCH", "fetch"),
+    ("CALC", "calc"),
+    ("MAIL", "mail"),
+    ("PLAN", "plan"),
+    ("CODE", "code"),
+    ("READ", "read"),
+    ("SAVE", "save"),
+];
+
+/// Argument vocabulary for `Transform`/`Toolcall` — a small closed world so
+/// the tasks are learnable within a few hundred steps at 0.1–5M params
+/// (random-string arguments need induction-head copying, which these tiny
+/// backbones only acquire with far longer training; the experiment's point
+/// is the Full-FT vs CCFT *comparison*, not absolute task difficulty).
+const WORDS16: [&str; 16] = [
+    "alpha", "bravo", "cargo", "delta", "ember", "flint", "gamma", "haven",
+    "index", "joule", "karma", "lemon", "micro", "noble", "orbit", "pixel",
+];
+
+pub fn gen_example(task: Task, rng: &mut Rng) -> Example {
+    match task {
+        Task::Arith => {
+            // Two-operand addition over a small table (answers 0..60).
+            let a = rng.range(0, 31);
+            let b = rng.range(0, 31);
+            Example {
+                prompt: format!("{PREAMBLE}[q] {a}+{b}="),
+                target: format!("{}", a + b),
+            }
+        }
+        Task::Transform => {
+            // Per-character rewriting (swap case, vowels -> '*') over the
+            // closed word vocabulary.
+            let src: &&str = rng.choose(&WORDS16[..]);
+            let out: String = src
+                .chars()
+                .map(|c| {
+                    if "aeiou".contains(c) {
+                        '*'
+                    } else {
+                        c.to_ascii_uppercase()
+                    }
+                })
+                .collect();
+            Example {
+                prompt: format!("{PREAMBLE}[q] rewrite {src} ->"),
+                target: out,
+            }
+        }
+        Task::Toolcall => {
+            let (kw, func) = *rng.choose(&TOOLS);
+            let arg: &&str = rng.choose(&WORDS16[..]);
+            Example {
+                prompt: format!("{PREAMBLE}[user] please {kw} {arg} now"),
+                target: format!("call({func},{arg})"),
+            }
+        }
+    }
+}
+
+/// Generic byte-level "pretraining" text: number-rich filler sentences that
+/// give the base model useful character statistics WITHOUT task competence
+/// (the paper's base models know language but not the fine-tuned tasks).
+pub fn gen_pretrain_example(rng: &mut Rng) -> Example {
+    const WORDS: [&str; 16] = [
+        "the", "agent", "writes", "data", "value", "state", "reads", "step",
+        "result", "node", "cache", "token", "plan", "model", "text", "run",
+    ];
+    let n = rng.range(6, 14);
+    let mut s = String::new();
+    for i in 0..n {
+        if i > 0 {
+            s.push(' ');
+        }
+        if rng.bool(0.25) {
+            s.push_str(&format!("{}", rng.range(0, 100)));
+        } else {
+            let w: &&str = rng.choose(&WORDS[..]);
+            s.push_str(w);
+        }
+    }
+    s.push('.');
+    // LM objective: "prompt" is a single char so the whole line is target.
+    let mut chars = s.chars();
+    let head: String = chars.by_ref().take(1).collect();
+    let tail: String = chars.collect();
+    Example { prompt: head, target: tail }
+}
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub task: Task,
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+/// Deterministic dataset; test examples prefer prompts unseen in training,
+/// but with small closed task spaces (transform/toolcall) overlap is
+/// unavoidable and fresh draws are accepted after the dedup budget — the
+/// evaluation then measures mapping *retention*, like a memorization-style
+/// benchmark split.
+pub fn build_dataset(task: Task, n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xda7a);
+    let train: Vec<Example> = (0..n_train).map(|_| gen_example(task, &mut rng)).collect();
+    let train_prompts: std::collections::HashSet<&str> =
+        train.iter().map(|e| e.prompt.as_str()).collect();
+    let mut test = Vec::with_capacity(n_test);
+    let mut guard = 0;
+    while test.len() < n_test && guard < n_test * 20 {
+        guard += 1;
+        let e = gen_example(task, &mut rng);
+        if !train_prompts.contains(e.prompt.as_str()) {
+            test.push(e);
+        }
+    }
+    while test.len() < n_test {
+        test.push(gen_example(task, &mut rng));
+    }
+    Dataset { task, train, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn examples_are_deterministic() {
+        let a = build_dataset(Task::Arith, 50, 20, 1);
+        let b = build_dataset(Task::Arith, 50, 20, 1);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+    }
+
+    #[test]
+    fn arith_targets_are_correct() {
+        let d = build_dataset(Task::Arith, 100, 10, 2);
+        for e in &d.train {
+            let q = e.prompt.rsplit("[q] ").next().unwrap().trim_end_matches('=');
+            let (a, b) = q.split_once('+').unwrap();
+            let sum: usize = a.parse::<usize>().unwrap() + b.parse::<usize>().unwrap();
+            assert_eq!(e.target, sum.to_string());
+        }
+    }
+
+    #[test]
+    fn transform_is_char_map() {
+        let mut rng = Rng::new(3);
+        let e = gen_example(Task::Transform, &mut rng);
+        let src = e.prompt.split("rewrite ").nth(1).unwrap().trim_end_matches(" ->");
+        assert_eq!(src.len(), e.target.len());
+        for (s, t) in src.chars().zip(e.target.chars()) {
+            if "aeiou".contains(s) {
+                assert_eq!(t, '*');
+            } else {
+                assert_eq!(t, s.to_ascii_uppercase());
+            }
+        }
+    }
+
+    #[test]
+    fn toolcall_format() {
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let e = gen_example(Task::Toolcall, &mut rng);
+            assert!(e.target.starts_with("call("));
+            assert!(e.target.ends_with(')'));
+        }
+    }
+
+    #[test]
+    fn test_split_always_reaches_requested_size() {
+        // Small closed spaces can't guarantee disjointness; the split must
+        // still deliver n_test examples (retention-style eval).
+        let d = build_dataset(Task::Toolcall, 200, 50, 5);
+        assert_eq!(d.test.len(), 50);
+        // With few train draws the dedup path still produces unseen prompts.
+        let d2 = build_dataset(Task::Arith, 20, 30, 6);
+        let tp: std::collections::HashSet<_> = d2.train.iter().map(|e| &e.prompt).collect();
+        let unseen = d2.test.iter().filter(|e| !tp.contains(&e.prompt)).count();
+        assert!(unseen > 15, "mostly-unseen expected, got {unseen}");
+    }
+
+    #[test]
+    fn prompts_fit_training_window() {
+        // Train geometry is B=8, S=128; prompt + target + specials must fit.
+        for task in Task::all() {
+            let d = build_dataset(task, 300, 50, 9);
+            for e in d.train.iter().chain(&d.test) {
+                let total = 1 + e.prompt.len() + e.target.len() + 1; // BOS..EOS
+                assert!(total <= 120, "{} too long: {total}", e.prompt);
+            }
+        }
+    }
+
+    #[test]
+    fn pretrain_text_nonempty() {
+        let mut rng = Rng::new(6);
+        for _ in 0..10 {
+            let e = gen_pretrain_example(&mut rng);
+            assert!(!e.target.is_empty());
+            assert_eq!(e.prompt.chars().count(), 1);
+        }
+    }
+}

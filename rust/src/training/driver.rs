@@ -1,0 +1,176 @@
+//! The training driver: runs the AOT train-step artifacts (full fine-tuning
+//! and cache-conditioned fine-tuning) from rust, batch assembly included.
+//!
+//! Optimizer state lives host-side as two extra `ParamSet`s (Adam m/v); a
+//! step feeds `params ++ m ++ v ++ scalars ++ batch` to the lowered program
+//! and replaces all three from its outputs — the update itself (AdamW,
+//! paper App. A) is *inside* the artifact, so training math is identical
+//! no matter which host drives it.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::model::params::ParamSet;
+use crate::model::tokenizer::{ByteTokenizer, EOS, PAD};
+use crate::runtime::engine::XlaRuntime;
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::tensor::HostTensor;
+use crate::training::data::Example;
+use crate::util::rng::Rng;
+
+/// Default learning rate for the tiny backbones (the paper grid-searches
+/// 1e-4..5e-6 for 8B models; our 0.1–5M-param models want larger steps —
+/// fixed here, recorded in EXPERIMENTS.md).
+pub const DEFAULT_LR: f32 = 2e-3;
+
+pub struct Trainer {
+    pub rt: Rc<XlaRuntime>,
+    pub spec: ModelSpec,
+    batch: usize,
+    seq: usize,
+}
+
+/// Adam moment buffers + step counter.
+pub struct OptState {
+    pub m: ParamSet,
+    pub v: ParamSet,
+    pub step: usize,
+}
+
+impl OptState {
+    pub fn new(params: &ParamSet) -> OptState {
+        OptState { m: params.zeros_like(), v: params.zeros_like(), step: 0 }
+    }
+}
+
+/// One assembled batch in the train-step wire format.
+pub struct Batch {
+    pub tokens: HostTensor,     // [B, S] i32
+    pub prompt_len: HostTensor, // [B] i32
+    pub total_len: HostTensor,  // [B] i32
+}
+
+impl Trainer {
+    pub fn new(rt: Rc<XlaRuntime>, model: &str) -> Result<Trainer> {
+        let spec = rt.manifest.model(model)?.clone();
+        let batch = rt.manifest.train_batch;
+        let seq = rt.manifest.train_seq;
+        Ok(Trainer { rt, spec, batch, seq })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Tokenize and pack `examples` (must be exactly `batch` of them):
+    /// tokens = BOS + prompt + target + EOS, padded to S with PAD.
+    pub fn assemble(&self, examples: &[&Example]) -> Result<Batch> {
+        anyhow::ensure!(examples.len() == self.batch, "need exactly {} examples", self.batch);
+        let tok = ByteTokenizer;
+        let mut tokens = vec![PAD; self.batch * self.seq];
+        let mut plen = vec![0i32; self.batch];
+        let mut tlen = vec![0i32; self.batch];
+        for (b, ex) in examples.iter().enumerate() {
+            let mut ids = tok.encode(&ex.prompt); // BOS + prompt bytes
+            let p = ids.len();
+            ids.extend(tok.encode_continuation(&ex.target));
+            ids.push(EOS);
+            anyhow::ensure!(ids.len() <= self.seq, "example exceeds S={}: {}", self.seq, ex.prompt);
+            anyhow::ensure!(p >= 2, "prompt must be at least 2 tokens");
+            tokens[b * self.seq..b * self.seq + ids.len()].copy_from_slice(&ids);
+            plen[b] = p as i32;
+            tlen[b] = ids.len() as i32;
+        }
+        Ok(Batch {
+            tokens: HostTensor::i32(vec![self.batch, self.seq], tokens),
+            prompt_len: HostTensor::i32(vec![self.batch], plen),
+            total_len: HostTensor::i32(vec![self.batch], tlen),
+        })
+    }
+
+    /// Sample a batch of examples from a dataset (with replacement).
+    pub fn sample_batch<'a>(&self, data: &'a [Example], rng: &mut Rng) -> Vec<&'a Example> {
+        (0..self.batch).map(|_| &data[rng.range(0, data.len())]).collect()
+    }
+
+    /// One full fine-tuning step; returns the loss.
+    pub fn step_full(
+        &self,
+        params: &mut ParamSet,
+        opt: &mut OptState,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        let prog = format!("train_full_{}", self.spec.name);
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * params.len() + 5);
+        inputs.extend(params.values().cloned());
+        inputs.extend(opt.m.values().cloned());
+        inputs.extend(opt.v.values().cloned());
+        inputs.push(HostTensor::scalar_f32(opt.step as f32));
+        inputs.push(HostTensor::scalar_f32(lr));
+        inputs.push(batch.tokens.clone());
+        inputs.push(batch.prompt_len.clone());
+        inputs.push(batch.total_len.clone());
+        let out = self.rt.run(&prog, &inputs)?;
+        let loss = out[0].as_f32()?[0];
+        let n = params.len();
+        params.replace_from(&out[1..1 + n])?;
+        opt.m.replace_from(&out[1 + n..1 + 2 * n])?;
+        opt.v.replace_from(&out[1 + 2 * n..1 + 3 * n])?;
+        opt.step += 1;
+        Ok(loss)
+    }
+
+    /// One cache-conditioned step: `base` is frozen (inputs only), `dec`
+    /// learns to consume the base cache (paper Eq. (7)).
+    pub fn step_cc(
+        &self,
+        base: &ParamSet,
+        dec: &mut ParamSet,
+        opt: &mut OptState,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        let prog = format!("train_cc_{}", self.spec.name);
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(4 * dec.len() + 5);
+        inputs.extend(base.values().cloned());
+        inputs.extend(dec.values().cloned());
+        inputs.extend(opt.m.values().cloned());
+        inputs.extend(opt.v.values().cloned());
+        inputs.push(HostTensor::scalar_f32(opt.step as f32));
+        inputs.push(HostTensor::scalar_f32(lr));
+        inputs.push(batch.tokens.clone());
+        inputs.push(batch.prompt_len.clone());
+        inputs.push(batch.total_len.clone());
+        let out = self.rt.run(&prog, &inputs)?;
+        let loss = out[0].as_f32()?[0];
+        let n = dec.len();
+        dec.replace_from(&out[1..1 + n])?;
+        opt.m.replace_from(&out[1 + n..1 + 2 * n])?;
+        opt.v.replace_from(&out[1 + 2 * n..1 + 3 * n])?;
+        opt.step += 1;
+        Ok(loss)
+    }
+
+    /// Validation loss under the full-FT view.
+    pub fn eval_full(&self, params: &ParamSet, batch: &Batch) -> Result<f32> {
+        let prog = format!("eval_full_{}", self.spec.name);
+        let mut inputs: Vec<HostTensor> = params.values().cloned().collect();
+        inputs.push(batch.tokens.clone());
+        inputs.push(batch.prompt_len.clone());
+        inputs.push(batch.total_len.clone());
+        Ok(self.rt.run(&prog, &inputs)?[0].as_f32()?[0])
+    }
+
+    /// Validation loss under the cache-conditioned view.
+    pub fn eval_cc(&self, base: &ParamSet, dec: &ParamSet, batch: &Batch) -> Result<f32> {
+        let prog = format!("eval_cc_{}", self.spec.name);
+        let mut inputs: Vec<HostTensor> = base.values().cloned().collect();
+        inputs.extend(dec.values().cloned());
+        inputs.push(batch.tokens.clone());
+        inputs.push(batch.prompt_len.clone());
+        inputs.push(batch.total_len.clone());
+        Ok(self.rt.run(&prog, &inputs)?[0].as_f32()?[0])
+    }
+}

@@ -1,0 +1,80 @@
+//! Generation-based task evaluation with KV-cache mixing — the measurement
+//! behind Fig 2, Table 1 and Table 2.
+//!
+//! `eval_accuracy` greedily decodes each test prompt and scores exact match.
+//! The `sharing_ratio` knob mixes the prompt cache: the first
+//! `ratio·(n-1)` positions come from the *base* model's prefill, the rest
+//! from the evaluated model's own prefill.  ratio=0 is ordinary self-serving
+//! (Fig 2 x=0); ratio=1 is the PrefillShare serving configuration (shared
+//! prefill, decode-module generation).
+
+use anyhow::Result;
+
+use crate::model::kv::KvCache;
+use crate::model::lm::{LanguageModel, Sampler};
+use crate::model::tokenizer::ByteTokenizer;
+use crate::training::data::Example;
+use crate::util::rng::Rng;
+
+/// Accuracy of `model` on `examples`, consuming `ratio` of the base cache.
+///
+/// `base` provides the shared prefill module.  When `ratio == 0` the base is
+/// not even invoked (pure self-serving); when `ratio == 1` the *entire*
+/// prompt cache (positions `0..n-1`) is the base's and `model` only decodes
+/// — exactly the disaggregated PrefillShare data path.
+pub fn eval_accuracy(
+    base: &LanguageModel,
+    model: &LanguageModel,
+    examples: &[Example],
+    sharing_ratio: f64,
+    max_new: usize,
+) -> Result<EvalResult> {
+    assert!((0.0..=1.0).contains(&sharing_ratio));
+    let tok = ByteTokenizer;
+    let mut correct = 0usize;
+    let mut rng = Rng::new(0xeba1);
+    for ex in examples {
+        let prompt = tok.encode(&ex.prompt);
+        let n = prompt.len();
+        let prefix = &prompt[..n - 1];
+
+        let mut cache = if sharing_ratio >= 1.0 {
+            base.prefill(prefix)?.0
+        } else if sharing_ratio <= 0.0 {
+            model.prefill(prefix)?.0
+        } else {
+            let (base_cache, _) = base.prefill(prefix)?;
+            let (own_cache, _) = model.prefill(prefix)?;
+            let n_base = ((n - 1) as f64 * sharing_ratio).round() as usize;
+            KvCache::mixed(&base_cache, &own_cache, n_base)?
+        };
+
+        let out =
+            model.generate_from_cache(&mut cache, prompt[n - 1], max_new, Sampler::Greedy, &mut rng)?;
+        let text = tok.decode(&out);
+        if text.trim() == ex.target {
+            correct += 1;
+        }
+    }
+    Ok(EvalResult { correct, total: examples.len() })
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+
+    pub fn pct(&self) -> f64 {
+        100.0 * self.accuracy()
+    }
+}

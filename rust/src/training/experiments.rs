@@ -1,0 +1,412 @@
+//! Accuracy experiment drivers: Fig 2 (sharing-ratio sweep), Table 1
+//! (tasks × backbones), Table 2 (model-size scaling) — plus the CLI entry
+//! points `accuracy` and `train`.
+//!
+//! Protocol per (backbone, task):
+//!   1. **Pretrain** the base on generic byte text (LM objective) — this is
+//!      the stand-in for the public pretrained checkpoint both methods
+//!      start from.
+//!   2. **Full-FT**: fine-tune all params on the task (baseline row).
+//!   3. **PrefillShare (CCFT)**: freeze the pretrained base as the prefill
+//!      module; fine-tune a decode module (initialized from base) with the
+//!      cache-conditioned objective.
+//!   4. Evaluate by greedy generation + exact match; CCFT rows are served
+//!      through the *shared-prefill* path (ratio=1.0), Full-FT through its
+//!      own prefill (ratio=0.0), and the "Inherent" row is the raw base.
+//!
+//! Trained checkpoints are cached under `checkpoints/` keyed by their full
+//! recipe so re-running an experiment reuses earlier training.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::model::lm::LanguageModel;
+use crate::model::params::ParamSet;
+use crate::runtime::engine::XlaRuntime;
+use crate::training::data::{build_dataset, gen_pretrain_example, Example, Task};
+use crate::training::driver::{OptState, Trainer, DEFAULT_LR};
+use crate::training::evalgen::{eval_accuracy, EvalResult};
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Experiment hyper-parameters (tiny-backbone scale; see EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct TrainRecipe {
+    pub model: String,
+    pub pretrain_steps: usize,
+    pub task_steps: usize,
+    pub lr: f32,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub max_new: usize,
+    pub seed: u64,
+}
+
+impl TrainRecipe {
+    pub fn default_for(model: &str) -> TrainRecipe {
+        // PREFILLSHARE_EVAL_N shrinks the eval set (generation is the slow
+        // part on CPU) — used by the bench harness for bounded runtimes.
+        let n_test = std::env::var("PREFILLSHARE_EVAL_N")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(100);
+        TrainRecipe {
+            model: model.to_string(),
+            pretrain_steps: 250,
+            task_steps: 400,
+            lr: DEFAULT_LR,
+            n_train: 4096,
+            n_test,
+            max_new: 24,
+            seed: 0,
+        }
+    }
+}
+
+fn ckpt_path(tag: &str) -> String {
+    format!("checkpoints/{tag}.bin")
+}
+
+fn load_or<F: FnOnce() -> Result<ParamSet>>(
+    spec: &crate::runtime::manifest::ModelSpec,
+    tag: &str,
+    refresh: bool,
+    f: F,
+) -> Result<ParamSet> {
+    let path = ckpt_path(tag);
+    if !refresh && std::path::Path::new(&path).exists() {
+        eprintln!("[train] reusing cached checkpoint {path}");
+        return ParamSet::load(spec, &path);
+    }
+    let p = f()?;
+    std::fs::create_dir_all("checkpoints").ok();
+    p.save(&path)?;
+    Ok(p)
+}
+
+/// Pretrain the base model on generic byte-level text (LM objective).
+pub fn pretrain_base(trainer: &Trainer, recipe: &TrainRecipe, verbose: bool) -> Result<ParamSet> {
+    let mut params = ParamSet::load_init(&trainer.spec)?;
+    let mut opt = OptState::new(&params);
+    let mut rng = Rng::new(recipe.seed ^ 0x9e7a);
+    let corpus: Vec<Example> = (0..recipe.n_train).map(|_| gen_pretrain_example(&mut rng)).collect();
+    for step in 0..recipe.pretrain_steps {
+        let exs = trainer.sample_batch(&corpus, &mut rng);
+        let batch = trainer.assemble(&exs)?;
+        let loss = trainer.step_full(&mut params, &mut opt, &batch, recipe.lr)?;
+        if verbose && (step % 50 == 0 || step + 1 == recipe.pretrain_steps) {
+            eprintln!("[pretrain {}] step {step} loss {loss:.4}", trainer.spec.name);
+        }
+    }
+    Ok(params)
+}
+
+/// Task fine-tuning, full or cache-conditioned.
+pub fn finetune(
+    trainer: &Trainer,
+    recipe: &TrainRecipe,
+    task: Task,
+    base: &ParamSet,
+    cache_conditioned: bool,
+    verbose: bool,
+) -> Result<(ParamSet, Vec<f32>)> {
+    let data = build_dataset(task, recipe.n_train, recipe.n_test, recipe.seed);
+    let mut params = base.clone();
+    let mut opt = OptState::new(&params);
+    let mut rng = Rng::new(recipe.seed ^ task as u64 ^ 0xf17e);
+    let mut losses = Vec::new();
+    for step in 0..recipe.task_steps {
+        let exs = trainer.sample_batch(&data.train, &mut rng);
+        let batch = trainer.assemble(&exs)?;
+        let loss = if cache_conditioned {
+            trainer.step_cc(base, &mut params, &mut opt, &batch, recipe.lr)?
+        } else {
+            trainer.step_full(&mut params, &mut opt, &batch, recipe.lr)?
+        };
+        losses.push(loss);
+        if verbose && (step % 100 == 0 || step + 1 == recipe.task_steps) {
+            eprintln!(
+                "[{} {} {}] step {step} loss {loss:.4}",
+                if cache_conditioned { "ccft" } else { "full-ft" },
+                trainer.spec.name,
+                task.name()
+            );
+        }
+    }
+    Ok((params, losses))
+}
+
+/// Everything one (backbone, task) cell needs for evaluation.
+pub struct TrainedCell {
+    pub base: ParamSet,
+    pub full_ft: ParamSet,
+    pub ccft: ParamSet,
+    pub test: Vec<Example>,
+}
+
+pub fn train_cell(
+    rt: &Rc<XlaRuntime>,
+    recipe: &TrainRecipe,
+    task: Task,
+    refresh: bool,
+    verbose: bool,
+) -> Result<TrainedCell> {
+    let trainer = Trainer::new(rt.clone(), &recipe.model)?;
+    let m = &recipe.model;
+    let s = recipe.seed;
+    let base = load_or(&trainer.spec, &format!("base_{m}_s{s}"), refresh, || {
+        pretrain_base(&trainer, recipe, verbose)
+    })?;
+    let full_ft = load_or(
+        &trainer.spec,
+        &format!("full_{m}_{}_s{s}", task.name()),
+        refresh,
+        || Ok(finetune(&trainer, recipe, task, &base, false, verbose)?.0),
+    )?;
+    let ccft = load_or(
+        &trainer.spec,
+        &format!("cc_{m}_{}_s{s}", task.name()),
+        refresh,
+        || Ok(finetune(&trainer, recipe, task, &base, true, verbose)?.0),
+    )?;
+    let data = build_dataset(task, recipe.n_train, recipe.n_test, recipe.seed);
+    Ok(TrainedCell { base, full_ft, ccft, test: data.test })
+}
+
+/// One evaluated accuracy row.
+#[derive(Debug, Clone)]
+pub struct AccRow {
+    pub model: String,
+    pub task: String,
+    pub config: String,
+    pub sharing: String,
+    pub acc_pct: f64,
+}
+
+fn eval_cell(rt: &Rc<XlaRuntime>, recipe: &TrainRecipe, task: Task, cell: &TrainedCell) -> Result<Vec<AccRow>> {
+    let base_lm = LanguageModel::new(rt.clone(), &recipe.model, cell.base.clone())?;
+    let full_lm = LanguageModel::new(rt.clone(), &recipe.model, cell.full_ft.clone())?;
+    let cc_lm = LanguageModel::new(rt.clone(), &recipe.model, cell.ccft.clone())?;
+    let mk = |config: &str, sharing: &str, r: EvalResult| AccRow {
+        model: recipe.model.clone(),
+        task: task.name().into(),
+        config: config.into(),
+        sharing: sharing.into(),
+        acc_pct: r.pct(),
+    };
+    Ok(vec![
+        mk("base (inherent)", "—", eval_accuracy(&base_lm, &base_lm, &cell.test, 0.0, recipe.max_new)?),
+        mk("Full-FT", "not supported", eval_accuracy(&base_lm, &full_lm, &cell.test, 0.0, recipe.max_new)?),
+        mk("PrefillShare", "supported", eval_accuracy(&base_lm, &cc_lm, &cell.test, 1.0, recipe.max_new)?),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Experiments
+// ---------------------------------------------------------------------------
+
+/// Fig 2: accuracy vs sharing ratio for naive (Full-FT) and CCFT models.
+pub fn fig2(rt: &Rc<XlaRuntime>, recipe: &TrainRecipe, task: Task, refresh: bool, verbose: bool) -> Result<Vec<(f64, f64, f64)>> {
+    let cell = train_cell(rt, recipe, task, refresh, verbose)?;
+    let base_lm = LanguageModel::new(rt.clone(), &recipe.model, cell.base.clone())?;
+    let full_lm = LanguageModel::new(rt.clone(), &recipe.model, cell.full_ft.clone())?;
+    let cc_lm = LanguageModel::new(rt.clone(), &recipe.model, cell.ccft.clone())?;
+    let mut out = Vec::new();
+    for ratio in [0.0, 0.25, 0.5, 0.75, 0.9, 1.0] {
+        let naive = eval_accuracy(&base_lm, &full_lm, &cell.test, ratio, recipe.max_new)?;
+        let ps = eval_accuracy(&base_lm, &cc_lm, &cell.test, ratio, recipe.max_new)?;
+        out.push((ratio, naive.pct(), ps.pct()));
+    }
+    Ok(out)
+}
+
+/// Table 1: two backbones × three tasks × {base, Full-FT, PrefillShare}.
+pub fn table1(
+    rt: &Rc<XlaRuntime>,
+    backbones: &[&str],
+    steps: usize,
+    refresh: bool,
+    verbose: bool,
+) -> Result<Vec<AccRow>> {
+    let mut rows = Vec::new();
+    for model in backbones {
+        let mut recipe = TrainRecipe::default_for(model);
+        recipe.task_steps = steps;
+        for task in Task::all() {
+            let cell = train_cell(rt, &recipe, task, refresh, verbose)?;
+            rows.extend(eval_cell(rt, &recipe, task, &cell)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Table 2: model-size scaling on the math task.
+pub fn table2(
+    rt: &Rc<XlaRuntime>,
+    sizes: &[&str],
+    steps: usize,
+    refresh: bool,
+    verbose: bool,
+) -> Result<Vec<AccRow>> {
+    let mut rows = Vec::new();
+    for model in sizes {
+        let mut recipe = TrainRecipe::default_for(model);
+        recipe.task_steps = steps;
+        let cell = train_cell(rt, &recipe, Task::Arith, refresh, verbose)?;
+        rows.extend(eval_cell(rt, &recipe, Task::Arith, &cell)?);
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// CLI entry points
+// ---------------------------------------------------------------------------
+
+fn print_acc_rows(rows: &[AccRow]) {
+    println!(
+        "{:<8} {:<10} {:<17} {:<14} {:>7}",
+        "model", "task", "configuration", "kv-sharing", "acc%"
+    );
+    for r in rows {
+        println!(
+            "{:<8} {:<10} {:<17} {:<14} {:>7.1}",
+            r.model, r.task, r.config, r.sharing, r.acc_pct
+        );
+    }
+}
+
+fn rows_json(rows: &[AccRow]) -> Json {
+    json::arr(
+        rows.iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("model", json::s(&r.model)),
+                    ("task", json::s(&r.task)),
+                    ("config", json::s(&r.config)),
+                    ("sharing", json::s(&r.sharing)),
+                    ("acc_pct", json::num(r.acc_pct)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn run_accuracy_cli(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let rt = Rc::new(XlaRuntime::new(artifacts)?);
+    let exp = args.get_or("experiment", "fig2");
+    let steps = args.get_usize("steps", 400);
+    let refresh = args.has_flag("refresh");
+    let verbose = !args.has_flag("quiet");
+
+    match exp {
+        "fig2" => {
+            let model = args.get_or("model", "small");
+            let task = Task::by_name(args.get_or("task", "arith"))
+                .ok_or_else(|| anyhow::anyhow!("unknown task"))?;
+            let mut recipe = TrainRecipe::default_for(model);
+            recipe.task_steps = steps;
+            let rows = fig2(&rt, &recipe, task, refresh, verbose)?;
+            println!(
+                "== Fig 2: accuracy vs KV-cache sharing ratio ({model}, {}) ==",
+                task.name()
+            );
+            println!("{:>8} {:>12} {:>14}", "ratio", "naive(FullFT)", "PrefillShare");
+            for (r, naive, ps) in &rows {
+                println!("{:>8.2} {:>12.1} {:>14.1}", r, naive, ps);
+            }
+            if let Some(out) = args.get("out") {
+                let j = json::arr(
+                    rows.iter()
+                        .map(|(r, n, p)| {
+                            json::obj(vec![
+                                ("ratio", json::num(*r)),
+                                ("naive_acc_pct", json::num(*n)),
+                                ("prefillshare_acc_pct", json::num(*p)),
+                            ])
+                        })
+                        .collect(),
+                );
+                save_json(out, &j)?;
+            }
+        }
+        "table1" => {
+            let bb = args.get_or("backbones", "tiny,small").to_string();
+            let backbones: Vec<&str> = bb.split(',').collect();
+            let rows = table1(&rt, &backbones, steps, refresh, verbose)?;
+            println!("== Table 1: accuracy across tasks and backbones ==");
+            print_acc_rows(&rows);
+            if let Some(out) = args.get("out") {
+                save_json(out, &rows_json(&rows))?;
+            }
+        }
+        "table2" => {
+            let rows = table2(&rt, &["tiny", "small", "medium"], steps, refresh, verbose)?;
+            println!("== Table 2: accuracy across model sizes (arith) ==");
+            print_acc_rows(&rows);
+            if let Some(out) = args.get("out") {
+                save_json(out, &rows_json(&rows))?;
+            }
+        }
+        other => bail!("unknown accuracy experiment `{other}`"),
+    }
+    Ok(())
+}
+
+pub fn run_train_cli(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let rt = Rc::new(XlaRuntime::new(artifacts)?);
+    let model = args.get_or("model", "small");
+    let method = args.get_or("method", "cc");
+    let task = Task::by_name(args.get_or("task", "arith"))
+        .ok_or_else(|| anyhow::anyhow!("unknown task"))?;
+    let mut recipe = TrainRecipe::default_for(model);
+    recipe.task_steps = args.get_usize("steps", 400);
+    recipe.lr = args.get_f64("lr", DEFAULT_LR as f64) as f32;
+    recipe.seed = args.get_u64("seed", 0);
+
+    let trainer = Trainer::new(rt.clone(), model)?;
+    let refresh = args.has_flag("refresh");
+    let verbose = !args.has_flag("quiet");
+    let base = load_or(&trainer.spec, &format!("base_{model}_s{}", recipe.seed), refresh, || {
+        pretrain_base(&trainer, &recipe, verbose)
+    })?;
+    let cc = method == "cc";
+    let tag = format!("{}_{model}_{}_s{}", if cc { "cc" } else { "full" }, task.name(), recipe.seed);
+    std::fs::create_dir_all("checkpoints").ok();
+    let params = load_or(&trainer.spec, &tag, refresh, || {
+        let (params, losses) = finetune(&trainer, &recipe, task, &base, cc, verbose)?;
+        println!(
+            "trained {tag}: first loss {:.4}, last loss {:.4}",
+            losses.first().copied().unwrap_or(f32::NAN),
+            losses.last().copied().unwrap_or(f32::NAN),
+        );
+        Ok(params)
+    })?;
+    println!("checkpoint at {}", ckpt_path(&tag));
+
+    if !args.has_flag("no-eval") {
+        let data = build_dataset(task, recipe.n_train, recipe.n_test, recipe.seed);
+        let base_lm = LanguageModel::new(rt.clone(), model, base)?;
+        let lm = LanguageModel::new(rt.clone(), model, params)?;
+        let ratio = if cc { 1.0 } else { 0.0 };
+        let acc = eval_accuracy(&base_lm, &lm, &data.test, ratio, recipe.max_new)?;
+        println!(
+            "exact-match accuracy ({} sharing): {:.1}%",
+            if cc { "100%" } else { "0%" },
+            acc.pct()
+        );
+    }
+    Ok(())
+}
+
+fn save_json(path: &str, j: &Json) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, j.to_string_pretty())?;
+    println!("saved to {path}");
+    Ok(())
+}

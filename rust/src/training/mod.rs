@@ -1,0 +1,13 @@
+//! Training side of PrefillShare: synthetic datasets, the train-step driver
+//! over the AOT artifacts (full FT + cache-conditioned FT, paper §3.2), the
+//! generation-based evaluator with KV-cache mixing, and the accuracy
+//! experiment drivers (Fig 2, Tables 1–2).
+
+pub mod data;
+pub mod driver;
+pub mod evalgen;
+pub mod experiments;
+
+pub use data::{build_dataset, Dataset, Example, Task};
+pub use driver::{Batch, OptState, Trainer, DEFAULT_LR};
+pub use evalgen::{eval_accuracy, EvalResult};

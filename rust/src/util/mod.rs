@@ -1,0 +1,34 @@
+//! In-tree substrates replacing crates unavailable in the offline build:
+//! JSON (`serde`), PRNG (`rand`), CLI (`clap`).  See DESIGN.md
+//! "Substitutions".
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+/// Format a byte count human-readably (metrics/report output).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(super::fmt_bytes(512), "512 B");
+        assert_eq!(super::fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(super::fmt_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+}

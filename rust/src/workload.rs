@@ -1,0 +1,237 @@
+//! Multi-model agent workload generator (paper §4.1 "Inference Setup").
+//!
+//! Each session runs a four-agent, multi-turn workflow; in each turn all
+//! agents are invoked *sequentially* over a largely shared prefix.  Sessions
+//! arrive as a Poisson process; once created a session issues its next
+//! request immediately upon receiving a response (closed-loop within the
+//! session, App. B.1).  Input/output token lengths follow the ReAct /
+//! Reflexion statistics reported by Kim et al. (2025) as referenced by the
+//! paper — approximated here as lognormal draws around the published means
+//! (EXPERIMENTS.md documents the exact parameterization).
+
+use crate::simtime::{secs, SimTime};
+use crate::util::rng::Rng;
+
+pub const NUM_AGENTS: usize = 4;
+
+/// One specialized agent (→ one fine-tuned model identity).
+#[derive(Debug, Clone)]
+pub struct AgentSpec {
+    pub name: &'static str,
+    /// Model identity 0..NUM_AGENTS (Planner/Coder/… per the paper's ex.).
+    pub model: usize,
+    pub mean_out_tokens: f64,
+    pub cv: f64,
+}
+
+/// A workload pattern: agent chain + context geometry.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    /// Globally shared system prompt (tokens) — identical across sessions.
+    pub sys_prompt_tokens: usize,
+    /// Session-specific initial prompt length distribution.
+    pub init_prompt_mean: f64,
+    pub init_prompt_cv: f64,
+    pub agents: Vec<AgentSpec>,
+    pub turns: usize,
+}
+
+/// ReAct: thought → action → observation → reflect, 3 turns.  Context
+/// geometry follows agent-trace statistics (Kim et al. 2025): kilotoken
+/// initial contexts, observation segments the longest, ~2.1k-token final
+/// contexts after 12 calls (decode segments short, prefill-heavy regime).
+pub fn react() -> WorkloadSpec {
+    WorkloadSpec {
+        name: "react",
+        sys_prompt_tokens: 160,
+        init_prompt_mean: 1024.0,
+        init_prompt_cv: 0.25,
+        agents: vec![
+            AgentSpec { name: "planner", model: 0, mean_out_tokens: 96.0, cv: 0.3 },
+            AgentSpec { name: "actor", model: 1, mean_out_tokens: 48.0, cv: 0.3 },
+            AgentSpec { name: "observer", model: 2, mean_out_tokens: 128.0, cv: 0.3 },
+            AgentSpec { name: "critic", model: 3, mean_out_tokens: 64.0, cv: 0.3 },
+        ],
+        turns: 3,
+    }
+}
+
+/// Reflexion: longer verbal-reinforcement segments, heavier contexts
+/// (~2.5k-token final contexts).
+pub fn reflexion() -> WorkloadSpec {
+    WorkloadSpec {
+        name: "reflexion",
+        sys_prompt_tokens: 200,
+        init_prompt_mean: 1280.0,
+        init_prompt_cv: 0.25,
+        agents: vec![
+            AgentSpec { name: "actor", model: 0, mean_out_tokens: 128.0, cv: 0.35 },
+            AgentSpec { name: "evaluator", model: 1, mean_out_tokens: 48.0, cv: 0.3 },
+            AgentSpec { name: "reflector", model: 2, mean_out_tokens: 160.0, cv: 0.35 },
+            AgentSpec { name: "memory", model: 3, mean_out_tokens: 64.0, cv: 0.3 },
+        ],
+        turns: 3,
+    }
+}
+
+pub fn workload_by_name(name: &str) -> Option<WorkloadSpec> {
+    match name {
+        "react" => Some(react()),
+        "reflexion" => Some(reflexion()),
+        _ => None,
+    }
+}
+
+/// One model invocation within a session.
+#[derive(Debug, Clone, Copy)]
+pub struct AgentCall {
+    pub model: usize,
+    pub out_tokens: usize,
+}
+
+/// A fully sampled session: arrival time + the exact call sequence.
+#[derive(Debug, Clone)]
+pub struct SessionScript {
+    pub id: u64,
+    pub arrival: SimTime,
+    /// Session-specific prompt tokens (after the shared system prompt).
+    pub init_prompt_tokens: usize,
+    pub calls: Vec<AgentCall>,
+}
+
+impl SessionScript {
+    /// Total context length after call `i` completes (sys + init + outputs).
+    pub fn context_len_after(&self, spec: &WorkloadSpec, i: usize) -> usize {
+        spec.sys_prompt_tokens
+            + self.init_prompt_tokens
+            + self.calls[..=i].iter().map(|c| c.out_tokens).sum::<usize>()
+    }
+
+    pub fn total_output_tokens(&self) -> usize {
+        self.calls.iter().map(|c| c.out_tokens).sum()
+    }
+}
+
+/// A complete workload trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub workload: WorkloadSpec,
+    pub sessions: Vec<SessionScript>,
+    pub horizon: SimTime,
+}
+
+/// Sample a trace: Poisson arrivals at `rate_per_s` over `duration_s`.
+pub fn generate_trace(spec: &WorkloadSpec, rate_per_s: f64, duration_s: f64, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x5e551_0ad);
+    let mut sessions = Vec::new();
+    let mut t = 0.0f64;
+    let mut id = 0u64;
+    loop {
+        t += rng.exp(rate_per_s);
+        if t >= duration_s {
+            break;
+        }
+        let mut srng = rng.fork(id);
+        let init = srng.lognormal_mean_cv(spec.init_prompt_mean, spec.init_prompt_cv).round() as usize;
+        let init = init.clamp(16, 4096);
+        let mut calls = Vec::with_capacity(spec.turns * spec.agents.len());
+        for _turn in 0..spec.turns {
+            for a in &spec.agents {
+                let out = srng.lognormal_mean_cv(a.mean_out_tokens, a.cv).round() as usize;
+                calls.push(AgentCall { model: a.model, out_tokens: out.clamp(8, 1024) });
+            }
+        }
+        sessions.push(SessionScript { id, arrival: secs(t), init_prompt_tokens: init, calls });
+        id += 1;
+    }
+    Trace { workload: spec.clone(), sessions, horizon: secs(duration_s) }
+}
+
+/// Synthetic token ids for the simulator's radix keys.
+///
+/// The shared system prompt maps to globally identical ids (so *every*
+/// session radix-hits it); session-specific content maps to ids unique to
+/// (session, position), so cross-session collisions are impossible.
+pub mod simtokens {
+    /// System-prompt token at position `i`.
+    pub fn sys(i: usize) -> u64 {
+        1 + i as u64
+    }
+
+    /// Session-private token: position `i` of session `sid`'s own content.
+    pub fn private(sid: u64, i: usize) -> u64 {
+        (1u64 << 40) | (sid << 20) | (i as u64 & 0xFFFFF)
+    }
+
+    /// Build the full context key for a session given segment lengths:
+    /// sys prompt + (init prompt ++ generated segments) as private ids.
+    pub fn context_key(sid: u64, sys_len: usize, private_len: usize) -> Vec<u64> {
+        let mut v = Vec::with_capacity(sys_len + private_len);
+        for i in 0..sys_len {
+            v.push(sys(i));
+        }
+        for i in 0..private_len {
+            v.push(private(sid, i));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let a = generate_trace(&react(), 2.0, 30.0, 7);
+        let b = generate_trace(&react(), 2.0, 30.0, 7);
+        assert_eq!(a.sessions.len(), b.sessions.len());
+        for (x, y) in a.sessions.iter().zip(&b.sessions) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.init_prompt_tokens, y.init_prompt_tokens);
+            assert_eq!(x.calls.len(), y.calls.len());
+        }
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches() {
+        let t = generate_trace(&react(), 4.0, 200.0, 1);
+        let n = t.sessions.len() as f64;
+        assert!((n / 200.0 - 4.0).abs() < 0.6, "rate {}", n / 200.0);
+    }
+
+    #[test]
+    fn call_structure_matches_spec() {
+        let spec = reflexion();
+        let t = generate_trace(&spec, 1.0, 50.0, 3);
+        for s in &t.sessions {
+            assert_eq!(s.calls.len(), spec.turns * spec.agents.len());
+            // model identities cycle through the agent chain
+            for (i, c) in s.calls.iter().enumerate() {
+                assert_eq!(c.model, spec.agents[i % spec.agents.len()].model);
+            }
+        }
+    }
+
+    #[test]
+    fn context_grows_monotonically() {
+        let spec = react();
+        let t = generate_trace(&spec, 1.0, 20.0, 5);
+        let s = &t.sessions[0];
+        let mut prev = 0;
+        for i in 0..s.calls.len() {
+            let c = s.context_len_after(&spec, i);
+            assert!(c > prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn sim_tokens_share_sys_prefix_only() {
+        let a = simtokens::context_key(1, 8, 4);
+        let b = simtokens::context_key(2, 8, 4);
+        assert_eq!(&a[..8], &b[..8], "system prompt shared");
+        assert_ne!(&a[8..], &b[8..], "private content distinct");
+    }
+}

@@ -1,0 +1,261 @@
+//! Property-based tests (in-tree `propcheck` style: seeded random input
+//! generation over many cases — the offline substitute for proptest, see
+//! DESIGN.md "Substitutions").  Invariants covered:
+//!   * radix prefix cache: structural invariants + semantic equivalence to
+//!     a brute-force prefix store under random workloads
+//!   * block pool: refcount conservation under random alloc/retain/release
+//!   * event queue: global time ordering under random schedules
+//!   * simulator: conservation + determinism over random cluster configs
+//!   * KV mixing: positionwise selection correctness on random geometries
+
+use prefillshare::engine::config::{ClusterConfig, SystemKind};
+use prefillshare::engine::sim::simulate;
+use prefillshare::kvcache::block::BlockPool;
+use prefillshare::kvcache::radix::RadixCache;
+use prefillshare::simtime::EventQueue;
+use prefillshare::util::rng::Rng;
+use prefillshare::workload::{generate_trace, react};
+
+const CASES: u64 = 60;
+
+// ---------------------------------------------------------------------------
+// Radix cache vs a brute-force model
+// ---------------------------------------------------------------------------
+
+/// Brute-force reference: a set of inserted sequences; longest cached prefix
+/// of q = max over stored sequences s of common_prefix(q, s) — valid only
+/// while nothing has been evicted (we size capacity to avoid eviction).
+fn brute_force_match(stored: &[Vec<u64>], q: &[u64]) -> usize {
+    stored
+        .iter()
+        .map(|s| s.iter().zip(q).take_while(|(a, b)| a == b).count())
+        .max()
+        .unwrap_or(0)
+}
+
+#[test]
+fn prop_radix_matches_brute_force_without_eviction() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0xabc);
+        let mut cache = RadixCache::new(1_000_000); // never evicts
+        let mut stored: Vec<Vec<u64>> = Vec::new();
+        for _ in 0..rng.range(3, 30) {
+            // Derive from an existing sequence (shared prefixes) or fresh.
+            let seq: Vec<u64> = if !stored.is_empty() && rng.bool(0.6) {
+                let base = rng.choose(&stored).clone();
+                let cut = rng.range(0, base.len() + 1);
+                let mut s = base[..cut].to_vec();
+                for _ in 0..rng.range(1, 20) {
+                    s.push(rng.range(0, 6) as u64);
+                }
+                s
+            } else {
+                (0..rng.range(1, 40)).map(|_| rng.range(0, 6) as u64).collect()
+            };
+            cache.insert(&seq);
+            stored.push(seq);
+
+            // Probe with random queries.
+            for _ in 0..3 {
+                let q: Vec<u64> = if rng.bool(0.7) {
+                    let base = rng.choose(&stored).clone();
+                    let cut = rng.range(0, base.len() + 1);
+                    let mut s = base[..cut].to_vec();
+                    for _ in 0..rng.range(0, 6) {
+                        s.push(rng.range(0, 6) as u64);
+                    }
+                    s
+                } else {
+                    (0..rng.range(1, 30)).map(|_| rng.range(0, 6) as u64).collect()
+                };
+                if q.is_empty() {
+                    continue;
+                }
+                let h = cache.match_prefix(&q);
+                let want = brute_force_match(&stored, &q);
+                assert_eq!(h.matched_tokens, want, "case {case}, q {q:?}");
+                cache.unlock(&h);
+            }
+            cache.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_radix_capacity_never_exceeded_under_eviction() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0xdef);
+        let cap = rng.range(20, 200);
+        let mut cache = RadixCache::new(cap);
+        for _ in 0..60 {
+            let seq: Vec<u64> =
+                (0..rng.range(1, 50)).map(|_| rng.range(0, 8) as u64).collect();
+            cache.insert(&seq);
+            assert!(
+                cache.resident_tokens() <= cap,
+                "case {case}: resident {} > cap {cap}",
+                cache.resident_tokens()
+            );
+            cache.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_radix_pinned_extents_survive_eviction_pressure() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x111);
+        let mut cache = RadixCache::new(64);
+        let pinned: Vec<u64> = (0..32).map(|i| 1000 + i).collect();
+        cache.insert(&pinned);
+        let h = cache.match_prefix(&pinned);
+        assert_eq!(h.matched_tokens, 32);
+        // Hammer with inserts that force eviction.
+        for _ in 0..40 {
+            let seq: Vec<u64> = (0..rng.range(5, 30))
+                .map(|_| rng.range(0, 50) as u64)
+                .collect();
+            cache.insert(&seq);
+        }
+        let h2 = cache.match_prefix(&pinned);
+        assert_eq!(h2.matched_tokens, 32, "case {case}: pinned extent evicted");
+        cache.unlock(&h);
+        cache.unlock(&h2);
+        cache.check_invariants().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block pool
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_block_pool_conservation() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x222);
+        let cap = rng.range(8, 128);
+        let mut pool = BlockPool::new(cap, 16);
+        let mut held: Vec<u32> = Vec::new();
+        for _ in 0..300 {
+            match rng.range(0, 3) {
+                0 => {
+                    let n = rng.range(1, 5);
+                    if let Some(blocks) = pool.alloc(n) {
+                        held.extend(blocks);
+                    }
+                }
+                1 if !held.is_empty() => {
+                    let idx = rng.range(0, held.len());
+                    let b = held.swap_remove(idx);
+                    pool.release(b);
+                }
+                2 if !held.is_empty() => {
+                    let b = *rng.choose(&held);
+                    pool.retain(b);
+                    held.push(b);
+                }
+                _ => {}
+            }
+            pool.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+            assert!(pool.used_blocks() + pool.free_blocks() == cap);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event queue
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_event_queue_time_monotone() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x333);
+        let mut q = EventQueue::new();
+        for i in 0..rng.range(1, 500) {
+            q.schedule(rng.range(0, 10_000) as u64, i);
+        }
+        let mut last = 0u64;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last, "case {case}");
+            assert_eq!(t, q.now());
+            last = t;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulator-level properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sim_conservation_over_random_configs() {
+    for case in 0..12 {
+        let mut rng = Rng::new(case ^ 0x444);
+        let system = if rng.bool(0.5) { SystemKind::Baseline } else { SystemKind::PrefillShare };
+        let mut cfg = ClusterConfig::paper_default(system);
+        cfg.max_concurrent_sessions = rng.range(4, 120);
+        cfg.max_decode_batch = rng.range(4, 64);
+        cfg.prefill_kv_tokens = rng.range(10_000, 400_000);
+        cfg.decode_kv_tokens = rng.range(10_000, 200_000);
+        let rate = 0.5 + rng.f64() * 4.0;
+        let trace = generate_trace(&react(), rate, 60.0, case);
+        let n = trace.sessions.len();
+        let calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
+        let r = simulate(cfg, trace);
+        assert_eq!(r.sessions_completed as usize, n, "case {case} ({system:?})");
+        assert_eq!(r.metrics.requests_completed as usize, calls);
+        assert!(r.prefix_hit_ratio >= 0.0 && r.prefix_hit_ratio <= 1.0);
+        // hit+miss tokens must equal total prefill demand
+        let demand = r.metrics.prefix_hit_tokens + r.metrics.prefix_miss_tokens;
+        assert!(demand > 0);
+        assert_eq!(r.metrics.prefix_miss_tokens, r.prefill_computed_tokens);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KV cache mixing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kv_mixing_positionwise() {
+    use prefillshare::model::kv::KvCache;
+    use prefillshare::runtime::manifest::ModelSpec;
+
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x555);
+        let spec = ModelSpec {
+            name: "p".into(),
+            d_model: 8,
+            n_layers: rng.range(1, 4),
+            n_heads: rng.range(1, 4),
+            d_head: 4,
+            d_ff: 16,
+            s_max: rng.range(4, 16),
+            vocab: 259,
+            n_params: 0,
+            init_params_file: "/dev/null".into(),
+            param_specs: vec![],
+        };
+        let len = rng.range(1, spec.s_max + 1);
+        let mut a = KvCache::empty(&spec);
+        let mut b = KvCache::empty(&spec);
+        a.k.fill(1.0);
+        a.v.fill(1.0);
+        b.k.fill(2.0);
+        b.v.fill(2.0);
+        a.len = len;
+        b.len = len;
+        let n_base = rng.range(0, len + 1);
+        let mix = KvCache::mixed(&a, &b, n_base).unwrap();
+        // check each position row comes from the right source
+        for l in 0..spec.n_layers {
+            for h in 0..spec.n_heads {
+                for p in 0..len {
+                    let idx = (((l * spec.n_heads) + h) * spec.s_max + p) * spec.d_head;
+                    let want = if p < n_base { 1.0 } else { 2.0 };
+                    assert_eq!(mix.k[idx], want, "case {case} l{l} h{h} p{p}");
+                }
+            }
+        }
+    }
+}

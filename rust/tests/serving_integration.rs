@@ -1,0 +1,161 @@
+//! Integration tests over the cluster simulator: cross-module behaviour the
+//! unit tests can't see (workload -> router -> prefill/radix -> handoff ->
+//! decode/staging -> metrics), plus the paper's qualitative claims as
+//! executable assertions.
+
+use prefillshare::costmodel::{LLAMA8B, QWEN14B};
+use prefillshare::engine::config::{ClusterConfig, RoutingPolicy, SystemKind};
+use prefillshare::engine::sim::{simulate, SimResult};
+use prefillshare::workload::{generate_trace, react, reflexion, Trace};
+
+fn trace(rate: f64, dur: f64, seed: u64) -> Trace {
+    generate_trace(&react(), rate, dur, seed)
+}
+
+fn run(system: SystemKind, rate: f64, max_cc: usize) -> SimResult {
+    let mut cfg = ClusterConfig::paper_default(system);
+    cfg.max_concurrent_sessions = max_cc;
+    simulate(cfg, trace(rate, 120.0, 0))
+}
+
+#[test]
+fn conservation_all_arrivals_complete() {
+    let t = trace(2.0, 120.0, 0);
+    for system in [SystemKind::Baseline, SystemKind::PrefillShare] {
+        let r = run(system, 2.0, 64);
+        assert_eq!(r.sessions_completed as usize, t.sessions.len(), "{system:?}");
+        assert_eq!(
+            r.metrics.requests_completed as usize,
+            t.sessions.iter().map(|s| s.calls.len()).sum::<usize>()
+        );
+        // every generated token is accounted
+        let expect: u64 = t.sessions.iter().map(|s| s.total_output_tokens() as u64).sum();
+        assert_eq!(r.metrics.generated.tokens, expect);
+    }
+}
+
+#[test]
+fn fig3_claim_prefillshare_dominates_at_high_load() {
+    let base = run(SystemKind::Baseline, 6.0, 96);
+    let ps = run(SystemKind::PrefillShare, 6.0, 96);
+    assert!(
+        ps.p95_session_latency < base.p95_session_latency / 2.0,
+        "p95: ps {} vs base {}",
+        ps.p95_session_latency,
+        base.p95_session_latency
+    );
+    assert!(ps.throughput_tok_s > 1.2 * base.throughput_tok_s);
+    assert!(ps.ttft_p95 < base.ttft_p95);
+}
+
+#[test]
+fn fig3_claim_parity_at_low_load() {
+    // "At low load, both systems achieve similar latency and throughput."
+    let base = run(SystemKind::Baseline, 0.5, 64);
+    let ps = run(SystemKind::PrefillShare, 0.5, 64);
+    let rel = (base.mean_session_latency - ps.mean_session_latency).abs()
+        / base.mean_session_latency;
+    assert!(rel < 0.15, "low-load latency gap {rel}");
+}
+
+#[test]
+fn fig4_claim_baseline_hit_ratio_collapses_prefillshare_flat() {
+    let base_lo = run(SystemKind::Baseline, 8.0, 40);
+    let base_hi = run(SystemKind::Baseline, 8.0, 160);
+    let ps_lo = run(SystemKind::PrefillShare, 8.0, 40);
+    let ps_hi = run(SystemKind::PrefillShare, 8.0, 160);
+    assert!(
+        base_hi.prefix_hit_ratio < base_lo.prefix_hit_ratio - 0.15,
+        "baseline must degrade: {} -> {}",
+        base_lo.prefix_hit_ratio,
+        base_hi.prefix_hit_ratio
+    );
+    assert!(
+        (ps_hi.prefix_hit_ratio - ps_lo.prefix_hit_ratio).abs() < 0.05,
+        "prefillshare must stay flat: {} -> {}",
+        ps_lo.prefix_hit_ratio,
+        ps_hi.prefix_hit_ratio
+    );
+    assert!(ps_hi.prefix_hit_ratio > 0.85);
+}
+
+#[test]
+fn staging_rollover_is_staging_not_cache_driven() {
+    // At very high concurrency PrefillShare slows from KV staging while the
+    // hit ratio is unchanged (paper: "driven by handoff-related pressure
+    // rather than prefix cache inefficiency").
+    let peak = run(SystemKind::PrefillShare, 8.0, 80);
+    let over = run(SystemKind::PrefillShare, 8.0, 200);
+    assert!(over.staging_events > peak.staging_events);
+    assert!((over.prefix_hit_ratio - peak.prefix_hit_ratio).abs() < 0.03);
+}
+
+#[test]
+fn routing_ablation_prefix_aware_wins() {
+    for policy in [RoutingPolicy::RoundRobin, RoutingPolicy::Random] {
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.routing = policy;
+        let worse = simulate(cfg, trace(3.0, 120.0, 0));
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.routing = RoutingPolicy::PrefixAware;
+        let good = simulate(cfg, trace(3.0, 120.0, 0));
+        assert!(
+            good.prefix_hit_ratio > worse.prefix_hit_ratio + 0.2,
+            "{policy:?}: {} vs {}",
+            worse.prefix_hit_ratio,
+            good.prefix_hit_ratio
+        );
+    }
+}
+
+#[test]
+fn qwen14b_is_heavier_but_same_story() {
+    let mut bcfg = ClusterConfig::for_llm(SystemKind::Baseline, QWEN14B);
+    bcfg.max_concurrent_sessions = 96;
+    let mut pcfg = ClusterConfig::for_llm(SystemKind::PrefillShare, QWEN14B);
+    pcfg.max_concurrent_sessions = 96;
+    let base = simulate(bcfg, trace(4.0, 120.0, 0));
+    let ps = simulate(pcfg, trace(4.0, 120.0, 0));
+    assert!(ps.p95_session_latency < base.p95_session_latency);
+    assert!(ps.prefix_hit_ratio > base.prefix_hit_ratio);
+
+    // Same workload on the lighter backbone is faster end to end.
+    let mut lcfg = ClusterConfig::for_llm(SystemKind::PrefillShare, LLAMA8B);
+    lcfg.max_concurrent_sessions = 96;
+    let llama = simulate(lcfg, trace(4.0, 120.0, 0));
+    assert!(llama.mean_session_latency < ps.mean_session_latency);
+}
+
+#[test]
+fn reflexion_contexts_are_heavier_than_react() {
+    let r = generate_trace(&react(), 2.0, 100.0, 0);
+    let x = generate_trace(&reflexion(), 2.0, 100.0, 0);
+    let mean = |t: &Trace| {
+        t.sessions
+            .iter()
+            .map(|s| s.context_len_after(&t.workload, s.calls.len() - 1))
+            .sum::<usize>() as f64
+            / t.sessions.len() as f64
+    };
+    assert!(mean(&x) > mean(&r) * 1.1);
+}
+
+#[test]
+fn memory_eq_prefill_burden_grows_with_n_models_only_for_baseline() {
+    let rows = prefillshare::engine::experiments::memory_scaling(0);
+    // ratio baseline/prefillshare grows with N (Eq. 8 vs 9)
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    let r1 = first.1 as f64 / first.2.max(1) as f64;
+    let r8 = last.1 as f64 / last.2.max(1) as f64;
+    assert!(r8 > r1 * 1.5, "N-scaling: {r1} -> {r8}");
+}
+
+#[test]
+fn determinism_across_identical_configs() {
+    let a = run(SystemKind::PrefillShare, 3.0, 64);
+    let b = run(SystemKind::PrefillShare, 3.0, 64);
+    assert_eq!(a.p95_session_latency.to_bits(), b.p95_session_latency.to_bits());
+    assert_eq!(a.staging_events, b.staging_events);
+    assert_eq!(a.prefill_computed_tokens, b.prefill_computed_tokens);
+}

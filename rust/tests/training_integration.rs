@@ -1,0 +1,126 @@
+//! Integration: the training driver over the real AOT train-step artifacts.
+//! Verifies the cache-conditioned fine-tuning algorithm end-to-end from
+//! rust: losses decrease, the CC view really consumes the base cache, the
+//! base stays frozen, and the generation evaluator runs the true
+//! shared-prefill data path.  (Skipped when artifacts are absent.)
+
+use std::rc::Rc;
+
+use prefillshare::model::{LanguageModel, ParamSet};
+use prefillshare::runtime::XlaRuntime;
+use prefillshare::training::data::{build_dataset, Task};
+use prefillshare::training::driver::{OptState, Trainer};
+use prefillshare::training::evalgen::eval_accuracy;
+use prefillshare::util::rng::Rng;
+
+fn runtime() -> Option<Rc<XlaRuntime>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Rc::new(XlaRuntime::new(dir).expect("runtime")))
+}
+
+#[test]
+fn full_ft_loss_decreases() {
+    let Some(rt) = runtime() else { return };
+    let trainer = Trainer::new(rt, "tiny").unwrap();
+    let data = build_dataset(Task::Arith, 256, 16, 0);
+    let mut params = ParamSet::load_init(&trainer.spec).unwrap();
+    let mut opt = OptState::new(&params);
+    let mut rng = Rng::new(0);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..12 {
+        let exs = trainer.sample_batch(&data.train, &mut rng);
+        let batch = trainer.assemble(&exs).unwrap();
+        last = trainer.step_full(&mut params, &mut opt, &batch, 2e-3).unwrap();
+        first.get_or_insert(last);
+    }
+    assert!(last < first.unwrap() * 0.8, "{first:?} -> {last}");
+}
+
+#[test]
+fn cc_ft_loss_decreases_and_base_is_input_only() {
+    let Some(rt) = runtime() else { return };
+    let trainer = Trainer::new(rt, "tiny").unwrap();
+    let data = build_dataset(Task::Toolcall, 256, 16, 1);
+    let base = ParamSet::load_init(&trainer.spec).unwrap();
+    let base_snapshot = base.clone();
+    let mut dec = base.clone();
+    let mut opt = OptState::new(&dec);
+    let mut rng = Rng::new(1);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..12 {
+        let exs = trainer.sample_batch(&data.train, &mut rng);
+        let batch = trainer.assemble(&exs).unwrap();
+        last = trainer.step_cc(&base, &mut dec, &mut opt, &batch, 2e-3).unwrap();
+        first.get_or_insert(last);
+    }
+    assert!(last < first.unwrap() * 0.8, "{first:?} -> {last}");
+    // The frozen prefill module must be bit-identical after training.
+    assert_eq!(base.l2_distance(&base_snapshot), 0.0);
+    // ...while the decode module genuinely moved.
+    assert!(dec.l2_distance(&base_snapshot) > 0.0);
+}
+
+#[test]
+fn cc_eval_view_matches_full_view_when_params_equal() {
+    // With dec == base, the cache-conditioned eval loss must equal the
+    // full-FT eval loss (the mixed cache is then the model's own cache).
+    let Some(rt) = runtime() else { return };
+    let trainer = Trainer::new(rt, "tiny").unwrap();
+    let data = build_dataset(Task::Arith, 64, 8, 2);
+    let params = ParamSet::load_init(&trainer.spec).unwrap();
+    let mut rng = Rng::new(2);
+    let exs = trainer.sample_batch(&data.train, &mut rng);
+    let batch = trainer.assemble(&exs).unwrap();
+    let lf = trainer.eval_full(&params, &batch).unwrap();
+    let lc = trainer.eval_cc(&params, &params, &batch).unwrap();
+    assert!((lf - lc).abs() < 2e-3, "full {lf} vs cc {lc}");
+}
+
+#[test]
+fn eval_accuracy_runs_all_sharing_ratios() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.model("tiny").unwrap().clone();
+    let base = LanguageModel::new(rt.clone(), "tiny", ParamSet::load_init(&spec).unwrap()).unwrap();
+    let model = LanguageModel::new(rt, "tiny", ParamSet::load_init(&spec).unwrap()).unwrap();
+    let data = build_dataset(Task::Arith, 32, 4, 3);
+    for ratio in [0.0, 0.5, 1.0] {
+        let r = eval_accuracy(&base, &model, &data.test, ratio, 8).unwrap();
+        assert_eq!(r.total, 4);
+        // Untrained models should not magically solve arithmetic.
+        assert!(r.accuracy() <= 0.5, "ratio {ratio}");
+    }
+}
+
+#[test]
+fn batch_assembly_layout() {
+    let Some(rt) = runtime() else { return };
+    let trainer = Trainer::new(rt, "tiny").unwrap();
+    let data = build_dataset(Task::Transform, 64, 8, 4);
+    let exs: Vec<&_> = data.train.iter().take(trainer.batch_size()).collect();
+    let batch = trainer.assemble(&exs).unwrap();
+    let toks = batch.tokens.as_i32().unwrap();
+    let plen = batch.prompt_len.as_i32().unwrap();
+    let tlen = batch.total_len.as_i32().unwrap();
+    let seq = toks.len() / plen.len();
+    for (b, ex) in exs.iter().enumerate() {
+        let row = &toks[b * seq..(b + 1) * seq];
+        assert_eq!(row[0], prefillshare::model::BOS);
+        let p = plen[b] as usize;
+        let t = tlen[b] as usize;
+        assert!(p < t && t <= seq);
+        assert_eq!(row[t - 1], prefillshare::model::EOS);
+        // prompt bytes match
+        let prompt_bytes: Vec<i32> = ex.prompt.bytes().map(|x| x as i32).collect();
+        assert_eq!(&row[1..p], &prompt_bytes[..]);
+        // padding after total_len
+        for &x in &row[t..] {
+            assert_eq!(x, prefillshare::model::PAD);
+        }
+    }
+}
