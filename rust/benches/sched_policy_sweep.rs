@@ -1,0 +1,49 @@
+//! Bench: prefill-scheduler policy comparison on the Fig-3 arrival axis.
+//!
+//! Runs the PrefillShare topology over the identical (trace, seed) for each
+//! policy in `engine::sched` — `fifo` (reference), `sjf`, `prefix-affinity`,
+//! `chunked` — and reports per-policy p95 session latency, TTFT, and prefill
+//! queueing delay, so the chunked/SJF ablations are directly comparable
+//! against FIFO on the same offered load.
+//!
+//! Run: `cargo bench --bench sched_policy_sweep`
+
+use prefillshare::engine::experiments::sched_ablation;
+use prefillshare::engine::report::{format_row, header, save_rows};
+
+fn main() {
+    let seed = 0;
+    let t0 = std::time::Instant::now();
+    let rows = sched_ablation(seed);
+    println!("== scheduler-policy sweep (PrefillShare, ReAct, seed {seed}) ==");
+    println!("{}", header("rate"));
+    for r in &rows {
+        println!("{}", format_row(r));
+    }
+
+    // Per-policy summary at the highest swept rate, relative to FIFO.
+    let max_rate = rows.iter().map(|r| r.x).fold(0.0f64, f64::max);
+    let at = |sys: &str| rows.iter().find(|r| r.system == sys && r.x == max_rate);
+    if let Some(fifo) = at("ps/fifo") {
+        println!("\nat {max_rate} sessions/s (vs fifo):");
+        for sys in ["ps/fifo", "ps/sjf", "ps/prefix-affinity", "ps/chunked"] {
+            let Some(r) = at(sys) else { continue };
+            println!(
+                "{:<20} p95 {:>7.2}s ({:>5.2}x)  ttft_p95 {:>6.3}s  qdelay_p95 {:>6.3}s  chunks/job {:>4.1}",
+                sys,
+                r.result.p95_session_latency,
+                fifo.result.p95_session_latency / r.result.p95_session_latency.max(1e-9),
+                r.result.ttft_p95,
+                r.result.prefill_queue_delay_p95,
+                r.result.prefill_chunks as f64 / r.result.metrics.prefill_jobs.max(1) as f64,
+            );
+        }
+    }
+
+    save_rows("reports/sched_policies.json", &rows).expect("save");
+    println!(
+        "saved reports/sched_policies.json ({} rows, {:.1}s total)",
+        rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,6 +1,8 @@
 //! Cluster topology + policy configuration for the serving engines.
 
 use crate::costmodel::{CostModel, LlmSpec, A100_80G, LLAMA8B, QWEN14B};
+use crate::engine::sched::chunked::DEFAULT_CHUNK_TOKENS;
+use crate::engine::sched::SchedPolicy;
 use crate::workload::NUM_AGENTS;
 
 /// Which serving system (paper Fig 1 right).
@@ -50,6 +52,11 @@ impl RoutingPolicy {
 pub struct ClusterConfig {
     pub system: SystemKind,
     pub routing: RoutingPolicy,
+    /// Per-prefill-worker queue ordering / chunking policy (`--sched`).
+    pub sched: SchedPolicy,
+    /// New-token budget per dispatch under [`SchedPolicy::Chunked`]
+    /// (`--chunk-tokens`); ignored by the whole-job policies.
+    pub chunk_tokens: usize,
     pub cost: CostModel,
     /// Prefill workers.  PrefillShare: a shared pool (default 4).
     /// Baseline: forced to `n_models` (one per model).
@@ -96,6 +103,8 @@ impl ClusterConfig {
         ClusterConfig {
             system,
             routing: RoutingPolicy::PrefixAware,
+            sched: SchedPolicy::Fifo,
+            chunk_tokens: DEFAULT_CHUNK_TOKENS,
             cost,
             n_prefill_workers: NUM_AGENTS,
             n_models: NUM_AGENTS,
@@ -126,6 +135,9 @@ mod tests {
         assert!(c.prefill_kv_tokens > 80_000 && c.prefill_kv_tokens < 500_000,
             "{}", c.prefill_kv_tokens);
         assert!(c.decode_kv_tokens < c.prefill_kv_tokens);
+        // The default scheduler is the pre-subsystem behaviour.
+        assert_eq!(c.sched, SchedPolicy::Fifo);
+        assert!(c.chunk_tokens > 0);
     }
 
     #[test]

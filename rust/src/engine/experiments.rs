@@ -90,6 +90,47 @@ pub fn concurrency_sweep(llm: LlmSpec, wl: &WorkloadSpec, seed: u64) -> Vec<Row>
     rows
 }
 
+/// Arrival rates swept in the scheduler-policy comparison (a denser version
+/// of the Fig-3 axis around the saturation knee, where queueing policy
+/// matters most).
+pub const SCHED_RATES: &[f64] = &[1.0, 2.0, 4.0, 6.0, 8.0];
+
+/// Scheduler-policy comparison on the Fig-3 arrival axis: identical trace,
+/// identical PrefillShare topology, one row per (policy, rate), so p95
+/// latency / TTFT / queueing delay are directly comparable across
+/// `fifo`/`sjf`/`prefix-affinity`/`chunked`.
+pub fn sched_sweep(llm: LlmSpec, wl: &WorkloadSpec, rates: &[f64], seed: u64) -> Vec<Row> {
+    use crate::engine::sched::SchedPolicy;
+    // One trace per rate, shared by every policy: "identical trace" by
+    // construction, and no redundant re-sampling inside the policy loop.
+    let traces: Vec<crate::workload::Trace> = rates
+        .iter()
+        .map(|&rate| generate_trace(wl, rate, HORIZON_S, seed))
+        .collect();
+    let mut rows = Vec::new();
+    for &policy in &SchedPolicy::all() {
+        for (&rate, trace) in rates.iter().zip(&traces) {
+            let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
+            cfg.sched = policy;
+            cfg.seed = seed;
+            let result = simulate(cfg, trace.clone());
+            rows.push(Row {
+                system: format!("ps/{}", policy.label()),
+                workload: wl.name.to_string(),
+                x_name: "rate".into(),
+                x: rate,
+                result,
+            });
+        }
+    }
+    rows
+}
+
+/// CLI/bench wrapper: the default scheduler ablation (LLaMA8B, ReAct).
+pub fn sched_ablation(seed: u64) -> Vec<Row> {
+    sched_sweep(LLAMA8B, &react(), SCHED_RATES, seed)
+}
+
 /// Ablation: routing policy impact on PrefillShare (prefix-aware vs
 /// locality-destroying policies) — DESIGN.md "ablation benches".
 pub fn routing_ablation(seed: u64) -> Vec<Row> {

@@ -7,7 +7,9 @@ pub mod config;
 pub mod experiments;
 pub mod real;
 pub mod report;
+pub mod sched;
 pub mod sim;
 
 pub use config::{ClusterConfig, RoutingPolicy, SystemKind};
+pub use sched::{DecodeAdmission, PrefillScheduler, SchedPolicy};
 pub use sim::{simulate, SimResult, Simulator};

@@ -15,14 +15,14 @@ pub struct Row {
 
 pub fn header(x_name: &str) -> String {
     format!(
-        "{:<13} {:<10} {:>8} | {:>10} {:>10} {:>10} {:>9} {:>8} {:>9} {:>8}",
-        "system", "workload", x_name, "p95_lat_s", "mean_lat_s", "tput_tok_s", "ttft_p95", "hit_pct", "staged", "prefillU"
+        "{:<18} {:<10} {:>8} | {:>10} {:>10} {:>10} {:>9} {:>8} {:>9} {:>8} {:>9}",
+        "system", "workload", x_name, "p95_lat_s", "mean_lat_s", "tput_tok_s", "ttft_p95", "hit_pct", "staged", "prefillU", "qdelay95"
     )
 }
 
 pub fn format_row(r: &Row) -> String {
     format!(
-        "{:<13} {:<10} {:>8.2} | {:>10.2} {:>10.2} {:>10.0} {:>9.3} {:>8.1} {:>9} {:>8.2}",
+        "{:<18} {:<10} {:>8.2} | {:>10.2} {:>10.2} {:>10.0} {:>9.3} {:>8.1} {:>9} {:>8.2} {:>9.3}",
         r.system,
         r.workload,
         r.x,
@@ -33,6 +33,7 @@ pub fn format_row(r: &Row) -> String {
         100.0 * r.result.prefix_hit_ratio,
         r.result.staging_events,
         r.result.prefill_util,
+        r.result.prefill_queue_delay_p95,
     )
 }
 
@@ -61,6 +62,15 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
                         "peak_decode_resident_tokens",
                         json::num(r.result.peak_decode_resident_tokens as f64),
                     ),
+                    (
+                        "prefill_queue_delay_mean_s",
+                        json::num(r.result.prefill_queue_delay_mean),
+                    ),
+                    (
+                        "prefill_queue_delay_p95_s",
+                        json::num(r.result.prefill_queue_delay_p95),
+                    ),
+                    ("prefill_chunks", json::num(r.result.prefill_chunks as f64)),
                 ])
             })
             .collect(),

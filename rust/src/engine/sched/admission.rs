@@ -1,0 +1,105 @@
+//! Decode-side admission policy: who joins the continuous batch, who parks.
+//!
+//! A decode worker admits handed-off requests into its iteration-level batch
+//! under two resources: the batch-size cap and the resident-KV token pool.
+//! When the head-of-queue request does not fit, its KV parks in host memory
+//! (a blocking stage-out copy) and pays a stage-in reload when space frees —
+//! the App. B.2 staging regime behind the Fig-4 throughput rollover.  The
+//! trait isolates that decision so capacity policies can be swapped without
+//! touching the simulator's event plumbing.
+
+/// Everything an admission policy may inspect for the head-of-queue request.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionQuery {
+    /// KV tokens the request reserves for its lifetime (ctx + max output).
+    pub footprint: usize,
+    /// KV tokens currently reserved by the active batch (+ staging-in).
+    pub resident_tokens: usize,
+    /// The worker's resident-KV pool size.
+    pub capacity_tokens: usize,
+    /// Requests currently in the running batch.
+    pub active: usize,
+    /// Requests whose stage-in copy is in flight (space already reserved).
+    pub staging_in: usize,
+    /// Iteration-level batch cap.
+    pub max_batch: usize,
+}
+
+/// What to do with the head-of-queue request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Join the batch now (reserve `footprint` tokens).
+    Admit,
+    /// Does not fit: park its KV in host memory until space frees.
+    Park,
+    /// Batch is full; re-evaluate when a slot opens (no staging traffic).
+    Wait,
+}
+
+/// Decode-batch admission policy.
+pub trait DecodeAdmission {
+    fn decide(&self, q: &AdmissionQuery) -> AdmissionDecision;
+}
+
+/// The paper-default policy: greedy FIFO admission under the KV cap, with a
+/// liveness override — a request larger than the whole pool is force-admitted
+/// on an empty worker rather than waiting forever.  Bit-identical to the
+/// pre-subsystem simulator's inline logic.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CapAdmission;
+
+impl DecodeAdmission for CapAdmission {
+    fn decide(&self, q: &AdmissionQuery) -> AdmissionDecision {
+        if q.active + q.staging_in >= q.max_batch {
+            return AdmissionDecision::Wait;
+        }
+        let force = q.footprint > q.capacity_tokens && q.resident_tokens == 0;
+        if q.resident_tokens + q.footprint > q.capacity_tokens && !force {
+            AdmissionDecision::Park
+        } else {
+            AdmissionDecision::Admit
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(footprint: usize, resident: usize, active: usize) -> AdmissionQuery {
+        AdmissionQuery {
+            footprint,
+            resident_tokens: resident,
+            capacity_tokens: 10_000,
+            active,
+            staging_in: 0,
+            max_batch: 8,
+        }
+    }
+
+    #[test]
+    fn admits_when_it_fits() {
+        assert_eq!(CapAdmission.decide(&q(4_000, 5_000, 2)), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn parks_on_kv_pressure() {
+        assert_eq!(CapAdmission.decide(&q(6_001, 4_000, 2)), AdmissionDecision::Park);
+    }
+
+    #[test]
+    fn waits_on_full_batch() {
+        assert_eq!(CapAdmission.decide(&q(10, 0, 8)), AdmissionDecision::Wait);
+        let mut query = q(10, 0, 6);
+        query.staging_in = 2;
+        assert_eq!(CapAdmission.decide(&query), AdmissionDecision::Wait);
+    }
+
+    #[test]
+    fn oversized_request_forced_onto_empty_worker() {
+        // Larger than the whole pool: would deadlock without the override.
+        assert_eq!(CapAdmission.decide(&q(20_000, 0, 0)), AdmissionDecision::Admit);
+        // ...but not while others hold KV.
+        assert_eq!(CapAdmission.decide(&q(20_000, 1, 0)), AdmissionDecision::Park);
+    }
+}

@@ -1,0 +1,123 @@
+//! Chunked-FIFO prefill scheduling (vLLM/Sarathi-style chunked prefill,
+//! adapted to a prefill-only worker).
+//!
+//! A kilotoken prefill monopolizes a FIFO worker for hundreds of
+//! milliseconds; every short partial re-prefill that arrives behind it eats
+//! the full head-of-line delay, which is exactly the TTFT tail Fig 3 sweeps
+//! into.  `ChunkedFifo` bounds each dispatch to `chunk_tokens` *new* tokens;
+//! an unfinished job re-enters the **back** of the queue, so the worker
+//! round-robins across jobs at chunk granularity and a short job waits at
+//! most one chunk, not one whole long prefill.
+//!
+//! Cost accounting: each chunk is charged `prefill_secs(chunk_new, past)`
+//! where `past` counts the matched prefix plus earlier chunks — the
+//! attention FLOPs over the sweep of chunks telescope to the unchunked
+//! total, so chunking pays only the real per-launch overhead
+//! (`prefill_overhead_s` per chunk) plus its queueing effects.  The matched
+//! radix path stays pinned (the handle is held in [`QueuedJob`]) until the
+//! final chunk inserts the full context.
+
+use std::collections::VecDeque;
+
+use crate::engine::sched::{carve_unit, PrefillJob, PrefillScheduler, PrefillUnit, QueuedJob};
+use crate::kvcache::radix::RadixCache;
+
+/// Default chunk size in new tokens (≈ one short agent-call re-prefill).
+pub const DEFAULT_CHUNK_TOKENS: usize = 512;
+
+#[derive(Debug)]
+pub struct ChunkedFifo {
+    queue: VecDeque<QueuedJob>,
+    chunk_tokens: usize,
+}
+
+impl ChunkedFifo {
+    pub fn new(chunk_tokens: usize) -> ChunkedFifo {
+        ChunkedFifo {
+            queue: VecDeque::new(),
+            chunk_tokens: chunk_tokens.max(1),
+        }
+    }
+}
+
+impl PrefillScheduler for ChunkedFifo {
+    fn enqueue(&mut self, job: PrefillJob) {
+        self.queue.push_back(QueuedJob::new(job));
+    }
+
+    fn next_unit(&mut self, radix: &mut RadixCache) -> Option<PrefillUnit> {
+        let entry = self.queue.pop_front()?;
+        Some(carve_unit(entry, radix, Some(self.chunk_tokens)))
+    }
+
+    fn requeue(&mut self, entry: QueuedJob) {
+        // Back of the queue: round-robin across jobs at chunk granularity.
+        self.queue.push_back(entry);
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sched::testutil::{drain, job};
+
+    #[test]
+    fn long_job_splits_and_short_job_overtakes() {
+        let mut s = ChunkedFifo::new(100);
+        let mut radix = RadixCache::new(100_000);
+        s.enqueue(job(0, 250, 0)); // 3 chunks: 100, 100, 50
+        s.enqueue(job(1, 80, 1)); // 1 chunk
+        let units = drain(&mut s, &mut radix);
+        assert_eq!(
+            units,
+            vec![
+                (0, 100, false),
+                (1, 80, true), // overtakes at the first chunk boundary
+                (0, 100, false),
+                (0, 50, true),
+            ]
+        );
+    }
+
+    #[test]
+    fn chunk_past_tokens_accumulate() {
+        let mut s = ChunkedFifo::new(64);
+        let mut radix = RadixCache::new(100_000);
+        // 32 tokens already cached, 160 new -> chunks of 64, 64, 32.
+        radix.insert(&job(3, 32, 0).key);
+        s.enqueue(job(3, 192, 0));
+        let mut pasts = Vec::new();
+        while let Some(mut unit) = s.next_unit(&mut radix) {
+            pasts.push((unit.past_tokens, unit.chunk_new, unit.is_last));
+            unit.entry.processed_new += unit.chunk_new;
+            if unit.is_last {
+                radix.unlock(unit.entry.handle.as_ref().unwrap());
+                radix.insert(&unit.entry.job.key);
+            } else {
+                s.requeue(unit.entry);
+            }
+        }
+        assert_eq!(pasts, vec![(32, 64, false), (96, 64, false), (160, 32, true)]);
+    }
+
+    #[test]
+    fn pinned_prefix_survives_eviction_between_chunks() {
+        let mut s = ChunkedFifo::new(10);
+        let mut radix = RadixCache::new(64);
+        radix.insert(&job(1, 30, 0).key);
+        s.enqueue(job(1, 50, 0)); // 30 matched + 20 new, 2 chunks
+        let unit = s.next_unit(&mut radix).unwrap();
+        assert!(!unit.is_last);
+        assert_eq!(unit.entry.matched_tokens, 30);
+        // Hammer the cache between chunks: the matched path must stay.
+        for sid in 10..30 {
+            radix.insert(&job(sid, 20, 0).key);
+        }
+        assert_eq!(radix.peek_prefix(&unit.entry.job.key), 30);
+        radix.unlock(unit.entry.handle.as_ref().unwrap());
+    }
+}

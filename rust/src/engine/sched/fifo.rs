@@ -1,0 +1,70 @@
+//! FIFO prefill scheduling — the reference policy.
+//!
+//! Jobs dispatch in arrival order as whole-job units.  This reproduces the
+//! pre-subsystem simulator exactly (same radix lookup sequence, same event
+//! timing), which the golden-metrics regression test pins down.
+
+use std::collections::VecDeque;
+
+use crate::engine::sched::{carve_unit, PrefillJob, PrefillScheduler, PrefillUnit, QueuedJob};
+use crate::kvcache::radix::RadixCache;
+
+#[derive(Debug, Default)]
+pub struct Fifo {
+    queue: VecDeque<QueuedJob>,
+}
+
+impl Fifo {
+    pub fn new() -> Fifo {
+        Fifo::default()
+    }
+}
+
+impl PrefillScheduler for Fifo {
+    fn enqueue(&mut self, job: PrefillJob) {
+        self.queue.push_back(QueuedJob::new(job));
+    }
+
+    fn next_unit(&mut self, radix: &mut RadixCache) -> Option<PrefillUnit> {
+        let entry = self.queue.pop_front()?;
+        Some(carve_unit(entry, radix, None))
+    }
+
+    fn requeue(&mut self, entry: QueuedJob) {
+        // Whole-job units never requeue; keep ordering sane if one ever does.
+        self.queue.push_front(entry);
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sched::testutil::{drain, job};
+
+    #[test]
+    fn dispatches_in_arrival_order_as_whole_jobs() {
+        let mut s = Fifo::new();
+        let mut radix = RadixCache::new(100_000);
+        s.enqueue(job(0, 500, 0));
+        s.enqueue(job(1, 20, 1));
+        s.enqueue(job(2, 300, 2));
+        assert_eq!(s.queue_len(), 3);
+        let units = drain(&mut s, &mut radix);
+        assert_eq!(units, vec![(0, 500, true), (1, 20, true), (2, 300, true)]);
+    }
+
+    #[test]
+    fn prefix_hit_reduces_unit_work() {
+        let mut s = Fifo::new();
+        let mut radix = RadixCache::new(100_000);
+        let j = job(7, 100, 0);
+        s.enqueue(PrefillJob { ctx_len: 160, key: job(7, 160, 0).key, ..j.clone() });
+        radix.insert(&j.key); // first 100 tokens already cached
+        let units = drain(&mut s, &mut radix);
+        assert_eq!(units, vec![(7, 60, true)]);
+    }
+}

@@ -1,0 +1,307 @@
+//! Prefill/decode scheduling subsystem — the pluggable policy surface the
+//! simulator dispatches through.
+//!
+//! The paper's serving numbers (Fig 3/4) depend on *how* prefill jobs are
+//! queued and interleaved; related systems (KVFlow's workflow-aware prefix
+//! scheduling, ForkKV's multi-model KV management) treat this layer as a
+//! first-class policy.  Two traits split the decision points:
+//!
+//!   * [`PrefillScheduler`] — per-prefill-worker job admission, queue
+//!     ordering and next-work-unit selection.  Policies may probe the
+//!     worker's radix cache read-only ([`RadixCache::peek_prefix`]) to rank
+//!     jobs by *effective* prefill length (what remains after prefix reuse),
+//!     and may split a job into fixed-token chunks so short jobs are not
+//!     head-of-line blocked behind kilotoken prefills.
+//!   * [`DecodeAdmission`] — decode-worker batch-join decisions under the
+//!     resident-KV cap (admit / park-to-host / wait), the App. B.2 staging
+//!     regime.
+//!
+//! Policies:
+//!
+//! | CLI name          | type                              | behaviour |
+//! |-------------------|-----------------------------------|-----------|
+//! | `fifo`            | [`fifo::Fifo`]                    | arrival order, whole-job units — bit-identical to the pre-subsystem simulator |
+//! | `sjf`             | [`sjf::Sjf`]                      | shortest *remaining* prefill first (radix-aware effective length) |
+//! | `prefix-affinity` | [`prefix_affinity::PrefixAffinity`] | longest cached prefix first (back-to-back radix hits before LRU eviction) |
+//! | `chunked`         | [`chunked::ChunkedFifo`]          | FIFO at chunk granularity: long prefills yield every `chunk_tokens` |
+//!
+//! All policies are deterministic: ties break on queue position, no RNG.
+
+pub mod admission;
+pub mod chunked;
+pub mod fifo;
+pub mod prefix_affinity;
+pub mod sjf;
+
+pub use admission::{AdmissionDecision, AdmissionQuery, CapAdmission, DecodeAdmission};
+pub use chunked::ChunkedFifo;
+pub use fifo::Fifo;
+pub use prefix_affinity::PrefixAffinity;
+pub use sjf::Sjf;
+
+use crate::kvcache::radix::{MatchHandle, RadixCache};
+use crate::simtime::SimTime;
+
+/// One prefill request as the router hands it to a worker.
+#[derive(Debug, Clone)]
+pub struct PrefillJob {
+    pub sid: usize,
+    pub call_idx: usize,
+    /// Task-model identity (selects the decode worker after handoff).
+    pub model: usize,
+    /// Full context length to have resident when this job completes.
+    pub ctx_len: usize,
+    pub issued_at: SimTime,
+    /// Radix key for the full context (sys prefix + session-private ids).
+    pub key: Vec<u64>,
+}
+
+/// A job resident in a scheduler queue, with its in-progress state.
+///
+/// `handle` is acquired (and the prefix pinned) at first dispatch and held
+/// across chunks, so LRU eviction can never pull a matched prefix out from
+/// under a partially prefilled job.
+#[derive(Debug)]
+pub struct QueuedJob {
+    pub job: PrefillJob,
+    /// Radix-matched tokens — exact once started, 0 before.
+    pub matched_tokens: usize,
+    /// New tokens already computed by earlier chunks of this job.
+    pub processed_new: usize,
+    pub handle: Option<MatchHandle>,
+}
+
+impl QueuedJob {
+    pub fn new(job: PrefillJob) -> QueuedJob {
+        QueuedJob { job, matched_tokens: 0, processed_new: 0, handle: None }
+    }
+
+    /// Has this job dispatched at least one unit?
+    pub fn started(&self) -> bool {
+        self.handle.is_some()
+    }
+}
+
+/// One schedulable unit of prefill work (a whole job, or one chunk of it).
+#[derive(Debug)]
+pub struct PrefillUnit {
+    pub entry: QueuedJob,
+    /// New tokens this unit computes (0 on a full prefix hit).
+    pub chunk_new: usize,
+    /// Context already resident when this unit starts (matched + prior
+    /// chunks) — the attention span the cost model charges against.
+    pub past_tokens: usize,
+    /// First unit of its job (hit/miss accounting + queueing delay record).
+    pub is_first: bool,
+    /// Completing unit: unlock + insert + handoff follow.
+    pub is_last: bool,
+}
+
+/// Per-worker prefill scheduling policy.
+pub trait PrefillScheduler {
+    /// Admit a routed job into this worker's queue.
+    fn enqueue(&mut self, job: PrefillJob);
+
+    /// Select the next unit of work, or `None` if the queue is empty.  The
+    /// chosen job's prefix is matched and pinned against `radix` here (the
+    /// mutating lookup), so the returned unit carries exact accounting.
+    fn next_unit(&mut self, radix: &mut RadixCache) -> Option<PrefillUnit>;
+
+    /// Return an unfinished job (a non-final chunk completed) to the queue.
+    fn requeue(&mut self, entry: QueuedJob);
+
+    fn queue_len(&self) -> usize;
+}
+
+/// Shared queue for score-ranked whole-job policies (SJF, prefix-affinity):
+/// a linear scan picks the entry minimizing a score, ties breaking on queue
+/// position so equal jobs stay FIFO and dispatch stays deterministic.
+///
+/// Cost note: ranking probes every queued job's key against the radix
+/// (`peek_prefix`), i.e. O(queue_len × ctx_len) token compares per
+/// dispatch.  The backlog is bounded by the admission cap
+/// (`max_concurrent_sessions`, ≤ a few dozen jobs per worker), and caching
+/// peeks across dispatches would not pay: a dispatch almost always follows
+/// the previous job's completion *insert*, which changes cache coverage
+/// and would invalidate any version-keyed cache anyway.
+#[derive(Debug, Default)]
+pub(crate) struct RankedQueue {
+    queue: Vec<QueuedJob>,
+}
+
+impl RankedQueue {
+    pub(crate) fn push(&mut self, entry: QueuedJob) {
+        self.queue.push(entry);
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Remove and dispatch the entry with the *lowest* score (first wins on
+    /// ties), as a whole-job unit.
+    pub(crate) fn next_min_by(
+        &mut self,
+        radix: &mut RadixCache,
+        score: impl Fn(&QueuedJob, &RadixCache) -> i64,
+    ) -> Option<PrefillUnit> {
+        if self.is_empty() {
+            return None;
+        }
+        let mut best = 0usize;
+        let mut best_score = score(&self.queue[0], radix);
+        for (i, entry) in self.queue.iter().enumerate().skip(1) {
+            let s = score(entry, radix);
+            if s < best_score {
+                best = i;
+                best_score = s;
+            }
+        }
+        let entry = self.queue.remove(best);
+        Some(carve_unit(entry, radix, None))
+    }
+}
+
+/// Shared dispatch helper: resolve the radix match on first dispatch, then
+/// carve the next unit (whole remainder, or up to `chunk` new tokens).
+pub(crate) fn carve_unit(
+    mut entry: QueuedJob,
+    radix: &mut RadixCache,
+    chunk: Option<usize>,
+) -> PrefillUnit {
+    let is_first = !entry.started();
+    if is_first {
+        let h = radix.match_prefix(&entry.job.key);
+        entry.matched_tokens = h.matched_tokens;
+        entry.handle = Some(h);
+    }
+    let total_new = entry.job.ctx_len - entry.matched_tokens;
+    let remaining = total_new - entry.processed_new;
+    let chunk_new = match chunk {
+        Some(c) => remaining.min(c.max(1)),
+        None => remaining,
+    };
+    let past_tokens = entry.matched_tokens + entry.processed_new;
+    let is_last = entry.processed_new + chunk_new >= total_new;
+    PrefillUnit { entry, chunk_new, past_tokens, is_first, is_last }
+}
+
+/// Which prefill-scheduling policy to run (CLI: `--sched`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Arrival order, whole-job units (pre-subsystem behaviour).
+    Fifo,
+    /// Shortest remaining (radix-effective) prefill first.
+    Sjf,
+    /// Longest cached prefix first.
+    PrefixAffinity,
+    /// FIFO over fixed-token chunks (no head-of-line blocking).
+    Chunked,
+}
+
+impl SchedPolicy {
+    pub fn by_name(name: &str) -> Option<SchedPolicy> {
+        match name {
+            "fifo" => Some(SchedPolicy::Fifo),
+            "sjf" | "shortest" => Some(SchedPolicy::Sjf),
+            "prefix-affinity" | "affinity" => Some(SchedPolicy::PrefixAffinity),
+            "chunked" | "chunked-fifo" => Some(SchedPolicy::Chunked),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::Sjf => "sjf",
+            SchedPolicy::PrefixAffinity => "prefix-affinity",
+            SchedPolicy::Chunked => "chunked",
+        }
+    }
+
+    pub fn all() -> [SchedPolicy; 4] {
+        [SchedPolicy::Fifo, SchedPolicy::Sjf, SchedPolicy::PrefixAffinity, SchedPolicy::Chunked]
+    }
+}
+
+/// Instantiate one scheduler for one prefill worker.
+pub fn make_scheduler(policy: SchedPolicy, chunk_tokens: usize) -> Box<dyn PrefillScheduler> {
+    match policy {
+        SchedPolicy::Fifo => Box::new(Fifo::new()),
+        SchedPolicy::Sjf => Box::new(Sjf::new()),
+        SchedPolicy::PrefixAffinity => Box::new(PrefixAffinity::new()),
+        SchedPolicy::Chunked => Box::new(ChunkedFifo::new(chunk_tokens)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// A job whose key is `sid`-private (no cross-job prefix sharing).
+    pub fn job(sid: usize, ctx_len: usize, issued_at: SimTime) -> PrefillJob {
+        let key = (0..ctx_len).map(|i| ((sid as u64) << 32) | i as u64).collect();
+        PrefillJob { sid, call_idx: 0, model: 0, ctx_len, issued_at, key }
+    }
+
+    /// Drain a scheduler, returning `(sid, chunk_new, is_last)` per unit,
+    /// completing jobs exactly as the simulator would.
+    pub fn drain(
+        s: &mut dyn PrefillScheduler,
+        radix: &mut RadixCache,
+    ) -> Vec<(usize, usize, bool)> {
+        let mut out = Vec::new();
+        while let Some(mut unit) = s.next_unit(radix) {
+            out.push((unit.entry.job.sid, unit.chunk_new, unit.is_last));
+            unit.entry.processed_new += unit.chunk_new;
+            if unit.is_last {
+                let h = unit.entry.handle.take().unwrap();
+                radix.unlock(&h);
+                radix.insert(&unit.entry.job.key);
+            } else {
+                s.requeue(unit.entry);
+            }
+            assert!(out.len() < 10_000, "scheduler failed to make progress");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in SchedPolicy::all() {
+            assert_eq!(SchedPolicy::by_name(p.label()), Some(p));
+        }
+        assert_eq!(SchedPolicy::by_name("affinity"), Some(SchedPolicy::PrefixAffinity));
+        assert_eq!(SchedPolicy::by_name("chunked-fifo"), Some(SchedPolicy::Chunked));
+        assert_eq!(SchedPolicy::by_name("lifo"), None);
+    }
+
+    #[test]
+    fn carve_full_hit_is_single_empty_unit() {
+        let mut radix = RadixCache::new(10_000);
+        let j = testutil::job(1, 64, 0);
+        radix.insert(&j.key);
+        let unit = carve_unit(QueuedJob::new(j), &mut radix, Some(16));
+        assert_eq!(unit.chunk_new, 0);
+        assert!(unit.is_first && unit.is_last);
+        assert_eq!(unit.past_tokens, 64);
+        radix.unlock(unit.entry.handle.as_ref().unwrap());
+    }
+
+    #[test]
+    fn factory_builds_every_policy() {
+        for p in SchedPolicy::all() {
+            let s = make_scheduler(p, 256);
+            assert_eq!(s.queue_len(), 0);
+        }
+    }
+}

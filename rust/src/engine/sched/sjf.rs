@@ -1,0 +1,95 @@
+//! Shortest-remaining-prefill-first scheduling.
+//!
+//! Classic SJF reduces mean queueing delay when job sizes are skewed — and
+//! agent workloads are exactly that (kilotoken first-turn prefills next to
+//! ~100-token partial re-prefills after a model switch).  The job "size"
+//! here is the *effective* prefill length: what would actually be computed
+//! after radix prefix reuse, estimated with the read-only
+//! [`RadixCache::peek_prefix`] probe so ranking never perturbs LRU order,
+//! pin state, or hit/miss statistics.
+//!
+//! Ranking, tie-breaks, and the cost bound live in
+//! [`RankedQueue`](crate::engine::sched::RankedQueue), shared with
+//! [`PrefixAffinity`](crate::engine::sched::PrefixAffinity).
+
+use crate::engine::sched::{PrefillJob, PrefillScheduler, PrefillUnit, QueuedJob, RankedQueue};
+use crate::kvcache::radix::RadixCache;
+
+#[derive(Debug, Default)]
+pub struct Sjf {
+    queue: RankedQueue,
+}
+
+impl Sjf {
+    pub fn new() -> Sjf {
+        Sjf::default()
+    }
+
+    /// Effective remaining prefill work for one queued entry.
+    fn remaining(entry: &QueuedJob, radix: &RadixCache) -> usize {
+        if entry.started() {
+            entry.job.ctx_len - entry.matched_tokens - entry.processed_new
+        } else {
+            entry.job.ctx_len - radix.peek_prefix(&entry.job.key)
+        }
+    }
+}
+
+impl PrefillScheduler for Sjf {
+    fn enqueue(&mut self, job: PrefillJob) {
+        self.queue.push(QueuedJob::new(job));
+    }
+
+    fn next_unit(&mut self, radix: &mut RadixCache) -> Option<PrefillUnit> {
+        self.queue.next_min_by(radix, |e, r| Self::remaining(e, r) as i64)
+    }
+
+    fn requeue(&mut self, entry: QueuedJob) {
+        self.queue.push(entry);
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sched::testutil::{drain, job};
+
+    #[test]
+    fn shortest_job_runs_first() {
+        let mut s = Sjf::new();
+        let mut radix = RadixCache::new(100_000);
+        s.enqueue(job(0, 800, 0));
+        s.enqueue(job(1, 50, 1));
+        s.enqueue(job(2, 400, 2));
+        let units = drain(&mut s, &mut radix);
+        assert_eq!(units, vec![(1, 50, true), (2, 400, true), (0, 800, true)]);
+    }
+
+    #[test]
+    fn ranking_uses_effective_length_after_prefix_reuse() {
+        let mut s = Sjf::new();
+        let mut radix = RadixCache::new(100_000);
+        // Session 0: 900-token context with 880 already cached -> 20 new.
+        radix.insert(&job(0, 880, 0).key);
+        s.enqueue(job(0, 900, 0));
+        // Session 1: cold 100-token context -> 100 new.
+        s.enqueue(job(1, 100, 1));
+        let units = drain(&mut s, &mut radix);
+        assert_eq!(units, vec![(0, 20, true), (1, 100, true)]);
+    }
+
+    #[test]
+    fn equal_lengths_stay_fifo() {
+        let mut s = Sjf::new();
+        let mut radix = RadixCache::new(100_000);
+        for sid in 0..4 {
+            s.enqueue(job(sid, 128, sid as u64));
+        }
+        let order: Vec<usize> = drain(&mut s, &mut radix).iter().map(|u| u.0).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+}

@@ -7,19 +7,30 @@
 //!   * prefix-aware session pinning vs per-model routing
 //!     → PrefillShare's 4× effective prefix capacity and partial prefill
 //!       at every model switch (§3.3 steps 1–3);
-//!   * FIFO prefill queues with full/partial prefill durations
-//!     → arrival-rate latency blowup of the baseline (Fig 3);
+//!   * pluggable prefill queue policies (`engine::sched`: FIFO, SJF,
+//!     prefix-affinity, chunked) with full/partial prefill durations
+//!     → arrival-rate latency blowup of the baseline (Fig 3) and the
+//!       scheduler ablations (`sched_policy_sweep` bench);
 //!   * iteration-level continuous batching on decode workers with a
-//!     resident-KV cap and host staging on overflow
+//!     resident-KV cap and host staging on overflow, behind the
+//!     [`DecodeAdmission`] policy trait
 //!     → PrefillShare's high-concurrency throughput rollover (Fig 4 bottom,
 //!       App. B.2);
 //!   * explicit KV handoff costs (prefill → decode transfer).
 //!
-//! The simulator is deterministic given (trace, config.seed).
+//! The simulator is deterministic given (trace, config.seed): schedulers
+//! break ties on queue position, the event queue breaks equal timestamps in
+//! insertion order, and the only RNG consumer is the `Random` routing
+//! ablation.  `SchedPolicy::Fifo` reproduces the pre-subsystem simulator
+//! event-for-event (pinned by the golden-metrics regression test).
 
 use std::collections::VecDeque;
 
 use crate::engine::config::{ClusterConfig, RoutingPolicy, SystemKind};
+use crate::engine::sched::{
+    make_scheduler, AdmissionDecision, AdmissionQuery, CapAdmission, DecodeAdmission, PrefillJob,
+    PrefillScheduler, PrefillUnit,
+};
 use crate::kvcache::radix::RadixCache;
 use crate::metrics::ServingMetrics;
 use crate::simtime::{secs, to_secs, EventQueue, SimTime};
@@ -33,6 +44,7 @@ use crate::workload::{simtokens, Trace};
 #[derive(Debug)]
 enum Ev {
     SessionArrive { sid: usize },
+    /// One prefill work unit (whole job, or one chunk of it) finished.
     PrefillDone { worker: usize },
     HandoffDone { req: DecodeReq, worker: usize },
     StageInDone { req: DecodeReq, worker: usize },
@@ -51,16 +63,6 @@ struct SessionState {
     ctx_len: usize,
     arrival: SimTime,
     done: bool,
-}
-
-#[derive(Debug, Clone)]
-struct PrefillJob {
-    sid: usize,
-    call_idx: usize,
-    model: usize,
-    /// Context length to prefill (tokens).
-    ctx_len: usize,
-    issued_at: SimTime,
 }
 
 /// A decode-phase request (one agent call's generation).
@@ -86,12 +88,12 @@ impl DecodeReq {
 }
 
 struct PrefillWorker {
-    queue: VecDeque<PrefillJob>,
-    busy: Option<PrefillJob>,
+    /// Queue ordering / chunking policy (one instance per worker, so SJF
+    /// and affinity rank against *this* worker's radix state).
+    sched: Box<dyn PrefillScheduler>,
+    /// The in-flight work unit; its `entry` holds the pinned match handle.
+    busy: Option<PrefillUnit>,
     radix: RadixCache,
-    /// Pinned radix path of the in-flight job.
-    cur_handle: Option<crate::kvcache::radix::MatchHandle>,
-    cur_new_tokens: usize,
     /// Busy-time accounting for utilization reporting.
     busy_micros: u64,
 }
@@ -122,6 +124,7 @@ pub struct Simulator {
     sessions: Vec<SessionState>,
     prefill: Vec<PrefillWorker>,
     decode: Vec<DecodeWorker>,
+    admission: Box<dyn DecodeAdmission>,
     admitted: usize,
     admission_queue: VecDeque<usize>,
     rr_counter: usize,
@@ -137,11 +140,9 @@ impl Simulator {
         let n_prefill = cfg.effective_prefill_workers();
         let prefill = (0..n_prefill)
             .map(|_| PrefillWorker {
-                queue: VecDeque::new(),
+                sched: make_scheduler(cfg.sched, cfg.chunk_tokens),
                 busy: None,
                 radix: RadixCache::new(cfg.prefill_kv_tokens),
-                cur_handle: None,
-                cur_new_tokens: 0,
                 busy_micros: 0,
             })
             .collect();
@@ -175,6 +176,7 @@ impl Simulator {
             sessions,
             prefill,
             decode,
+            admission: Box::new(CapAdmission),
             admitted: 0,
             admission_queue: VecDeque::new(),
             rr_counter: 0,
@@ -229,15 +231,17 @@ impl Simulator {
     fn issue_call(&mut self, sid: usize) {
         let call_idx = self.sessions[sid].next_call;
         let call = self.trace.sessions[sid].calls[call_idx];
+        let ctx_len = self.sessions[sid].ctx_len;
         let job = PrefillJob {
             sid,
             call_idx,
             model: call.model,
-            ctx_len: self.sessions[sid].ctx_len,
+            ctx_len,
             issued_at: self.q.now(),
+            key: self.context_key(sid, ctx_len),
         };
         let w = self.route_prefill(&job);
-        self.prefill[w].queue.push_back(job);
+        self.prefill[w].sched.enqueue(job);
         self.try_start_prefill(w);
     }
 
@@ -264,53 +268,75 @@ impl Simulator {
         simtokens::context_key(sid as u64, sys, ctx_len - sys)
     }
 
+    /// Dispatch the worker's next scheduler-chosen unit, if idle.
     fn try_start_prefill(&mut self, w: usize) {
-        if self.prefill[w].busy.is_some() {
-            return;
+        let unit = {
+            let pw = &mut self.prefill[w];
+            if pw.busy.is_some() {
+                return;
+            }
+            match pw.sched.next_unit(&mut pw.radix) {
+                Some(u) => u,
+                None => return,
+            }
+        };
+
+        if unit.is_first {
+            // Whole-job accounting happens at first dispatch so totals are
+            // identical across whole-job and chunked policies.
+            let matched = unit.entry.matched_tokens;
+            let total_new = unit.entry.job.ctx_len - matched;
+            self.metrics.prefix_hit_tokens += matched as u64;
+            self.metrics.prefix_miss_tokens += total_new as u64;
+            self.metrics.prefill_computed_tokens += total_new as u64;
+            self.metrics.prefill_jobs += 1;
+            let delay = self.q.now() - unit.entry.job.issued_at;
+            self.metrics.prefill_queue_delay.record(to_secs(delay));
         }
-        let Some(job) = self.prefill[w].queue.pop_front() else { return };
-        let key = self.context_key(job.sid, job.ctx_len);
-        let handle = self.prefill[w].radix.match_prefix(&key);
-        let matched = handle.matched_tokens;
-        let new_tokens = job.ctx_len - matched;
-        let dur = self.cfg.cost.prefill_secs(new_tokens, matched);
+        self.metrics.prefill_chunks += 1;
 
-        self.metrics.prefix_hit_tokens += matched as u64;
-        self.metrics.prefix_miss_tokens += new_tokens as u64;
-        self.metrics.prefill_computed_tokens += new_tokens as u64;
-
+        let dur = self.cfg.cost.prefill_secs(unit.chunk_new, unit.past_tokens);
         let dur_us = secs(dur);
         self.prefill[w].busy_micros += dur_us;
-        self.prefill[w].cur_handle = Some(handle);
-        self.prefill[w].cur_new_tokens = new_tokens;
-        self.prefill[w].busy = Some(job);
+        self.prefill[w].busy = Some(unit);
         self.q.schedule_in(dur_us, Ev::PrefillDone { worker: w });
     }
 
     fn on_prefill_done(&mut self, w: usize) {
-        let job = self.prefill[w].busy.take().expect("prefill done w/o job");
-        let handle = self.prefill[w].cur_handle.take().unwrap();
-        let key = self.context_key(job.sid, job.ctx_len);
-        self.prefill[w].radix.unlock(&handle);
-        self.prefill[w].radix.insert(&key);
+        let mut unit = self.prefill[w].busy.take().expect("prefill done w/o unit");
+        unit.entry.processed_new += unit.chunk_new;
 
-        // Cache handoff: ship the prompt KV to the decode worker.
-        let call = self.trace.sessions[job.sid].calls[job.call_idx];
-        let req = DecodeReq {
-            sid: job.sid,
-            call_idx: job.call_idx,
-            ctx_len: job.ctx_len,
-            out_tokens: call.out_tokens,
-            generated: 0,
-            issued_at: job.issued_at,
-            ttft_recorded: false,
-            was_deferred: false,
-        };
-        let dw = call.model; // decode worker hosting this task model
-        let dur = self.cfg.cost.handoff_secs(job.ctx_len);
-        self.metrics.handoffs += 1;
-        self.metrics.handoff_tokens += job.ctx_len as u64;
-        self.q.schedule_in(secs(dur), Ev::HandoffDone { req, worker: dw });
+        if unit.is_last {
+            let handle = unit.entry.handle.take().expect("completed job without handle");
+            {
+                let pw = &mut self.prefill[w];
+                pw.radix.unlock(&handle);
+                pw.radix.insert(&unit.entry.job.key);
+            }
+
+            // Cache handoff: ship the prompt KV to the decode worker.
+            let job = &unit.entry.job;
+            let call = self.trace.sessions[job.sid].calls[job.call_idx];
+            let req = DecodeReq {
+                sid: job.sid,
+                call_idx: job.call_idx,
+                ctx_len: job.ctx_len,
+                out_tokens: call.out_tokens,
+                generated: 0,
+                issued_at: job.issued_at,
+                ttft_recorded: false,
+                was_deferred: false,
+            };
+            let dw = call.model; // decode worker hosting this task model
+            let dur = self.cfg.cost.handoff_secs(job.ctx_len);
+            self.metrics.handoffs += 1;
+            self.metrics.handoff_tokens += job.ctx_len as u64;
+            self.q.schedule_in(secs(dur), Ev::HandoffDone { req, worker: dw });
+        } else {
+            // Unfinished chunked job: back to the scheduler (handle kept,
+            // prefix stays pinned across chunks).
+            self.prefill[w].sched.requeue(unit.entry);
+        }
 
         self.try_start_prefill(w);
     }
@@ -321,50 +347,75 @@ impl Simulator {
         self.maybe_step(worker);
     }
 
-    /// Admit pending requests into the batch under the memory cap and batch
-    /// cap.  A request that does not fit is parked in host memory: its KV is
-    /// staged *out* (a blocking host copy) and it pays a stage-*in* reload
-    /// when space finally frees — both copies contend with decode compute
-    /// (vLLM App. B.2; this is the Fig-4 high-concurrency rollover).
+    /// Admit pending requests into the batch per the [`DecodeAdmission`]
+    /// policy.  A parked request stages its KV *out* to host memory (a
+    /// blocking copy) and pays a stage-*in* reload when space finally frees
+    /// — both copies contend with decode compute (vLLM App. B.2; this is
+    /// the Fig-4 high-concurrency rollover).
     fn try_admit_decode(&mut self, w: usize) {
         loop {
-            let dw = &mut self.decode[w];
-            if dw.active.len() + dw.staging_in >= self.cfg.max_decode_batch {
-                return;
-            }
-            let Some(front) = dw.pending.front_mut() else { return };
-            let fp = front.footprint();
-            // Liveness guard: a request larger than the whole pool is
-            // force-admitted on an empty worker rather than waiting forever.
-            let force = fp > self.cfg.decode_kv_tokens && dw.resident_tokens == 0;
-            if dw.resident_tokens + fp > self.cfg.decode_kv_tokens && !force {
-                // Does not fit: park the handed-off KV in host memory.
-                if !front.was_deferred && !dw.io_busy {
-                    front.was_deferred = true;
-                    dw.io_busy = true;
-                    self.metrics.staging_events += 1;
-                    self.metrics.staged_tokens += front.ctx_len as u64;
-                    let dur = self.cfg.cost.staging_secs(front.ctx_len);
-                    self.q.schedule_in(secs(dur), Ev::StageOutDone { worker: w });
+            let decision = {
+                let dw = &self.decode[w];
+                let Some(front) = dw.pending.front() else { return };
+                self.admission.decide(&AdmissionQuery {
+                    footprint: front.footprint(),
+                    resident_tokens: dw.resident_tokens,
+                    capacity_tokens: self.cfg.decode_kv_tokens,
+                    active: dw.active.len(),
+                    staging_in: dw.staging_in,
+                    max_batch: self.cfg.max_decode_batch,
+                })
+            };
+            match decision {
+                AdmissionDecision::Wait => return,
+                AdmissionDecision::Park => {
+                    // Does not fit: park the handed-off KV in host memory.
+                    let staged_ctx = {
+                        let dw = &mut self.decode[w];
+                        let front = dw.pending.front_mut().unwrap();
+                        if !front.was_deferred && !dw.io_busy {
+                            front.was_deferred = true;
+                            dw.io_busy = true;
+                            Some(front.ctx_len)
+                        } else {
+                            None
+                        }
+                    };
+                    if let Some(ctx_len) = staged_ctx {
+                        self.metrics.staging_events += 1;
+                        self.metrics.staged_tokens += ctx_len as u64;
+                        let dur = self.cfg.cost.staging_secs(ctx_len);
+                        self.q.schedule_in(secs(dur), Ev::StageOutDone { worker: w });
+                    }
+                    return;
                 }
-                return;
-            }
-            let mut req = dw.pending.pop_front().unwrap();
-            dw.resident_tokens += fp;
-            dw.peak_resident = dw.peak_resident.max(dw.resident_tokens);
-            if req.was_deferred {
-                // KV was parked in host memory; reload before joining.  The
-                // copy blocks the step loop like the stage-out did.
-                dw.staging_in += 1;
-                dw.io_busy = true;
-                self.metrics.staging_events += 1;
-                self.metrics.staged_tokens += req.ctx_len as u64;
-                let dur = self.cfg.cost.staging_secs(req.ctx_len);
-                req.was_deferred = false;
-                self.q.schedule_in(secs(dur), Ev::StageInDone { req, worker: w });
-                return; // one IO at a time
-            } else {
-                dw.active.push(req);
+                AdmissionDecision::Admit => {
+                    let mut req = {
+                        let dw = &mut self.decode[w];
+                        let req = dw.pending.pop_front().unwrap();
+                        dw.resident_tokens += req.footprint();
+                        dw.peak_resident = dw.peak_resident.max(dw.resident_tokens);
+                        req
+                    };
+                    if req.was_deferred {
+                        // KV was parked in host memory; reload before
+                        // joining.  The copy blocks the step loop like the
+                        // stage-out did.
+                        {
+                            let dw = &mut self.decode[w];
+                            dw.staging_in += 1;
+                            dw.io_busy = true;
+                        }
+                        self.metrics.staging_events += 1;
+                        self.metrics.staged_tokens += req.ctx_len as u64;
+                        let dur = self.cfg.cost.staging_secs(req.ctx_len);
+                        req.was_deferred = false;
+                        self.q.schedule_in(secs(dur), Ev::StageInDone { req, worker: w });
+                        return; // one IO at a time
+                    } else {
+                        self.decode[w].active.push(req);
+                    }
+                }
             }
         }
     }
@@ -500,6 +551,9 @@ impl Simulator {
                 0.0
             },
             peak_decode_resident_tokens: peak_decode_resident,
+            prefill_queue_delay_mean: self.metrics.prefill_queue_delay.mean(),
+            prefill_queue_delay_p95: self.metrics.prefill_queue_delay.p95(),
+            prefill_chunks: self.metrics.prefill_chunks,
             metrics: self.metrics,
         }
     }
@@ -525,6 +579,12 @@ pub struct SimResult {
     pub prefill_util: f64,
     pub decode_util: f64,
     pub peak_decode_resident_tokens: usize,
+    /// Prefill queueing delay (issued -> first dispatch) — the quantity the
+    /// scheduler policies trade against each other.
+    pub prefill_queue_delay_mean: f64,
+    pub prefill_queue_delay_p95: f64,
+    /// Dispatched prefill units (== jobs for whole-job policies).
+    pub prefill_chunks: u64,
     pub metrics: ServingMetrics,
 }
 
@@ -536,6 +596,7 @@ pub fn simulate(cfg: ClusterConfig, trace: Trace) -> SimResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::sched::SchedPolicy;
     use crate::workload::{generate_trace, react};
 
     fn small_trace(rate: f64, dur: f64) -> Trace {
@@ -544,6 +605,12 @@ mod tests {
 
     fn run(system: SystemKind, rate: f64) -> SimResult {
         let cfg = ClusterConfig::paper_default(system);
+        simulate(cfg, small_trace(rate, 60.0))
+    }
+
+    fn run_sched(policy: SchedPolicy, rate: f64) -> SimResult {
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.sched = policy;
         simulate(cfg, small_trace(rate, 60.0))
     }
 
@@ -609,5 +676,66 @@ mod tests {
         let r = simulate(cfg, small_trace(2.0, 40.0));
         assert!(r.staging_events > 0, "expected staging under KV pressure");
         assert!(r.sessions_completed > 0);
+    }
+
+    // -- scheduler policies -------------------------------------------------
+
+    #[test]
+    fn every_policy_conserves_sessions_and_tokens() {
+        let trace = small_trace(3.0, 60.0);
+        let calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
+        for policy in SchedPolicy::all() {
+            let r = run_sched(policy, 3.0);
+            assert_eq!(
+                r.sessions_completed as usize,
+                trace.sessions.len(),
+                "{policy:?} lost sessions"
+            );
+            assert_eq!(r.metrics.requests_completed as usize, calls, "{policy:?}");
+            // hit+miss must equal computed demand regardless of ordering.
+            assert_eq!(r.metrics.prefix_miss_tokens, r.prefill_computed_tokens, "{policy:?}");
+            assert_eq!(r.metrics.prefill_jobs as usize, calls, "{policy:?}");
+            assert_eq!(
+                r.metrics.prefill_queue_delay.len(),
+                calls,
+                "{policy:?}: one queue-delay sample per job"
+            );
+        }
+    }
+
+    #[test]
+    fn whole_job_policies_have_one_chunk_per_job() {
+        for policy in [SchedPolicy::Fifo, SchedPolicy::Sjf, SchedPolicy::PrefixAffinity] {
+            let r = run_sched(policy, 2.0);
+            assert_eq!(r.metrics.prefill_chunks, r.metrics.prefill_jobs, "{policy:?}");
+            // The SimResult convenience copy mirrors the metrics counter.
+            assert_eq!(r.prefill_chunks, r.metrics.prefill_chunks, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn chunked_splits_long_prefills() {
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.sched = SchedPolicy::Chunked;
+        cfg.chunk_tokens = 128; // well below the ~1.2k-token first prefills
+        let r = simulate(cfg, small_trace(2.0, 60.0));
+        assert!(
+            r.metrics.prefill_chunks > r.metrics.prefill_jobs,
+            "chunks {} should exceed jobs {}",
+            r.metrics.prefill_chunks,
+            r.metrics.prefill_jobs
+        );
+        // Chunking must not change what gets computed, only when.
+        let fifo = run_sched(SchedPolicy::Fifo, 2.0);
+        assert_eq!(r.sessions_completed, fifo.sessions_completed);
+    }
+
+    #[test]
+    fn policies_are_deterministic() {
+        for policy in SchedPolicy::all() {
+            let a = run_sched(policy, 4.0);
+            let b = run_sched(policy, 4.0);
+            assert_eq!(a.metrics, b.metrics, "{policy:?} not deterministic");
+        }
     }
 }

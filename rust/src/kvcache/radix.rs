@@ -23,20 +23,50 @@ struct Node {
     parent: Option<NodeId>,
     /// LRU stamp (monotone counter maintained by the tree).
     last_access: u64,
-    /// Number of active pins on this node (in-flight requests using it).
-    locks: u32,
+    /// Active pins on this node, one entry per in-flight handle, holding
+    /// how many tokens *into this edge* that handle matched (== `len()` for
+    /// a full-edge pin, less for the final partial pin of a match; always 0
+    /// on the root).  Depths — rather than a bare count — let an edge split
+    /// partition its pins exactly between head and tail: entries ≤ the
+    /// split point stay on the head, entries beyond it keep the head fully
+    /// pinned and carry the remainder to the tail.
+    pins: Vec<usize>,
 }
 
 impl Node {
     fn len(&self) -> usize {
         self.edge.len()
     }
+
+    fn pinned(&self) -> bool {
+        !self.pins.is_empty()
+    }
+
+    /// Drop one pin entry of exactly `depth` tokens (entries of equal depth
+    /// are interchangeable across handles).
+    fn unpin(&mut self, depth: usize) {
+        let i = self
+            .pins
+            .iter()
+            .position(|&d| d == depth)
+            .expect("unlock of unpinned node");
+        self.pins.swap_remove(i);
+    }
 }
 
-/// A matched path through the tree; holding it pins the extent.
+/// A matched prefix; holding it pins the extent.
+///
+/// Unlock re-walks the tree by *tokens* rather than replaying recorded node
+/// ids: chunked prefill holds a handle across other jobs' inserts, and an
+/// insert may split a pinned edge.  The split partitions pin depths between
+/// the two halves and the token walk visits exactly the nodes carrying this
+/// handle's entries, so pins release exactly.  When no splits happened
+/// while the handle was held — always true for whole-job scheduling — the
+/// walk visits precisely the originally pinned nodes.
 #[derive(Debug, Clone)]
 pub struct MatchHandle {
-    nodes: Vec<NodeId>,
+    /// The matched token prefix (owned copy, `matched_tokens` long).
+    key_prefix: Vec<u64>,
     pub matched_tokens: usize,
 }
 
@@ -78,7 +108,7 @@ impl RadixCache {
             children: HashMap::new(),
             parent: None,
             last_access: 0,
-            locks: 0,
+            pins: Vec::new(),
         };
         RadixCache {
             nodes: vec![root],
@@ -114,15 +144,15 @@ impl RadixCache {
         }
     }
 
-    /// Longest cached prefix of `tokens`.  Touches (LRU) and pins the path;
-    /// callers MUST `unlock` the handle when the request completes.
-    pub fn match_prefix(&mut self, tokens: &[u64]) -> MatchHandle {
-        let now = self.tick();
+    /// The single longest-prefix descent all lookups share: the visited
+    /// children as `(node, tokens matched within its edge)` plus the total
+    /// matched count.  Read-only — `match_prefix`/`peek_prefix`/`unlock`
+    /// apply their own side effects (LRU touch, pinning, unpinning) over
+    /// the returned path, so the three walks cannot drift apart.
+    fn descend(&self, tokens: &[u64]) -> (Vec<(NodeId, usize)>, usize) {
         let mut cur = self.root;
         let mut matched = 0usize;
-        let mut path = vec![self.root];
-        self.nodes[self.root].last_access = now;
-
+        let mut path: Vec<(NodeId, usize)> = Vec::new();
         loop {
             if matched == tokens.len() {
                 break;
@@ -132,34 +162,52 @@ impl RadixCache {
             };
             let elen = self.nodes[child].len();
             let common = common_len(&self.nodes[child].edge, &tokens[matched..]);
-            self.nodes[child].last_access = now;
-            if common == elen {
-                matched += elen;
-                path.push(child);
-                cur = child;
-            } else {
-                // Partial edge match: count it, but pin only up to `cur`;
-                // splitting happens on insert.
-                matched += common;
-                path.push(child);
-                break;
+            matched += common;
+            path.push((child, common));
+            if common < elen {
+                break; // partial edge: splitting happens on insert
             }
+            cur = child;
         }
+        (path, matched)
+    }
 
-        for &n in &path {
-            self.nodes[n].locks += 1;
+    /// Longest cached prefix of `tokens`.  Touches (LRU) and pins the path;
+    /// callers MUST `unlock` the handle when the request completes.
+    pub fn match_prefix(&mut self, tokens: &[u64]) -> MatchHandle {
+        let now = self.tick();
+        let (path, matched) = self.descend(tokens);
+        self.nodes[self.root].last_access = now;
+        self.nodes[self.root].pins.push(0);
+        for &(n, depth) in &path {
+            self.nodes[n].last_access = now;
+            self.nodes[n].pins.push(depth);
         }
         self.stats.lookups += 1;
         self.stats.hit_tokens += matched as u64;
         self.stats.miss_tokens += (tokens.len() - matched) as u64;
-        MatchHandle { nodes: path, matched_tokens: matched }
+        MatchHandle { key_prefix: tokens[..matched].to_vec(), matched_tokens: matched }
     }
 
-    /// Release the pins of a match handle.
+    /// Longest cached prefix of `tokens`, **read-only**: no LRU touch, no
+    /// pinning, no statistics.  Scheduling policies use this to *rank*
+    /// queued jobs by effective prefill length without perturbing eviction
+    /// order or hit/miss accounting (the chosen job still goes through
+    /// [`RadixCache::match_prefix`] for its real, pinning lookup).
+    pub fn peek_prefix(&self, tokens: &[u64]) -> usize {
+        self.descend(tokens).1
+    }
+
+    /// Release the pins of a match handle (token walk; see [`MatchHandle`]).
     pub fn unlock(&mut self, handle: &MatchHandle) {
-        for &n in &handle.nodes {
-            assert!(self.nodes[n].locks > 0, "unlock of unpinned node");
-            self.nodes[n].locks -= 1;
+        let (path, matched) = self.descend(&handle.key_prefix);
+        // The pinned path cannot vanish or diverge while the handle is
+        // held — splits preserve token content and pinned nodes are
+        // unevictable.
+        assert_eq!(matched, handle.matched_tokens, "unlock: pinned path diverged");
+        self.nodes[self.root].unpin(0);
+        for &(n, depth) in &path {
+            self.nodes[n].unpin(depth);
         }
     }
 
@@ -188,14 +236,25 @@ impl RadixCache {
                 // Split the edge at `common`.
                 let tail: Vec<u64> = self.nodes[child].edge.split_off(common);
                 let grandchildren = std::mem::take(&mut self.nodes[child].children);
-                let locks = self.nodes[child].locks;
+                // Partition pin depths at the split point: entries ≤ common
+                // pinned only the head and stay as-is; deeper entries pin
+                // the head fully and carry their remainder to the tail, so
+                // every handle's later token-walk unlock finds exactly its
+                // own entries on both halves.
+                let mut tail_pins = Vec::new();
+                for d in self.nodes[child].pins.iter_mut() {
+                    if *d > common {
+                        tail_pins.push(*d - common);
+                        *d = common;
+                    }
+                }
                 let tail_first = tail[0];
                 let tail_node = self.new_node(Node {
                     edge: tail,
                     children: grandchildren,
                     parent: Some(child),
                     last_access: now,
-                    locks,
+                    pins: tail_pins,
                 });
                 // fix grandchildren parents
                 let gc: Vec<NodeId> = self.nodes[tail_node].children.values().copied().collect();
@@ -218,9 +277,10 @@ impl RadixCache {
         // Pin the attachment point: if `cur` is itself an unpinned leaf, the
         // eviction pass below could otherwise free it and we would attach
         // the new node to a dead slot (caught by the property tests).
-        self.nodes[cur].locks += 1;
+        let guard_depth = self.nodes[cur].len();
+        self.nodes[cur].pins.push(guard_depth);
         let freed_enough = self.ensure_capacity(need);
-        self.nodes[cur].locks -= 1;
+        self.nodes[cur].unpin(guard_depth);
         let take = if freed_enough { need } else { self.capacity_tokens.saturating_sub(self.resident_tokens).min(need) };
         if take == 0 {
             return 0;
@@ -230,7 +290,7 @@ impl RadixCache {
             children: HashMap::new(),
             parent: Some(cur),
             last_access: now,
-            locks: 0,
+            pins: Vec::new(),
         });
         self.nodes[cur].children.insert(remainder[0], leaf);
         self.resident_tokens += take;
@@ -256,7 +316,7 @@ impl RadixCache {
             if id == self.root || n.edge.is_empty() {
                 continue; // root or freed slot
             }
-            if !n.children.is_empty() || n.locks > 0 {
+            if !n.children.is_empty() || n.pinned() {
                 continue;
             }
             if best.map(|(t, _)| n.last_access < t).unwrap_or(true) {
@@ -267,7 +327,7 @@ impl RadixCache {
     }
 
     fn remove_leaf(&mut self, id: NodeId) {
-        debug_assert!(self.nodes[id].children.is_empty() && self.nodes[id].locks == 0);
+        debug_assert!(self.nodes[id].children.is_empty() && !self.nodes[id].pinned());
         let first = self.nodes[id].edge[0];
         let parent = self.nodes[id].parent.expect("leaf has parent");
         self.nodes[parent].children.remove(&first);
@@ -404,6 +464,65 @@ mod tests {
         assert_eq!(c.stats.hit_tokens, 2);
         assert_eq!(c.stats.miss_tokens, 2);
         assert!((c.stats.hit_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unlock_releases_pins_across_edge_splits() {
+        // Chunked prefill holds a handle while *other* jobs insert; an
+        // insert that splits a pinned edge copies the lock count to the new
+        // tail node.  Unlock must release that copy too (token walk), or
+        // the tail stays phantom-pinned and unevictable forever.
+        let mut c = RadixCache::new(1000);
+        c.insert(&[1, 2, 3, 4, 5, 6]); // job A's context, one merged edge
+        let h = c.match_prefix(&[1, 2, 3, 4, 5, 6]); // A pins across chunks
+        c.insert(&[1, 2, 9, 9]); // job B completes: splits the edge at 2
+        let h2 = c.match_prefix(&[1, 2, 9, 9]);
+        assert_eq!(h2.matched_tokens, 4);
+        c.unlock(&h2);
+        c.unlock(&h);
+        // Nothing is pinned any more: the whole tree must be evictable.
+        c.clear_unpinned();
+        assert_eq!(c.resident_tokens(), 0, "phantom pin survived unlock");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_edge_pin_does_not_leak_onto_split_tail() {
+        // The common chunked interleaving: B partially matches only the
+        // shared prefix inside A's merged edge and holds the handle; C's
+        // insert then splits the edge exactly at B's matched depth.  B's
+        // pin must stay on the head only — the tail (A's private context)
+        // must become evictable once A itself is unpinned.
+        let mut c = RadixCache::new(1000);
+        c.insert(&[1, 2, 3, 4, 5, 6]); // A's context: [shared(2) + private(4)]
+        let hb = c.match_prefix(&[1, 2, 8, 8]); // B matches the shared 2 only
+        assert_eq!(hb.matched_tokens, 2);
+        c.insert(&[1, 2, 7, 7]); // C splits the merged edge at depth 2
+        // B still pinned: the shared head must be unevictable...
+        c.clear_unpinned();
+        assert_eq!(c.peek_prefix(&[1, 2]), 2, "pinned head evicted");
+        // ...but A's private tail was never covered by B's pin.
+        assert_eq!(c.peek_prefix(&[1, 2, 3, 4, 5, 6]), 2, "unpinned tail survived");
+        c.unlock(&hb);
+        c.clear_unpinned();
+        assert_eq!(c.resident_tokens(), 0, "phantom pin survived unlock");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_prefix_is_read_only_and_agrees_with_match() {
+        let mut c = RadixCache::new(100);
+        c.insert(&[1, 2, 3, 4, 5, 6]);
+        c.insert(&[1, 2, 9, 9]);
+        for q in [&[1u64, 2, 3][..], &[1, 2, 9, 9, 7], &[5, 5], &[1, 2, 3, 4, 5, 6]] {
+            let lookups_before = c.stats.lookups;
+            let peeked = c.peek_prefix(q);
+            assert_eq!(c.stats.lookups, lookups_before, "peek must not count");
+            let h = c.match_prefix(q);
+            assert_eq!(peeked, h.matched_tokens, "q={q:?}");
+            c.unlock(&h);
+        }
+        c.check_invariants().unwrap();
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   serve          real-execution serving demo over PJRT (tiny backbone)
-//!   bench-serving  regenerate Fig 3/4/5/6 rows (cluster simulator)
+//!   bench-serving  regenerate Fig 3/4/5/6 + scheduler-ablation rows
+//!   sim            one simulator run with every policy knob on the CLI
 //!   ablation       routing-policy ablation (DESIGN.md)
 //!   accuracy       regenerate Fig 2 / Table 1 / Table 2 (training driver)
 //!   train          one fine-tuning run (full or cache-conditioned)
@@ -10,13 +11,18 @@
 //!
 //! Examples:
 //!   prefillshare bench-serving --experiment fig4 --out reports/fig4.json
+//!   prefillshare bench-serving --experiment sched --out reports/sched.json
+//!   prefillshare sim --sched chunked --chunk-tokens 256 --rate 6
 //!   prefillshare accuracy --experiment table2 --steps 300
 //!   prefillshare serve --sessions 4 --system prefillshare
 
 use anyhow::{bail, Result};
 
+use prefillshare::engine::config::{ClusterConfig, RoutingPolicy, SystemKind};
 use prefillshare::engine::experiments as sx;
-use prefillshare::engine::report::{format_row, header, save_rows};
+use prefillshare::engine::report::{format_row, header, save_rows, Row};
+use prefillshare::engine::sched::SchedPolicy;
+use prefillshare::engine::sim::simulate;
 use prefillshare::util::cli::Args;
 use prefillshare::workload::{generate_trace, workload_by_name};
 
@@ -26,6 +32,7 @@ fn main() -> Result<()> {
     match cmd {
         "serve" => cmd_serve(&args),
         "bench-serving" => cmd_bench_serving(&args),
+        "sim" => cmd_sim(&args),
         "ablation" => cmd_ablation(&args),
         "accuracy" => cmd_accuracy(&args),
         "train" => cmd_train(&args),
@@ -44,8 +51,11 @@ fn main() -> Result<()> {
 fn print_help() {
     println!(
         "prefillshare {} — PrefillShare reproduction (see README.md)\n\n\
-         USAGE: prefillshare <serve|bench-serving|ablation|accuracy|train|workload> [--options]\n\n\
-         bench-serving --experiment fig3|fig4|fig5|fig6 [--seed N] [--out file.json]\n\
+         USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload> [--options]\n\n\
+         bench-serving --experiment fig3|fig4|fig5|fig6|sched [--seed N] [--out file.json]\n\
+         sim           [--system baseline|prefillshare] [--sched fifo|sjf|prefix-affinity|chunked]\n\
+                       [--chunk-tokens N] [--routing prefix|rr|random] [--workload react|reflexion]\n\
+                       [--rate R] [--duration S] [--max-sessions N] [--seed N] [--out file.json]\n\
          accuracy      --experiment fig2|table1|table2 [--steps N] [--artifacts DIR]\n\
          train         --model tiny|small|medium --method full|cc --task arith|transform|toolcall\n\
          serve         [--system baseline|prefillshare] [--sessions N] [--artifacts DIR]\n\
@@ -62,6 +72,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
         "fig4" => sx::fig4(seed),
         "fig5" => sx::fig5(seed),
         "fig6" => sx::fig6(seed),
+        "sched" => sx::sched_ablation(seed),
         other => bail!("unknown serving experiment `{other}`"),
     };
     let x_name = rows.first().map(|r| r.x_name.clone()).unwrap_or_default();
@@ -73,6 +84,83 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         save_rows(out, &rows)?;
         println!("saved {} rows to {out}", rows.len());
+    }
+    Ok(())
+}
+
+/// One simulator run with every policy knob exposed on the CLI — the quick
+/// way to poke at a scheduler/routing/capacity configuration without
+/// editing an experiment driver.
+fn cmd_sim(args: &Args) -> Result<()> {
+    let system = args.get_choice(
+        "system",
+        SystemKind::PrefillShare,
+        |s| match s {
+            "baseline" => Some(SystemKind::Baseline),
+            "prefillshare" | "ps" => Some(SystemKind::PrefillShare),
+            _ => None,
+        },
+        "baseline,prefillshare",
+    );
+    let sched = args.get_choice(
+        "sched",
+        SchedPolicy::Fifo,
+        SchedPolicy::by_name,
+        "fifo,sjf,prefix-affinity,chunked",
+    );
+    let routing = args.get_choice(
+        "routing",
+        RoutingPolicy::PrefixAware,
+        RoutingPolicy::by_name,
+        "prefix,rr,random",
+    );
+    let wl_name = args.get_or("workload", "react");
+    let wl = workload_by_name(wl_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload `{wl_name}`"))?;
+    let rate = args.get_f64("rate", 4.0);
+    let duration = args.get_f64("duration", 120.0);
+    let seed = args.get_u64("seed", 0);
+
+    let mut cfg = ClusterConfig::paper_default(system);
+    cfg.sched = sched;
+    cfg.routing = routing;
+    cfg.chunk_tokens = args.get_usize("chunk-tokens", cfg.chunk_tokens);
+    cfg.max_concurrent_sessions = args.get_usize("max-sessions", cfg.max_concurrent_sessions);
+    cfg.seed = seed;
+
+    let trace = generate_trace(&wl, rate, duration, seed);
+    let n_sessions = trace.sessions.len();
+    let result = simulate(cfg, trace);
+    println!(
+        "== sim: {} / sched={} / routing={routing:?} / {wl_name} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
+        system.label(),
+        sched.label(),
+    );
+    println!("{}", header("rate"));
+    // Short system tag ("ps"/"base") so the longest policy name still fits
+    // the report's 18-char system column.
+    let sys_tag = match system {
+        SystemKind::Baseline => "base",
+        SystemKind::PrefillShare => "ps",
+    };
+    let row = Row {
+        system: format!("{sys_tag}/{}", sched.label()),
+        workload: wl_name.to_string(),
+        x_name: "rate".into(),
+        x: rate,
+        result,
+    };
+    println!("{}", format_row(&row));
+    println!(
+        "prefill: {} jobs in {} chunks, queue delay mean {:.3}s p95 {:.3}s",
+        row.result.metrics.prefill_jobs,
+        row.result.prefill_chunks,
+        row.result.prefill_queue_delay_mean,
+        row.result.prefill_queue_delay_p95,
+    );
+    if let Some(out) = args.get("out") {
+        save_rows(out, &[row])?;
+        println!("saved 1 row to {out}");
     }
     Ok(())
 }

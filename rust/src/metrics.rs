@@ -3,7 +3,11 @@
 
 /// Sample-accumulating histogram with exact quantiles (runs are bounded, so
 /// we keep the raw samples; quantile sorts lazily).
-#[derive(Debug, Default, Clone)]
+///
+/// `PartialEq` compares the raw samples (sort state included) — the
+/// determinism regression tests assert whole-[`ServingMetrics`] equality
+/// across repeated runs.
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct Histogram {
     samples: Vec<f64>,
     sorted: bool,
@@ -82,7 +86,7 @@ impl Histogram {
 }
 
 /// Tokens-over-time throughput meter.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct ThroughputMeter {
     pub tokens: u64,
     pub first_event: Option<f64>,
@@ -114,7 +118,7 @@ impl ThroughputMeter {
 }
 
 /// The full per-run metric bundle the serving report prints.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct ServingMetrics {
     /// End-to-end session latency (arrival -> last agent-call completion).
     pub session_latency: Histogram,
@@ -137,6 +141,14 @@ pub struct ServingMetrics {
     /// KV handoffs performed (PrefillShare pipeline step 3).
     pub handoffs: u64,
     pub handoff_tokens: u64,
+    /// Prefill queueing delay: job issued -> first unit dispatched (the
+    /// head-of-line component the scheduler policies trade against).
+    pub prefill_queue_delay: Histogram,
+    /// Prefill jobs dispatched (one per agent call reaching a worker).
+    pub prefill_jobs: u64,
+    /// Prefill work units dispatched.  Equals `prefill_jobs` for whole-job
+    /// policies; exceeds it under chunked prefill (chunks per job).
+    pub prefill_chunks: u64,
 }
 
 impl ServingMetrics {
@@ -188,6 +200,19 @@ mod tests {
         t.record(20.0, 300);
         assert!((t.tokens_per_sec(None) - 40.0).abs() < 1e-9);
         assert!((t.tokens_per_sec(Some(100.0)) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_equality_covers_sched_counters() {
+        let mut a = ServingMetrics::default();
+        let mut b = ServingMetrics::default();
+        a.prefill_queue_delay.record(0.5);
+        b.prefill_queue_delay.record(0.5);
+        a.prefill_chunks = 3;
+        b.prefill_chunks = 3;
+        assert_eq!(a, b);
+        b.prefill_jobs = 1;
+        assert_ne!(a, b);
     }
 
     #[test]

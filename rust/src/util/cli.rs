@@ -69,6 +69,23 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Parse `--key` through a `by_name`-style lookup (e.g.
+    /// `RoutingPolicy::by_name`, `SchedPolicy::by_name`): returns `default`
+    /// when absent, panics with the valid choices on an unknown value.
+    pub fn get_choice<T>(
+        &self,
+        key: &str,
+        default: T,
+        parse: impl Fn(&str) -> Option<T>,
+        choices: &str,
+    ) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => parse(v)
+                .unwrap_or_else(|| panic!("--{key} expects one of {{{choices}}}, got `{v}`")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +119,24 @@ mod tests {
         let a = parse("cmd");
         assert_eq!(a.get_usize("n", 7), 7);
         assert_eq!(a.get_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn choice_parses_via_by_name() {
+        let lookup = |s: &str| match s {
+            "a" => Some(1),
+            "b" => Some(2),
+            _ => None,
+        };
+        let args = parse("cmd --pick b");
+        assert_eq!(args.get_choice("pick", 1, lookup, "a,b"), 2);
+        assert_eq!(args.get_choice("other", 1, lookup, "a,b"), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "--pick expects one of")]
+    fn choice_rejects_unknown() {
+        let lookup = |s: &str| if s == "a" { Some(1) } else { None };
+        parse("cmd --pick z").get_choice("pick", 1, lookup, "a");
     }
 }

@@ -110,7 +110,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity tokens; emit null (what an
+                    // empty-histogram metric means) instead of unparseable
+                    // output.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -435,6 +440,16 @@ mod tests {
         assert_eq!(v, v2);
         let v3 = Json::parse(&v.to_string_pretty()).unwrap();
         assert_eq!(v, v3);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let v = obj(vec![("x", num(f64::NAN)), ("y", num(1.5))]);
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(back.req("x"), &Json::Null);
+        assert_eq!(back.req("y").as_f64(), Some(1.5));
     }
 
     #[test]

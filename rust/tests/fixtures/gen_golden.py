@@ -1,0 +1,827 @@
+#!/usr/bin/env python3
+"""Reference generator for `golden_fifo.json`.
+
+A line-by-line Python port of the rust cluster simulator's FIFO path
+(`engine/sim.rs` + `engine/sched/fifo.rs`), the workload generator
+(`workload.rs`), the radix prefix cache (`kvcache/radix.rs`), the cost model
+(`costmodel.rs`) and the PRNG (`util/rng.rs`).  Both implementations are
+deterministic integer-microsecond discrete-event simulations over IEEE-754
+doubles, so an exact port produces identical counters and (ulp-identical)
+float metrics.  The golden regression test (`tests/sched_determinism.rs`)
+pins the rust simulator to this file's output.
+
+Regenerate after an *intentional* simulator behaviour change:
+
+    python3 rust/tests/fixtures/gen_golden.py
+
+(or run the rust side with `PREFILLSHARE_BLESS=1 cargo test golden`).
+"""
+
+import heapq
+import json
+import math
+import os
+from collections import deque
+
+MASK = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# util/rng.rs — xoshiro256** seeded via SplitMix64
+# ---------------------------------------------------------------------------
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def fork(self, stream):
+        return Rng(self.next_u64() ^ ((stream * 0x9E3779B97F4A7C15) & MASK))
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def exp(self, rate):
+        u = 1.0 - self.f64()
+        return -math.log(u) / rate
+
+    def normal(self):
+        u1 = 1.0 - self.f64()
+        u2 = self.f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def lognormal_mean_cv(self, mean, cv):
+        sigma2 = math.log(1.0 + cv * cv)
+        mu = math.log(mean) - sigma2 / 2.0
+        return math.exp(mu + math.sqrt(sigma2) * self.normal())
+
+
+def rust_round(x):
+    """f64::round — half away from zero (positive inputs only here)."""
+    f = math.floor(x)
+    return f + 1 if x - f >= 0.5 else f
+
+
+def clamp(v, lo, hi):
+    return max(lo, min(hi, v))
+
+
+# ---------------------------------------------------------------------------
+# simtime.rs
+# ---------------------------------------------------------------------------
+
+MICROS = 1_000_000
+
+
+def secs(t):
+    return int(rust_round(t * float(MICROS)))
+
+
+def to_secs(t):
+    return t / float(MICROS)
+
+
+# ---------------------------------------------------------------------------
+# workload.rs — the `react` workload
+# ---------------------------------------------------------------------------
+
+REACT = {
+    "name": "react",
+    "sys_prompt_tokens": 160,
+    "init_prompt_mean": 1024.0,
+    "init_prompt_cv": 0.25,
+    # (model, mean_out_tokens, cv)
+    "agents": [(0, 96.0, 0.3), (1, 48.0, 0.3), (2, 128.0, 0.3), (3, 64.0, 0.3)],
+    "turns": 3,
+}
+
+
+def generate_trace(spec, rate_per_s, duration_s, seed):
+    rng = Rng(seed ^ 0x5E5510AD)
+    sessions = []
+    t = 0.0
+    sid = 0
+    while True:
+        t += rng.exp(rate_per_s)
+        if t >= duration_s:
+            break
+        srng = rng.fork(sid)
+        init = clamp(int(rust_round(srng.lognormal_mean_cv(spec["init_prompt_mean"], spec["init_prompt_cv"]))), 16, 4096)
+        calls = []
+        for _turn in range(spec["turns"]):
+            for (model, mean_out, cv) in spec["agents"]:
+                out = clamp(int(rust_round(srng.lognormal_mean_cv(mean_out, cv))), 8, 1024)
+                calls.append((model, out))
+        sessions.append({"id": sid, "arrival": secs(t), "init": init, "calls": calls})
+        sid += 1
+    return sessions
+
+
+def context_key(sid, sys_len, private_len):
+    key = [1 + i for i in range(sys_len)]
+    key += [(1 << 40) | (sid << 20) | (i & 0xFFFFF) for i in range(private_len)]
+    return key
+
+
+# ---------------------------------------------------------------------------
+# costmodel.rs — A100-80G × LLaMA3.1-8B
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 312e12
+HBM_BPS = 2.039e12
+MEM_BYTES = 80e9
+PREFILL_MFU = 0.55
+DECODE_MEMBW_EFF = 0.75
+
+N_PARAMS = 8.03e9
+N_LAYERS = 32
+D_MODEL = 4096
+KV_BYTES_PER_TOKEN = float(2 * 32 * 8 * 128 * 2)  # 131072
+
+HANDOFF_BPS = 64e9
+HANDOFF_LAT = 0.8e-3
+STAGING_BPS = 12e9
+STAGING_LAT = 0.3e-3
+DECODE_STEP_OVERHEAD = 200e-6
+PREFILL_OVERHEAD = 1.5e-3
+
+
+def weight_bytes():
+    return N_PARAMS * 2.0
+
+
+def prefill_secs(new_tokens, past_tokens):
+    if new_tokens == 0:
+        return 0.0
+    n = float(new_tokens)
+    past = float(past_tokens)
+    linear = 2.0 * N_PARAMS * n
+    visible_sum = n * past + n * (n - 1.0) / 2.0 + n
+    attn = 4.0 * float(D_MODEL * N_LAYERS) * visible_sum
+    return (linear + attn) / (PEAK_FLOPS * PREFILL_MFU) + PREFILL_OVERHEAD
+
+
+def decode_step_secs(batch, kv_tokens_total):
+    if batch == 0:
+        return 0.0
+    byts = weight_bytes() + float(kv_tokens_total) * KV_BYTES_PER_TOKEN
+    return byts / (HBM_BPS * DECODE_MEMBW_EFF) + DECODE_STEP_OVERHEAD
+
+
+def handoff_secs(tokens):
+    byts = float(tokens) * KV_BYTES_PER_TOKEN
+    return HANDOFF_LAT + byts / HANDOFF_BPS
+
+
+def staging_secs(tokens):
+    byts = float(tokens) * KV_BYTES_PER_TOKEN
+    return STAGING_LAT + byts / STAGING_BPS
+
+
+def cluster_config(system):
+    usable = max(MEM_BYTES * 0.9 - weight_bytes(), 1e9)
+    return {
+        "system": system,  # "baseline" | "prefillshare"
+        "n_prefill_workers": 4,
+        "n_models": 4,
+        "max_concurrent_sessions": 64,
+        "max_decode_batch": 48,
+        "prefill_kv_tokens": int(usable * 0.30 / KV_BYTES_PER_TOKEN),
+        "decode_kv_tokens": int(usable * 0.20 / KV_BYTES_PER_TOKEN),
+        "sys_prompt_tokens": REACT["sys_prompt_tokens"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# kvcache/radix.rs
+# ---------------------------------------------------------------------------
+
+
+class Node:
+    __slots__ = ("edge", "children", "parent", "last_access", "locks")
+
+    def __init__(self, edge, children, parent, last_access, locks):
+        self.edge = edge
+        self.children = children
+        self.parent = parent
+        self.last_access = last_access
+        self.locks = locks
+
+
+def common_len(a, b):
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class RadixCache:
+    def __init__(self, capacity_tokens):
+        self.nodes = [Node([], {}, None, 0, 0)]
+        self.free_nodes = []
+        self.root = 0
+        self.clock = 0
+        self.resident = 0
+        self.capacity = capacity_tokens
+        self.evicted_tokens = 0
+
+    def _tick(self):
+        self.clock += 1
+        return self.clock
+
+    def _new_node(self, node):
+        if self.free_nodes:
+            nid = self.free_nodes.pop()
+            self.nodes[nid] = node
+            return nid
+        self.nodes.append(node)
+        return len(self.nodes) - 1
+
+    def match_prefix(self, tokens):
+        now = self._tick()
+        cur = self.root
+        matched = 0
+        path = [self.root]
+        self.nodes[self.root].last_access = now
+        while True:
+            if matched == len(tokens):
+                break
+            child = self.nodes[cur].children.get(tokens[matched])
+            if child is None:
+                break
+            elen = len(self.nodes[child].edge)
+            common = common_len(self.nodes[child].edge, tokens[matched:])
+            self.nodes[child].last_access = now
+            if common == elen:
+                matched += elen
+                path.append(child)
+                cur = child
+            else:
+                matched += common
+                path.append(child)
+                break
+        for n in path:
+            self.nodes[n].locks += 1
+        return path, matched
+
+    def unlock(self, path):
+        # Path replay.  The rust unlock is a token walk (needed only when a
+        # pinned edge is split while a chunked job holds its handle); under
+        # FIFO a worker has one in-flight job and unlocks before inserting,
+        # so no split can happen mid-hold and the two are identical.
+        for n in path:
+            assert self.nodes[n].locks > 0
+            self.nodes[n].locks -= 1
+
+    def insert(self, tokens):
+        now = self._tick()
+        cur = self.root
+        pos = 0
+        while True:
+            if pos == len(tokens):
+                return 0
+            child = self.nodes[cur].children.get(tokens[pos])
+            if child is None:
+                break
+            elen = len(self.nodes[child].edge)
+            common = common_len(self.nodes[child].edge, tokens[pos:])
+            self.nodes[child].last_access = now
+            if common == elen:
+                pos += elen
+                cur = child
+            else:
+                tail = self.nodes[child].edge[common:]
+                self.nodes[child].edge = self.nodes[child].edge[:common]
+                grandchildren = self.nodes[child].children
+                self.nodes[child].children = {}
+                locks = self.nodes[child].locks
+                tail_first = tail[0]
+                tail_node = self._new_node(Node(tail, grandchildren, child, now, locks))
+                for g in self.nodes[tail_node].children.values():
+                    self.nodes[g].parent = tail_node
+                self.nodes[child].children[tail_first] = tail_node
+                pos += common
+                cur = child
+                break
+        remainder = tokens[pos:]
+        if not remainder:
+            return 0
+        need = len(remainder)
+        self.nodes[cur].locks += 1
+        freed_enough = self._ensure_capacity(need)
+        self.nodes[cur].locks -= 1
+        take = need if freed_enough else min(max(self.capacity - self.resident, 0), need)
+        if take == 0:
+            return 0
+        leaf = self._new_node(Node(remainder[:take], {}, cur, now, 0))
+        self.nodes[cur].children[remainder[0]] = leaf
+        self.resident += take
+        return take
+
+    def _ensure_capacity(self, need):
+        while self.resident + need > self.capacity:
+            victim = self._lru_evictable_leaf()
+            if victim is None:
+                return False
+            self._remove_leaf(victim)
+        return True
+
+    def _lru_evictable_leaf(self):
+        best = None
+        for nid, n in enumerate(self.nodes):
+            if nid == self.root or not n.edge:
+                continue
+            if n.children or n.locks > 0:
+                continue
+            if best is None or n.last_access < best[0]:
+                best = (n.last_access, nid)
+        return None if best is None else best[1]
+
+    def _remove_leaf(self, nid):
+        n = self.nodes[nid]
+        first = n.edge[0]
+        del self.nodes[n.parent].children[first]
+        freed = len(n.edge)
+        self.resident -= freed
+        self.evicted_tokens += freed
+        n.edge = []
+        n.parent = None
+        self.free_nodes.append(nid)
+
+
+# ---------------------------------------------------------------------------
+# metrics.rs
+# ---------------------------------------------------------------------------
+
+
+class Histogram:
+    def __init__(self):
+        self.samples = []
+        self.sorted = False
+
+    def record(self, v):
+        self.samples.append(v)
+        self.sorted = False
+
+    def _ensure_sorted(self):
+        if not self.sorted:
+            self.samples.sort()
+            self.sorted = True
+
+    def quantile(self, q):
+        if not self.samples:
+            return float("nan")
+        self._ensure_sorted()
+        n = len(self.samples)
+        pos = clamp(q, 0.0, 1.0) * float(n - 1)
+        lo = int(math.floor(pos))
+        hi = int(math.ceil(pos))
+        if lo == hi:
+            return self.samples[lo]
+        w = pos - float(lo)
+        return self.samples[lo] * (1.0 - w) + self.samples[hi] * w
+
+    def mean(self):
+        # NOTE: sums in the *current* sample order, matching rust (which may
+        # or may not have sorted yet depending on prior quantile calls).
+        if not self.samples:
+            return float("nan")
+        acc = 0.0
+        for v in self.samples:
+            acc += v
+        return acc / float(len(self.samples))
+
+
+# ---------------------------------------------------------------------------
+# engine/sim.rs — FIFO path
+# ---------------------------------------------------------------------------
+
+
+def swap_remove(lst, i):
+    last = lst.pop()
+    if i < len(lst):
+        removed = lst[i]
+        lst[i] = last
+        return removed
+    return last
+
+
+class DecodeReq:
+    __slots__ = (
+        "sid", "call_idx", "ctx_len", "out_tokens", "generated", "issued_at",
+        "ttft_recorded", "was_deferred",
+    )
+
+    def __init__(self, sid, call_idx, ctx_len, out_tokens, issued_at):
+        self.sid = sid
+        self.call_idx = call_idx
+        self.ctx_len = ctx_len
+        self.out_tokens = out_tokens
+        self.generated = 0
+        self.issued_at = issued_at
+        self.ttft_recorded = False
+        self.was_deferred = False
+
+    def footprint(self):
+        return self.ctx_len + self.out_tokens
+
+
+class Simulator:
+    def __init__(self, cfg, trace):
+        self.cfg = cfg
+        self.trace = trace
+        self.heap = []
+        self.seq = 0
+        self.now = 0
+        n_prefill = cfg["n_models"] if cfg["system"] == "baseline" else cfg["n_prefill_workers"]
+        self.prefill = [
+            {
+                "queue": deque(),
+                "busy": None,
+                "radix": RadixCache(cfg["prefill_kv_tokens"]),
+                "busy_micros": 0,
+            }
+            for _ in range(n_prefill)
+        ]
+        self.decode = [
+            {
+                "active": [],
+                "pending": deque(),
+                "staging_in": 0,
+                "stepping": False,
+                "io_busy": False,
+                "resident": 0,
+                "busy_micros": 0,
+                "peak_resident": 0,
+            }
+            for _ in range(cfg["n_models"])
+        ]
+        self.sessions = [
+            {
+                "next_call": 0,
+                "ctx_len": cfg["sys_prompt_tokens"] + s["init"],
+                "arrival": s["arrival"],
+            }
+            for s in trace
+        ]
+        self.admitted = 0
+        self.admission_queue = deque()
+        # counters
+        self.m = {
+            "sessions_arrived": 0,
+            "sessions_completed": 0,
+            "requests_completed": 0,
+            "prefix_hit_tokens": 0,
+            "prefix_miss_tokens": 0,
+            "prefill_computed_tokens": 0,
+            "staging_events": 0,
+            "staged_tokens": 0,
+            "handoffs": 0,
+            "handoff_tokens": 0,
+            "prefill_jobs": 0,
+            "prefill_chunks": 0,
+            "generated_tokens": 0,
+        }
+        self.session_latency = Histogram()
+        self.ttft = Histogram()
+        self.request_latency = Histogram()
+        self.queue_delay = Histogram()
+        self.tput_first = None
+        self.tput_last = None
+        self.last_completion = 0
+        self.first_arrival = MASK  # SimTime::MAX
+
+    # -- event queue ------------------------------------------------------
+
+    def schedule(self, at, ev):
+        self.seq += 1
+        heapq.heappush(self.heap, (max(at, self.now), self.seq, ev))
+
+    def schedule_in(self, delay, ev):
+        self.schedule(self.now + delay, ev)
+
+    def run(self):
+        for sid, s in enumerate(self.trace):
+            self.schedule(s["arrival"], ("arrive", sid))
+        while self.heap:
+            t, _, ev = heapq.heappop(self.heap)
+            self.now = t
+            kind = ev[0]
+            if kind == "arrive":
+                self.on_arrival(ev[1])
+            elif kind == "prefill_done":
+                self.on_prefill_done(ev[1])
+            elif kind == "handoff_done":
+                self.on_handoff_done(ev[1], ev[2])
+            elif kind == "stage_in":
+                self.on_stage_in_done(ev[1], ev[2])
+            elif kind == "stage_out":
+                self.on_stage_out_done(ev[1])
+            elif kind == "step_done":
+                self.on_decode_step_done(ev[1])
+        return self.finish()
+
+    # -- sessions ---------------------------------------------------------
+
+    def on_arrival(self, sid):
+        self.m["sessions_arrived"] += 1
+        self.first_arrival = min(self.first_arrival, self.now)
+        if self.admitted < self.cfg["max_concurrent_sessions"]:
+            self.admit(sid)
+        else:
+            self.admission_queue.append(sid)
+
+    def admit(self, sid):
+        self.admitted += 1
+        self.issue_call(sid)
+
+    def context_key(self, sid, ctx_len):
+        sys_len = min(self.cfg["sys_prompt_tokens"], ctx_len)
+        return context_key(sid, sys_len, ctx_len - sys_len)
+
+    def issue_call(self, sid):
+        call_idx = self.sessions[sid]["next_call"]
+        model, _out = self.trace[sid]["calls"][call_idx]
+        ctx_len = self.sessions[sid]["ctx_len"]
+        job = {
+            "sid": sid,
+            "call_idx": call_idx,
+            "model": model,
+            "ctx_len": ctx_len,
+            "issued_at": self.now,
+            "key": self.context_key(sid, ctx_len),
+        }
+        if self.cfg["system"] == "baseline":
+            w = model
+        else:
+            w = sid % len(self.prefill)  # prefix-aware routing
+        self.prefill[w]["queue"].append(job)
+        self.try_start_prefill(w)
+
+    # -- prefill ----------------------------------------------------------
+
+    def try_start_prefill(self, w):
+        pw = self.prefill[w]
+        if pw["busy"] is not None or not pw["queue"]:
+            return
+        job = pw["queue"].popleft()
+        path, matched = pw["radix"].match_prefix(job["key"])
+        new_tokens = job["ctx_len"] - matched
+        self.m["prefix_hit_tokens"] += matched
+        self.m["prefix_miss_tokens"] += new_tokens
+        self.m["prefill_computed_tokens"] += new_tokens
+        self.m["prefill_jobs"] += 1
+        self.queue_delay.record(to_secs(self.now - job["issued_at"]))
+        self.m["prefill_chunks"] += 1
+        dur_us = secs(prefill_secs(new_tokens, matched))
+        pw["busy_micros"] += dur_us
+        pw["busy"] = (job, path)
+        self.schedule_in(dur_us, ("prefill_done", w))
+
+    def on_prefill_done(self, w):
+        pw = self.prefill[w]
+        job, path = pw["busy"]
+        pw["busy"] = None
+        pw["radix"].unlock(path)
+        pw["radix"].insert(job["key"])
+        model, out_tokens = self.trace[job["sid"]]["calls"][job["call_idx"]]
+        req = DecodeReq(job["sid"], job["call_idx"], job["ctx_len"], out_tokens, job["issued_at"])
+        self.m["handoffs"] += 1
+        self.m["handoff_tokens"] += job["ctx_len"]
+        self.schedule_in(secs(handoff_secs(job["ctx_len"])), ("handoff_done", req, model))
+        self.try_start_prefill(w)
+
+    # -- decode -----------------------------------------------------------
+
+    def on_handoff_done(self, req, w):
+        self.decode[w]["pending"].append(req)
+        self.try_admit_decode(w)
+        self.maybe_step(w)
+
+    def try_admit_decode(self, w):
+        while True:
+            dw = self.decode[w]
+            if len(dw["active"]) + dw["staging_in"] >= self.cfg["max_decode_batch"]:
+                return
+            if not dw["pending"]:
+                return
+            front = dw["pending"][0]
+            fp = front.footprint()
+            force = fp > self.cfg["decode_kv_tokens"] and dw["resident"] == 0
+            if dw["resident"] + fp > self.cfg["decode_kv_tokens"] and not force:
+                if not front.was_deferred and not dw["io_busy"]:
+                    front.was_deferred = True
+                    dw["io_busy"] = True
+                    self.m["staging_events"] += 1
+                    self.m["staged_tokens"] += front.ctx_len
+                    self.schedule_in(secs(staging_secs(front.ctx_len)), ("stage_out", w))
+                return
+            req = dw["pending"].popleft()
+            dw["resident"] += fp
+            dw["peak_resident"] = max(dw["peak_resident"], dw["resident"])
+            if req.was_deferred:
+                dw["staging_in"] += 1
+                dw["io_busy"] = True
+                self.m["staging_events"] += 1
+                self.m["staged_tokens"] += req.ctx_len
+                req.was_deferred = False
+                self.schedule_in(secs(staging_secs(req.ctx_len)), ("stage_in", req, w))
+                return
+            dw["active"].append(req)
+
+    def on_stage_in_done(self, req, w):
+        dw = self.decode[w]
+        dw["staging_in"] -= 1
+        dw["io_busy"] = False
+        dw["active"].append(req)
+        self.try_admit_decode(w)
+        self.maybe_step(w)
+
+    def on_stage_out_done(self, w):
+        self.decode[w]["io_busy"] = False
+        self.try_admit_decode(w)
+        self.maybe_step(w)
+
+    def maybe_step(self, w):
+        dw = self.decode[w]
+        if dw["stepping"] or dw["io_busy"] or not dw["active"]:
+            return
+        kv_total = 0
+        for r in dw["active"]:
+            kv_total += r.ctx_len + r.generated
+        dur_us = secs(decode_step_secs(len(dw["active"]), kv_total))
+        dw["busy_micros"] += dur_us
+        dw["stepping"] = True
+        self.schedule_in(dur_us, ("step_done", w))
+
+    def on_decode_step_done(self, w):
+        dw = self.decode[w]
+        dw["stepping"] = False
+        now = self.now
+        finished = []
+        i = 0
+        while i < len(dw["active"]):
+            r = dw["active"][i]
+            r.generated += 1
+            if not r.ttft_recorded:
+                r.ttft_recorded = True
+                self.ttft.record(to_secs(now - r.issued_at))
+            if r.generated >= r.out_tokens:
+                done = swap_remove(dw["active"], i)
+                dw["resident"] -= done.footprint()
+                finished.append(done)
+            else:
+                i += 1
+        n_done = len(finished)
+        for req in finished:
+            # ThroughputMeter.record
+            self.m["generated_tokens"] += req.out_tokens
+            at = to_secs(now)
+            if self.tput_first is None:
+                self.tput_first = at
+            self.tput_last = at
+            self.m["requests_completed"] += 1
+            self.request_latency.record(to_secs(now - req.issued_at))
+            self.on_call_complete(req)
+        if n_done > 0:
+            self.try_admit_decode(w)
+        self.maybe_step(w)
+
+    def on_call_complete(self, req):
+        sid = req.sid
+        s = self.sessions[sid]
+        s["ctx_len"] += req.out_tokens
+        s["next_call"] += 1
+        if s["next_call"] < len(self.trace[sid]["calls"]):
+            self.issue_call(sid)
+        else:
+            self.session_latency.record(to_secs(self.now - s["arrival"]))
+            self.m["sessions_completed"] += 1
+            self.last_completion = self.now
+            self.admitted -= 1
+            if self.admission_queue:
+                self.admit(self.admission_queue.popleft())
+
+    # -- results ----------------------------------------------------------
+
+    def finish(self):
+        evicted = 0
+        prefill_busy = 0
+        for w in self.prefill:
+            evicted += w["radix"].evicted_tokens
+            prefill_busy += w["busy_micros"]
+        decode_busy = 0
+        peak_decode_resident = 0
+        for d in self.decode:
+            decode_busy += d["busy_micros"]
+            peak_decode_resident = max(peak_decode_resident, d["peak_resident"])
+        makespan = to_secs(max(self.last_completion - min(self.first_arrival, self.last_completion), 0))
+        span = max(makespan, 1e-9)
+        throughput = float(self.m["generated_tokens"]) / span
+
+        # Field evaluation order mirrors SimResult construction in finish():
+        # session_latency p50/p95 sort before its mean; ttft mean runs on
+        # insertion order before its p95 sorts.
+        p50 = self.session_latency.quantile(0.50)
+        p95 = self.session_latency.quantile(0.95)
+        mean_lat = self.session_latency.mean()
+        ttft_mean = self.ttft.mean()
+        ttft_p95 = self.ttft.quantile(0.95)
+        qd_mean = self.queue_delay.mean()
+        qd_p95 = self.queue_delay.quantile(0.95)
+
+        counters = dict(self.m)
+        counters["evicted_tokens"] = evicted
+        counters["peak_decode_resident_tokens"] = peak_decode_resident
+        floats = {
+            "p50_session_latency": p50,
+            "p95_session_latency": p95,
+            "mean_session_latency": mean_lat,
+            "ttft_mean": ttft_mean,
+            "ttft_p95": ttft_p95,
+            "throughput_tok_s": throughput,
+            "makespan_s": makespan,
+            "prefill_util": (to_secs(prefill_busy) / (makespan * len(self.prefill))) if makespan > 0.0 else 0.0,
+            "decode_util": (to_secs(decode_busy) / (makespan * len(self.decode))) if makespan > 0.0 else 0.0,
+            "prefill_queue_delay_mean": qd_mean,
+            "prefill_queue_delay_p95": qd_p95,
+        }
+        return counters, floats
+
+
+# ---------------------------------------------------------------------------
+# fixture emission
+# ---------------------------------------------------------------------------
+
+GOLDEN_RATE = 2.0
+GOLDEN_DURATION = 60.0
+GOLDEN_TRACE_SEED = 42
+
+
+def main():
+    trace = generate_trace(REACT, GOLDEN_RATE, GOLDEN_DURATION, GOLDEN_TRACE_SEED)
+    total_calls = sum(len(s["calls"]) for s in trace)
+    scenarios = []
+    for system in ("prefillshare", "baseline"):
+        counters, floats = Simulator(cluster_config(system), trace).run()
+        assert counters["sessions_completed"] == len(trace), (system, counters)
+        assert counters["requests_completed"] == total_calls
+        assert counters["prefix_miss_tokens"] == counters["prefill_computed_tokens"]
+        scenarios.append({"name": f"{system}-fifo", "system": system, "counters": counters, "floats": floats})
+
+    fixture = {
+        "description": "Golden FIFO metrics for ClusterConfig::paper_default over "
+        "generate_trace(react, 2.0, 60.0, 42); generated by gen_golden.py "
+        "(bit-faithful port of the rust simulator). Counters compare exactly, "
+        "floats to 1e-6 relative tolerance.",
+        "trace": {
+            "workload": "react",
+            "rate": GOLDEN_RATE,
+            "duration_s": GOLDEN_DURATION,
+            "seed": GOLDEN_TRACE_SEED,
+            "sessions": len(trace),
+            "calls": total_calls,
+        },
+        "scenarios": scenarios,
+    }
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden_fifo.json")
+    with open(out, "w") as f:
+        json.dump(fixture, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out}")
+    for s in scenarios:
+        c, fl = s["counters"], s["floats"]
+        print(
+            f"  {s['name']}: {c['sessions_completed']} sessions, "
+            f"{c['prefill_computed_tokens']} prefill tokens, hit {c['prefix_hit_tokens']}, "
+            f"p95 {fl['p95_session_latency']:.3f}s, tput {fl['throughput_tok_s']:.0f} tok/s"
+        )
+
+
+if __name__ == "__main__":
+    main()

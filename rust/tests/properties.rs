@@ -9,6 +9,7 @@
 //!   * KV mixing: positionwise selection correctness on random geometries
 
 use prefillshare::engine::config::{ClusterConfig, SystemKind};
+use prefillshare::engine::sched::SchedPolicy;
 use prefillshare::engine::sim::simulate;
 use prefillshare::kvcache::block::BlockPool;
 use prefillshare::kvcache::radix::RadixCache;
@@ -98,6 +99,90 @@ fn prop_radix_capacity_never_exceeded_under_eviction() {
             );
             cache.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
         }
+    }
+}
+
+#[test]
+fn prop_radix_match_insert_roundtrip() {
+    // `insert` + `match_prefix` round-trip arbitrary token sequences: a
+    // just-inserted sequence must fully match (capacity sized to never
+    // evict), and the read-only `peek_prefix` must agree with the pinning
+    // lookup everywhere.
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x666);
+        let mut cache = RadixCache::new(1_000_000);
+        let mut stored: Vec<Vec<u64>> = Vec::new();
+        for _ in 0..rng.range(2, 25) {
+            let seq: Vec<u64> = if !stored.is_empty() && rng.bool(0.5) {
+                let base = rng.choose(&stored).clone();
+                let cut = rng.range(0, base.len() + 1);
+                let mut s = base[..cut].to_vec();
+                for _ in 0..rng.range(1, 15) {
+                    s.push(rng.range(0, 5) as u64);
+                }
+                s
+            } else {
+                (0..rng.range(1, 30)).map(|_| rng.range(0, 5) as u64).collect()
+            };
+            cache.insert(&seq);
+            stored.push(seq.clone());
+            let h = cache.match_prefix(&seq);
+            assert_eq!(h.matched_tokens, seq.len(), "case {case}: roundtrip lost tokens");
+            cache.unlock(&h);
+            for probe in &stored {
+                let h = cache.match_prefix(probe);
+                assert_eq!(
+                    cache.peek_prefix(probe),
+                    h.matched_tokens,
+                    "case {case}: peek/match disagree"
+                );
+                cache.unlock(&h);
+            }
+            cache.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_radix_eviction_never_removes_locked_nodes() {
+    // Under sustained eviction pressure, every token of a locked (in-flight)
+    // path stays resident and the capacity bound still holds.
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x777);
+        let cap = rng.range(40, 160);
+        let mut cache = RadixCache::new(cap);
+        // Pin a few sequences, as in-flight prefills would.
+        let mut pinned = Vec::new();
+        for p in 0..rng.range(1, 4) {
+            let seq: Vec<u64> = (0..rng.range(4, 12))
+                .map(|i| case * 100_000 + (p * 1000 + i) as u64)
+                .collect();
+            cache.insert(&seq);
+            let h = cache.match_prefix(&seq);
+            assert_eq!(h.matched_tokens, seq.len());
+            pinned.push((seq, h));
+        }
+        // Churn with evicting inserts the whole time.
+        for _ in 0..80 {
+            let seq: Vec<u64> = (0..rng.range(3, 25)).map(|_| rng.range(0, 30) as u64).collect();
+            cache.insert(&seq);
+            assert!(
+                cache.resident_tokens() <= cap,
+                "case {case}: resident {} > cap {cap}",
+                cache.resident_tokens()
+            );
+            for (seq, _) in &pinned {
+                assert_eq!(
+                    cache.peek_prefix(seq),
+                    seq.len(),
+                    "case {case}: locked extent partially evicted"
+                );
+            }
+        }
+        for (_, h) in &pinned {
+            cache.unlock(h);
+        }
+        cache.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
     }
 }
 
@@ -197,18 +282,28 @@ fn prop_sim_conservation_over_random_configs() {
         cfg.max_decode_batch = rng.range(4, 64);
         cfg.prefill_kv_tokens = rng.range(10_000, 400_000);
         cfg.decode_kv_tokens = rng.range(10_000, 200_000);
+        // Conservation must hold under every scheduler policy and chunking
+        // granularity, not just FIFO.
+        let policies = SchedPolicy::all();
+        cfg.sched = policies[rng.range(0, policies.len())];
+        cfg.chunk_tokens = rng.range(64, 1024);
         let rate = 0.5 + rng.f64() * 4.0;
+        let sched = cfg.sched;
         let trace = generate_trace(&react(), rate, 60.0, case);
         let n = trace.sessions.len();
         let calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
         let r = simulate(cfg, trace);
-        assert_eq!(r.sessions_completed as usize, n, "case {case} ({system:?})");
-        assert_eq!(r.metrics.requests_completed as usize, calls);
+        let tag = format!("case {case} ({system:?}, {sched:?})");
+        assert_eq!(r.sessions_completed as usize, n, "{tag}");
+        assert_eq!(r.metrics.requests_completed as usize, calls, "{tag}");
         assert!(r.prefix_hit_ratio >= 0.0 && r.prefix_hit_ratio <= 1.0);
         // hit+miss tokens must equal total prefill demand
         let demand = r.metrics.prefix_hit_tokens + r.metrics.prefix_miss_tokens;
         assert!(demand > 0);
-        assert_eq!(r.metrics.prefix_miss_tokens, r.prefill_computed_tokens);
+        assert_eq!(r.metrics.prefix_miss_tokens, r.prefill_computed_tokens, "{tag}");
+        // every job dispatched exactly once; chunks only ever add units
+        assert_eq!(r.metrics.prefill_jobs as usize, calls, "{tag}");
+        assert!(r.metrics.prefill_chunks >= r.metrics.prefill_jobs, "{tag}");
     }
 }
 

@@ -1,0 +1,91 @@
+//! Statistical unit tests for `workload.rs`: the generated traces must
+//! actually have the shape the specs promise — agent-chain sequencing over
+//! `NUM_AGENTS` models, lognormal token lengths landing on the configured
+//! means, and Poisson arrivals at the configured rate.  All seeded, with
+//! bounds ≥3σ wide so they are deterministic-pass, not flaky.
+
+use prefillshare::simtime::to_secs;
+use prefillshare::workload::{generate_trace, react, reflexion, workload_by_name, NUM_AGENTS};
+
+#[test]
+fn sessions_follow_num_agents_sequencing() {
+    for spec in [react(), reflexion()] {
+        assert_eq!(spec.agents.len(), NUM_AGENTS, "{}", spec.name);
+        let t = generate_trace(&spec, 2.0, 80.0, 9);
+        assert!(!t.sessions.is_empty());
+        for s in &t.sessions {
+            // Every turn invokes the full agent chain, in order.
+            assert_eq!(s.calls.len(), spec.turns * NUM_AGENTS);
+            for (i, c) in s.calls.iter().enumerate() {
+                assert_eq!(c.model, spec.agents[i % NUM_AGENTS].model);
+                assert_eq!(c.model, i % NUM_AGENTS, "agent chain must cycle 0..NUM_AGENTS");
+            }
+        }
+    }
+}
+
+#[test]
+fn workloads_resolve_by_name() {
+    assert_eq!(workload_by_name("react").unwrap().name, "react");
+    assert_eq!(workload_by_name("reflexion").unwrap().name, "reflexion");
+    assert!(workload_by_name("does-not-exist").is_none());
+}
+
+#[test]
+fn lognormal_output_lengths_match_configured_means() {
+    let spec = react();
+    let t = generate_trace(&spec, 4.0, 500.0, 3);
+    let n = t.sessions.len();
+    assert!(n > 1500, "need a large sample, got {n}");
+
+    for (ai, agent) in spec.agents.iter().enumerate() {
+        let (sum, cnt) = t
+            .sessions
+            .iter()
+            .flat_map(|s| s.calls.iter().enumerate())
+            .filter(|(i, _)| i % NUM_AGENTS == ai)
+            .fold((0usize, 0usize), |(sum, cnt), (_, call)| (sum + call.out_tokens, cnt + 1));
+        let mean = sum as f64 / cnt as f64;
+        let want = agent.mean_out_tokens;
+        // ~6k samples, sd ≈ cv·mean/√n ≈ 0.4 tokens — 5% is ≥10σ.
+        assert!(
+            (mean - want).abs() < 0.05 * want,
+            "agent `{}`: sampled mean {mean:.2} vs configured {want}",
+            agent.name
+        );
+    }
+
+    let init_mean: f64 =
+        t.sessions.iter().map(|s| s.init_prompt_tokens as f64).sum::<f64>() / n as f64;
+    assert!(
+        (init_mean - spec.init_prompt_mean).abs() < 0.05 * spec.init_prompt_mean,
+        "init prompt mean {init_mean:.1} vs {}",
+        spec.init_prompt_mean
+    );
+}
+
+#[test]
+fn poisson_interarrivals_have_configured_rate() {
+    for (rate, seed) in [(1.0, 5u64), (4.0, 6), (8.0, 7)] {
+        let dur = 400.0;
+        let t = generate_trace(&react(), rate, dur, seed);
+        let n = t.sessions.len() as f64;
+
+        // Arrival count ≈ rate·duration.
+        let got = n / dur;
+        assert!((got - rate).abs() < 0.15 * rate, "rate {rate}: sampled {got:.3}");
+
+        // Gaps are exponential: mean 1/rate, coefficient of variation ~1.
+        let arrivals: Vec<f64> = t.sessions.iter().map(|s| to_secs(s.arrival)).collect();
+        let gaps: Vec<f64> = arrivals.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(gaps.iter().all(|&g| g >= 0.0), "arrivals must be ordered");
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!(
+            (mean - 1.0 / rate).abs() < 0.15 / rate,
+            "rate {rate}: gap mean {mean:.4}"
+        );
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.15, "rate {rate}: gap CV {cv:.3} (want ~1)");
+    }
+}
