@@ -30,6 +30,29 @@ pub const A100_80G: GpuSpec = GpuSpec {
     decode_membw_eff: 0.75,
 };
 
+/// A10-class 24G part — the "smaller tier" for heterogeneous prefill
+/// pools (`ClusterConfig::prefill_gpus`): ~2.5× less dense-fp16 compute
+/// and a fraction of the HBM, so a mixed A100/A10 fleet skews both
+/// prefill durations and per-worker prefix-cache capacity.
+pub const A10_24G: GpuSpec = GpuSpec {
+    name: "A10-24G",
+    peak_flops_f16: 125e12,
+    hbm_bytes_per_s: 600e9,
+    mem_bytes: 24e9,
+    prefill_mfu: 0.50,
+    decode_membw_eff: 0.70,
+};
+
+impl GpuSpec {
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name {
+            "a100" | "a100-80g" => Some(A100_80G),
+            "a10" | "a10-24g" => Some(A10_24G),
+            _ => None,
+        }
+    }
+}
+
 /// LLM backbone profile (the *served* model class, not our tiny replica).
 #[derive(Debug, Clone, Copy)]
 pub struct LlmSpec {
@@ -231,6 +254,21 @@ mod tests {
     fn handoff_faster_than_staging() {
         let c = cm();
         assert!(c.handoff_secs(4096) < c.staging_secs(4096));
+    }
+
+    #[test]
+    fn gpu_by_name_resolves_both_tiers() {
+        assert_eq!(GpuSpec::by_name("a100").unwrap().name, A100_80G.name);
+        assert_eq!(GpuSpec::by_name("a10-24g").unwrap().name, A10_24G.name);
+        assert!(GpuSpec::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn a10_is_slower_and_smaller_than_a100() {
+        let small = CostModel::new(A10_24G, LLAMA8B);
+        let big = cm();
+        assert!(small.prefill_secs(1024, 0) > 2.0 * big.prefill_secs(1024, 0));
+        assert!(small.kv_capacity_tokens(0.1) < big.kv_capacity_tokens(0.1) / 5);
     }
 
     #[test]

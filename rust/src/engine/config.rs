@@ -1,9 +1,15 @@
 //! Cluster topology + policy configuration for the serving engines.
 
-use crate::costmodel::{CostModel, LlmSpec, A100_80G, LLAMA8B, QWEN14B};
+use crate::costmodel::{CostModel, GpuSpec, LlmSpec, A100_80G, LLAMA8B, QWEN14B};
 use crate::engine::sched::chunked::DEFAULT_CHUNK_TOKENS;
 use crate::engine::sched::SchedPolicy;
 use crate::workload::NUM_AGENTS;
+
+pub use crate::engine::route::RoutePolicy;
+
+/// Backwards-compatible name for [`RoutePolicy`] (the enum moved into the
+/// routing subsystem at `engine::route` when routing became pluggable).
+pub type RoutingPolicy = RoutePolicy;
 
 /// Which serving system (paper Fig 1 right).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,34 +30,12 @@ impl SystemKind {
     }
 }
 
-/// How the proxy assigns prefill work (paper §3.3 "Prefix-Aware Routing";
-/// the alternatives exist for the ablation benches).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum RoutingPolicy {
-    /// Pin each session to one prefill worker (prefix-cache locality).
-    PrefixAware,
-    /// Spread requests round-robin (destroys locality — ablation).
-    RoundRobin,
-    /// Uniform random worker per request (ablation).
-    Random,
-}
-
-impl RoutingPolicy {
-    pub fn by_name(name: &str) -> Option<RoutingPolicy> {
-        match name {
-            "prefix" | "prefix-aware" => Some(RoutingPolicy::PrefixAware),
-            "rr" | "round-robin" => Some(RoutingPolicy::RoundRobin),
-            "random" => Some(RoutingPolicy::Random),
-            _ => None,
-        }
-    }
-}
-
 /// Full simulator configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     pub system: SystemKind,
-    pub routing: RoutingPolicy,
+    /// Proxy-side prefill routing policy (`--route`; `engine::route`).
+    pub routing: RoutePolicy,
     /// Per-prefill-worker queue ordering / chunking policy (`--sched`).
     pub sched: SchedPolicy,
     /// New-token budget per dispatch under [`SchedPolicy::Chunked`]
@@ -76,7 +60,25 @@ pub struct ClusterConfig {
     /// Resident-KV capacity per decode worker, in tokens; beyond this,
     /// arriving handoffs are staged through host memory (App. B.2).
     pub decode_kv_tokens: usize,
+    /// Serialize KV transfers FIFO per interconnect link (`--link-gbps`
+    /// implies this).  `false` reproduces the original fire-and-forget
+    /// fixed-cost handoff — the configuration the golden fixture pins.
+    pub link_contended: bool,
+    /// Heterogeneous prefill pool: per-worker GPU override.  Empty =
+    /// homogeneous (every worker uses `cost.gpu` and `prefill_kv_tokens`).
+    /// When set under PrefillShare, the pool size is `prefill_gpus.len()`
+    /// and each worker derives its own cost model + radix capacity from
+    /// its GPU tier.
+    pub prefill_gpus: Vec<GpuSpec>,
     pub seed: u64,
+}
+
+/// Usable prefix-pool tokens for one prefill GPU next to `llm`'s weights
+/// (same derivation as the homogeneous default: 0.9 utilization minus
+/// weights, 0.30 of the remainder as radix-cache budget).
+pub fn prefill_kv_capacity(gpu: GpuSpec, llm: LlmSpec) -> usize {
+    let usable = (gpu.mem_bytes * 0.9 - llm.weight_bytes()).max(1e9);
+    (usable * 0.30 / llm.kv_bytes_per_token()) as usize
 }
 
 impl ClusterConfig {
@@ -95,14 +97,14 @@ impl ClusterConfig {
         let per_token = llm.kv_bytes_per_token();
         let weight = llm.weight_bytes();
         let usable = (A100_80G.mem_bytes * 0.9 - weight).max(1e9);
-        let prefill_kv_tokens = (usable * 0.30 / per_token) as usize;
+        let prefill_kv_tokens = prefill_kv_capacity(A100_80G, llm);
         // Decode side reserves more headroom (activations for wide batches,
         // sampling state, transfer buffers) — the App. B.2 staging regime
         // begins when resident session KV exceeds this pool.
         let decode_kv_tokens = (usable * 0.20 / per_token) as usize;
         ClusterConfig {
             system,
-            routing: RoutingPolicy::PrefixAware,
+            routing: RoutePolicy::PrefixAware,
             sched: SchedPolicy::Fifo,
             chunk_tokens: DEFAULT_CHUNK_TOKENS,
             cost,
@@ -112,15 +114,43 @@ impl ClusterConfig {
             max_decode_batch: 48,
             prefill_kv_tokens,
             decode_kv_tokens,
+            link_contended: false,
+            prefill_gpus: Vec::new(),
             seed: 0,
         }
     }
 
-    /// Baseline forces one prefill worker per model.
+    /// Baseline forces one prefill worker per model; a heterogeneous
+    /// PrefillShare pool is sized by its GPU list.
     pub fn effective_prefill_workers(&self) -> usize {
         match self.system {
             SystemKind::Baseline => self.n_models,
-            SystemKind::PrefillShare => self.n_prefill_workers,
+            SystemKind::PrefillShare => {
+                if self.prefill_gpus.is_empty() {
+                    self.n_prefill_workers
+                } else {
+                    self.prefill_gpus.len()
+                }
+            }
+        }
+    }
+
+    /// Per-worker (cost model, radix capacity) for prefill worker `i`:
+    /// the homogeneous cluster values unless `prefill_gpus[i]` overrides
+    /// the GPU tier.  Baseline ignores the list entirely — it neither
+    /// sizes the pool (`effective_prefill_workers`) nor profiles workers
+    /// from it, so a baseline-vs-prefillshare comparison with
+    /// `--prefill-gpus` held constant never silently mixes fleets.
+    pub fn prefill_worker_profile(&self, i: usize) -> (CostModel, usize) {
+        if self.system == SystemKind::Baseline {
+            return (self.cost, self.prefill_kv_tokens);
+        }
+        match self.prefill_gpus.get(i) {
+            None => (self.cost, self.prefill_kv_tokens),
+            Some(&gpu) => {
+                let cost = CostModel { gpu, ..self.cost };
+                (cost, prefill_kv_capacity(gpu, self.cost.llm))
+            }
         }
     }
 }
@@ -128,6 +158,7 @@ impl ClusterConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::costmodel::A10_24G;
 
     #[test]
     fn paper_default_capacities_are_sane() {
@@ -135,8 +166,11 @@ mod tests {
         assert!(c.prefill_kv_tokens > 80_000 && c.prefill_kv_tokens < 500_000,
             "{}", c.prefill_kv_tokens);
         assert!(c.decode_kv_tokens < c.prefill_kv_tokens);
-        // The default scheduler is the pre-subsystem behaviour.
+        // The defaults are the pre-subsystem behaviour.
         assert_eq!(c.sched, SchedPolicy::Fifo);
+        assert_eq!(c.routing, RoutePolicy::PrefixAware);
+        assert!(!c.link_contended);
+        assert!(c.prefill_gpus.is_empty());
         assert!(c.chunk_tokens > 0);
     }
 
@@ -154,5 +188,34 @@ mod tests {
         assert_eq!(c.effective_prefill_workers(), c.n_models);
         c.system = SystemKind::PrefillShare;
         assert_eq!(c.effective_prefill_workers(), 7);
+    }
+
+    #[test]
+    fn heterogeneous_pool_sizes_and_profiles_per_gpu() {
+        let mut c = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        c.prefill_gpus = vec![A100_80G, A10_24G, A10_24G];
+        assert_eq!(c.effective_prefill_workers(), 3);
+        let (big, big_cap) = c.prefill_worker_profile(0);
+        let (small, small_cap) = c.prefill_worker_profile(1);
+        assert_eq!(big_cap, c.prefill_kv_tokens, "A100 worker keeps the homogeneous budget");
+        assert!(small_cap < big_cap / 4, "{small_cap} vs {big_cap}");
+        assert!(small.prefill_secs(1024, 0) > 2.0 * big.prefill_secs(1024, 0));
+        // Homogeneous default stays bit-identical to the cluster model.
+        c.prefill_gpus.clear();
+        let (cost, cap) = c.prefill_worker_profile(2);
+        assert_eq!(cap, c.prefill_kv_tokens);
+        assert_eq!(cost.prefill_secs(777, 33).to_bits(), c.cost.prefill_secs(777, 33).to_bits());
+    }
+
+    #[test]
+    fn baseline_ignores_heterogeneous_gpu_list() {
+        let mut c = ClusterConfig::paper_default(SystemKind::Baseline);
+        c.prefill_gpus = vec![A10_24G, A10_24G];
+        assert_eq!(c.effective_prefill_workers(), c.n_models);
+        for i in 0..c.n_models {
+            let (cost, cap) = c.prefill_worker_profile(i);
+            assert_eq!(cap, c.prefill_kv_tokens, "worker {i}");
+            assert_eq!(cost.gpu.name, c.cost.gpu.name, "worker {i}");
+        }
     }
 }

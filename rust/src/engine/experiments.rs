@@ -132,23 +132,20 @@ pub fn sched_ablation(seed: u64) -> Vec<Row> {
 }
 
 /// Ablation: routing policy impact on PrefillShare (prefix-aware vs
-/// locality-destroying policies) — DESIGN.md "ablation benches".
+/// locality-destroying policies, plus the cache-/load-aware scorers) —
+/// DESIGN.md "ablation benches".
 pub fn routing_ablation(seed: u64) -> Vec<Row> {
-    use crate::engine::config::RoutingPolicy;
+    use crate::engine::route::RoutePolicy;
     let wl = react();
     let mut rows = Vec::new();
-    for (name, pol) in [
-        ("prefix-aware", RoutingPolicy::PrefixAware),
-        ("round-robin", RoutingPolicy::RoundRobin),
-        ("random", RoutingPolicy::Random),
-    ] {
+    for pol in RoutePolicy::all() {
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
         cfg.routing = pol;
         cfg.seed = seed;
         let trace = generate_trace(&wl, 3.0, HORIZON_S, seed);
         let result = simulate(cfg, trace);
         rows.push(Row {
-            system: format!("ps/{name}"),
+            system: format!("ps/{}", pol.label()),
             workload: wl.name.to_string(),
             x_name: "rate".into(),
             x: 3.0,
@@ -156,6 +153,48 @@ pub fn routing_ablation(seed: u64) -> Vec<Row> {
         });
     }
     rows
+}
+
+/// Concurrency points for the routing-policy sweep — the Fig-4 axis where
+/// baseline hit ratios collapse; cache-aware and round-robin separate
+/// beyond ~40 concurrent sessions.
+pub const ROUTE_CONCURRENCY: &[usize] = &[10, 20, 40, 80];
+
+/// Offered load for the routing sweep (the Fig-4 stress rate).
+pub const ROUTE_RATE: f64 = 8.0;
+
+/// Routing-policy comparison across the concurrency axis: identical
+/// (trace, seed), PrefillShare topology, one row per (policy, cap), so
+/// prefix hit ratio / p95 latency / utilization imbalance are directly
+/// comparable across `prefix-aware`/`round-robin`/`random`/`cache-aware`/
+/// `load-aware` (`route_policy_sweep` bench, `bench-serving --experiment
+/// routes`).
+pub fn route_sweep(llm: LlmSpec, wl: &WorkloadSpec, concurrency: &[usize], seed: u64) -> Vec<Row> {
+    use crate::engine::route::RoutePolicy;
+    let trace = generate_trace(wl, ROUTE_RATE, HORIZON_S, seed);
+    let mut rows = Vec::new();
+    for pol in RoutePolicy::all() {
+        for &cc in concurrency {
+            let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
+            cfg.routing = pol;
+            cfg.max_concurrent_sessions = cc;
+            cfg.seed = seed;
+            let result = simulate(cfg, trace.clone());
+            rows.push(Row {
+                system: format!("ps/{}", pol.label()),
+                workload: wl.name.to_string(),
+                x_name: "max_sessions".into(),
+                x: cc as f64,
+                result,
+            });
+        }
+    }
+    rows
+}
+
+/// CLI/bench wrapper: the default routing sweep (LLaMA8B, ReAct).
+pub fn route_ablation_sweep(seed: u64) -> Vec<Row> {
+    route_sweep(LLAMA8B, &react(), ROUTE_CONCURRENCY, seed)
 }
 
 /// §3.3 memory equations: measured peak KV residency vs model count N.

@@ -1,15 +1,23 @@
 //! Serving engines: the discrete-event cluster simulator (Figs 3–6) and the
 //! real-execution engine that serves the tiny backbone through PJRT
-//! (examples / end-to-end validation).  Both share the router, prefix-cache,
+//! (examples / end-to-end validation).  Both share the routing, prefix-cache,
 //! workload and metrics substrates.
+//!
+//! The simulator is component-structured (`sim/`): a `Proxy` (admission +
+//! pluggable routing via [`route`]), a `PrefillPool` (pluggable scheduling
+//! via [`sched`], per-worker GPU profiles), an `Interconnect` (per-link
+//! FIFO KV transfer queues), and a `DecodePool` (continuous batching +
+//! staging).
 
 pub mod config;
 pub mod experiments;
 pub mod real;
 pub mod report;
+pub mod route;
 pub mod sched;
 pub mod sim;
 
 pub use config::{ClusterConfig, RoutingPolicy, SystemKind};
+pub use route::{RoutePolicy, Router};
 pub use sched::{DecodeAdmission, PrefillScheduler, SchedPolicy};
 pub use sim::{simulate, SimResult, Simulator};

@@ -15,14 +15,26 @@ pub struct Row {
 
 pub fn header(x_name: &str) -> String {
     format!(
-        "{:<18} {:<10} {:>8} | {:>10} {:>10} {:>10} {:>9} {:>8} {:>9} {:>8} {:>9}",
-        "system", "workload", x_name, "p95_lat_s", "mean_lat_s", "tput_tok_s", "ttft_p95", "hit_pct", "staged", "prefillU", "qdelay95"
+        "{:<18} {:<10} {:>8} | {:>10} {:>10} {:>10} {:>9} {:>8} {:>9} {:>8} {:>9} {:>8} {:>6}",
+        "system",
+        "workload",
+        x_name,
+        "p95_lat_s",
+        "mean_lat_s",
+        "tput_tok_s",
+        "ttft_p95",
+        "hit_pct",
+        "staged",
+        "prefillU",
+        "qdelay95",
+        "dqd95",
+        "imb"
     )
 }
 
 pub fn format_row(r: &Row) -> String {
     format!(
-        "{:<18} {:<10} {:>8.2} | {:>10.2} {:>10.2} {:>10.0} {:>9.3} {:>8.1} {:>9} {:>8.2} {:>9.3}",
+        "{:<18} {:<10} {:>8.2} | {:>10.2} {:>10.2} {:>10.0} {:>9.3} {:>8.1} {:>9} {:>8.2} {:>9.3} {:>8.3} {:>6.2}",
         r.system,
         r.workload,
         r.x,
@@ -34,7 +46,13 @@ pub fn format_row(r: &Row) -> String {
         r.result.staging_events,
         r.result.prefill_util,
         r.result.prefill_queue_delay_p95,
+        r.result.decode_queue_delay_p95,
+        r.result.prefill_util_imbalance,
     )
+}
+
+fn f64_arr(vals: &[f64]) -> Json {
+    json::arr(vals.iter().map(|&v| json::num(v)).collect())
 }
 
 pub fn rows_to_json(rows: &[Row]) -> Json {
@@ -71,6 +89,25 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
                         json::num(r.result.prefill_queue_delay_p95),
                     ),
                     ("prefill_chunks", json::num(r.result.prefill_chunks as f64)),
+                    (
+                        "decode_queue_delay_mean_s",
+                        json::num(r.result.decode_queue_delay_mean),
+                    ),
+                    (
+                        "decode_queue_delay_p95_s",
+                        json::num(r.result.decode_queue_delay_p95),
+                    ),
+                    (
+                        "handoff_link_wait_p95_s",
+                        json::num(r.result.handoff_link_wait_p95),
+                    ),
+                    ("prefill_util_imbalance", json::num(r.result.prefill_util_imbalance)),
+                    ("decode_util_imbalance", json::num(r.result.decode_util_imbalance)),
+                    ("ttft_mean_by_position_s", f64_arr(&r.result.ttft_mean_by_position)),
+                    (
+                        "latency_mean_by_position_s",
+                        f64_arr(&r.result.latency_mean_by_position),
+                    ),
                 ])
             })
             .collect(),

@@ -1,0 +1,140 @@
+//! Cache-aware routing: the worker already holding the longest prefix of
+//! the job's context wins (SGLang/KVFlow-style cache-aware placement).
+//!
+//! Every worker's radix cache is probed with the read-only
+//! [`RadixCache::peek_prefix`](crate::kvcache::radix::RadixCache::peek_prefix),
+//! so scoring never perturbs LRU order, pin state, or hit/miss
+//! statistics — the chosen worker still performs the real, pinning
+//! `match_prefix` at dispatch.
+//!
+//! Two regimes keep the policy from degenerating:
+//!
+//! * **Strong match** (best cached prefix ≥ half the context): the match
+//!   is session-specific — follow it.  Among tied-best workers the
+//!   session's home (`sid % N`) wins, then the least outstanding prefill
+//!   tokens, then the lowest index.
+//! * **Weak match** (best < half the context): the "match" is just the
+//!   globally shared system prompt or stale fragments.  Chasing it would
+//!   herd every session onto the first warm worker (observed as a 4.0
+//!   utilization imbalance on a 4-worker pool); place by least load
+//!   instead, ties preferring the session's home (`sid % N`) so an idle
+//!   cluster degrades to balanced prefix-aware pinning.  The session's
+//!   next call then finds its own context resident and pins strongly to
+//!   wherever this call landed.
+//!
+//! The net effect is dynamic session pinning with load-balanced initial
+//! placement: prefix-aware's hit ratio without its fixed modulo
+//! assignment.
+
+use crate::engine::route::{Router, WorkerView};
+use crate::engine::sched::PrefillJob;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Default)]
+pub struct CacheAware;
+
+impl Router for CacheAware {
+    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], _rng: &mut Rng) -> usize {
+        let scores: Vec<usize> = workers.iter().map(|w| w.radix.peek_prefix(&job.key)).collect();
+        let best = *scores.iter().max().expect("non-empty worker set");
+        if best * 2 < job.ctx_len {
+            // Weak match: least-loaded placement.  Ties prefer the
+            // session's home so an idle cluster degrades to prefix-aware
+            // pinning (balanced) instead of herding on worker 0; further
+            // ties take the lowest index.
+            let min = workers.iter().map(|w| w.outstanding_tokens).min().expect("non-empty");
+            let home = job.sid % workers.len();
+            if workers[home].outstanding_tokens == min {
+                return home;
+            }
+            return workers
+                .iter()
+                .position(|w| w.outstanding_tokens == min)
+                .expect("a min always exists");
+        }
+        let home = job.sid % workers.len();
+        if scores[home] == best {
+            return home;
+        }
+        let mut pick = None;
+        for (i, &s) in scores.iter().enumerate() {
+            if s != best {
+                continue;
+            }
+            match pick {
+                None => pick = Some(i),
+                Some(p) => {
+                    if workers[i].outstanding_tokens < workers[p].outstanding_tokens {
+                        pick = Some(i);
+                    }
+                }
+            }
+        }
+        pick.expect("a max score always exists")
+    }
+
+    fn uses_load(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::route::testutil::{caches, views};
+    use crate::engine::sched::testutil::job;
+
+    #[test]
+    fn strong_match_wins_over_home_pinning() {
+        let mut c = caches(4);
+        // Session 5's context cached on worker 2 (home would be 5 % 4 = 1).
+        c[2].insert(&job(5, 200, 0).key);
+        let v = views(&c, &[0, 0, 0, 0]);
+        let mut rng = Rng::new(0);
+        assert_eq!(CacheAware.route(&job(5, 240, 0), &v, &mut rng), 2);
+    }
+
+    #[test]
+    fn weak_match_routes_by_load_not_warmth() {
+        let mut c = caches(4);
+        // Worker 1 holds a short shared-prefix fragment (40 of 400 tokens):
+        // chasing it would herd; the router must place by load instead.
+        c[1].insert(&job(9, 40, 0).key);
+        let mut rng = Rng::new(0);
+        let v = views(&c, &[500, 300, 0, 900]);
+        assert_eq!(CacheAware.route(&job(9, 400, 0), &v, &mut rng), 2);
+        // Cold cluster degenerates the same way: pure least-loaded.
+        let cold = caches(4);
+        let v = views(&cold, &[500, 100, 700, 900]);
+        assert_eq!(CacheAware.route(&job(0, 400, 0), &v, &mut rng), 1);
+        // ...but an *idle* cold cluster pins by session, not worker 0.
+        let v = views(&cold, &[0, 0, 0, 0]);
+        for sid in 0..8 {
+            assert_eq!(CacheAware.route(&job(sid, 400, 0), &v, &mut rng), sid % 4);
+        }
+    }
+
+    #[test]
+    fn strong_non_home_ties_break_on_load_then_index() {
+        let mut c = caches(4);
+        // Equal 100-token match on workers 2 and 3; home (0) is cold.
+        c[2].insert(&job(8, 100, 0).key);
+        c[3].insert(&job(8, 100, 0).key);
+        let mut rng = Rng::new(0);
+        let v = views(&c, &[0, 0, 5_000, 100]);
+        assert_eq!(CacheAware.route(&job(8, 160, 0), &v, &mut rng), 3, "less loaded tie wins");
+        let v = views(&c, &[0, 0, 700, 700]);
+        assert_eq!(CacheAware.route(&job(8, 160, 0), &v, &mut rng), 2, "lowest index on full tie");
+    }
+
+    #[test]
+    fn strong_tied_home_keeps_the_session() {
+        let mut c = caches(4);
+        c[1].insert(&job(5, 150, 0).key); // home of session 5 (5 % 4 = 1)
+        c[2].insert(&job(5, 150, 0).key); // equally warm elsewhere
+        let v = views(&c, &[0, 9_000, 0, 0]);
+        let mut rng = Rng::new(0);
+        // Home is tied-best: stays home even though worker 2 is idle.
+        assert_eq!(CacheAware.route(&job(5, 200, 0), &v, &mut rng), 1);
+    }
+}

@@ -1,0 +1,49 @@
+//! Load-aware routing: least outstanding prefill tokens wins.
+//!
+//! Ranks workers by their queued-plus-in-flight prefill backlog (in new
+//! tokens, the quantity the cost model charges for) and sends the job to
+//! the least-loaded one, lowest index on ties.  This is the classic
+//! join-shortest-queue ablation: it levels worker utilization — the
+//! imbalance column in the routing sweep — at the price of prefix
+//! locality, sitting between `prefix-aware` and `round-robin` on hit
+//! ratio under skewed session lengths.
+
+use crate::engine::route::{Router, WorkerView};
+use crate::engine::sched::PrefillJob;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Default)]
+pub struct LoadAware;
+
+impl Router for LoadAware {
+    fn route(&mut self, _job: &PrefillJob, workers: &[WorkerView<'_>], _rng: &mut Rng) -> usize {
+        let mut pick = 0usize;
+        for (i, w) in workers.iter().enumerate().skip(1) {
+            if w.outstanding_tokens < workers[pick].outstanding_tokens {
+                pick = i;
+            }
+        }
+        pick
+    }
+
+    fn uses_load(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::route::testutil::{caches, views};
+    use crate::engine::sched::testutil::job;
+
+    #[test]
+    fn least_loaded_wins_lowest_index_ties() {
+        let c = caches(4);
+        let mut rng = Rng::new(0);
+        let v = views(&c, &[900, 100, 2_000, 100]);
+        assert_eq!(LoadAware.route(&job(0, 64, 0), &v, &mut rng), 1);
+        let v = views(&c, &[0, 0, 0, 0]);
+        assert_eq!(LoadAware.route(&job(3, 64, 0), &v, &mut rng), 0);
+    }
+}

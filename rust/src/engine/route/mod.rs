@@ -1,0 +1,177 @@
+//! Prefill-routing subsystem — the proxy's pluggable policy surface,
+//! mirroring `engine::sched`'s trait-per-decision-point design.
+//!
+//! The paper's headline mechanism is a routing layer that makes prefill
+//! sharing work across heterogeneous models (§3.3 "Prefix-Aware Routing"):
+//! which worker a request's prefill lands on decides whether its session
+//! context radix-hits or recomputes from scratch.  Related systems treat
+//! this as a first-class policy — KVFlow routes by workflow-level cache
+//! awareness, ForkKV by per-model KV placement — so the simulator exposes
+//! the same surface: a [`Router`] chooses a prefill worker per job from a
+//! read-only [`WorkerView`] snapshot of every worker's cache and backlog.
+//!
+//! Policies:
+//!
+//! | CLI name       | type                          | behaviour |
+//! |----------------|-------------------------------|-----------|
+//! | `prefix-aware` | [`prefix_aware::PrefixAware`] | pin session `sid` to worker `sid % N` (the paper's session-locality routing; the pre-subsystem behaviour) |
+//! | `round-robin`  | [`round_robin::RoundRobin`]   | spread requests round-robin (destroys locality — ablation) |
+//! | `random`       | [`random::Random`]            | uniform random worker per request (ablation; the only RNG consumer) |
+//! | `cache-aware`  | [`cache_aware::CacheAware`]   | longest cached prefix wins, probed via [`RadixCache::peek_prefix`] across workers |
+//! | `load-aware`   | [`load_aware::LoadAware`]     | least outstanding prefill tokens (queue backlog + in-flight remainder) |
+//!
+//! All policies are deterministic given the run's seed: `random` draws from
+//! the simulator-owned routing RNG; the rest consume no randomness and
+//! break ties on fixed, documented orders.
+
+pub mod cache_aware;
+pub mod load_aware;
+pub mod prefix_aware;
+pub mod random;
+pub mod round_robin;
+
+pub use cache_aware::CacheAware;
+pub use load_aware::LoadAware;
+pub use prefix_aware::PrefixAware;
+pub use random::Random;
+pub use round_robin::RoundRobin;
+
+use crate::engine::sched::PrefillJob;
+use crate::kvcache::radix::RadixCache;
+use crate::util::rng::Rng;
+
+/// Read-only snapshot of one prefill worker, as the router sees it.
+#[derive(Debug)]
+pub struct WorkerView<'a> {
+    /// The worker's radix prefix cache (probe with the read-only
+    /// [`RadixCache::peek_prefix`]; routing must never perturb LRU order,
+    /// pin state, or hit/miss statistics).
+    pub radix: &'a RadixCache,
+    /// Outstanding prefill tokens: queued context plus the in-flight
+    /// unit's remainder — the backlog signal load-aware routing ranks by.
+    /// Populated only when the policy declares [`Router::uses_load`].
+    pub outstanding_tokens: usize,
+}
+
+/// Per-job prefill-worker selection.  `workers` is never empty; the
+/// returned index must be `< workers.len()`.
+pub trait Router {
+    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize;
+
+    /// Whether this policy reads [`WorkerView::outstanding_tokens`].
+    /// When `false` (the default), the pool skips the O(queue-depth)
+    /// backlog summation per routed job and passes 0 — the prefix-aware
+    /// hot path pays only pointer collection.
+    fn uses_load(&self) -> bool {
+        false
+    }
+}
+
+/// Which routing policy the proxy runs (CLI: `--route`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Pin each session to one prefill worker (prefix-cache locality).
+    PrefixAware,
+    /// Spread requests round-robin (destroys locality — ablation).
+    RoundRobin,
+    /// Uniform random worker per request (ablation).
+    Random,
+    /// Longest cached prefix across workers wins (peek-probed).
+    CacheAware,
+    /// Fewest outstanding prefill tokens wins.
+    LoadAware,
+}
+
+impl RoutePolicy {
+    pub fn by_name(name: &str) -> Option<RoutePolicy> {
+        match name {
+            "prefix" | "prefix-aware" => Some(RoutePolicy::PrefixAware),
+            "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
+            "random" => Some(RoutePolicy::Random),
+            "cache" | "cache-aware" => Some(RoutePolicy::CacheAware),
+            "load" | "load-aware" => Some(RoutePolicy::LoadAware),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::PrefixAware => "prefix-aware",
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::Random => "random",
+            RoutePolicy::CacheAware => "cache-aware",
+            RoutePolicy::LoadAware => "load-aware",
+        }
+    }
+
+    pub fn all() -> [RoutePolicy; 5] {
+        [
+            RoutePolicy::PrefixAware,
+            RoutePolicy::RoundRobin,
+            RoutePolicy::Random,
+            RoutePolicy::CacheAware,
+            RoutePolicy::LoadAware,
+        ]
+    }
+}
+
+/// Instantiate one router for one simulated cluster.
+pub fn make_router(policy: RoutePolicy) -> Box<dyn Router> {
+    match policy {
+        RoutePolicy::PrefixAware => Box::new(PrefixAware),
+        RoutePolicy::RoundRobin => Box::new(RoundRobin::new()),
+        RoutePolicy::Random => Box::new(Random),
+        RoutePolicy::CacheAware => Box::new(CacheAware),
+        RoutePolicy::LoadAware => Box::new(LoadAware),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// N cold caches + a view over them with the given backlogs.
+    pub fn caches(n: usize) -> Vec<RadixCache> {
+        (0..n).map(|_| RadixCache::new(100_000)).collect()
+    }
+
+    pub fn views<'a>(caches: &'a [RadixCache], outstanding: &[usize]) -> Vec<WorkerView<'a>> {
+        caches
+            .iter()
+            .zip(outstanding)
+            .map(|(radix, &outstanding_tokens)| WorkerView { radix, outstanding_tokens })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sched::testutil::job;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in RoutePolicy::all() {
+            assert_eq!(RoutePolicy::by_name(p.label()), Some(p));
+        }
+        assert_eq!(RoutePolicy::by_name("prefix"), Some(RoutePolicy::PrefixAware));
+        assert_eq!(RoutePolicy::by_name("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::by_name("cache"), Some(RoutePolicy::CacheAware));
+        assert_eq!(RoutePolicy::by_name("load"), Some(RoutePolicy::LoadAware));
+        assert_eq!(RoutePolicy::by_name("lifo"), None);
+    }
+
+    #[test]
+    fn factory_builds_every_policy_and_stays_in_range() {
+        let caches = testutil::caches(3);
+        let views = testutil::views(&caches, &[0, 0, 0]);
+        let mut rng = Rng::new(7);
+        for p in RoutePolicy::all() {
+            let mut r = make_router(p);
+            for sid in 0..16 {
+                let w = r.route(&job(sid, 64, 0), &views, &mut rng);
+                assert!(w < views.len(), "{p:?} routed out of range: {w}");
+            }
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Prefix-aware session pinning — the paper's routing policy (§3.3).
+//!
+//! Every request of session `sid` lands on worker `sid % N`, so a
+//! session's growing context stays a radix hit on one cache instead of
+//! recomputing on whichever worker happens to be free.  This reproduces
+//! the pre-subsystem simulator's inline routing exactly (pinned by the
+//! golden fixture).
+
+use crate::engine::route::{Router, WorkerView};
+use crate::engine::sched::PrefillJob;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Default)]
+pub struct PrefixAware;
+
+impl Router for PrefixAware {
+    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], _rng: &mut Rng) -> usize {
+        job.sid % workers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::route::testutil::{caches, views};
+    use crate::engine::sched::testutil::job;
+
+    #[test]
+    fn pins_sessions_regardless_of_load() {
+        let c = caches(4);
+        let v = views(&c, &[9_000, 0, 0, 0]);
+        let mut rng = Rng::new(0);
+        let mut r = PrefixAware;
+        for sid in 0..12 {
+            assert_eq!(r.route(&job(sid, 128, 0), &v, &mut rng), sid % 4);
+        }
+    }
+}

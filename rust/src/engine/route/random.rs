@@ -1,0 +1,40 @@
+//! Uniform-random routing — the no-structure ablation.
+//!
+//! Draws from the proxy-owned routing RNG (seeded `cfg.seed ^ 0xd15a66`),
+//! the simulator's only routing-side randomness; runs stay reproducible
+//! per seed.
+
+use crate::engine::route::{Router, WorkerView};
+use crate::engine::sched::PrefillJob;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Default)]
+pub struct Random;
+
+impl Router for Random {
+    fn route(&mut self, _job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize {
+        rng.range(0, workers.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::route::testutil::{caches, views};
+    use crate::engine::sched::testutil::job;
+
+    #[test]
+    fn deterministic_per_rng_seed_and_in_range() {
+        let c = caches(4);
+        let v = views(&c, &[0, 0, 0, 0]);
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Rng::new(seed);
+            (0..32).map(|sid| Random.route(&job(sid, 64, 0), &v, &mut rng)).collect()
+        };
+        let a = draw(42);
+        assert_eq!(a, draw(42));
+        assert!(a.iter().all(|&w| w < 4));
+        // 32 draws over 4 workers: astronomically unlikely to be constant.
+        assert!(a.iter().any(|&w| w != a[0]));
+    }
+}

@@ -1,0 +1,47 @@
+//! Round-robin routing — the locality-destroying ablation.
+//!
+//! Requests spread over workers in fixed rotation, so consecutive calls
+//! of one session land on different caches and every model switch pays a
+//! near-full re-prefill.  The counter advances *before* use (first route
+//! goes to worker 1), matching the pre-subsystem simulator's counter
+//! semantics bit-for-bit.
+
+use crate::engine::route::{Router, WorkerView};
+use crate::engine::sched::PrefillJob;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    counter: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl Router for RoundRobin {
+    fn route(&mut self, _job: &PrefillJob, workers: &[WorkerView<'_>], _rng: &mut Rng) -> usize {
+        self.counter = (self.counter + 1) % workers.len();
+        self.counter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::route::testutil::{caches, views};
+    use crate::engine::sched::testutil::job;
+
+    #[test]
+    fn rotates_starting_at_worker_one() {
+        let c = caches(3);
+        let v = views(&c, &[0, 0, 0]);
+        let mut rng = Rng::new(0);
+        let mut r = RoundRobin::new();
+        let order: Vec<usize> =
+            (0..7).map(|sid| r.route(&job(sid, 64, 0), &v, &mut rng)).collect();
+        assert_eq!(order, vec![1, 2, 0, 1, 2, 0, 1]);
+    }
+}

@@ -19,7 +19,9 @@
 
 use std::collections::VecDeque;
 
-use crate::engine::sched::{carve_unit, PrefillJob, PrefillScheduler, PrefillUnit, QueuedJob};
+use crate::engine::sched::{
+    carve_unit, remaining_tokens, PrefillJob, PrefillScheduler, PrefillUnit, QueuedJob,
+};
 use crate::kvcache::radix::RadixCache;
 
 /// Default chunk size in new tokens (≈ one short agent-call re-prefill).
@@ -57,6 +59,10 @@ impl PrefillScheduler for ChunkedFifo {
 
     fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    fn queued_tokens(&self) -> usize {
+        self.queue.iter().map(remaining_tokens).sum()
     }
 }
 

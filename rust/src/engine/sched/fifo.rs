@@ -6,7 +6,9 @@
 
 use std::collections::VecDeque;
 
-use crate::engine::sched::{carve_unit, PrefillJob, PrefillScheduler, PrefillUnit, QueuedJob};
+use crate::engine::sched::{
+    carve_unit, remaining_tokens, PrefillJob, PrefillScheduler, PrefillUnit, QueuedJob,
+};
 use crate::kvcache::radix::RadixCache;
 
 #[derive(Debug, Default)]
@@ -37,6 +39,10 @@ impl PrefillScheduler for Fifo {
 
     fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    fn queued_tokens(&self) -> usize {
+        self.queue.iter().map(remaining_tokens).sum()
     }
 }
 

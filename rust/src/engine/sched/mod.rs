@@ -111,6 +111,19 @@ pub trait PrefillScheduler {
     fn requeue(&mut self, entry: QueuedJob);
 
     fn queue_len(&self) -> usize;
+
+    /// Remaining context tokens summed over queued (undispatched) jobs —
+    /// the backlog signal load-aware routing ranks workers by.  Counts
+    /// `ctx_len - matched - processed` per entry: the full context before
+    /// first dispatch (cache coverage is unknown until the pinning
+    /// lookup), the true remainder for requeued chunked jobs.
+    fn queued_tokens(&self) -> usize;
+}
+
+/// Remaining new-token estimate of one queued entry (see
+/// [`PrefillScheduler::queued_tokens`]).
+pub(crate) fn remaining_tokens(entry: &QueuedJob) -> usize {
+    entry.job.ctx_len - entry.matched_tokens - entry.processed_new
 }
 
 /// Shared queue for score-ranked whole-job policies (SJF, prefix-affinity):
@@ -140,6 +153,10 @@ impl RankedQueue {
 
     pub(crate) fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    pub(crate) fn queued_tokens(&self) -> usize {
+        self.queue.iter().map(remaining_tokens).sum()
     }
 
     /// Remove and dispatch the entry with the *lowest* score (first wins on

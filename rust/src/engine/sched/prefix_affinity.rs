@@ -50,6 +50,10 @@ impl PrefillScheduler for PrefixAffinity {
     fn queue_len(&self) -> usize {
         self.queue.len()
     }
+
+    fn queued_tokens(&self) -> usize {
+        self.queue.queued_tokens()
+    }
 }
 
 #[cfg(test)]

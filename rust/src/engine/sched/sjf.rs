@@ -51,6 +51,10 @@ impl PrefillScheduler for Sjf {
     fn queue_len(&self) -> usize {
         self.queue.len()
     }
+
+    fn queued_tokens(&self) -> usize {
+        self.queue.queued_tokens()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,232 @@
+//! The decode tier: iteration-level continuous batching under a
+//! resident-KV cap, with host staging on overflow.
+//!
+//! Each worker hosts one task model.  Batch-join decisions go through
+//! the [`DecodeAdmission`] policy (`engine::sched::admission`): a parked
+//! request stages its KV *out* to host memory (a blocking copy through
+//! the interconnect's staging link) and pays a stage-*in* reload when
+//! space finally frees — both copies contend with decode compute
+//! (vLLM App. B.2; this is the Fig-4 high-concurrency rollover).
+
+use std::collections::VecDeque;
+
+use crate::engine::config::ClusterConfig;
+use crate::engine::sched::{
+    AdmissionDecision, AdmissionQuery, CapAdmission, DecodeAdmission,
+};
+use crate::metrics::{record_position, ServingMetrics};
+use crate::simtime::{secs, to_secs, EventQueue, SimTime};
+
+use super::interconnect::Interconnect;
+use super::Ev;
+
+/// A decode-phase request (one agent call's generation).
+#[derive(Debug, Clone)]
+pub(crate) struct DecodeReq {
+    pub sid: usize,
+    /// Position within the session's agent chain — indexes the
+    /// per-position TTFT/latency breakdowns.
+    pub call_idx: usize,
+    pub ctx_len: usize,
+    pub out_tokens: usize,
+    pub generated: usize,
+    pub issued_at: SimTime,
+    /// KV handoff landed on the decode worker (queue-delay anchor).
+    pub arrived_at: SimTime,
+    pub ttft_recorded: bool,
+    /// Deferred at least once for decode-KV space -> pays staging on join.
+    pub was_deferred: bool,
+}
+
+impl DecodeReq {
+    /// Final KV footprint this request needs resident (reserved at join).
+    pub fn footprint(&self) -> usize {
+        self.ctx_len + self.out_tokens
+    }
+}
+
+pub(crate) struct DecodeWorker {
+    pub active: Vec<DecodeReq>,
+    pub pending: VecDeque<DecodeReq>,
+    /// Requests whose stage-in transfer is in flight (space reserved).
+    staging_in: usize,
+    stepping: bool,
+    /// A host<->GPU KV copy is in flight; it contends with decode compute
+    /// (vLLM App. B.2: staging "increases CPU–GPU data movement, which can
+    /// increase latency and reduce throughput") — steps are gated on it.
+    io_busy: bool,
+    resident_tokens: usize,
+    pub busy_micros: u64,
+    pub peak_resident: usize,
+}
+
+pub(crate) struct DecodePool {
+    pub workers: Vec<DecodeWorker>,
+    admission: Box<dyn DecodeAdmission>,
+}
+
+impl DecodePool {
+    pub fn new(n: usize) -> DecodePool {
+        let workers = (0..n)
+            .map(|_| DecodeWorker {
+                active: Vec::new(),
+                pending: VecDeque::new(),
+                staging_in: 0,
+                stepping: false,
+                io_busy: false,
+                resident_tokens: 0,
+                busy_micros: 0,
+                peak_resident: 0,
+            })
+            .collect();
+        DecodePool { workers, admission: Box::new(CapAdmission) }
+    }
+
+    /// A KV handoff arrived on worker `w`'s pending queue.
+    pub fn push_handoff(&mut self, w: usize, mut req: DecodeReq, now: SimTime) {
+        req.arrived_at = now;
+        self.workers[w].pending.push_back(req);
+    }
+
+    /// Admit pending requests into the batch per the [`DecodeAdmission`]
+    /// policy, scheduling staging copies through the interconnect as
+    /// needed.
+    pub fn try_admit(
+        &mut self,
+        w: usize,
+        cfg: &ClusterConfig,
+        q: &mut EventQueue<Ev>,
+        net: &mut Interconnect,
+        metrics: &mut ServingMetrics,
+    ) {
+        let kv_bytes_per_token = cfg.cost.llm.kv_bytes_per_token();
+        loop {
+            let decision = {
+                let dw = &self.workers[w];
+                let Some(front) = dw.pending.front() else { return };
+                self.admission.decide(&AdmissionQuery {
+                    footprint: front.footprint(),
+                    resident_tokens: dw.resident_tokens,
+                    capacity_tokens: cfg.decode_kv_tokens,
+                    active: dw.active.len(),
+                    staging_in: dw.staging_in,
+                    max_batch: cfg.max_decode_batch,
+                })
+            };
+            match decision {
+                AdmissionDecision::Wait => return,
+                AdmissionDecision::Park => {
+                    // Does not fit: park the handed-off KV in host memory.
+                    let staged_ctx = {
+                        let dw = &mut self.workers[w];
+                        let front = dw.pending.front_mut().unwrap();
+                        if !front.was_deferred && !dw.io_busy {
+                            front.was_deferred = true;
+                            dw.io_busy = true;
+                            Some(front.ctx_len)
+                        } else {
+                            None
+                        }
+                    };
+                    if let Some(ctx_len) = staged_ctx {
+                        metrics.staging_events += 1;
+                        metrics.staged_tokens += ctx_len as u64;
+                        let dur_us = secs(cfg.cost.staging_secs(ctx_len));
+                        let bytes = (ctx_len as f64 * kv_bytes_per_token) as u64;
+                        let at = net.stage(w, q.now(), dur_us, bytes);
+                        q.schedule(at, Ev::StageOutDone { worker: w });
+                    }
+                    return;
+                }
+                AdmissionDecision::Admit => {
+                    let mut req = {
+                        let dw = &mut self.workers[w];
+                        let req = dw.pending.pop_front().unwrap();
+                        dw.resident_tokens += req.footprint();
+                        dw.peak_resident = dw.peak_resident.max(dw.resident_tokens);
+                        req
+                    };
+                    metrics.decode_queue_delay.record(to_secs(q.now() - req.arrived_at));
+                    if req.was_deferred {
+                        // KV was parked in host memory; reload before
+                        // joining.  The copy blocks the step loop like the
+                        // stage-out did.
+                        {
+                            let dw = &mut self.workers[w];
+                            dw.staging_in += 1;
+                            dw.io_busy = true;
+                        }
+                        metrics.staging_events += 1;
+                        metrics.staged_tokens += req.ctx_len as u64;
+                        let dur_us = secs(cfg.cost.staging_secs(req.ctx_len));
+                        let bytes = (req.ctx_len as f64 * kv_bytes_per_token) as u64;
+                        req.was_deferred = false;
+                        let at = net.stage(w, q.now(), dur_us, bytes);
+                        q.schedule(at, Ev::StageInDone { req, worker: w });
+                        return; // one IO at a time
+                    } else {
+                        self.workers[w].active.push(req);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn on_stage_in_done(&mut self, w: usize, req: DecodeReq) {
+        let dw = &mut self.workers[w];
+        dw.staging_in -= 1;
+        dw.io_busy = false;
+        dw.active.push(req);
+    }
+
+    pub fn on_stage_out_done(&mut self, w: usize) {
+        self.workers[w].io_busy = false;
+    }
+
+    /// Kick off a decode iteration if the worker can step.
+    pub fn maybe_step(&mut self, w: usize, cfg: &ClusterConfig, q: &mut EventQueue<Ev>) {
+        let dw = &mut self.workers[w];
+        if dw.stepping || dw.io_busy || dw.active.is_empty() {
+            return;
+        }
+        let batch = dw.active.len();
+        let kv_total: usize = dw.active.iter().map(|r| r.ctx_len + r.generated).sum();
+        let dur_us = secs(cfg.cost.decode_step_secs(batch, kv_total));
+        dw.busy_micros += dur_us;
+        dw.stepping = true;
+        q.schedule_in(dur_us, Ev::DecodeStepDone { worker: w });
+    }
+
+    /// One decode iteration completed: every active request generated one
+    /// token (TTFT recorded on the first).  Returns finished requests in
+    /// batch order for the caller's completion accounting.
+    pub fn advance_batch(
+        &mut self,
+        w: usize,
+        now: SimTime,
+        metrics: &mut ServingMetrics,
+    ) -> Vec<DecodeReq> {
+        let dw = &mut self.workers[w];
+        dw.stepping = false;
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < dw.active.len() {
+            let r = &mut dw.active[i];
+            r.generated += 1;
+            if !r.ttft_recorded {
+                r.ttft_recorded = true;
+                let t = to_secs(now - r.issued_at);
+                metrics.ttft.record(t);
+                record_position(&mut metrics.ttft_by_position, r.call_idx, t);
+            }
+            if r.generated >= r.out_tokens {
+                let done = dw.active.swap_remove(i);
+                dw.resident_tokens -= done.footprint();
+                finished.push(done);
+            } else {
+                i += 1;
+            }
+        }
+        finished
+    }
+}

@@ -1,40 +1,53 @@
 //! The discrete-event cluster simulator — paper §3.3's execution pipeline
-//! over the analytic A100 cost model.
+//! over the analytic A100 cost model, decomposed into four components:
 //!
-//! Mechanisms modeled (each maps to a paper claim):
-//!   * per-prefill-worker radix prefix caches with LRU eviction
-//!     → baseline hit-ratio collapse beyond ~40 sessions (Fig 4 top);
-//!   * prefix-aware session pinning vs per-model routing
-//!     → PrefillShare's 4× effective prefix capacity and partial prefill
-//!       at every model switch (§3.3 steps 1–3);
-//!   * pluggable prefill queue policies (`engine::sched`: FIFO, SJF,
-//!     prefix-affinity, chunked) with full/partial prefill durations
-//!     → arrival-rate latency blowup of the baseline (Fig 3) and the
-//!       scheduler ablations (`sched_policy_sweep` bench);
-//!   * iteration-level continuous batching on decode workers with a
-//!     resident-KV cap and host staging on overflow, behind the
-//!     [`DecodeAdmission`] policy trait
-//!     → PrefillShare's high-concurrency throughput rollover (Fig 4 bottom,
-//!       App. B.2);
-//!   * explicit KV handoff costs (prefill → decode transfer).
+//! ```text
+//!             sessions        routed jobs            KV handoff
+//!  arrivals ─▶ Proxy ───────▶ PrefillPool ─────────▶ Interconnect ─▶ DecodePool
+//!             admission +     per-worker sched/ +    per-link FIFO    continuous
+//!             Router          radix cache +          transfer         batching +
+//!             (route/)        per-GPU cost model     queues           staging
+//! ```
+//!
+//! * `Proxy` (`proxy.rs`) — session admission control + the pluggable
+//!   routing policy (`engine::route`: prefix-aware, round-robin, random,
+//!   cache-aware, load-aware);
+//! * `PrefillPool` (`prefill_pool.rs`) — per-worker radix prefix caches
+//!   with LRU eviction, pluggable queue policies (`engine::sched`: FIFO,
+//!   SJF, prefix-affinity, chunked), and per-worker GPU cost profiles so
+//!   heterogeneous A100/A10 fleets can be swept;
+//! * [`Interconnect`] (`interconnect.rs`) — per-link FIFO transfer
+//!   queues for prefill→decode KV handoff and host↔GPU staging;
+//!   contended mode serializes concurrent copies on link bandwidth
+//!   (`--link-gbps`);
+//! * `DecodePool` (`decode_pool.rs`) — iteration-level continuous
+//!   batching with a resident-KV cap and host staging on overflow,
+//!   behind the `DecodeAdmission` policy trait (Fig 4's rollover,
+//!   App. B.2).
 //!
 //! The simulator is deterministic given (trace, config.seed): schedulers
-//! break ties on queue position, the event queue breaks equal timestamps in
-//! insertion order, and the only RNG consumer is the `Random` routing
-//! ablation.  `SchedPolicy::Fifo` reproduces the pre-subsystem simulator
-//! event-for-event (pinned by the golden-metrics regression test).
+//! and routers break ties on fixed orders, the event queue breaks equal
+//! timestamps in insertion order, and the only RNG consumer is the
+//! `random` routing ablation.  The default configuration — FIFO
+//! scheduling, prefix-aware routing, homogeneous pool, uncontended link —
+//! reproduces the pre-decomposition simulator event-for-event (pinned by
+//! the golden-metrics regression tests).
 
-use std::collections::VecDeque;
+mod decode_pool;
+mod interconnect;
+mod prefill_pool;
+mod proxy;
 
-use crate::engine::config::{ClusterConfig, RoutingPolicy, SystemKind};
-use crate::engine::sched::{
-    make_scheduler, AdmissionDecision, AdmissionQuery, CapAdmission, DecodeAdmission, PrefillJob,
-    PrefillScheduler, PrefillUnit,
-};
-use crate::kvcache::radix::RadixCache;
-use crate::metrics::ServingMetrics;
+pub use interconnect::{Interconnect, InterconnectStats, LinkStats};
+
+use decode_pool::{DecodePool, DecodeReq};
+use prefill_pool::PrefillPool;
+use proxy::Proxy;
+
+use crate::engine::config::{ClusterConfig, SystemKind};
+use crate::engine::sched::PrefillJob;
+use crate::metrics::{record_position, ServingMetrics};
 use crate::simtime::{secs, to_secs, EventQueue, SimTime};
-use crate::util::rng::Rng;
 use crate::workload::{simtokens, Trace};
 
 // ---------------------------------------------------------------------------
@@ -42,7 +55,7 @@ use crate::workload::{simtokens, Trace};
 // ---------------------------------------------------------------------------
 
 #[derive(Debug)]
-enum Ev {
+pub(crate) enum Ev {
     SessionArrive { sid: usize },
     /// One prefill work unit (whole job, or one chunk of it) finished.
     PrefillDone { worker: usize },
@@ -53,7 +66,7 @@ enum Ev {
 }
 
 // ---------------------------------------------------------------------------
-// Per-entity state
+// Per-session state
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone)]
@@ -62,55 +75,6 @@ struct SessionState {
     /// Context tokens accumulated so far (sys + init + generated).
     ctx_len: usize,
     arrival: SimTime,
-    done: bool,
-}
-
-/// A decode-phase request (one agent call's generation).
-#[derive(Debug, Clone)]
-struct DecodeReq {
-    sid: usize,
-    #[allow(dead_code)] // retained for tracing/debug dumps
-    call_idx: usize,
-    ctx_len: usize,
-    out_tokens: usize,
-    generated: usize,
-    issued_at: SimTime,
-    ttft_recorded: bool,
-    /// Deferred at least once for decode-KV space -> pays staging on join.
-    was_deferred: bool,
-}
-
-impl DecodeReq {
-    /// Final KV footprint this request needs resident (reserved at join).
-    fn footprint(&self) -> usize {
-        self.ctx_len + self.out_tokens
-    }
-}
-
-struct PrefillWorker {
-    /// Queue ordering / chunking policy (one instance per worker, so SJF
-    /// and affinity rank against *this* worker's radix state).
-    sched: Box<dyn PrefillScheduler>,
-    /// The in-flight work unit; its `entry` holds the pinned match handle.
-    busy: Option<PrefillUnit>,
-    radix: RadixCache,
-    /// Busy-time accounting for utilization reporting.
-    busy_micros: u64,
-}
-
-struct DecodeWorker {
-    active: Vec<DecodeReq>,
-    pending: VecDeque<DecodeReq>,
-    /// Requests whose stage-in transfer is in flight (space reserved).
-    staging_in: usize,
-    stepping: bool,
-    /// A host<->GPU KV copy is in flight; it contends with decode compute
-    /// (vLLM App. B.2: staging "increases CPU–GPU data movement, which can
-    /// increase latency and reduce throughput") — steps are gated on it.
-    io_busy: bool,
-    resident_tokens: usize,
-    busy_micros: u64,
-    peak_resident: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -122,42 +86,21 @@ pub struct Simulator {
     trace: Trace,
     q: EventQueue<Ev>,
     sessions: Vec<SessionState>,
-    prefill: Vec<PrefillWorker>,
-    decode: Vec<DecodeWorker>,
-    admission: Box<dyn DecodeAdmission>,
-    admitted: usize,
-    admission_queue: VecDeque<usize>,
-    rr_counter: usize,
-    rng: Rng,
+    proxy: Proxy,
+    prefill: PrefillPool,
+    decode: DecodePool,
+    net: Interconnect,
     pub metrics: ServingMetrics,
-    completed_sessions: usize,
     last_completion: SimTime,
     first_arrival: SimTime,
 }
 
 impl Simulator {
     pub fn new(cfg: ClusterConfig, trace: Trace) -> Simulator {
-        let n_prefill = cfg.effective_prefill_workers();
-        let prefill = (0..n_prefill)
-            .map(|_| PrefillWorker {
-                sched: make_scheduler(cfg.sched, cfg.chunk_tokens),
-                busy: None,
-                radix: RadixCache::new(cfg.prefill_kv_tokens),
-                busy_micros: 0,
-            })
-            .collect();
-        let decode = (0..cfg.n_models)
-            .map(|_| DecodeWorker {
-                active: Vec::new(),
-                pending: VecDeque::new(),
-                staging_in: 0,
-                stepping: false,
-                io_busy: false,
-                resident_tokens: 0,
-                busy_micros: 0,
-                peak_resident: 0,
-            })
-            .collect();
+        let proxy = Proxy::new(&cfg);
+        let prefill = PrefillPool::new(&cfg);
+        let decode = DecodePool::new(cfg.n_models);
+        let net = Interconnect::new(cfg.n_models, cfg.link_contended);
         let sessions = trace
             .sessions
             .iter()
@@ -165,24 +108,18 @@ impl Simulator {
                 next_call: 0,
                 ctx_len: trace.workload.sys_prompt_tokens + s.init_prompt_tokens,
                 arrival: s.arrival,
-                done: false,
             })
             .collect();
-        let seed = cfg.seed;
         Simulator {
             cfg,
             trace,
             q: EventQueue::new(),
             sessions,
+            proxy,
             prefill,
             decode,
-            admission: Box::new(CapAdmission),
-            admitted: 0,
-            admission_queue: VecDeque::new(),
-            rr_counter: 0,
-            rng: Rng::new(seed ^ 0xd15a66),
+            net,
             metrics: ServingMetrics::default(),
-            completed_sessions: 0,
             last_completion: 0,
             first_arrival: SimTime::MAX,
         }
@@ -214,16 +151,9 @@ impl Simulator {
     fn on_arrival(&mut self, sid: usize) {
         self.metrics.sessions_arrived += 1;
         self.first_arrival = self.first_arrival.min(self.q.now());
-        if self.admitted < self.cfg.max_concurrent_sessions {
-            self.admit(sid);
-        } else {
-            self.admission_queue.push_back(sid);
+        if self.proxy.on_arrival(sid) {
+            self.issue_call(sid);
         }
-    }
-
-    fn admit(&mut self, sid: usize) {
-        self.admitted += 1;
-        self.issue_call(sid);
     }
 
     // -- request lifecycle --------------------------------------------------
@@ -240,27 +170,16 @@ impl Simulator {
             issued_at: self.q.now(),
             key: self.context_key(sid, ctx_len),
         };
-        let w = self.route_prefill(&job);
-        self.prefill[w].sched.enqueue(job);
-        self.try_start_prefill(w);
-    }
-
-    fn route_prefill(&mut self, job: &PrefillJob) -> usize {
-        match self.cfg.system {
+        let w = match self.cfg.system {
             // Baseline: each model has its own dedicated prefill GPU.
             SystemKind::Baseline => job.model,
             SystemKind::PrefillShare => {
-                let n = self.prefill.len();
-                match self.cfg.routing {
-                    RoutingPolicy::PrefixAware => job.sid % n,
-                    RoutingPolicy::RoundRobin => {
-                        self.rr_counter = (self.rr_counter + 1) % n;
-                        self.rr_counter
-                    }
-                    RoutingPolicy::Random => self.rng.range(0, n),
-                }
+                let views = self.prefill.views(self.proxy.uses_load());
+                self.proxy.route(&job, &views)
             }
-        }
+        };
+        self.prefill.enqueue(w, job);
+        self.try_start_prefill(w);
     }
 
     fn context_key(&self, sid: usize, ctx_len: usize) -> Vec<u64> {
@@ -268,54 +187,16 @@ impl Simulator {
         simtokens::context_key(sid as u64, sys, ctx_len - sys)
     }
 
-    /// Dispatch the worker's next scheduler-chosen unit, if idle.
     fn try_start_prefill(&mut self, w: usize) {
-        let unit = {
-            let pw = &mut self.prefill[w];
-            if pw.busy.is_some() {
-                return;
-            }
-            match pw.sched.next_unit(&mut pw.radix) {
-                Some(u) => u,
-                None => return,
-            }
-        };
-
-        if unit.is_first {
-            // Whole-job accounting happens at first dispatch so totals are
-            // identical across whole-job and chunked policies.
-            let matched = unit.entry.matched_tokens;
-            let total_new = unit.entry.job.ctx_len - matched;
-            self.metrics.prefix_hit_tokens += matched as u64;
-            self.metrics.prefix_miss_tokens += total_new as u64;
-            self.metrics.prefill_computed_tokens += total_new as u64;
-            self.metrics.prefill_jobs += 1;
-            let delay = self.q.now() - unit.entry.job.issued_at;
-            self.metrics.prefill_queue_delay.record(to_secs(delay));
+        if let Some(dur_us) = self.prefill.try_start(w, self.q.now(), &mut self.metrics) {
+            self.q.schedule_in(dur_us, Ev::PrefillDone { worker: w });
         }
-        self.metrics.prefill_chunks += 1;
-
-        let dur = self.cfg.cost.prefill_secs(unit.chunk_new, unit.past_tokens);
-        let dur_us = secs(dur);
-        self.prefill[w].busy_micros += dur_us;
-        self.prefill[w].busy = Some(unit);
-        self.q.schedule_in(dur_us, Ev::PrefillDone { worker: w });
     }
 
     fn on_prefill_done(&mut self, w: usize) {
-        let mut unit = self.prefill[w].busy.take().expect("prefill done w/o unit");
-        unit.entry.processed_new += unit.chunk_new;
-
-        if unit.is_last {
-            let handle = unit.entry.handle.take().expect("completed job without handle");
-            {
-                let pw = &mut self.prefill[w];
-                pw.radix.unlock(&handle);
-                pw.radix.insert(&unit.entry.job.key);
-            }
-
-            // Cache handoff: ship the prompt KV to the decode worker.
-            let job = &unit.entry.job;
+        if let Some(job) = self.prefill.finish_unit(w) {
+            // Cache handoff: ship the prompt KV to the decode worker
+            // through its ingress link.
             let call = self.trace.sessions[job.sid].calls[job.call_idx];
             let req = DecodeReq {
                 sid: job.sid,
@@ -324,165 +205,57 @@ impl Simulator {
                 out_tokens: call.out_tokens,
                 generated: 0,
                 issued_at: job.issued_at,
+                arrived_at: 0,
                 ttft_recorded: false,
                 was_deferred: false,
             };
             let dw = call.model; // decode worker hosting this task model
-            let dur = self.cfg.cost.handoff_secs(job.ctx_len);
+            let dur_us = secs(self.cfg.cost.handoff_secs(job.ctx_len));
             self.metrics.handoffs += 1;
             self.metrics.handoff_tokens += job.ctx_len as u64;
-            self.q.schedule_in(secs(dur), Ev::HandoffDone { req, worker: dw });
-        } else {
-            // Unfinished chunked job: back to the scheduler (handle kept,
-            // prefix stays pinned across chunks).
-            self.prefill[w].sched.requeue(unit.entry);
+            let bytes = (job.ctx_len as f64 * self.cfg.cost.llm.kv_bytes_per_token()) as u64;
+            let now = self.q.now();
+            let at = self.net.handoff(dw, now, dur_us, bytes);
+            self.metrics.handoff_link_wait.record(to_secs(at - dur_us - now));
+            self.q.schedule(at, Ev::HandoffDone { req, worker: dw });
         }
-
         self.try_start_prefill(w);
     }
 
     fn on_handoff_done(&mut self, req: DecodeReq, worker: usize) {
-        self.decode[worker].pending.push_back(req);
-        self.try_admit_decode(worker);
-        self.maybe_step(worker);
-    }
-
-    /// Admit pending requests into the batch per the [`DecodeAdmission`]
-    /// policy.  A parked request stages its KV *out* to host memory (a
-    /// blocking copy) and pays a stage-*in* reload when space finally frees
-    /// — both copies contend with decode compute (vLLM App. B.2; this is
-    /// the Fig-4 high-concurrency rollover).
-    fn try_admit_decode(&mut self, w: usize) {
-        loop {
-            let decision = {
-                let dw = &self.decode[w];
-                let Some(front) = dw.pending.front() else { return };
-                self.admission.decide(&AdmissionQuery {
-                    footprint: front.footprint(),
-                    resident_tokens: dw.resident_tokens,
-                    capacity_tokens: self.cfg.decode_kv_tokens,
-                    active: dw.active.len(),
-                    staging_in: dw.staging_in,
-                    max_batch: self.cfg.max_decode_batch,
-                })
-            };
-            match decision {
-                AdmissionDecision::Wait => return,
-                AdmissionDecision::Park => {
-                    // Does not fit: park the handed-off KV in host memory.
-                    let staged_ctx = {
-                        let dw = &mut self.decode[w];
-                        let front = dw.pending.front_mut().unwrap();
-                        if !front.was_deferred && !dw.io_busy {
-                            front.was_deferred = true;
-                            dw.io_busy = true;
-                            Some(front.ctx_len)
-                        } else {
-                            None
-                        }
-                    };
-                    if let Some(ctx_len) = staged_ctx {
-                        self.metrics.staging_events += 1;
-                        self.metrics.staged_tokens += ctx_len as u64;
-                        let dur = self.cfg.cost.staging_secs(ctx_len);
-                        self.q.schedule_in(secs(dur), Ev::StageOutDone { worker: w });
-                    }
-                    return;
-                }
-                AdmissionDecision::Admit => {
-                    let mut req = {
-                        let dw = &mut self.decode[w];
-                        let req = dw.pending.pop_front().unwrap();
-                        dw.resident_tokens += req.footprint();
-                        dw.peak_resident = dw.peak_resident.max(dw.resident_tokens);
-                        req
-                    };
-                    if req.was_deferred {
-                        // KV was parked in host memory; reload before
-                        // joining.  The copy blocks the step loop like the
-                        // stage-out did.
-                        {
-                            let dw = &mut self.decode[w];
-                            dw.staging_in += 1;
-                            dw.io_busy = true;
-                        }
-                        self.metrics.staging_events += 1;
-                        self.metrics.staged_tokens += req.ctx_len as u64;
-                        let dur = self.cfg.cost.staging_secs(req.ctx_len);
-                        req.was_deferred = false;
-                        self.q.schedule_in(secs(dur), Ev::StageInDone { req, worker: w });
-                        return; // one IO at a time
-                    } else {
-                        self.decode[w].active.push(req);
-                    }
-                }
-            }
-        }
+        self.decode.push_handoff(worker, req, self.q.now());
+        self.decode.try_admit(worker, &self.cfg, &mut self.q, &mut self.net, &mut self.metrics);
+        self.decode.maybe_step(worker, &self.cfg, &mut self.q);
     }
 
     fn on_stage_in_done(&mut self, req: DecodeReq, worker: usize) {
-        let dw = &mut self.decode[worker];
-        dw.staging_in -= 1;
-        dw.io_busy = false;
-        dw.active.push(req);
-        self.try_admit_decode(worker);
-        self.maybe_step(worker);
+        self.decode.on_stage_in_done(worker, req);
+        self.decode.try_admit(worker, &self.cfg, &mut self.q, &mut self.net, &mut self.metrics);
+        self.decode.maybe_step(worker, &self.cfg, &mut self.q);
     }
 
     fn on_stage_out_done(&mut self, worker: usize) {
-        self.decode[worker].io_busy = false;
-        self.try_admit_decode(worker);
-        self.maybe_step(worker);
-    }
-
-    fn maybe_step(&mut self, w: usize) {
-        let dw = &mut self.decode[w];
-        if dw.stepping || dw.io_busy || dw.active.is_empty() {
-            return;
-        }
-        let batch = dw.active.len();
-        let kv_total: usize = dw.active.iter().map(|r| r.ctx_len + r.generated).sum();
-        let dur = self.cfg.cost.decode_step_secs(batch, kv_total);
-        let dur_us = secs(dur);
-        dw.busy_micros += dur_us;
-        dw.stepping = true;
-        self.q.schedule_in(dur_us, Ev::DecodeStepDone { worker: w });
+        self.decode.on_stage_out_done(worker);
+        self.decode.try_admit(worker, &self.cfg, &mut self.q, &mut self.net, &mut self.metrics);
+        self.decode.maybe_step(worker, &self.cfg, &mut self.q);
     }
 
     fn on_decode_step_done(&mut self, w: usize) {
-        self.decode[w].stepping = false;
         let now = self.q.now();
-        let mut finished = Vec::new();
-        {
-            let dw = &mut self.decode[w];
-            let mut i = 0;
-            while i < dw.active.len() {
-                let r = &mut dw.active[i];
-                r.generated += 1;
-                if !r.ttft_recorded {
-                    r.ttft_recorded = true;
-                    self.metrics.ttft.record(to_secs(now - r.issued_at));
-                }
-                if r.generated >= r.out_tokens {
-                    let done = dw.active.swap_remove(i);
-                    dw.resident_tokens -= done.footprint();
-                    finished.push(done);
-                } else {
-                    i += 1;
-                }
-            }
-        }
+        let finished = self.decode.advance_batch(w, now, &mut self.metrics);
         let n_done = finished.len();
         for req in finished {
             self.metrics.generated.record(to_secs(now), req.out_tokens as u64);
             self.metrics.requests_completed += 1;
-            self.metrics.request_latency.record(to_secs(now - req.issued_at));
+            let lat = to_secs(now - req.issued_at);
+            self.metrics.request_latency.record(lat);
+            record_position(&mut self.metrics.latency_by_position, req.call_idx, lat);
             self.on_call_complete(req);
         }
         if n_done > 0 {
-            self.try_admit_decode(w);
+            self.decode.try_admit(w, &self.cfg, &mut self.q, &mut self.net, &mut self.metrics);
         }
-        self.maybe_step(w);
+        self.decode.maybe_step(w, &self.cfg, &mut self.q);
     }
 
     fn on_call_complete(&mut self, req: DecodeReq) {
@@ -493,15 +266,12 @@ impl Simulator {
         if s.next_call < self.trace.sessions[sid].calls.len() {
             self.issue_call(sid);
         } else {
-            s.done = true;
             let lat = to_secs(self.q.now() - s.arrival);
             self.metrics.session_latency.record(lat);
             self.metrics.sessions_completed += 1;
-            self.completed_sessions += 1;
             self.last_completion = self.q.now();
-            self.admitted -= 1;
-            if let Some(next) = self.admission_queue.pop_front() {
-                self.admit(next);
+            if let Some(next) = self.proxy.on_session_done() {
+                self.issue_call(next);
             }
         }
     }
@@ -511,19 +281,22 @@ impl Simulator {
         // hit/miss counters were already tracked inline; radix stats give a
         // cross-check + eviction counts).
         let mut evicted = 0u64;
-        let mut prefill_busy = 0u64;
-        for w in &self.prefill {
+        let mut prefill_busy: Vec<u64> = Vec::with_capacity(self.prefill.len());
+        for w in &self.prefill.workers {
             evicted += w.radix.stats.evicted_tokens;
-            prefill_busy += w.busy_micros;
+            prefill_busy.push(w.busy_micros);
         }
-        let mut decode_busy = 0u64;
+        let mut decode_busy: Vec<u64> = Vec::with_capacity(self.decode.workers.len());
         let mut peak_decode_resident = 0usize;
-        for d in &self.decode {
-            decode_busy += d.busy_micros;
+        for d in &self.decode.workers {
+            decode_busy.push(d.busy_micros);
             peak_decode_resident = peak_decode_resident.max(d.peak_resident);
         }
+        let prefill_busy_total: u64 = prefill_busy.iter().sum();
+        let decode_busy_total: u64 = decode_busy.iter().sum();
         let makespan = to_secs(self.last_completion.saturating_sub(self.first_arrival.min(self.last_completion)));
         let throughput = self.metrics.generated.tokens_per_sec(Some(makespan.max(1e-9)));
+        let interconnect = self.net.into_stats();
 
         SimResult {
             p50_session_latency: self.metrics.session_latency.p50(),
@@ -541,12 +314,12 @@ impl Simulator {
             sessions_completed: self.metrics.sessions_completed,
             makespan_s: makespan,
             prefill_util: if makespan > 0.0 {
-                to_secs(prefill_busy) / (makespan * self.prefill.len() as f64)
+                to_secs(prefill_busy_total) / (makespan * self.prefill.len() as f64)
             } else {
                 0.0
             },
             decode_util: if makespan > 0.0 {
-                to_secs(decode_busy) / (makespan * self.decode.len() as f64)
+                to_secs(decode_busy_total) / (makespan * self.decode.workers.len() as f64)
             } else {
                 0.0
             },
@@ -554,9 +327,34 @@ impl Simulator {
             prefill_queue_delay_mean: self.metrics.prefill_queue_delay.mean(),
             prefill_queue_delay_p95: self.metrics.prefill_queue_delay.p95(),
             prefill_chunks: self.metrics.prefill_chunks,
+            decode_queue_delay_mean: self.metrics.decode_queue_delay.mean(),
+            decode_queue_delay_p95: self.metrics.decode_queue_delay.p95(),
+            handoff_link_wait_mean: self.metrics.handoff_link_wait.mean(),
+            handoff_link_wait_p95: self.metrics.handoff_link_wait.p95(),
+            prefill_util_imbalance: imbalance(&prefill_busy),
+            decode_util_imbalance: imbalance(&decode_busy),
+            ttft_mean_by_position: self.metrics.ttft_by_position.iter().map(|h| h.mean()).collect(),
+            latency_mean_by_position: self
+                .metrics
+                .latency_by_position
+                .iter()
+                .map(|h| h.mean())
+                .collect(),
+            interconnect,
             metrics: self.metrics,
         }
     }
+}
+
+/// Busy-time skew across a worker pool: max/mean (1.0 = perfectly
+/// balanced, N = one worker did all the work, 0.0 = pool idle).
+fn imbalance(busy_micros: &[u64]) -> f64 {
+    let total: u64 = busy_micros.iter().sum();
+    if total == 0 || busy_micros.is_empty() {
+        return 0.0;
+    }
+    let mean = total as f64 / busy_micros.len() as f64;
+    *busy_micros.iter().max().unwrap() as f64 / mean
 }
 
 /// Summary of one simulated run — the row a Fig-3/Fig-4 bench prints.
@@ -585,6 +383,22 @@ pub struct SimResult {
     pub prefill_queue_delay_p95: f64,
     /// Dispatched prefill units (== jobs for whole-job policies).
     pub prefill_chunks: u64,
+    /// Decode-side queue delay (handoff arrival -> batch admission).
+    pub decode_queue_delay_mean: f64,
+    pub decode_queue_delay_p95: f64,
+    /// Handoff-link queueing wait (0 everywhere when uncontended).
+    pub handoff_link_wait_mean: f64,
+    pub handoff_link_wait_p95: f64,
+    /// Worker busy-time skew, max/mean per pool — the routing-policy
+    /// balance signal the route sweeps report.
+    pub prefill_util_imbalance: f64,
+    pub decode_util_imbalance: f64,
+    /// Mean TTFT / request latency per agent-call position (index =
+    /// `call_idx`; length = calls per session once any session finished).
+    pub ttft_mean_by_position: Vec<f64>,
+    pub latency_mean_by_position: Vec<f64>,
+    /// Per-link transfer accounting (conservation property tests).
+    pub interconnect: InterconnectStats,
     pub metrics: ServingMetrics,
 }
 
@@ -596,6 +410,7 @@ pub fn simulate(cfg: ClusterConfig, trace: Trace) -> SimResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::route::RoutePolicy;
     use crate::engine::sched::SchedPolicy;
     use crate::workload::{generate_trace, react};
 
@@ -737,5 +552,87 @@ mod tests {
             let b = run_sched(policy, 4.0);
             assert_eq!(a.metrics, b.metrics, "{policy:?} not deterministic");
         }
+    }
+
+    // -- routing + decomposition --------------------------------------------
+
+    #[test]
+    fn every_route_policy_completes_all_sessions() {
+        let trace = small_trace(2.0, 40.0);
+        for policy in RoutePolicy::all() {
+            let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+            cfg.routing = policy;
+            let r = simulate(cfg, trace.clone());
+            assert_eq!(
+                r.sessions_completed as usize,
+                trace.sessions.len(),
+                "{policy:?} lost sessions"
+            );
+            assert_eq!(r.metrics.prefix_miss_tokens, r.prefill_computed_tokens, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn per_position_breakdowns_cover_every_call() {
+        let r = run(SystemKind::PrefillShare, 2.0);
+        let calls_per_session = react().turns * react().agents.len();
+        assert_eq!(r.ttft_mean_by_position.len(), calls_per_session);
+        assert_eq!(r.latency_mean_by_position.len(), calls_per_session);
+        let pos_samples: usize = r.metrics.ttft_by_position.iter().map(|h| h.len()).sum();
+        assert_eq!(pos_samples, r.metrics.ttft.len());
+        let lat_samples: usize = r.metrics.latency_by_position.iter().map(|h| h.len()).sum();
+        assert_eq!(lat_samples, r.metrics.request_latency.len());
+        assert!(r.ttft_mean_by_position.iter().all(|m| m.is_finite() && *m > 0.0));
+    }
+
+    #[test]
+    fn decode_queue_delay_sampled_once_per_request() {
+        let r = run(SystemKind::PrefillShare, 2.0);
+        assert_eq!(r.metrics.decode_queue_delay.len() as u64, r.metrics.requests_completed);
+        assert!(r.decode_queue_delay_mean >= 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_pool_slows_prefill_and_skews_utilization() {
+        use crate::costmodel::{A100_80G, A10_24G};
+        let trace = small_trace(2.0, 60.0);
+        let homog = simulate(ClusterConfig::paper_default(SystemKind::PrefillShare), trace.clone());
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.prefill_gpus = vec![A100_80G, A100_80G, A10_24G, A10_24G];
+        let mixed = simulate(cfg, trace.clone());
+        assert_eq!(mixed.sessions_completed, homog.sessions_completed);
+        // Half the fleet is ~2.7x slower on prefill under the same pinned
+        // share of sessions: TTFT must degrade and busy time must skew.
+        assert!(
+            mixed.ttft_mean > homog.ttft_mean,
+            "mixed {} vs homog {}",
+            mixed.ttft_mean,
+            homog.ttft_mean
+        );
+        assert!(
+            mixed.prefill_util_imbalance > homog.prefill_util_imbalance,
+            "mixed {} vs homog {}",
+            mixed.prefill_util_imbalance,
+            homog.prefill_util_imbalance
+        );
+    }
+
+    #[test]
+    fn contended_link_delays_handoffs_under_narrow_bandwidth() {
+        let trace = small_trace(3.0, 60.0);
+        let mut narrow = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        narrow.cost.link.handoff_bytes_per_s = 2e9; // ~140ms per 2k-token handoff
+        let un = simulate(narrow.clone(), trace.clone());
+        narrow.link_contended = true;
+        let co = simulate(narrow, trace.clone());
+        assert_eq!(co.sessions_completed as usize, trace.sessions.len());
+        assert!(un.handoff_link_wait_p95 == 0.0, "uncontended never queues");
+        assert!(co.handoff_link_wait_p95 > 0.0, "narrow contended link must queue");
+        assert!(
+            co.ttft_mean > un.ttft_mean,
+            "contended {} vs uncontended {}",
+            co.ttft_mean,
+            un.ttft_mean
+        );
     }
 }

@@ -1,0 +1,139 @@
+//! The shared prefill tier: per-worker scheduler + radix cache + cost
+//! model.
+//!
+//! Each worker owns its queue policy instance (`engine::sched`), its
+//! prefix cache, and — under heterogeneous pools
+//! (`ClusterConfig::prefill_gpus`) — its own GPU cost profile and radix
+//! capacity, so a mixed A100/A10 fleet charges tier-accurate prefill
+//! durations.  The pool exposes read-only [`WorkerView`] snapshots for
+//! the router and returns event durations for the simulator to schedule;
+//! it never touches the event queue itself.
+
+use crate::costmodel::CostModel;
+use crate::engine::config::ClusterConfig;
+use crate::engine::route::WorkerView;
+use crate::engine::sched::{make_scheduler, PrefillJob, PrefillScheduler, PrefillUnit};
+use crate::kvcache::radix::RadixCache;
+use crate::metrics::ServingMetrics;
+use crate::simtime::{secs, to_secs, SimTime};
+
+pub(crate) struct PrefillWorker {
+    /// Queue ordering / chunking policy (one instance per worker, so SJF
+    /// and affinity rank against *this* worker's radix state).
+    sched: Box<dyn PrefillScheduler>,
+    /// The in-flight work unit; its `entry` holds the pinned match handle.
+    busy: Option<PrefillUnit>,
+    pub radix: RadixCache,
+    /// Per-worker cost model: the cluster model under homogeneous pools,
+    /// a tier-specific one when `prefill_gpus` overrides this slot.
+    cost: CostModel,
+    /// Busy-time accounting for utilization + imbalance reporting.
+    pub busy_micros: u64,
+}
+
+impl PrefillWorker {
+    /// Remaining new tokens of the in-flight unit's job (0 when idle).
+    fn in_flight_tokens(&self) -> usize {
+        self.busy
+            .as_ref()
+            .map(|u| u.entry.job.ctx_len - u.entry.matched_tokens - u.entry.processed_new)
+            .unwrap_or(0)
+    }
+}
+
+pub(crate) struct PrefillPool {
+    pub workers: Vec<PrefillWorker>,
+}
+
+impl PrefillPool {
+    pub fn new(cfg: &ClusterConfig) -> PrefillPool {
+        let workers = (0..cfg.effective_prefill_workers())
+            .map(|i| {
+                let (cost, kv_tokens) = cfg.prefill_worker_profile(i);
+                PrefillWorker {
+                    sched: make_scheduler(cfg.sched, cfg.chunk_tokens),
+                    busy: None,
+                    radix: RadixCache::new(kv_tokens),
+                    cost,
+                    busy_micros: 0,
+                }
+            })
+            .collect();
+        PrefillPool { workers }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Routing snapshot: one read-only view per worker.  The backlog
+    /// summation (`queued_tokens`, O(queue depth)) runs only when the
+    /// active router declares it reads the load signal.
+    pub fn views(&self, with_load: bool) -> Vec<WorkerView<'_>> {
+        self.workers
+            .iter()
+            .map(|w| WorkerView {
+                radix: &w.radix,
+                outstanding_tokens: if with_load {
+                    w.sched.queued_tokens() + w.in_flight_tokens()
+                } else {
+                    0
+                },
+            })
+            .collect()
+    }
+
+    pub fn enqueue(&mut self, w: usize, job: PrefillJob) {
+        self.workers[w].sched.enqueue(job);
+    }
+
+    /// Dispatch worker `w`'s next scheduler-chosen unit if it is idle;
+    /// returns the unit duration (µs) for the caller to schedule
+    /// `PrefillDone`, `None` when busy or out of work.
+    pub fn try_start(&mut self, w: usize, now: SimTime, metrics: &mut ServingMetrics) -> Option<SimTime> {
+        let pw = &mut self.workers[w];
+        if pw.busy.is_some() {
+            return None;
+        }
+        let unit = pw.sched.next_unit(&mut pw.radix)?;
+
+        if unit.is_first {
+            // Whole-job accounting happens at first dispatch so totals are
+            // identical across whole-job and chunked policies.
+            let matched = unit.entry.matched_tokens;
+            let total_new = unit.entry.job.ctx_len - matched;
+            metrics.prefix_hit_tokens += matched as u64;
+            metrics.prefix_miss_tokens += total_new as u64;
+            metrics.prefill_computed_tokens += total_new as u64;
+            metrics.prefill_jobs += 1;
+            metrics.prefill_queue_delay.record(to_secs(now - unit.entry.job.issued_at));
+        }
+        metrics.prefill_chunks += 1;
+
+        let dur_us = secs(pw.cost.prefill_secs(unit.chunk_new, unit.past_tokens));
+        pw.busy_micros += dur_us;
+        pw.busy = Some(unit);
+        Some(dur_us)
+    }
+
+    /// Complete worker `w`'s in-flight unit.  Returns `Some(job)` when
+    /// the whole job finished (prefix unlocked + context inserted — the
+    /// KV is ready to hand off); `None` when a non-final chunk requeued.
+    pub fn finish_unit(&mut self, w: usize) -> Option<PrefillJob> {
+        let pw = &mut self.workers[w];
+        let mut unit = pw.busy.take().expect("prefill done w/o unit");
+        unit.entry.processed_new += unit.chunk_new;
+
+        if unit.is_last {
+            let handle = unit.entry.handle.take().expect("completed job without handle");
+            pw.radix.unlock(&handle);
+            pw.radix.insert(&unit.entry.job.key);
+            Some(unit.entry.job)
+        } else {
+            // Unfinished chunked job: back to the scheduler (handle kept,
+            // prefix stays pinned across chunks).
+            pw.sched.requeue(unit.entry);
+            None
+        }
+    }
+}

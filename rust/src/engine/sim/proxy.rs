@@ -1,0 +1,70 @@
+//! Cluster front door: session admission control + prefill routing.
+//!
+//! The proxy is the paper's entry tier (§3.3 step 1): it admits sessions
+//! under the concurrency cap (excess arrivals queue FIFO) and assigns
+//! every prefill job a worker through the pluggable [`Router`]
+//! (`engine::route`).  It owns the routing RNG — seeded
+//! `cfg.seed ^ 0xd15a66` exactly as the pre-decomposition simulator —
+//! so `random` routing stays reproducible and no other component
+//! consumes routing randomness.
+
+use std::collections::VecDeque;
+
+use crate::engine::config::ClusterConfig;
+use crate::engine::route::{make_router, Router, WorkerView};
+use crate::engine::sched::PrefillJob;
+use crate::util::rng::Rng;
+
+pub(crate) struct Proxy {
+    router: Box<dyn Router>,
+    rng: Rng,
+    max_concurrent: usize,
+    admitted: usize,
+    backlog: VecDeque<usize>,
+}
+
+impl Proxy {
+    pub fn new(cfg: &ClusterConfig) -> Proxy {
+        Proxy {
+            router: make_router(cfg.routing),
+            rng: Rng::new(cfg.seed ^ 0xd15a66),
+            max_concurrent: cfg.max_concurrent_sessions,
+            admitted: 0,
+            backlog: VecDeque::new(),
+        }
+    }
+
+    /// Admission control at arrival: `true` = start the session now,
+    /// `false` = parked in the FIFO backlog until a slot frees.
+    pub fn on_arrival(&mut self, sid: usize) -> bool {
+        if self.admitted < self.max_concurrent {
+            self.admitted += 1;
+            true
+        } else {
+            self.backlog.push_back(sid);
+            false
+        }
+    }
+
+    /// A session finished: free its slot and hand back the next queued
+    /// session (its slot already claimed) for the caller to start.
+    pub fn on_session_done(&mut self) -> Option<usize> {
+        self.admitted -= 1;
+        let next = self.backlog.pop_front();
+        if next.is_some() {
+            self.admitted += 1;
+        }
+        next
+    }
+
+    /// Pick a prefill worker for `job` over the pool snapshot.
+    pub fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>]) -> usize {
+        self.router.route(job, workers, &mut self.rng)
+    }
+
+    /// Whether the active policy reads the per-worker load signal (gates
+    /// the pool's backlog summation when building views).
+    pub fn uses_load(&self) -> bool {
+        self.router.uses_load()
+    }
+}

@@ -18,6 +18,7 @@
 
 use anyhow::{bail, Result};
 
+use prefillshare::costmodel::GpuSpec;
 use prefillshare::engine::config::{ClusterConfig, RoutingPolicy, SystemKind};
 use prefillshare::engine::experiments as sx;
 use prefillshare::engine::report::{format_row, header, save_rows, Row};
@@ -52,10 +53,12 @@ fn print_help() {
     println!(
         "prefillshare {} — PrefillShare reproduction (see README.md)\n\n\
          USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload> [--options]\n\n\
-         bench-serving --experiment fig3|fig4|fig5|fig6|sched [--seed N] [--out file.json]\n\
+         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes [--seed N] [--out file.json]\n\
          sim           [--system baseline|prefillshare] [--sched fifo|sjf|prefix-affinity|chunked]\n\
-                       [--chunk-tokens N] [--routing prefix|rr|random] [--workload react|reflexion]\n\
-                       [--rate R] [--duration S] [--max-sessions N] [--seed N] [--out file.json]\n\
+                       [--chunk-tokens N] [--route prefix-aware|round-robin|random|cache-aware|load-aware]\n\
+                       [--link-gbps G] [--prefill-gpus a100,a10,...] [--n-prefill N]\n\
+                       [--workload react|reflexion] [--rate R] [--duration S]\n\
+                       [--max-sessions N] [--seed N] [--out file.json]\n\
          accuracy      --experiment fig2|table1|table2 [--steps N] [--artifacts DIR]\n\
          train         --model tiny|small|medium --method full|cc --task arith|transform|toolcall\n\
          serve         [--system baseline|prefillshare] [--sessions N] [--artifacts DIR]\n\
@@ -73,6 +76,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
         "fig5" => sx::fig5(seed),
         "fig6" => sx::fig6(seed),
         "sched" => sx::sched_ablation(seed),
+        "routes" => sx::route_ablation_sweep(seed),
         other => bail!("unknown serving experiment `{other}`"),
     };
     let x_name = rows.first().map(|r| r.x_name.clone()).unwrap_or_default();
@@ -108,12 +112,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
         SchedPolicy::by_name,
         "fifo,sjf,prefix-affinity,chunked",
     );
-    let routing = args.get_choice(
-        "routing",
-        RoutingPolicy::PrefixAware,
-        RoutingPolicy::by_name,
-        "prefix,rr,random",
-    );
+    // `--route` is canonical; `--routing` kept as the pre-subsystem alias.
+    let routing = match args.get("route").or_else(|| args.get("routing")) {
+        None => RoutingPolicy::PrefixAware,
+        Some(v) => RoutingPolicy::by_name(v).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--route expects one of {{prefix-aware,round-robin,random,cache-aware,load-aware}}, got `{v}`"
+            )
+        })?,
+    };
     let wl_name = args.get_or("workload", "react");
     let wl = workload_by_name(wl_name)
         .ok_or_else(|| anyhow::anyhow!("unknown workload `{wl_name}`"))?;
@@ -126,15 +133,34 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.routing = routing;
     cfg.chunk_tokens = args.get_usize("chunk-tokens", cfg.chunk_tokens);
     cfg.max_concurrent_sessions = args.get_usize("max-sessions", cfg.max_concurrent_sessions);
+    cfg.n_prefill_workers = args.get_usize("n-prefill", cfg.n_prefill_workers);
+    // Giving the handoff link a bandwidth turns on the contended
+    // interconnect (per-link FIFO serialization of concurrent handoffs).
+    if args.get("link-gbps").is_some() {
+        let gbps = args.get_f64("link-gbps", 64.0);
+        if !gbps.is_finite() || gbps <= 0.0 {
+            bail!("--link-gbps expects a positive bandwidth in GB/s, got `{gbps}`");
+        }
+        cfg.cost.link.handoff_bytes_per_s = gbps * 1e9;
+        cfg.link_contended = true;
+    }
+    // Heterogeneous prefill pool: one GPU tier per worker, comma-separated.
+    cfg.prefill_gpus = args.get_list("prefill-gpus", GpuSpec::by_name, "a100,a10");
     cfg.seed = seed;
 
     let trace = generate_trace(&wl, rate, duration, seed);
     let n_sessions = trace.sessions.len();
+    let link = if cfg.link_contended {
+        format!(" / link={}GB/s", cfg.cost.link.handoff_bytes_per_s / 1e9)
+    } else {
+        String::new()
+    };
     let result = simulate(cfg, trace);
     println!(
-        "== sim: {} / sched={} / routing={routing:?} / {wl_name} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
+        "== sim: {} / sched={} / route={}{link} / {wl_name} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
         system.label(),
         sched.label(),
+        routing.label(),
     );
     println!("{}", header("rate"));
     // Short system tag ("ps"/"base") so the longest policy name still fits
@@ -168,7 +194,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
 fn cmd_ablation(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 0);
     let rows = sx::routing_ablation(seed);
-    println!("== routing ablation (PrefillShare, ReAct @ 3 sess/s) ==");
+    println!("== routing ablation (PrefillShare, ReAct @ 3 sess/s, all policies) ==");
     println!("{}", header("rate"));
     for r in &rows {
         println!("{}", format_row(r));

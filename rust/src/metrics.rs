@@ -149,6 +149,28 @@ pub struct ServingMetrics {
     /// Prefill work units dispatched.  Equals `prefill_jobs` for whole-job
     /// policies; exceeds it under chunked prefill (chunks per job).
     pub prefill_chunks: u64,
+    /// Decode-side queue delay: KV handoff arrival at the decode worker ->
+    /// admission into the running batch (includes Park/staging holds) —
+    /// the decode counterpart of `prefill_queue_delay`.
+    pub decode_queue_delay: Histogram,
+    /// Handoff-link queueing wait under the contended interconnect (one
+    /// sample per handoff; all zeros when links are uncontended).
+    pub handoff_link_wait: Histogram,
+    /// TTFT broken down by agent-call position within the session
+    /// (index = `DecodeReq::call_idx`; grows on demand) — shows which
+    /// step of the agent chain pays the prefill/handoff cost.
+    pub ttft_by_position: Vec<Histogram>,
+    /// Request latency by agent-call position (same indexing).
+    pub latency_by_position: Vec<Histogram>,
+}
+
+/// Record `v` into the position-indexed histogram family, growing it to
+/// cover `idx` (positions are dense: call 0..calls_per_session-1).
+pub fn record_position(slots: &mut Vec<Histogram>, idx: usize, v: f64) {
+    if slots.len() <= idx {
+        slots.resize_with(idx + 1, Histogram::default);
+    }
+    slots[idx].record(v);
 }
 
 impl ServingMetrics {
@@ -212,6 +234,21 @@ mod tests {
         b.prefill_chunks = 3;
         assert_eq!(a, b);
         b.prefill_jobs = 1;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn position_histograms_grow_on_demand_and_compare() {
+        let mut a = ServingMetrics::default();
+        let mut b = ServingMetrics::default();
+        record_position(&mut a.ttft_by_position, 3, 0.25);
+        assert_eq!(a.ttft_by_position.len(), 4);
+        assert_eq!(a.ttft_by_position[3].len(), 1);
+        assert!(a.ttft_by_position[0].is_empty());
+        assert_ne!(a, b);
+        record_position(&mut b.ttft_by_position, 3, 0.25);
+        assert_eq!(a, b);
+        a.decode_queue_delay.record(0.1);
         assert_ne!(a, b);
     }
 

@@ -86,6 +86,29 @@ impl Args {
                 .unwrap_or_else(|| panic!("--{key} expects one of {{{choices}}}, got `{v}`")),
         }
     }
+
+    /// Parse a comma-separated `--key a,b,c` through a `by_name`-style
+    /// lookup (e.g. `GpuSpec::by_name` for `--prefill-gpus`): empty vec
+    /// when absent, panics with the valid choices on an unknown element.
+    pub fn get_list<T>(
+        &self,
+        key: &str,
+        parse: impl Fn(&str) -> Option<T>,
+        choices: &str,
+    ) -> Vec<T> {
+        match self.get(key) {
+            None => Vec::new(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    parse(s).unwrap_or_else(|| {
+                        panic!("--{key} expects comma-separated {{{choices}}}, got `{s}`")
+                    })
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -138,5 +161,24 @@ mod tests {
     fn choice_rejects_unknown() {
         let lookup = |s: &str| if s == "a" { Some(1) } else { None };
         parse("cmd --pick z").get_choice("pick", 1, lookup, "a");
+    }
+
+    #[test]
+    fn list_parses_comma_separated_elements() {
+        let lookup = |s: &str| match s {
+            "a" => Some(1),
+            "b" => Some(2),
+            _ => None,
+        };
+        let args = parse("cmd --gpus a,b,a");
+        assert_eq!(args.get_list("gpus", lookup, "a,b"), vec![1, 2, 1]);
+        assert!(args.get_list("other", lookup, "a,b").is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "--gpus expects comma-separated")]
+    fn list_rejects_unknown_element() {
+        let lookup = |s: &str| if s == "a" { Some(1) } else { None };
+        parse("cmd --gpus a,z").get_list("gpus", lookup, "a");
     }
 }

@@ -1,20 +1,29 @@
 #!/usr/bin/env python3
-"""Reference generator for `golden_fifo.json`.
+"""Reference generator for `golden_fifo.json` and `golden_routes.json`.
 
 A line-by-line Python port of the rust cluster simulator's FIFO path
-(`engine/sim.rs` + `engine/sched/fifo.rs`), the workload generator
+(`engine/sim/` + `engine/sched/fifo.rs`), the workload generator
 (`workload.rs`), the radix prefix cache (`kvcache/radix.rs`), the cost model
 (`costmodel.rs`) and the PRNG (`util/rng.rs`).  Both implementations are
 deterministic integer-microsecond discrete-event simulations over IEEE-754
 doubles, so an exact port produces identical counters and (ulp-identical)
-float metrics.  The golden regression test (`tests/sched_determinism.rs`)
-pins the rust simulator to this file's output.
+float metrics.  The golden regression tests (`tests/sched_determinism.rs`,
+`tests/routing_interconnect.rs`) pin the rust simulator to this file's
+output.
+
+Beyond the FIFO/prefix-aware default (golden_fifo.json), the port models
+the routing subsystem's `round-robin` and `cache-aware` policies and the
+contended per-link FIFO interconnect (`engine/sim/interconnect.rs`), and
+pins them in a second fixture (golden_routes.json) together with the
+decode-queue-delay / link-wait / utilization-imbalance / per-position-TTFT
+metrics those scenarios exercise.
 
 Regenerate after an *intentional* simulator behaviour change:
 
     python3 rust/tests/fixtures/gen_golden.py
 
-(or run the rust side with `PREFILLSHARE_BLESS=1 cargo test golden`).
+(or run the rust side with `PREFILLSHARE_BLESS=1 cargo test golden` for
+local inspection of a divergence).
 """
 
 import heapq
@@ -191,9 +200,9 @@ def decode_step_secs(batch, kv_tokens_total):
     return byts / (HBM_BPS * DECODE_MEMBW_EFF) + DECODE_STEP_OVERHEAD
 
 
-def handoff_secs(tokens):
+def handoff_secs(tokens, bps=HANDOFF_BPS):
     byts = float(tokens) * KV_BYTES_PER_TOKEN
-    return HANDOFF_LAT + byts / HANDOFF_BPS
+    return HANDOFF_LAT + byts / bps
 
 
 def staging_secs(tokens):
@@ -201,10 +210,13 @@ def staging_secs(tokens):
     return STAGING_LAT + byts / STAGING_BPS
 
 
-def cluster_config(system):
+def cluster_config(system, routing="prefix", link_contended=False, handoff_bps=HANDOFF_BPS):
     usable = max(MEM_BYTES * 0.9 - weight_bytes(), 1e9)
     return {
         "system": system,  # "baseline" | "prefillshare"
+        "routing": routing,  # "prefix" | "rr" | "cache"
+        "link_contended": link_contended,
+        "handoff_bps": handoff_bps,
         "n_prefill_workers": 4,
         "n_models": 4,
         "max_concurrent_sessions": 64,
@@ -261,6 +273,25 @@ class RadixCache:
             return nid
         self.nodes.append(node)
         return len(self.nodes) - 1
+
+    def peek_prefix(self, tokens):
+        # Read-only descent (kvcache/radix.rs::peek_prefix): no LRU touch,
+        # no pinning, no statistics — the cache-aware router's probe.
+        cur = self.root
+        matched = 0
+        while True:
+            if matched == len(tokens):
+                break
+            child = self.nodes[cur].children.get(tokens[matched])
+            if child is None:
+                break
+            elen = len(self.nodes[child].edge)
+            common = common_len(self.nodes[child].edge, tokens[matched:])
+            matched += common
+            if common < elen:
+                break
+            cur = child
+        return matched
 
     def match_prefix(self, tokens):
         now = self._tick()
@@ -418,7 +449,7 @@ class Histogram:
 
 
 # ---------------------------------------------------------------------------
-# engine/sim.rs — FIFO path
+# engine/sim/ — FIFO path (Proxy + PrefillPool + Interconnect + DecodePool)
 # ---------------------------------------------------------------------------
 
 
@@ -434,7 +465,7 @@ def swap_remove(lst, i):
 class DecodeReq:
     __slots__ = (
         "sid", "call_idx", "ctx_len", "out_tokens", "generated", "issued_at",
-        "ttft_recorded", "was_deferred",
+        "arrived_at", "ttft_recorded", "was_deferred",
     )
 
     def __init__(self, sid, call_idx, ctx_len, out_tokens, issued_at):
@@ -444,11 +475,19 @@ class DecodeReq:
         self.out_tokens = out_tokens
         self.generated = 0
         self.issued_at = issued_at
+        self.arrived_at = 0
         self.ttft_recorded = False
         self.was_deferred = False
 
     def footprint(self):
         return self.ctx_len + self.out_tokens
+
+
+def record_pos(slots, idx, v):
+    # metrics.rs::record_position — grow-on-demand histogram family.
+    while len(slots) <= idx:
+        slots.append(Histogram())
+    slots[idx].record(v)
 
 
 class Simulator:
@@ -491,6 +530,10 @@ class Simulator:
         ]
         self.admitted = 0
         self.admission_queue = deque()
+        # routing + interconnect state (engine/sim/{proxy,interconnect}.rs)
+        self.rr = 0
+        self.link_free = [0] * cfg["n_models"]
+        self.staging_free = [0] * cfg["n_models"]
         # counters
         self.m = {
             "sessions_arrived": 0,
@@ -511,6 +554,9 @@ class Simulator:
         self.ttft = Histogram()
         self.request_latency = Histogram()
         self.queue_delay = Histogram()
+        self.decode_qd = Histogram()
+        self.handoff_wait = Histogram()
+        self.ttft_pos = []
         self.tput_first = None
         self.tput_last = None
         self.last_completion = 0
@@ -579,9 +625,50 @@ class Simulator:
         if self.cfg["system"] == "baseline":
             w = model
         else:
-            w = sid % len(self.prefill)  # prefix-aware routing
+            w = self.route(job)
         self.prefill[w]["queue"].append(job)
         self.try_start_prefill(w)
+
+    def outstanding(self, w):
+        # prefill_pool.rs: queued remaining (full ctx before first
+        # dispatch) + the busy whole-job unit's remainder.
+        pw = self.prefill[w]
+        t = sum(j["ctx_len"] for j in pw["queue"])
+        if pw["busy"] is not None:
+            job, _path, matched = pw["busy"]
+            t += job["ctx_len"] - matched
+        return t
+
+    def route(self, job):
+        # engine/route/: prefix_aware.rs / round_robin.rs / cache_aware.rs
+        n = len(self.prefill)
+        pol = self.cfg.get("routing", "prefix")
+        if pol == "rr":
+            self.rr = (self.rr + 1) % n
+            return self.rr
+        if pol == "cache":
+            scores = [pw["radix"].peek_prefix(job["key"]) for pw in self.prefill]
+            best = max(scores)
+            if best * 2 < job["ctx_len"]:
+                # Weak match (shared sys prefix only): least-loaded
+                # placement; ties prefer the session's home worker.
+                outs = [self.outstanding(i) for i in range(n)]
+                m = min(outs)
+                home = job["sid"] % n
+                if outs[home] == m:
+                    return home
+                return outs.index(m)
+            home = job["sid"] % n
+            if scores[home] == best:
+                return home
+            pick = None
+            for i, s in enumerate(scores):
+                if s != best:
+                    continue
+                if pick is None or self.outstanding(i) < self.outstanding(pick):
+                    pick = i
+            return pick
+        return job["sid"] % n  # prefix-aware session pinning
 
     # -- prefill ----------------------------------------------------------
 
@@ -600,12 +687,12 @@ class Simulator:
         self.m["prefill_chunks"] += 1
         dur_us = secs(prefill_secs(new_tokens, matched))
         pw["busy_micros"] += dur_us
-        pw["busy"] = (job, path)
+        pw["busy"] = (job, path, matched)
         self.schedule_in(dur_us, ("prefill_done", w))
 
     def on_prefill_done(self, w):
         pw = self.prefill[w]
-        job, path = pw["busy"]
+        job, path, _matched = pw["busy"]
         pw["busy"] = None
         pw["radix"].unlock(path)
         pw["radix"].insert(job["key"])
@@ -613,12 +700,30 @@ class Simulator:
         req = DecodeReq(job["sid"], job["call_idx"], job["ctx_len"], out_tokens, job["issued_at"])
         self.m["handoffs"] += 1
         self.m["handoff_tokens"] += job["ctx_len"]
-        self.schedule_in(secs(handoff_secs(job["ctx_len"])), ("handoff_done", req, model))
+        # Interconnect (engine/sim/interconnect.rs): FIFO per ingress link
+        # when contended, fire-and-forget otherwise.
+        dur = secs(handoff_secs(job["ctx_len"], self.cfg.get("handoff_bps", HANDOFF_BPS)))
+        now = self.now
+        start = max(now, self.link_free[model]) if self.cfg.get("link_contended") else now
+        end = start + dur
+        self.link_free[model] = max(self.link_free[model], end)
+        self.handoff_wait.record(to_secs(end - dur - now))
+        self.schedule(end, ("handoff_done", req, model))
         self.try_start_prefill(w)
 
     # -- decode -----------------------------------------------------------
 
+    def stage_transfer(self, w, dur):
+        # interconnect.rs staging link: FIFO when contended (covers the one
+        # overlap io_busy permits: a stage-in admitted while its own
+        # stage-out is still draining), fire-and-forget otherwise.
+        start = max(self.now, self.staging_free[w]) if self.cfg.get("link_contended") else self.now
+        end = start + dur
+        self.staging_free[w] = max(self.staging_free[w], end)
+        return end
+
     def on_handoff_done(self, req, w):
+        req.arrived_at = self.now
         self.decode[w]["pending"].append(req)
         self.try_admit_decode(w)
         self.maybe_step(w)
@@ -639,18 +744,21 @@ class Simulator:
                     dw["io_busy"] = True
                     self.m["staging_events"] += 1
                     self.m["staged_tokens"] += front.ctx_len
-                    self.schedule_in(secs(staging_secs(front.ctx_len)), ("stage_out", w))
+                    end = self.stage_transfer(w, secs(staging_secs(front.ctx_len)))
+                    self.schedule(end, ("stage_out", w))
                 return
             req = dw["pending"].popleft()
             dw["resident"] += fp
             dw["peak_resident"] = max(dw["peak_resident"], dw["resident"])
+            self.decode_qd.record(to_secs(self.now - req.arrived_at))
             if req.was_deferred:
                 dw["staging_in"] += 1
                 dw["io_busy"] = True
                 self.m["staging_events"] += 1
                 self.m["staged_tokens"] += req.ctx_len
                 req.was_deferred = False
-                self.schedule_in(secs(staging_secs(req.ctx_len)), ("stage_in", req, w))
+                end = self.stage_transfer(w, secs(staging_secs(req.ctx_len)))
+                self.schedule(end, ("stage_in", req, w))
                 return
             dw["active"].append(req)
 
@@ -690,7 +798,9 @@ class Simulator:
             r.generated += 1
             if not r.ttft_recorded:
                 r.ttft_recorded = True
-                self.ttft.record(to_secs(now - r.issued_at))
+                t = to_secs(now - r.issued_at)
+                self.ttft.record(t)
+                record_pos(self.ttft_pos, r.call_idx, t)
             if r.generated >= r.out_tokens:
                 done = swap_remove(dw["active"], i)
                 dw["resident"] -= done.footprint()
@@ -754,6 +864,18 @@ class Simulator:
         ttft_p95 = self.ttft.quantile(0.95)
         qd_mean = self.queue_delay.mean()
         qd_p95 = self.queue_delay.quantile(0.95)
+        # Extended metrics, evaluated in SimResult construction order
+        # (means run on insertion order before their p95 sorts).
+        dqd_mean = self.decode_qd.mean()
+        dqd_p95 = self.decode_qd.quantile(0.95)
+        hw_mean = self.handoff_wait.mean()
+
+        def imbalance(busy):
+            # sim/mod.rs::imbalance — busy-time skew, max/mean per pool.
+            total = sum(busy)
+            if total == 0 or not busy:
+                return 0.0
+            return max(busy) / (total / len(busy))
 
         counters = dict(self.m)
         counters["evicted_tokens"] = evicted
@@ -771,7 +893,15 @@ class Simulator:
             "prefill_queue_delay_mean": qd_mean,
             "prefill_queue_delay_p95": qd_p95,
         }
-        return counters, floats
+        extra = {
+            "decode_queue_delay_mean": dqd_mean,
+            "decode_queue_delay_p95": dqd_p95,
+            "handoff_link_wait_mean": hw_mean,
+            "prefill_util_imbalance": imbalance([w["busy_micros"] for w in self.prefill]),
+            "ttft_pos0_mean": self.ttft_pos[0].mean() if self.ttft_pos else float("nan"),
+            "ttft_pos_last_mean": self.ttft_pos[-1].mean() if self.ttft_pos else float("nan"),
+        }
+        return counters, floats, extra
 
 
 # ---------------------------------------------------------------------------
@@ -783,12 +913,33 @@ GOLDEN_DURATION = 60.0
 GOLDEN_TRACE_SEED = 42
 
 
+def trace_header(trace, total_calls):
+    return {
+        "workload": "react",
+        "rate": GOLDEN_RATE,
+        "duration_s": GOLDEN_DURATION,
+        "seed": GOLDEN_TRACE_SEED,
+        "sessions": len(trace),
+        "calls": total_calls,
+    }
+
+
+def write_fixture(filename, fixture):
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), filename)
+    with open(out, "w") as f:
+        json.dump(fixture, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
 def main():
     trace = generate_trace(REACT, GOLDEN_RATE, GOLDEN_DURATION, GOLDEN_TRACE_SEED)
     total_calls = sum(len(s["calls"]) for s in trace)
+
+    # -- golden_fifo.json: the pre-decomposition default (unchanged) --------
     scenarios = []
     for system in ("prefillshare", "baseline"):
-        counters, floats = Simulator(cluster_config(system), trace).run()
+        counters, floats, _extra = Simulator(cluster_config(system), trace).run()
         assert counters["sessions_completed"] == len(trace), (system, counters)
         assert counters["requests_completed"] == total_calls
         assert counters["prefix_miss_tokens"] == counters["prefill_computed_tokens"]
@@ -799,21 +950,10 @@ def main():
         "generate_trace(react, 2.0, 60.0, 42); generated by gen_golden.py "
         "(bit-faithful port of the rust simulator). Counters compare exactly, "
         "floats to 1e-6 relative tolerance.",
-        "trace": {
-            "workload": "react",
-            "rate": GOLDEN_RATE,
-            "duration_s": GOLDEN_DURATION,
-            "seed": GOLDEN_TRACE_SEED,
-            "sessions": len(trace),
-            "calls": total_calls,
-        },
+        "trace": trace_header(trace, total_calls),
         "scenarios": scenarios,
     }
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden_fifo.json")
-    with open(out, "w") as f:
-        json.dump(fixture, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"wrote {out}")
+    write_fixture("golden_fifo.json", fixture)
     for s in scenarios:
         c, fl = s["counters"], s["floats"]
         print(
@@ -821,6 +961,58 @@ def main():
             f"{c['prefill_computed_tokens']} prefill tokens, hit {c['prefix_hit_tokens']}, "
             f"p95 {fl['p95_session_latency']:.3f}s, tput {fl['throughput_tok_s']:.0f} tok/s"
         )
+
+    # -- golden_routes.json: routing subsystem + contended interconnect ----
+    # (routing, link_contended, handoff_gbps) per scenario; the rust test
+    # rebuilds ClusterConfig from these fields.
+    route_scenarios = []
+    for name, routing, contended, gbps, decode_kv in (
+        ("prefillshare-rr", "rr", False, 64.0, None),
+        ("prefillshare-rr-link8", "rr", True, 8.0, None),
+        ("prefillshare-prefix-link8", "prefix", True, 8.0, None),
+        ("prefillshare-cache", "cache", False, 64.0, None),
+        # Decode-KV pressure + contended links: exercises the staging links
+        # (App. B.2 regime), so the contended-staging path is pinned too.
+        ("prefillshare-rr-link8-staged", "rr", True, 8.0, 4000),
+    ):
+        cfg = cluster_config(
+            "prefillshare", routing=routing, link_contended=contended, handoff_bps=gbps * 1e9
+        )
+        if decode_kv is not None:
+            cfg["decode_kv_tokens"] = decode_kv
+        counters, floats, extra = Simulator(cfg, trace).run()
+        assert counters["sessions_completed"] == len(trace), (name, counters)
+        assert counters["requests_completed"] == total_calls, name
+        if decode_kv is not None:
+            assert counters["staging_events"] > 0, (name, "expected staging pressure")
+        route_scenarios.append(
+            {
+                "name": name,
+                "routing": routing,
+                "link_contended": contended,
+                "link_gbps": gbps,
+                "decode_kv_tokens": decode_kv,
+                "counters": counters,
+                "floats": {**floats, **extra},
+            }
+        )
+        print(
+            f"  {name}: hit {counters['prefix_hit_tokens']}, "
+            f"p95 {floats['p95_session_latency']:.3f}s, "
+            f"link wait mean {extra['handoff_link_wait_mean'] * 1e3:.3f}ms, "
+            f"imb {extra['prefill_util_imbalance']:.3f}"
+        )
+
+    routes_fixture = {
+        "description": "Golden routing/interconnect metrics over the same trace: "
+        "round-robin and cache-aware routing, uncontended vs contended per-link "
+        "FIFO handoff (8 GB/s), FIFO scheduling throughout; generated by "
+        "gen_golden.py (bit-faithful port of the rust simulator). Counters "
+        "compare exactly, floats to 1e-6 relative tolerance.",
+        "trace": trace_header(trace, total_calls),
+        "scenarios": route_scenarios,
+    }
+    write_fixture("golden_routes.json", routes_fixture)
 
 
 if __name__ == "__main__":
