@@ -1,0 +1,110 @@
+//! Bench: decode-side session KV residency (`--decode-reuse`) on vs off.
+//!
+//! Runs the PrefillShare topology over identical (trace, seed) per
+//! arrival rate with and without decode reuse and reports the quantities
+//! the residency subsystem exists to move: total handoff bytes shipped
+//! (without reuse every agent call re-ships the session's whole context,
+//! so bytes compound quadratically over a session), the decode reuse hit
+//! ratio, retained-KV evictions, and TTFT by agent-call position (later
+//! calls stop paying full-context handoff latency).
+//!
+//! Headline check (the PR's acceptance bar): at the 2–4 sessions/s
+//! operating points, reuse ships ≥ 40% fewer handoff bytes with
+//! identical `sessions_completed` (and never ships *more* at any rate).
+//! Past saturation (8/s at the default 64-session cap) the saving
+//! erodes — cap-pressure LRU evictions discard retained KV before
+//! sessions return — which the sweep reports rather than hides.
+//!
+//! Run: `cargo bench --bench decode_reuse_sweep`
+
+use prefillshare::engine::experiments::{reuse_ablation, REUSE_RATES};
+use prefillshare::engine::report::{format_row, header, save_rows};
+
+fn main() {
+    let seed = 0;
+    let t0 = std::time::Instant::now();
+    let rows = reuse_ablation(seed);
+    println!("== decode-reuse sweep (PrefillShare, ReAct, seed {seed}) ==");
+    println!("{}", header("rate"));
+    for r in &rows {
+        println!("{}", format_row(r));
+    }
+
+    let at = |sys: &str, rate: f64| {
+        rows.iter().find(|r| r.system == sys && r.x == rate).expect("row")
+    };
+    println!("\nhandoff traffic and reuse by rate (kv tokens shipped over handoff links):");
+    for &rate in REUSE_RATES {
+        let off = at("ps/reuse-off", rate);
+        let on = at("ps/reuse-on", rate);
+        let saved = 1.0 - on.result.handoff_tokens as f64 / off.result.handoff_tokens as f64;
+        println!(
+            "  rate={rate:<4} off={:>9} tok  on={:>9} tok  saved={:>5.1}%  reuse={:>5.1}%  \
+             delta_handoffs={}  evictions={}  peak_retained={}",
+            off.result.handoff_tokens,
+            on.result.handoff_tokens,
+            100.0 * saved,
+            100.0 * on.result.decode_reuse_ratio,
+            on.result.handoffs_delta,
+            on.result.retained_evictions,
+            on.result.peak_retained_kv_tokens,
+        );
+    }
+
+    println!("\nmean TTFT by agent-call position (s), first vs final call:");
+    for &rate in REUSE_RATES {
+        let off = at("ps/reuse-off", rate);
+        let on = at("ps/reuse-on", rate);
+        let first = |r: &prefillshare::engine::report::Row| {
+            *r.result.ttft_mean_by_position.first().expect("positions")
+        };
+        let last = |r: &prefillshare::engine::report::Row| {
+            *r.result.ttft_mean_by_position.last().expect("positions")
+        };
+        println!(
+            "  rate={rate:<4} off: pos0={:.3} last={:.3}   on: pos0={:.3} last={:.3}",
+            first(off),
+            last(off),
+            first(on),
+            last(on),
+        );
+    }
+
+    // Acceptance: no lost work and never more traffic at any rate; ≥ 40%
+    // handoff-byte reduction at the pre-saturation 2–4 sessions/s points.
+    for &rate in REUSE_RATES {
+        let off = at("ps/reuse-off", rate);
+        let on = at("ps/reuse-on", rate);
+        assert_eq!(
+            on.result.sessions_completed, off.result.sessions_completed,
+            "decode reuse lost sessions at rate {rate}"
+        );
+        let ratio = on.result.handoff_tokens as f64 / off.result.handoff_tokens as f64;
+        assert!(ratio <= 1.0, "reuse shipped MORE bytes at rate {rate}: {ratio:.3}");
+        if (2.0..=4.0).contains(&rate) {
+            assert!(
+                ratio <= 0.6,
+                "reuse shipped {:.1}% of baseline handoff bytes at rate {rate} (need <= 60%)",
+                100.0 * ratio
+            );
+            println!(
+                "OK: decode reuse ships {:.1}% of baseline handoff bytes at rate {rate} \
+                 ({} sessions intact)",
+                100.0 * ratio,
+                on.result.sessions_completed
+            );
+        } else {
+            println!(
+                "   (rate {rate}: {:.1}% of baseline — outside the asserted 2-4/s window)",
+                100.0 * ratio
+            );
+        }
+    }
+
+    save_rows("reports/decode_reuse.json", &rows).expect("save");
+    println!(
+        "saved reports/decode_reuse.json ({} rows, {:.1}s total)",
+        rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

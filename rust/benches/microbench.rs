@@ -97,6 +97,41 @@ fn main() {
         "  -> {:.0} simulated agent-calls/s of bench wall time",
         n_calls as f64 / r.p50_s
     );
+
+    // Routing snapshot fast path: static routers (`needs_views() == false`)
+    // skip the per-call `Vec<WorkerView>` snapshot entirely; cache-aware
+    // builds it and probes every radix.  NOTE: the two policies also
+    // *place* jobs differently (different queueing/radix churn), so the
+    // wall-time gap is an upper bound that mixes snapshot + probe cost
+    // with policy-behavior differences, not a pure snapshot measurement.
+    use prefillshare::engine::route::RoutePolicy;
+    let sim_with_route = |policy: RoutePolicy| {
+        move || {
+            let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+            cfg.routing = policy;
+            simulate(cfg, generate_trace(&react(), 4.0, 120.0, 0)).sessions_completed
+        }
+    };
+    let fast = bench(
+        "cluster sim, snapshot-free routing (prefix-aware fast path)",
+        1,
+        10,
+        sim_with_route(RoutePolicy::PrefixAware),
+    );
+    fast.print();
+    let probing = bench(
+        "cluster sim, snapshot routing (cache-aware, radix probes)",
+        1,
+        10,
+        sim_with_route(RoutePolicy::CacheAware),
+    );
+    probing.print();
+    println!(
+        "  -> cache-aware vs fast-path gap: {:.1} µs per routed call ({:.2}x; \
+         upper bound — includes policy-behavior differences, not just the snapshot)",
+        (probing.p50_s - fast.p50_s) / n_calls as f64 * 1e6,
+        probing.p50_s / fast.p50_s
+    );
 }
 
 /// §Perf L3 real path: per-token decode step, cached-literal hot path vs the

@@ -19,6 +19,10 @@ fn main() {
     let t0 = std::time::Instant::now();
     let rows = route_ablation_sweep(seed);
     println!("== routing-policy sweep (PrefillShare, ReAct @ {ROUTE_RATE}/s, seed {seed}) ==");
+    println!(
+        "(prefix-aware/round-robin/random route through the snapshot-free \
+         `route_indexed` fast path; cache-/load-aware build per-call views)"
+    );
     println!("{}", header("max_sessions"));
     for r in &rows {
         println!("{}", format_row(r));

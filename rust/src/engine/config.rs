@@ -60,6 +60,13 @@ pub struct ClusterConfig {
     /// Resident-KV capacity per decode worker, in tokens; beyond this,
     /// arriving handoffs are staged through host memory (App. B.2).
     pub decode_kv_tokens: usize,
+    /// Decode-side session KV residency with delta handoff
+    /// (`--decode-reuse`): finished requests leave their KV retained on
+    /// the decode worker, later calls of the session ship only the delta,
+    /// and retained entries are reclaimed LRU under the resident cap
+    /// (discard vs host-park priced by the cost model).  `false` (the
+    /// default) reproduces the golden fixtures bit-for-bit.
+    pub decode_reuse: bool,
     /// Serialize KV transfers FIFO per interconnect link (`--link-gbps`
     /// implies this).  `false` reproduces the original fire-and-forget
     /// fixed-cost handoff — the configuration the golden fixture pins.
@@ -114,6 +121,7 @@ impl ClusterConfig {
             max_decode_batch: 48,
             prefill_kv_tokens,
             decode_kv_tokens,
+            decode_reuse: false,
             link_contended: false,
             prefill_gpus: Vec::new(),
             seed: 0,
@@ -170,6 +178,7 @@ mod tests {
         assert_eq!(c.sched, SchedPolicy::Fifo);
         assert_eq!(c.routing, RoutePolicy::PrefixAware);
         assert!(!c.link_contended);
+        assert!(!c.decode_reuse);
         assert!(c.prefill_gpus.is_empty());
         assert!(c.chunk_tokens > 0);
     }

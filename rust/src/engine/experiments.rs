@@ -197,6 +197,45 @@ pub fn route_ablation_sweep(seed: u64) -> Vec<Row> {
     route_sweep(LLAMA8B, &react(), ROUTE_CONCURRENCY, seed)
 }
 
+/// Arrival rates swept in the decode-reuse comparison — the axis along
+/// which per-session handoff traffic compounds (each call re-ships the
+/// whole context without reuse, only the delta with it).
+pub const REUSE_RATES: &[f64] = &[1.0, 2.0, 4.0, 8.0];
+
+/// Decode-side session KV residency comparison (`--decode-reuse` on vs
+/// off) over identical (trace, seed) per rate: one row pair per rate, so
+/// handoff tokens/bytes, TTFT by agent-call position, staging and
+/// latency are directly comparable (`decode_reuse_sweep` bench,
+/// `bench-serving --experiment reuse`).
+pub fn reuse_sweep(llm: LlmSpec, wl: &WorkloadSpec, rates: &[f64], seed: u64) -> Vec<Row> {
+    let traces: Vec<crate::workload::Trace> = rates
+        .iter()
+        .map(|&rate| generate_trace(wl, rate, HORIZON_S, seed))
+        .collect();
+    let mut rows = Vec::new();
+    for &decode_reuse in &[false, true] {
+        for (&rate, trace) in rates.iter().zip(&traces) {
+            let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
+            cfg.decode_reuse = decode_reuse;
+            cfg.seed = seed;
+            let result = simulate(cfg, trace.clone());
+            rows.push(Row {
+                system: format!("ps/reuse-{}", if decode_reuse { "on" } else { "off" }),
+                workload: wl.name.to_string(),
+                x_name: "rate".into(),
+                x: rate,
+                result,
+            });
+        }
+    }
+    rows
+}
+
+/// CLI/bench wrapper: the default decode-reuse comparison (LLaMA8B, ReAct).
+pub fn reuse_ablation(seed: u64) -> Vec<Row> {
+    reuse_sweep(LLAMA8B, &react(), REUSE_RATES, seed)
+}
+
 /// §3.3 memory equations: measured peak KV residency vs model count N.
 /// Returns (n_models, baseline_tokens, prefillshare_tokens) triples from
 /// radix residency accounting at a fixed moderate load.

@@ -7,7 +7,8 @@
 //! pluggable routing via [`route`]), a `PrefillPool` (pluggable scheduling
 //! via [`sched`], per-worker GPU profiles), an `Interconnect` (per-link
 //! FIFO KV transfer queues), and a `DecodePool` (continuous batching +
-//! staging).
+//! staging, with optional per-session KV residency and delta handoff
+//! behind `--decode-reuse`).
 
 pub mod config;
 pub mod experiments;

@@ -15,7 +15,7 @@ pub struct Row {
 
 pub fn header(x_name: &str) -> String {
     format!(
-        "{:<18} {:<10} {:>8} | {:>10} {:>10} {:>10} {:>9} {:>8} {:>9} {:>8} {:>9} {:>8} {:>6}",
+        "{:<18} {:<10} {:>8} | {:>10} {:>10} {:>10} {:>9} {:>8} {:>9} {:>8} {:>9} {:>8} {:>6} {:>9}",
         "system",
         "workload",
         x_name,
@@ -28,13 +28,14 @@ pub fn header(x_name: &str) -> String {
         "prefillU",
         "qdelay95",
         "dqd95",
-        "imb"
+        "imb",
+        "reuse_pct"
     )
 }
 
 pub fn format_row(r: &Row) -> String {
     format!(
-        "{:<18} {:<10} {:>8.2} | {:>10.2} {:>10.2} {:>10.0} {:>9.3} {:>8.1} {:>9} {:>8.2} {:>9.3} {:>8.3} {:>6.2}",
+        "{:<18} {:<10} {:>8.2} | {:>10.2} {:>10.2} {:>10.0} {:>9.3} {:>8.1} {:>9} {:>8.2} {:>9.3} {:>8.3} {:>6.2} {:>9.1}",
         r.system,
         r.workload,
         r.x,
@@ -48,6 +49,7 @@ pub fn format_row(r: &Row) -> String {
         r.result.prefill_queue_delay_p95,
         r.result.decode_queue_delay_p95,
         r.result.prefill_util_imbalance,
+        100.0 * r.result.decode_reuse_ratio,
     )
 }
 
@@ -79,6 +81,16 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
                     (
                         "peak_decode_resident_tokens",
                         json::num(r.result.peak_decode_resident_tokens as f64),
+                    ),
+                    ("handoff_tokens", json::num(r.result.handoff_tokens as f64)),
+                    ("decode_reuse_ratio", json::num(r.result.decode_reuse_ratio)),
+                    ("handoffs_delta", json::num(r.result.handoffs_delta as f64)),
+                    ("decode_reuse_tokens", json::num(r.result.decode_reuse_tokens as f64)),
+                    ("retained_evictions", json::num(r.result.retained_evictions as f64)),
+                    ("host_reload_tokens", json::num(r.result.host_reload_tokens as f64)),
+                    (
+                        "peak_retained_kv_tokens",
+                        json::num(r.result.peak_retained_kv_tokens as f64),
                     ),
                     (
                         "prefill_queue_delay_mean_s",

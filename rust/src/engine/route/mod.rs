@@ -65,6 +65,24 @@ pub trait Router {
     fn uses_load(&self) -> bool {
         false
     }
+
+    /// Whether this policy reads the [`WorkerView`] snapshot at all
+    /// (parallel to [`Router::uses_load`], one rung further down).  When
+    /// `false`, the simulator skips the per-call `Vec<WorkerView>`
+    /// allocation entirely and routes through
+    /// [`Router::route_indexed`] — the static policies (prefix-aware,
+    /// round-robin, random) only ever need the pool size.
+    fn needs_views(&self) -> bool {
+        true
+    }
+
+    /// Snapshot-free fast path, called instead of [`Router::route`] when
+    /// [`Router::needs_views`] is `false`.  Must pick the same worker
+    /// `route` would over any snapshot of the same pool size.
+    fn route_indexed(&mut self, job: &PrefillJob, n_workers: usize, rng: &mut Rng) -> usize {
+        let _ = (job, n_workers, rng);
+        unreachable!("route_indexed called on a snapshot-reading policy");
+    }
 }
 
 /// Which routing policy the proxy runs (CLI: `--route`).
@@ -159,6 +177,35 @@ mod tests {
         assert_eq!(RoutePolicy::by_name("cache"), Some(RoutePolicy::CacheAware));
         assert_eq!(RoutePolicy::by_name("load"), Some(RoutePolicy::LoadAware));
         assert_eq!(RoutePolicy::by_name("lifo"), None);
+    }
+
+    #[test]
+    fn static_policies_skip_the_snapshot_and_match_the_view_path() {
+        let caches = testutil::caches(4);
+        let views = testutil::views(&caches, &[0, 0, 0, 0]);
+        for p in RoutePolicy::all() {
+            let wants_views = make_router(p).needs_views();
+            let reads_views =
+                matches!(p, RoutePolicy::CacheAware | RoutePolicy::LoadAware);
+            assert_eq!(wants_views, reads_views, "{p:?}");
+            if wants_views {
+                continue;
+            }
+            // The snapshot-free fast path must pick exactly what the
+            // view path picks — two routers, identical RNG streams.
+            let mut via_views = make_router(p);
+            let mut via_index = make_router(p);
+            let mut rng_a = Rng::new(13);
+            let mut rng_b = Rng::new(13);
+            for sid in 0..32 {
+                let j = job(sid, 64, 0);
+                assert_eq!(
+                    via_views.route(&j, &views, &mut rng_a),
+                    via_index.route_indexed(&j, views.len(), &mut rng_b),
+                    "{p:?} fast path diverged at sid {sid}"
+                );
+            }
+        }
     }
 
     #[test]

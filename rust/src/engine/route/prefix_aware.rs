@@ -14,8 +14,16 @@ use crate::util::rng::Rng;
 pub struct PrefixAware;
 
 impl Router for PrefixAware {
-    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], _rng: &mut Rng) -> usize {
-        job.sid % workers.len()
+    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize {
+        self.route_indexed(job, workers.len(), rng)
+    }
+
+    fn needs_views(&self) -> bool {
+        false
+    }
+
+    fn route_indexed(&mut self, job: &PrefillJob, n_workers: usize, _rng: &mut Rng) -> usize {
+        job.sid % n_workers
     }
 }
 

@@ -12,8 +12,16 @@ use crate::util::rng::Rng;
 pub struct Random;
 
 impl Router for Random {
-    fn route(&mut self, _job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize {
-        rng.range(0, workers.len())
+    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize {
+        self.route_indexed(job, workers.len(), rng)
+    }
+
+    fn needs_views(&self) -> bool {
+        false
+    }
+
+    fn route_indexed(&mut self, _job: &PrefillJob, n_workers: usize, rng: &mut Rng) -> usize {
+        rng.range(0, n_workers)
     }
 }
 

@@ -22,8 +22,16 @@ impl RoundRobin {
 }
 
 impl Router for RoundRobin {
-    fn route(&mut self, _job: &PrefillJob, workers: &[WorkerView<'_>], _rng: &mut Rng) -> usize {
-        self.counter = (self.counter + 1) % workers.len();
+    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize {
+        self.route_indexed(job, workers.len(), rng)
+    }
+
+    fn needs_views(&self) -> bool {
+        false
+    }
+
+    fn route_indexed(&mut self, _job: &PrefillJob, n_workers: usize, _rng: &mut Rng) -> usize {
+        self.counter = (self.counter + 1) % n_workers;
         self.counter
     }
 }

@@ -15,6 +15,13 @@ pub struct AdmissionQuery {
     pub footprint: usize,
     /// KV tokens currently reserved by the active batch (+ staging-in).
     pub resident_tokens: usize,
+    /// Retained-but-inactive session KV still occupying the pool after the
+    /// residency layer's eviction pass (`--decode-reuse`), *minus* the part
+    /// this request itself reuses.  0 when decode reuse is off.  What is
+    /// left here is unevictable right now (pinned by in-flight handoffs of
+    /// sessions queued behind this one), so liveness must not depend on it
+    /// draining — see the soft-cap override below.
+    pub retained_tokens: usize,
     /// The worker's resident-KV pool size.
     pub capacity_tokens: usize,
     /// Requests currently in the running batch.
@@ -42,9 +49,17 @@ pub trait DecodeAdmission {
 }
 
 /// The paper-default policy: greedy FIFO admission under the KV cap, with a
-/// liveness override — a request larger than the whole pool is force-admitted
-/// on an empty worker rather than waiting forever.  Bit-identical to the
-/// pre-subsystem simulator's inline logic.
+/// liveness override — when the worker is idle and empty (`resident == 0`)
+/// the head-of-queue request is admitted even if it cannot fit, making the
+/// resident cap a *soft* cap for the degenerate case.  Without the
+/// override a request with `footprint > capacity` parks forever on an
+/// empty worker (no completion can ever free enough space), the event
+/// queue drains, and the session is silently lost.  The same holds with
+/// retained occupancy (`--decode-reuse`): whatever retained KV survives
+/// the eviction pass is pinned by handoffs of sessions queued *behind*
+/// this head-of-line request, so waiting for it to drain deadlocks —
+/// `resident_tokens == 0` alone must admit.  Bit-identical to the
+/// pre-subsystem simulator's inline logic when `retained_tokens == 0`.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CapAdmission;
 
@@ -53,8 +68,8 @@ impl DecodeAdmission for CapAdmission {
         if q.active + q.staging_in >= q.max_batch {
             return AdmissionDecision::Wait;
         }
-        let force = q.footprint > q.capacity_tokens && q.resident_tokens == 0;
-        if q.resident_tokens + q.footprint > q.capacity_tokens && !force {
+        let force = q.retained_tokens + q.footprint > q.capacity_tokens && q.resident_tokens == 0;
+        if q.resident_tokens + q.retained_tokens + q.footprint > q.capacity_tokens && !force {
             AdmissionDecision::Park
         } else {
             AdmissionDecision::Admit
@@ -70,6 +85,7 @@ mod tests {
         AdmissionQuery {
             footprint,
             resident_tokens: resident,
+            retained_tokens: 0,
             capacity_tokens: 10_000,
             active,
             staging_in: 0,
@@ -101,5 +117,30 @@ mod tests {
         assert_eq!(CapAdmission.decide(&q(20_000, 0, 0)), AdmissionDecision::Admit);
         // ...but not while others hold KV.
         assert_eq!(CapAdmission.decide(&q(20_000, 1, 0)), AdmissionDecision::Park);
+    }
+
+    #[test]
+    fn retained_occupancy_counts_against_the_cap() {
+        // 4k retained + 7k footprint > 10k cap: park while the batch holds KV.
+        let mut query = q(7_000, 2_000, 2);
+        query.retained_tokens = 4_000;
+        assert_eq!(CapAdmission.decide(&query), AdmissionDecision::Park);
+        // Fits once the retained share shrinks.
+        query.retained_tokens = 1_000;
+        assert_eq!(CapAdmission.decide(&query), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn soft_cap_admits_on_empty_worker_despite_pinned_retained_kv() {
+        // Liveness: the surviving retained KV is pinned by handoffs queued
+        // behind this request, so an empty worker must admit even when
+        // footprint + retained exceed the pool — parking would livelock.
+        let mut query = q(7_000, 0, 0);
+        query.retained_tokens = 4_000;
+        assert_eq!(CapAdmission.decide(&query), AdmissionDecision::Admit);
+        // Not an unconditional bypass: any resident KV means space *will*
+        // free, so the normal park path still applies.
+        query.resident_tokens = 1;
+        assert_eq!(CapAdmission.decide(&query), AdmissionDecision::Park);
     }
 }

@@ -1,5 +1,6 @@
 //! The decode tier: iteration-level continuous batching under a
-//! resident-KV cap, with host staging on overflow.
+//! resident-KV cap, with host staging on overflow and (optionally)
+//! session KV residency with delta handoff (`--decode-reuse`).
 //!
 //! Each worker hosts one task model.  Batch-join decisions go through
 //! the [`DecodeAdmission`] policy (`engine::sched::admission`): a parked
@@ -7,6 +8,12 @@
 //! the interconnect's staging link) and pays a stage-*in* reload when
 //! space finally frees — both copies contend with decode compute
 //! (vLLM App. B.2; this is the Fig-4 high-concurrency rollover).
+//!
+//! With decode reuse on, each worker also keeps a
+//! [`ResidencyLedger`](super::residency) of per-session retained KV:
+//! finished requests leave their KV resident, later calls of the session
+//! ship only the delta, and admission reclaims retained entries LRU when
+//! it needs the space (discard vs host-park priced by the cost model).
 
 use std::collections::VecDeque;
 
@@ -18,6 +25,7 @@ use crate::metrics::{record_position, ServingMetrics};
 use crate::simtime::{secs, to_secs, EventQueue, SimTime};
 
 use super::interconnect::Interconnect;
+use super::residency::ResidencyLedger;
 use super::Ev;
 
 /// A decode-phase request (one agent call's generation).
@@ -36,6 +44,20 @@ pub(crate) struct DecodeReq {
     pub ttft_recorded: bool,
     /// Deferred at least once for decode-KV space -> pays staging on join.
     pub was_deferred: bool,
+    /// KV tokens the handoff actually shipped: the full context without
+    /// decode reuse, only the session delta with it.  Park/stage copies
+    /// move exactly this much (the retained remainder never left the
+    /// worker).
+    pub shipped_tokens: usize,
+    /// Retained GPU tokens this call reuses (its pinned ledger entry,
+    /// consumed at admission).
+    pub reuse_tokens: usize,
+    /// Host-parked tokens that must stage back in before joining.
+    pub host_tokens: usize,
+    /// This is the session's final agent call: its KV can never be
+    /// reused, so completion frees it instead of retaining it (keeps
+    /// `peak_retained` an honest high-water mark of held-across-calls KV).
+    pub is_last_call: bool,
 }
 
 impl DecodeReq {
@@ -51,13 +73,25 @@ pub(crate) struct DecodeWorker {
     /// Requests whose stage-in transfer is in flight (space reserved).
     staging_in: usize,
     stepping: bool,
-    /// A host<->GPU KV copy is in flight; it contends with decode compute
-    /// (vLLM App. B.2: staging "increases CPU–GPU data movement, which can
-    /// increase latency and reduce throughput") — steps are gated on it.
-    io_busy: bool,
+    /// In-flight host<->GPU KV copies.  Each one contends with decode
+    /// compute (vLLM App. B.2: staging "increases CPU–GPU data movement,
+    /// which can increase latency and reduce throughput"), so steps are
+    /// gated until *all* of them drain.  A counter, not a bool: a
+    /// stage-in admitted while a stage-out is still draining used to
+    /// clear the old boolean gate at the first completion and let decode
+    /// compute overlap the remaining copy.
+    io_inflight: usize,
     resident_tokens: usize,
+    /// Per-session retained KV (`--decode-reuse`; untouched when off).
+    pub residency: ResidencyLedger,
     pub busy_micros: u64,
     pub peak_resident: usize,
+}
+
+impl DecodeWorker {
+    pub fn io_busy(&self) -> bool {
+        self.io_inflight > 0
+    }
 }
 
 pub(crate) struct DecodePool {
@@ -73,13 +107,27 @@ impl DecodePool {
                 pending: VecDeque::new(),
                 staging_in: 0,
                 stepping: false,
-                io_busy: false,
+                io_inflight: 0,
                 resident_tokens: 0,
+                residency: ResidencyLedger::new(),
                 busy_micros: 0,
                 peak_resident: 0,
             })
             .collect();
         DecodePool { workers, admission: Box::new(CapAdmission) }
+    }
+
+    /// Size an incoming handoff for worker `w`: pin the session's retained
+    /// entry and return `(gpu_reuse_tokens, host_reload_tokens)`.
+    pub fn pin_for_handoff(&mut self, w: usize, sid: usize) -> (usize, usize) {
+        self.workers[w].residency.pin_for_handoff(sid)
+    }
+
+    /// The session completed: drop whatever any worker still retains for it.
+    pub fn release_session(&mut self, sid: usize) {
+        for dw in &mut self.workers {
+            dw.residency.release(sid);
+        }
     }
 
     /// A KV handoff arrived on worker `w`'s pending queue.
@@ -90,7 +138,7 @@ impl DecodePool {
 
     /// Admit pending requests into the batch per the [`DecodeAdmission`]
     /// policy, scheduling staging copies through the interconnect as
-    /// needed.
+    /// needed and reclaiming retained KV (LRU) when decode reuse is on.
     pub fn try_admit(
         &mut self,
         w: usize,
@@ -101,12 +149,35 @@ impl DecodePool {
     ) {
         let kv_bytes_per_token = cfg.cost.llm.kv_bytes_per_token();
         loop {
+            // Reclaim retained-but-inactive KV (LRU) until the front fits,
+            // so the admission policy decides over post-eviction occupancy
+            // (its soft-cap override must fire only when what is left is
+            // genuinely unevictable).  Skipped when the batch is full —
+            // the policy will `Wait` and no space is needed yet.
+            if cfg.decode_reuse {
+                loop {
+                    let dw = &self.workers[w];
+                    let Some(front) = dw.pending.front() else { return };
+                    if dw.active.len() + dw.staging_in >= cfg.max_decode_batch {
+                        break;
+                    }
+                    let need = dw.resident_tokens
+                        + front.footprint()
+                        + (dw.residency.retained_gpu_tokens - front.reuse_tokens);
+                    if need <= cfg.decode_kv_tokens || !self.evict_one(w, cfg, q, net, metrics) {
+                        break;
+                    }
+                }
+            }
             let decision = {
                 let dw = &self.workers[w];
                 let Some(front) = dw.pending.front() else { return };
                 self.admission.decide(&AdmissionQuery {
                     footprint: front.footprint(),
                     resident_tokens: dw.resident_tokens,
+                    // Retained occupancy minus the share the front itself
+                    // reuses (that part changes owner, not occupancy).
+                    retained_tokens: dw.residency.retained_gpu_tokens - front.reuse_tokens,
                     capacity_tokens: cfg.decode_kv_tokens,
                     active: dw.active.len(),
                     staging_in: dw.staging_in,
@@ -116,23 +187,24 @@ impl DecodePool {
             match decision {
                 AdmissionDecision::Wait => return,
                 AdmissionDecision::Park => {
-                    // Does not fit: park the handed-off KV in host memory.
-                    let staged_ctx = {
+                    // Does not fit even after reclaiming retained KV:
+                    // park the handed-off KV in host memory.
+                    let staged = {
                         let dw = &mut self.workers[w];
                         let front = dw.pending.front_mut().unwrap();
-                        if !front.was_deferred && !dw.io_busy {
+                        if !front.was_deferred && !dw.io_busy() {
                             front.was_deferred = true;
-                            dw.io_busy = true;
-                            Some(front.ctx_len)
+                            dw.io_inflight += 1;
+                            Some(front.shipped_tokens)
                         } else {
                             None
                         }
                     };
-                    if let Some(ctx_len) = staged_ctx {
+                    if let Some(tokens) = staged {
                         metrics.staging_events += 1;
-                        metrics.staged_tokens += ctx_len as u64;
-                        let dur_us = secs(cfg.cost.staging_secs(ctx_len));
-                        let bytes = (ctx_len as f64 * kv_bytes_per_token) as u64;
+                        metrics.staged_tokens += tokens as u64;
+                        let dur_us = secs(cfg.cost.staging_secs(tokens));
+                        let bytes = (tokens as f64 * kv_bytes_per_token) as u64;
                         let at = net.stage(w, q.now(), dur_us, bytes);
                         q.schedule(at, Ev::StageOutDone { worker: w });
                     }
@@ -147,20 +219,33 @@ impl DecodePool {
                         req
                     };
                     metrics.decode_queue_delay.record(to_secs(q.now() - req.arrived_at));
-                    if req.was_deferred {
-                        // KV was parked in host memory; reload before
-                        // joining.  The copy blocks the step loop like the
-                        // stage-out did.
+                    if cfg.decode_reuse {
+                        // The pinned entry folds into the active footprint
+                        // (GPU) or the stage-in copy below (host).
+                        let (gpu, host) = self.workers[w].residency.consume(req.sid);
+                        debug_assert_eq!(gpu, req.reuse_tokens, "ledger drifted under pin");
+                        debug_assert_eq!(host, req.host_tokens, "ledger drifted under pin");
+                    }
+                    // One reload copy covers both host-parked KV and a
+                    // parked handoff delta (mutually rare, additive size).
+                    let deferred = if req.was_deferred { req.shipped_tokens } else { 0 };
+                    let reload = req.host_tokens + deferred;
+                    if reload > 0 {
                         {
                             let dw = &mut self.workers[w];
                             dw.staging_in += 1;
-                            dw.io_busy = true;
+                            dw.io_inflight += 1;
                         }
                         metrics.staging_events += 1;
-                        metrics.staged_tokens += req.ctx_len as u64;
-                        let dur_us = secs(cfg.cost.staging_secs(req.ctx_len));
-                        let bytes = (req.ctx_len as f64 * kv_bytes_per_token) as u64;
+                        metrics.staged_tokens += reload as u64;
+                        if req.host_tokens > 0 {
+                            metrics.host_reloads += 1;
+                            metrics.host_reload_tokens += req.host_tokens as u64;
+                        }
+                        let dur_us = secs(cfg.cost.staging_secs(reload));
+                        let bytes = (reload as f64 * kv_bytes_per_token) as u64;
                         req.was_deferred = false;
+                        req.host_tokens = 0;
                         let at = net.stage(w, q.now(), dur_us, bytes);
                         q.schedule(at, Ev::StageInDone { req, worker: w });
                         return; // one IO at a time
@@ -172,21 +257,57 @@ impl DecodePool {
         }
     }
 
+    /// Reclaim one LRU retained session on worker `w`.  Returns `false`
+    /// when nothing is evictable (every entry pinned or already on host).
+    /// Discard vs host-park is priced by the cost model: discarding makes
+    /// the session's next call re-ship those tokens over the handoff
+    /// link, parking pays a staging round trip (out now, in on return).
+    fn evict_one(
+        &mut self,
+        w: usize,
+        cfg: &ClusterConfig,
+        q: &mut EventQueue<Ev>,
+        net: &mut Interconnect,
+        metrics: &mut ServingMetrics,
+    ) -> bool {
+        let Some((sid, tokens)) = self.workers[w].residency.lru_victim() else {
+            return false;
+        };
+        metrics.retained_evictions += 1;
+        metrics.retained_evicted_tokens += tokens as u64;
+        let rehandoff = cfg.cost.handoff_secs(tokens);
+        let round_trip = 2.0 * cfg.cost.staging_secs(tokens);
+        if round_trip < rehandoff {
+            self.workers[w].residency.park_to_host(sid);
+            self.workers[w].io_inflight += 1;
+            metrics.host_parks += 1;
+            metrics.staging_events += 1;
+            metrics.staged_tokens += tokens as u64;
+            let dur_us = secs(cfg.cost.staging_secs(tokens));
+            let bytes = (tokens as f64 * cfg.cost.llm.kv_bytes_per_token()) as u64;
+            let at = net.stage(w, q.now(), dur_us, bytes);
+            q.schedule(at, Ev::StageOutDone { worker: w });
+        } else {
+            self.workers[w].residency.discard(sid);
+        }
+        true
+    }
+
     pub fn on_stage_in_done(&mut self, w: usize, req: DecodeReq) {
         let dw = &mut self.workers[w];
         dw.staging_in -= 1;
-        dw.io_busy = false;
+        dw.io_inflight -= 1;
         dw.active.push(req);
     }
 
     pub fn on_stage_out_done(&mut self, w: usize) {
-        self.workers[w].io_busy = false;
+        self.workers[w].io_inflight -= 1;
     }
 
     /// Kick off a decode iteration if the worker can step.
     pub fn maybe_step(&mut self, w: usize, cfg: &ClusterConfig, q: &mut EventQueue<Ev>) {
         let dw = &mut self.workers[w];
-        if dw.stepping || dw.io_busy || dw.active.is_empty() {
+        if dw.stepping || dw.io_busy() || dw.active.is_empty() {
             return;
         }
         let batch = dw.active.len();
@@ -199,11 +320,14 @@ impl DecodePool {
 
     /// One decode iteration completed: every active request generated one
     /// token (TTFT recorded on the first).  Returns finished requests in
-    /// batch order for the caller's completion accounting.
+    /// batch order for the caller's completion accounting.  With decode
+    /// reuse on, a finished request's KV stays on the worker as a
+    /// retained ledger entry instead of being freed.
     pub fn advance_batch(
         &mut self,
         w: usize,
         now: SimTime,
+        cfg: &ClusterConfig,
         metrics: &mut ServingMetrics,
     ) -> Vec<DecodeReq> {
         let dw = &mut self.workers[w];
@@ -222,11 +346,146 @@ impl DecodePool {
             if r.generated >= r.out_tokens {
                 let done = dw.active.swap_remove(i);
                 dw.resident_tokens -= done.footprint();
+                if cfg.decode_reuse && !done.is_last_call {
+                    dw.residency.retain(done.sid, done.footprint());
+                }
                 finished.push(done);
             } else {
                 i += 1;
             }
         }
         finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::config::{ClusterConfig, SystemKind};
+
+    fn req(sid: usize, ctx_len: usize, out_tokens: usize) -> DecodeReq {
+        DecodeReq {
+            sid,
+            call_idx: 0,
+            ctx_len,
+            out_tokens,
+            generated: 0,
+            issued_at: 0,
+            arrived_at: 0,
+            ttft_recorded: false,
+            was_deferred: false,
+            shipped_tokens: ctx_len,
+            reuse_tokens: 0,
+            host_tokens: 0,
+            is_last_call: false,
+        }
+    }
+
+    fn cfg(decode_kv_tokens: usize) -> ClusterConfig {
+        let mut c = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        c.decode_kv_tokens = decode_kv_tokens;
+        c
+    }
+
+    /// Regression for the staging-gate bug: a stage-in admitted while a
+    /// stage-out is still draining must keep the decode-compute gate
+    /// closed until *both* copies complete.  The old boolean `io_busy`
+    /// flag was cleared by whichever copy finished first.
+    #[test]
+    fn io_gate_holds_across_overlapping_staging_copies() {
+        let c = cfg(1_000);
+        let mut pool = DecodePool::new(1);
+        let mut q = EventQueue::new();
+        let mut net = Interconnect::new(1, false);
+        let mut m = ServingMetrics::default();
+
+        // B joins the batch (800 of 1000 tokens); A must park (900 more).
+        pool.push_handoff(0, req(0, 700, 100), 0);
+        pool.try_admit(0, &c, &mut q, &mut net, &mut m);
+        assert_eq!(pool.workers[0].active.len(), 1);
+        pool.push_handoff(0, req(1, 800, 100), 0);
+        pool.try_admit(0, &c, &mut q, &mut net, &mut m);
+        assert!(pool.workers[0].io_busy(), "park schedules A's stage-out");
+        assert_eq!(m.staging_events, 1);
+
+        // B finishes while A's stage-out is still draining; A now fits and
+        // its stage-in is admitted — two copies in flight at once.
+        pool.workers[0].active[0].generated = 99;
+        let done = pool.advance_batch(0, 10, &c, &mut m);
+        assert_eq!(done.len(), 1);
+        pool.try_admit(0, &c, &mut q, &mut net, &mut m);
+        assert_eq!(pool.workers[0].io_inflight, 2, "stage-out + stage-in overlap");
+        assert_eq!(m.staging_events, 2);
+
+        // The first completion (A's stage-out) must NOT reopen the gate.
+        pool.on_stage_out_done(0);
+        assert!(
+            pool.workers[0].io_busy(),
+            "gate reopened while A's stage-in copy is still in flight"
+        );
+        // Only the second completion frees decode compute.
+        pool.on_stage_in_done(0, req(1, 800, 100));
+        assert!(!pool.workers[0].io_busy());
+        assert_eq!(pool.workers[0].active.len(), 1);
+    }
+
+    #[test]
+    fn decode_reuse_retains_and_reclaims_lru() {
+        let mut c = cfg(2_000);
+        c.decode_reuse = true;
+        let mut pool = DecodePool::new(1);
+        let mut q = EventQueue::new();
+        let mut net = Interconnect::new(1, false);
+        let mut m = ServingMetrics::default();
+
+        // Session 0 finishes: its 1100 tokens stay retained.
+        pool.push_handoff(0, req(0, 1_000, 100), 0);
+        pool.try_admit(0, &c, &mut q, &mut net, &mut m);
+        pool.workers[0].active[0].generated = 99;
+        pool.advance_batch(0, 5, &c, &mut m);
+        assert_eq!(pool.workers[0].residency.retained_gpu_tokens, 1_100);
+
+        // Session 1 needs 1500: retained 1100 + 1500 > 2000, so the LRU
+        // retained session is reclaimed (default link prices discard
+        // cheaper than a staging round trip) and the request admits
+        // without any staging traffic.
+        pool.push_handoff(0, req(1, 1_400, 100), 0);
+        pool.try_admit(0, &c, &mut q, &mut net, &mut m);
+        assert_eq!(pool.workers[0].active.len(), 1);
+        assert_eq!(m.retained_evictions, 1);
+        assert_eq!(m.retained_evicted_tokens, 1_100);
+        assert_eq!(m.host_parks, 0, "64 GB/s handoff beats a 12 GB/s round trip");
+        assert_eq!(m.staging_events, 0);
+        assert_eq!(pool.workers[0].residency.retained_gpu_tokens, 0);
+    }
+
+    #[test]
+    fn pinned_retained_entry_is_consumed_not_evicted() {
+        let mut c = cfg(2_000);
+        c.decode_reuse = true;
+        let mut pool = DecodePool::new(1);
+        let mut q = EventQueue::new();
+        let mut net = Interconnect::new(1, false);
+        let mut m = ServingMetrics::default();
+
+        // Session 0's first call retains 1100 tokens.
+        pool.push_handoff(0, req(0, 1_000, 100), 0);
+        pool.try_admit(0, &c, &mut q, &mut net, &mut m);
+        pool.workers[0].active[0].generated = 99;
+        pool.advance_batch(0, 5, &c, &mut m);
+
+        // Its next call reuses them: the handoff ships only the delta and
+        // admission folds the pinned entry into the active footprint.
+        let (gpu, host) = pool.pin_for_handoff(0, 0);
+        assert_eq!((gpu, host), (1_100, 0));
+        let mut r = req(0, 1_300, 100);
+        r.shipped_tokens = 200;
+        r.reuse_tokens = gpu;
+        pool.push_handoff(0, r, 10);
+        pool.try_admit(0, &c, &mut q, &mut net, &mut m);
+        assert_eq!(pool.workers[0].active.len(), 1);
+        assert_eq!(m.retained_evictions, 0, "pinned entry must not be evicted");
+        assert_eq!(pool.workers[0].residency.retained_gpu_tokens, 0, "consumed");
+        assert_eq!(pool.workers[0].resident_tokens, 1_400);
     }
 }

@@ -15,11 +15,13 @@
 //! in-flight copy — and completes at `start + d`; uncontended mode
 //! (`link_contended = false`, the default) starts every transfer at
 //! `now`, reproducing the original simulator event-for-event.  Staging
-//! links are mostly serialized already by the decode worker's `io_busy`
-//! gate; the one overlap the gate permits (a stage-in admitted while its
-//! own stage-out is still draining) also serializes here under
-//! contention, and routing staging through the interconnect unifies the
-//! byte-conservation accounting.
+//! links are mostly serialized already by the decode worker's in-flight
+//! IO counter (which gates decode compute until every copy drains —
+//! overlaps such as a stage-in admitted while its own stage-out is still
+//! draining, or retained-KV evictions parking to host, can still put
+//! several copies on the link at once); those overlaps serialize here
+//! under contention, and routing staging through the interconnect
+//! unifies the byte-conservation accounting.
 
 use crate::simtime::SimTime;
 

@@ -23,7 +23,9 @@
 //! * `DecodePool` (`decode_pool.rs`) — iteration-level continuous
 //!   batching with a resident-KV cap and host staging on overflow,
 //!   behind the `DecodeAdmission` policy trait (Fig 4's rollover,
-//!   App. B.2).
+//!   App. B.2); with `--decode-reuse` each worker additionally keeps a
+//!   per-session residency ledger (`residency.rs`) so repeat calls of a
+//!   session ship only the KV delta and retained KV is reclaimed LRU.
 //!
 //! The simulator is deterministic given (trace, config.seed): schedulers
 //! and routers break ties on fixed orders, the event queue breaks equal
@@ -37,6 +39,7 @@ mod decode_pool;
 mod interconnect;
 mod prefill_pool;
 mod proxy;
+mod residency;
 
 pub use interconnect::{Interconnect, InterconnectStats, LinkStats};
 
@@ -174,8 +177,14 @@ impl Simulator {
             // Baseline: each model has its own dedicated prefill GPU.
             SystemKind::Baseline => job.model,
             SystemKind::PrefillShare => {
-                let views = self.prefill.views(self.proxy.uses_load());
-                self.proxy.route(&job, &views)
+                if self.proxy.needs_views() {
+                    let views = self.prefill.views(self.proxy.uses_load());
+                    self.proxy.route(&job, &views)
+                } else {
+                    // Static policies (prefix-aware/round-robin/random)
+                    // never read the snapshot: skip building it.
+                    self.proxy.route_indexed(&job, self.prefill.len())
+                }
             }
         };
         self.prefill.enqueue(w, job);
@@ -196,8 +205,18 @@ impl Simulator {
     fn on_prefill_done(&mut self, w: usize) {
         if let Some(job) = self.prefill.finish_unit(w) {
             // Cache handoff: ship the prompt KV to the decode worker
-            // through its ingress link.
+            // through its ingress link.  Under `--decode-reuse` the worker
+            // may already retain most of the session's context (GPU or
+            // host-parked): only the delta crosses the handoff link, and
+            // the retained entry is pinned until the request is admitted.
             let call = self.trace.sessions[job.sid].calls[job.call_idx];
+            let dw = call.model; // decode worker hosting this task model
+            let (reuse_tokens, host_tokens) = if self.cfg.decode_reuse {
+                self.decode.pin_for_handoff(dw, job.sid)
+            } else {
+                (0, 0)
+            };
+            let shipped = job.ctx_len - reuse_tokens - host_tokens;
             let req = DecodeReq {
                 sid: job.sid,
                 call_idx: job.call_idx,
@@ -208,12 +227,20 @@ impl Simulator {
                 arrived_at: 0,
                 ttft_recorded: false,
                 was_deferred: false,
+                shipped_tokens: shipped,
+                reuse_tokens,
+                host_tokens,
+                is_last_call: job.call_idx + 1 == self.trace.sessions[job.sid].calls.len(),
             };
-            let dw = call.model; // decode worker hosting this task model
-            let dur_us = secs(self.cfg.cost.handoff_secs(job.ctx_len));
+            let dur_us = secs(self.cfg.cost.handoff_secs(shipped));
             self.metrics.handoffs += 1;
-            self.metrics.handoff_tokens += job.ctx_len as u64;
-            let bytes = (job.ctx_len as f64 * self.cfg.cost.llm.kv_bytes_per_token()) as u64;
+            self.metrics.handoff_tokens += shipped as u64;
+            if reuse_tokens + host_tokens > 0 {
+                self.metrics.handoffs_delta += 1;
+                self.metrics.handoff_tokens_delta += shipped as u64;
+                self.metrics.decode_reuse_tokens += reuse_tokens as u64;
+            }
+            let bytes = (shipped as f64 * self.cfg.cost.llm.kv_bytes_per_token()) as u64;
             let now = self.q.now();
             let at = self.net.handoff(dw, now, dur_us, bytes);
             self.metrics.handoff_link_wait.record(to_secs(at - dur_us - now));
@@ -242,7 +269,7 @@ impl Simulator {
 
     fn on_decode_step_done(&mut self, w: usize) {
         let now = self.q.now();
-        let finished = self.decode.advance_batch(w, now, &mut self.metrics);
+        let finished = self.decode.advance_batch(w, now, &self.cfg, &mut self.metrics);
         let n_done = finished.len();
         for req in finished {
             self.metrics.generated.record(to_secs(now), req.out_tokens as u64);
@@ -270,6 +297,11 @@ impl Simulator {
             self.metrics.session_latency.record(lat);
             self.metrics.sessions_completed += 1;
             self.last_completion = self.q.now();
+            if self.cfg.decode_reuse {
+                // The session will never call again: free whatever KV the
+                // decode tier still retains for it (GPU and host).
+                self.decode.release_session(sid);
+            }
             if let Some(next) = self.proxy.on_session_done() {
                 self.issue_call(next);
             }
@@ -288,9 +320,11 @@ impl Simulator {
         }
         let mut decode_busy: Vec<u64> = Vec::with_capacity(self.decode.workers.len());
         let mut peak_decode_resident = 0usize;
+        let mut peak_retained = 0usize;
         for d in &self.decode.workers {
             decode_busy.push(d.busy_micros);
             peak_decode_resident = peak_decode_resident.max(d.peak_resident);
+            peak_retained = peak_retained.max(d.residency.peak_retained);
         }
         let prefill_busy_total: u64 = prefill_busy.iter().sum();
         let decode_busy_total: u64 = decode_busy.iter().sum();
@@ -324,6 +358,12 @@ impl Simulator {
                 0.0
             },
             peak_decode_resident_tokens: peak_decode_resident,
+            decode_reuse_ratio: self.metrics.decode_reuse_ratio(),
+            handoffs_delta: self.metrics.handoffs_delta,
+            decode_reuse_tokens: self.metrics.decode_reuse_tokens,
+            retained_evictions: self.metrics.retained_evictions,
+            host_reload_tokens: self.metrics.host_reload_tokens,
+            peak_retained_kv_tokens: peak_retained,
             prefill_queue_delay_mean: self.metrics.prefill_queue_delay.mean(),
             prefill_queue_delay_p95: self.metrics.prefill_queue_delay.p95(),
             prefill_chunks: self.metrics.prefill_chunks,
@@ -377,6 +417,17 @@ pub struct SimResult {
     pub prefill_util: f64,
     pub decode_util: f64,
     pub peak_decode_resident_tokens: usize,
+    /// Decode-side session KV residency (`--decode-reuse`; zeros when
+    /// off): fraction of context-KV demand served from retained KV, delta
+    /// handoffs performed, tokens reused from GPU residency, retained-KV
+    /// LRU evictions, tokens staged back in from host parks, and the
+    /// retained-pool high-water mark.
+    pub decode_reuse_ratio: f64,
+    pub handoffs_delta: u64,
+    pub decode_reuse_tokens: u64,
+    pub retained_evictions: u64,
+    pub host_reload_tokens: u64,
+    pub peak_retained_kv_tokens: usize,
     /// Prefill queueing delay (issued -> first dispatch) — the quantity the
     /// scheduler policies trade against each other.
     pub prefill_queue_delay_mean: f64,
@@ -491,6 +542,124 @@ mod tests {
         let r = simulate(cfg, small_trace(2.0, 40.0));
         assert!(r.staging_events > 0, "expected staging under KV pressure");
         assert!(r.sessions_completed > 0);
+    }
+
+    #[test]
+    fn oversized_requests_complete_when_cap_below_every_footprint() {
+        // Livelock regression: with the resident cap below every single
+        // request's footprint (min footprint = 160 sys + 16 init + 8 out),
+        // each request only ever fits via the soft-cap override on an
+        // idle, empty worker.  Without it they park forever, the event
+        // queue drains, and sessions are silently lost.
+        let trace = small_trace(2.0, 40.0);
+        for decode_reuse in [false, true] {
+            let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+            cfg.decode_kv_tokens = 150;
+            cfg.decode_reuse = decode_reuse;
+            let r = simulate(cfg, trace.clone());
+            assert_eq!(
+                r.sessions_completed as usize,
+                trace.sessions.len(),
+                "sessions lost under oversized-request livelock (reuse={decode_reuse})"
+            );
+            let calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
+            assert_eq!(r.metrics.requests_completed as usize, calls);
+        }
+    }
+
+    // -- decode-side session KV residency (`--decode-reuse`) ---------------
+
+    #[test]
+    fn decode_reuse_ships_fewer_handoff_tokens_at_load() {
+        // The acceptance bar: ≥ 40% fewer handoff bytes on the react trace
+        // at rate ≥ 2.0, same sessions completed.  Bytes are proportional
+        // to shipped tokens at fixed kv_bytes_per_token.
+        let trace = small_trace(2.0, 60.0);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        let off = simulate(cfg.clone(), trace.clone());
+        cfg.decode_reuse = true;
+        let on = simulate(cfg, trace.clone());
+        assert_eq!(on.sessions_completed, off.sessions_completed);
+        assert_eq!(on.metrics.requests_completed, off.metrics.requests_completed);
+        assert!(
+            (on.handoff_tokens as f64) <= 0.6 * off.handoff_tokens as f64,
+            "reuse shipped {} vs {} without — less than 40% saved",
+            on.handoff_tokens,
+            off.handoff_tokens
+        );
+        assert!(on.handoffs_delta > 0);
+        assert!(on.decode_reuse_tokens > 0);
+        assert!(on.decode_reuse_ratio > 0.4, "{}", on.decode_reuse_ratio);
+        assert!(on.peak_retained_kv_tokens > 0);
+        // Reuse off reports all-zero residency metrics.
+        assert_eq!(off.handoffs_delta, 0);
+        assert_eq!(off.decode_reuse_ratio, 0.0);
+        assert_eq!(off.peak_retained_kv_tokens, 0);
+    }
+
+    #[test]
+    fn decode_reuse_is_deterministic_and_conserves_demand() {
+        let a = {
+            let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+            cfg.decode_reuse = true;
+            simulate(cfg, small_trace(3.0, 60.0))
+        };
+        let b = {
+            let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+            cfg.decode_reuse = true;
+            simulate(cfg, small_trace(3.0, 60.0))
+        };
+        assert_eq!(a.metrics, b.metrics);
+        // Every handoff's context demand is either shipped or reused:
+        // Σ ctx_len over calls == shipped + gpu-reused + host-reloaded.
+        let trace = small_trace(3.0, 60.0);
+        let mut ctx_demand = 0u64;
+        for s in &trace.sessions {
+            let mut ctx = trace.workload.sys_prompt_tokens + s.init_prompt_tokens;
+            for c in &s.calls {
+                ctx_demand += ctx as u64;
+                ctx += c.out_tokens;
+            }
+        }
+        assert_eq!(
+            a.handoff_tokens + a.decode_reuse_tokens + a.metrics.host_reload_tokens,
+            ctx_demand,
+            "delta accounting lost tokens"
+        );
+    }
+
+    #[test]
+    fn decode_reuse_evicts_retained_kv_under_pressure() {
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.decode_reuse = true;
+        cfg.decode_kv_tokens = 6_000; // a couple of sessions' worth
+        let trace = small_trace(2.0, 40.0);
+        let r = simulate(cfg, trace.clone());
+        assert_eq!(r.sessions_completed as usize, trace.sessions.len());
+        assert!(r.retained_evictions > 0, "tight cap must reclaim retained KV");
+        assert!(
+            r.peak_retained_kv_tokens <= 6_000,
+            "retained pool exceeded the cap: {}",
+            r.peak_retained_kv_tokens
+        );
+    }
+
+    #[test]
+    fn narrow_handoff_link_prefers_host_parking_evicted_kv() {
+        // At 4 GB/s the handoff link prices a future full re-handoff above
+        // a 12 GB/s staging round trip, so evictions park to host and the
+        // returning calls stage their KV back in.
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.decode_reuse = true;
+        cfg.decode_kv_tokens = 6_000;
+        cfg.link_contended = true;
+        cfg.cost.link.handoff_bytes_per_s = 4e9;
+        let trace = small_trace(2.0, 40.0);
+        let r = simulate(cfg, trace.clone());
+        assert_eq!(r.sessions_completed as usize, trace.sessions.len());
+        assert!(r.metrics.host_parks > 0, "expected host-parked evictions");
+        assert!(r.metrics.host_reloads > 0, "parked sessions must reload on return");
+        assert!(r.metrics.host_reload_tokens > 0);
     }
 
     // -- scheduler policies -------------------------------------------------

@@ -62,9 +62,20 @@ impl Proxy {
         self.router.route(job, workers, &mut self.rng)
     }
 
+    /// Snapshot-free routing for policies with `needs_views() == false`.
+    pub fn route_indexed(&mut self, job: &PrefillJob, n_workers: usize) -> usize {
+        self.router.route_indexed(job, n_workers, &mut self.rng)
+    }
+
     /// Whether the active policy reads the per-worker load signal (gates
     /// the pool's backlog summation when building views).
     pub fn uses_load(&self) -> bool {
         self.router.uses_load()
+    }
+
+    /// Whether the active policy reads the snapshot at all (gates the
+    /// per-call `Vec<WorkerView>` construction).
+    pub fn needs_views(&self) -> bool {
+        self.router.needs_views()
     }
 }

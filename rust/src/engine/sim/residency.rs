@@ -1,0 +1,223 @@
+//! Decode-side session KV residency (`--decode-reuse`): the per-worker
+//! ledger behind delta handoff.
+//!
+//! Without residency the simulator re-ships a session's *entire* context
+//! KV on every agent call and drops it from the decode worker the moment
+//! the request finishes, so handoff bytes grow quadratically over a
+//! session.  RelayCaching (decoding-KV reuse across collaborating models)
+//! and KVFlow (workflow-aware KV retention) both retain decode-side KV
+//! across agent steps and ship only the delta; this module gives each
+//! decode worker the same economy:
+//!
+//! * when a request **finishes**, its KV (context + generated tokens)
+//!   stays on the worker as a *retained* ledger entry instead of being
+//!   freed — call *k* of the session on the same task model then ships
+//!   only the tokens generated since this worker last saw the session;
+//! * retained entries are **reclaimable**: they count against the
+//!   resident cap, and when admission needs space the LRU session is
+//!   evicted — *discarded* (the session pays a full re-handoff if it
+//!   returns) or *parked to host memory* (a stage-out now, a stage-in on
+//!   return), whichever the cost model prices cheaper;
+//! * an entry is **pinned** from the moment a handoff for its session is
+//!   sized against it until that request is admitted, so eviction can
+//!   never invalidate a delta already in flight.
+//!
+//! The ledger is pure bookkeeping: the [`DecodePool`](super::decode_pool)
+//! owns when to pin/consume/retain/evict and charges the actual copies
+//! through the interconnect; with `--decode-reuse` off it is never
+//! touched and the simulator is bit-identical to the golden fixtures.
+
+use std::collections::BTreeMap;
+
+/// One session's retained KV on one decode worker.
+#[derive(Debug, Clone)]
+pub(crate) struct SessionEntry {
+    /// Context tokens whose KV this worker still holds for the session.
+    pub tokens: usize,
+    /// Retention tick — LRU victim order (older retentions evict first).
+    last_use: u64,
+    /// Parked in host memory (stage-in required, but no GPU occupancy).
+    pub on_host: bool,
+    /// A handoff sized against this entry is in flight or pending
+    /// admission; pinned entries are never evicted.
+    pub pinned: bool,
+}
+
+/// Per-decode-worker session residency ledger.
+#[derive(Debug, Default)]
+pub(crate) struct ResidencyLedger {
+    /// sid → retained entry.  `BTreeMap` so iteration (and therefore LRU
+    /// tie-breaking) is deterministic across runs.
+    sessions: BTreeMap<usize, SessionEntry>,
+    clock: u64,
+    /// Σ tokens over GPU-resident (non-host) entries — the retained share
+    /// of the worker's KV pool.
+    pub retained_gpu_tokens: usize,
+    /// High-water mark of `retained_gpu_tokens`.
+    pub peak_retained: usize,
+}
+
+impl ResidencyLedger {
+    pub fn new() -> ResidencyLedger {
+        ResidencyLedger::default()
+    }
+
+    /// Size an incoming handoff for `sid` and pin the entry against
+    /// eviction until [`consume`](Self::consume).  Returns
+    /// `(gpu_reuse_tokens, host_reload_tokens)` — exactly one of the two
+    /// is nonzero when the worker retains the session, both zero when it
+    /// does not.
+    pub fn pin_for_handoff(&mut self, sid: usize) -> (usize, usize) {
+        match self.sessions.get_mut(&sid) {
+            None => (0, 0),
+            Some(e) => {
+                e.pinned = true;
+                if e.on_host {
+                    (0, e.tokens)
+                } else {
+                    (e.tokens, 0)
+                }
+            }
+        }
+    }
+
+    /// Consume the entry at admission: the retained tokens fold into the
+    /// request's active footprint (GPU) or its stage-in copy (host).
+    /// Returns the same `(gpu, host)` split `pin_for_handoff` promised.
+    pub fn consume(&mut self, sid: usize) -> (usize, usize) {
+        match self.sessions.remove(&sid) {
+            None => (0, 0),
+            Some(e) => {
+                if e.on_host {
+                    (0, e.tokens)
+                } else {
+                    self.retained_gpu_tokens -= e.tokens;
+                    (e.tokens, 0)
+                }
+            }
+        }
+    }
+
+    /// Retain a finished request's KV (`tokens` = its full footprint, the
+    /// session's context as this worker now holds it).
+    pub fn retain(&mut self, sid: usize, tokens: usize) {
+        self.clock += 1;
+        debug_assert!(
+            !self.sessions.contains_key(&sid),
+            "session {sid} retained twice without an intervening consume"
+        );
+        self.sessions.insert(
+            sid,
+            SessionEntry { tokens, last_use: self.clock, on_host: false, pinned: false },
+        );
+        self.retained_gpu_tokens += tokens;
+        self.peak_retained = self.peak_retained.max(self.retained_gpu_tokens);
+    }
+
+    /// LRU eviction candidate: the unpinned GPU-resident entry with the
+    /// oldest retention tick (sid breaks exact ties deterministically,
+    /// though ticks are unique by construction).  Returns `(sid, tokens)`.
+    pub fn lru_victim(&self) -> Option<(usize, usize)> {
+        self.sessions
+            .iter()
+            .filter(|(_, e)| !e.pinned && !e.on_host)
+            .min_by_key(|(sid, e)| (e.last_use, **sid))
+            .map(|(sid, e)| (*sid, e.tokens))
+    }
+
+    /// Evict `sid` by discarding its retained KV (a future call pays a
+    /// full handoff again).  Returns the freed tokens.
+    pub fn discard(&mut self, sid: usize) -> usize {
+        let e = self.sessions.remove(&sid).expect("discarding unknown session");
+        debug_assert!(!e.pinned && !e.on_host);
+        self.retained_gpu_tokens -= e.tokens;
+        e.tokens
+    }
+
+    /// Evict `sid` by parking its KV in host memory: frees the GPU share
+    /// but keeps the entry, so the session's next call stages it back in
+    /// instead of re-shipping over the handoff link.  Returns the parked
+    /// tokens (the caller charges the stage-out copy).
+    pub fn park_to_host(&mut self, sid: usize) -> usize {
+        let e = self.sessions.get_mut(&sid).expect("parking unknown session");
+        debug_assert!(!e.pinned && !e.on_host);
+        e.on_host = true;
+        self.retained_gpu_tokens -= e.tokens;
+        e.tokens
+    }
+
+    /// The session completed: free whatever this worker still retains for
+    /// it (GPU or host).  No-op when the worker holds nothing.
+    pub fn release(&mut self, sid: usize) {
+        if let Some(e) = self.sessions.remove(&sid) {
+            debug_assert!(!e.pinned, "released session {sid} with a handoff in flight");
+            if !e.on_host {
+                self.retained_gpu_tokens -= e.tokens;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retain_consume_roundtrip_tracks_gpu_share() {
+        let mut l = ResidencyLedger::new();
+        l.retain(3, 1_000);
+        l.retain(5, 2_000);
+        assert_eq!(l.retained_gpu_tokens, 3_000);
+        assert_eq!(l.peak_retained, 3_000);
+        assert_eq!(l.pin_for_handoff(5), (2_000, 0));
+        assert_eq!(l.consume(5), (2_000, 0));
+        assert_eq!(l.retained_gpu_tokens, 1_000);
+        assert_eq!(l.peak_retained, 3_000, "peak is a high-water mark");
+        // Unknown sessions reuse nothing.
+        assert_eq!(l.pin_for_handoff(99), (0, 0));
+        assert_eq!(l.consume(99), (0, 0));
+    }
+
+    #[test]
+    fn lru_victim_is_oldest_unpinned_gpu_entry() {
+        let mut l = ResidencyLedger::new();
+        l.retain(7, 100); // tick 1 — oldest
+        l.retain(2, 200); // tick 2
+        l.retain(9, 300); // tick 3
+        assert_eq!(l.lru_victim(), Some((7, 100)));
+        // Pinning shields the oldest; next-oldest becomes the victim.
+        l.pin_for_handoff(7);
+        assert_eq!(l.lru_victim(), Some((2, 200)));
+        // Host-parked entries no longer occupy GPU and are not victims.
+        assert_eq!(l.park_to_host(2), 200);
+        assert_eq!(l.retained_gpu_tokens, 400, "host park frees the GPU share");
+        assert_eq!(l.lru_victim(), Some((9, 300)));
+        l.discard(9);
+        assert_eq!(l.lru_victim(), None, "only pinned/host entries remain");
+    }
+
+    #[test]
+    fn host_park_survives_until_reloaded() {
+        let mut l = ResidencyLedger::new();
+        l.retain(4, 500);
+        l.park_to_host(4);
+        assert_eq!(l.retained_gpu_tokens, 0);
+        // The next call reloads from host rather than re-shipping.
+        assert_eq!(l.pin_for_handoff(4), (0, 500));
+        assert_eq!(l.consume(4), (0, 500));
+        assert_eq!(l.pin_for_handoff(4), (0, 0), "consumed");
+    }
+
+    #[test]
+    fn release_frees_both_placements() {
+        let mut l = ResidencyLedger::new();
+        l.retain(1, 100);
+        l.retain(2, 200);
+        l.park_to_host(1);
+        l.release(1);
+        l.release(2);
+        l.release(3); // unknown: no-op
+        assert_eq!(l.retained_gpu_tokens, 0);
+        assert_eq!(l.lru_victim(), None);
+    }
+}

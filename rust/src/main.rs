@@ -53,11 +53,11 @@ fn print_help() {
     println!(
         "prefillshare {} — PrefillShare reproduction (see README.md)\n\n\
          USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload> [--options]\n\n\
-         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes [--seed N] [--out file.json]\n\
+         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse [--seed N] [--out file.json]\n\
          sim           [--system baseline|prefillshare] [--sched fifo|sjf|prefix-affinity|chunked]\n\
                        [--chunk-tokens N] [--route prefix-aware|round-robin|random|cache-aware|load-aware]\n\
                        [--link-gbps G] [--prefill-gpus a100,a10,...] [--n-prefill N]\n\
-                       [--workload react|reflexion] [--rate R] [--duration S]\n\
+                       [--decode-reuse] [--workload react|reflexion] [--rate R] [--duration S]\n\
                        [--max-sessions N] [--seed N] [--out file.json]\n\
          accuracy      --experiment fig2|table1|table2 [--steps N] [--artifacts DIR]\n\
          train         --model tiny|small|medium --method full|cc --task arith|transform|toolcall\n\
@@ -77,6 +77,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
         "fig6" => sx::fig6(seed),
         "sched" => sx::sched_ablation(seed),
         "routes" => sx::route_ablation_sweep(seed),
+        "reuse" => sx::reuse_ablation(seed),
         other => bail!("unknown serving experiment `{other}`"),
     };
     let x_name = rows.first().map(|r| r.x_name.clone()).unwrap_or_default();
@@ -146,6 +147,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     // Heterogeneous prefill pool: one GPU tier per worker, comma-separated.
     cfg.prefill_gpus = args.get_list("prefill-gpus", GpuSpec::by_name, "a100,a10");
+    // Decode-side session KV residency with delta handoff.
+    cfg.decode_reuse = args.bool_flag("decode-reuse");
     cfg.seed = seed;
 
     let trace = generate_trace(&wl, rate, duration, seed);
@@ -155,9 +158,10 @@ fn cmd_sim(args: &Args) -> Result<()> {
     } else {
         String::new()
     };
+    let reuse = if cfg.decode_reuse { " / decode-reuse" } else { "" };
     let result = simulate(cfg, trace);
     println!(
-        "== sim: {} / sched={} / route={}{link} / {wl_name} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
+        "== sim: {} / sched={} / route={}{link}{reuse} / {wl_name} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
         system.label(),
         sched.label(),
         routing.label(),
@@ -184,6 +188,19 @@ fn cmd_sim(args: &Args) -> Result<()> {
         row.result.prefill_queue_delay_mean,
         row.result.prefill_queue_delay_p95,
     );
+    if !reuse.is_empty() {
+        println!(
+            "decode reuse: {:.1}% of context KV from residency | {} of {} handoffs delta-sized | \
+             {} retained evictions ({} host-parked, {} tokens reloaded) | peak retained {} tokens",
+            100.0 * row.result.decode_reuse_ratio,
+            row.result.handoffs_delta,
+            row.result.metrics.handoffs,
+            row.result.retained_evictions,
+            row.result.metrics.host_parks,
+            row.result.host_reload_tokens,
+            row.result.peak_retained_kv_tokens,
+        );
+    }
     if let Some(out) = args.get("out") {
         save_rows(out, &[row])?;
         println!("saved 1 row to {out}");

@@ -4,13 +4,32 @@
 /// Sample-accumulating histogram with exact quantiles (runs are bounded, so
 /// we keep the raw samples; quantile sorts lazily).
 ///
-/// `PartialEq` compares the raw samples (sort state included) — the
-/// determinism regression tests assert whole-[`ServingMetrics`] equality
-/// across repeated runs.
-#[derive(Debug, Default, Clone, PartialEq)]
+/// `PartialEq` compares the recorded *values*, not the lazy sort state: a
+/// quantile read reorders `samples` in place, and the derived impl made two
+/// logically identical bundles compare unequal when only one of them had
+/// answered a quantile query.  The determinism regression tests assert
+/// whole-[`ServingMetrics`] equality across repeated runs, so equality must
+/// be a property of what was recorded, not of who was inspected first.
+#[derive(Debug, Default, Clone)]
 pub struct Histogram {
     samples: Vec<f64>,
     sorted: bool,
+}
+
+impl PartialEq for Histogram {
+    fn eq(&self, other: &Self) -> bool {
+        if self.samples.len() != other.samples.len() {
+            return false;
+        }
+        let sorted = |h: &Histogram| -> Vec<f64> {
+            let mut v = h.samples.clone();
+            if !h.sorted {
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            v
+        };
+        sorted(self) == sorted(other)
+    }
 }
 
 impl Histogram {
@@ -139,8 +158,27 @@ pub struct ServingMetrics {
     pub staging_events: u64,
     pub staged_tokens: u64,
     /// KV handoffs performed (PrefillShare pipeline step 3).
+    /// `handoff_tokens` counts tokens actually *shipped* over the handoff
+    /// links — the full context without `--decode-reuse`, only the delta
+    /// (tokens the decode worker does not already retain) with it.
     pub handoffs: u64,
     pub handoff_tokens: u64,
+    /// Decode-side session-KV residency (`--decode-reuse`, all zero when
+    /// off): handoffs that shipped only a delta, the tokens served from
+    /// the worker's retained GPU KV instead of the handoff link, and the
+    /// shipped-token share of those delta handoffs.
+    pub handoffs_delta: u64,
+    pub handoff_tokens_delta: u64,
+    pub decode_reuse_tokens: u64,
+    /// Retained-KV reclamation: LRU evictions under the resident cap, the
+    /// tokens they freed, and the evictions that parked KV to host memory
+    /// (priced cheaper than a future full re-handoff) plus the tokens
+    /// staged back in when those sessions returned.
+    pub retained_evictions: u64,
+    pub retained_evicted_tokens: u64,
+    pub host_parks: u64,
+    pub host_reloads: u64,
+    pub host_reload_tokens: u64,
     /// Prefill queueing delay: job issued -> first unit dispatched (the
     /// head-of-line component the scheduler policies trade against).
     pub prefill_queue_delay: Histogram,
@@ -180,6 +218,19 @@ impl ServingMetrics {
             0.0
         } else {
             self.prefix_hit_tokens as f64 / total as f64
+        }
+    }
+
+    /// Fraction of context-KV demand the decode tier served from its own
+    /// residency (retained GPU KV + host reloads) instead of re-shipping
+    /// over the handoff links.  0.0 with `--decode-reuse` off.
+    pub fn decode_reuse_ratio(&self) -> f64 {
+        let reused = self.decode_reuse_tokens + self.host_reload_tokens;
+        let demand = reused + self.handoff_tokens;
+        if demand == 0 {
+            0.0
+        } else {
+            reused as f64 / demand as f64
         }
     }
 }
@@ -250,6 +301,46 @@ mod tests {
         assert_eq!(a, b);
         a.decode_queue_delay.record(0.1);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn equality_ignores_quantile_query_order() {
+        // Regression: the derived PartialEq compared the lazy sort state, so
+        // a p50() read on one side made logically identical histograms
+        // unequal (record order 2,1 vs 1,2 after sorting one of them).
+        let mut a = Histogram::new();
+        a.record(2.0);
+        a.record(1.0);
+        let _ = a.p50(); // sorts `a` in place
+        let mut b = Histogram::new();
+        b.record(1.0);
+        b.record(2.0); // never queried: unsorted state, reverse record order
+        assert_eq!(a, b);
+        assert_eq!(b, a);
+        // Neither side queried, orders differ: still the same multiset.
+        let mut c = Histogram::new();
+        c.record(2.0);
+        c.record(1.0);
+        assert_eq!(b, c);
+        // Different values stay unequal regardless of sort state.
+        let mut other = Histogram::new();
+        other.record(1.0);
+        other.record(3.0);
+        assert_ne!(a, other);
+        // Length mismatch short-circuits.
+        let mut short = Histogram::new();
+        short.record(1.0);
+        assert_ne!(a, short);
+    }
+
+    #[test]
+    fn decode_reuse_ratio_counts_host_reloads() {
+        let mut m = ServingMetrics::default();
+        assert_eq!(m.decode_reuse_ratio(), 0.0);
+        m.handoff_tokens = 60;
+        m.decode_reuse_tokens = 30;
+        m.host_reload_tokens = 10;
+        assert!((m.decode_reuse_ratio() - 0.4).abs() < 1e-9);
     }
 
     #[test]

@@ -70,6 +70,24 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Boolean switch that tolerates the parser's `--key value` binding:
+    /// `--name` alone is `true`, and because a bare flag swallows a
+    /// following non-dash token as its value (see `mixed_forms`), an
+    /// explicit `--name true|1|on` / `--name false|0|off` (or `=`-form)
+    /// is honored instead of being misread as a positional.  Panics on
+    /// any other value so typos don't silently disable a feature.
+    pub fn bool_flag(&self, name: &str) -> bool {
+        if self.has_flag(name) {
+            return true;
+        }
+        match self.get(name) {
+            None => false,
+            Some("true") | Some("1") | Some("on") | Some("yes") => true,
+            Some("false") | Some("0") | Some("off") | Some("no") => false,
+            Some(v) => panic!("--{name} expects a boolean (true/false), got `{v}`"),
+        }
+    }
+
     /// Parse `--key` through a `by_name`-style lookup (e.g.
     /// `RoutingPolicy::by_name`, `SchedPolicy::by_name`): returns `default`
     /// when absent, panics with the valid choices on an unknown value.
@@ -142,6 +160,23 @@ mod tests {
         let a = parse("cmd");
         assert_eq!(a.get_usize("n", 7), 7);
         assert_eq!(a.get_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn bool_flag_tolerates_value_binding() {
+        assert!(parse("sim --decode-reuse").bool_flag("decode-reuse"));
+        assert!(parse("sim --decode-reuse --rate 2").bool_flag("decode-reuse"));
+        // A following non-dash token binds as the value; still a boolean.
+        assert!(parse("sim --decode-reuse true").bool_flag("decode-reuse"));
+        assert!(parse("sim --decode-reuse=on").bool_flag("decode-reuse"));
+        assert!(!parse("sim --decode-reuse false").bool_flag("decode-reuse"));
+        assert!(!parse("sim --rate 2").bool_flag("decode-reuse"));
+    }
+
+    #[test]
+    #[should_panic(expected = "--decode-reuse expects a boolean")]
+    fn bool_flag_rejects_junk_values() {
+        parse("sim --decode-reuse maybe").bool_flag("decode-reuse");
     }
 
     #[test]

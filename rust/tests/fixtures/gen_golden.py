@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Reference generator for `golden_fifo.json` and `golden_routes.json`.
+"""Reference generator for `golden_fifo.json`, `golden_routes.json` and
+`golden_reuse.json`.
 
 A line-by-line Python port of the rust cluster simulator's FIFO path
 (`engine/sim/` + `engine/sched/fifo.rs`), the workload generator
@@ -16,7 +17,22 @@ the routing subsystem's `round-robin` and `cache-aware` policies and the
 contended per-link FIFO interconnect (`engine/sim/interconnect.rs`), and
 pins them in a second fixture (golden_routes.json) together with the
 decode-queue-delay / link-wait / utilization-imbalance / per-position-TTFT
-metrics those scenarios exercise.
+metrics those scenarios exercise.  A third fixture (golden_reuse.json)
+pins the decode-side session KV residency subsystem (`--decode-reuse`,
+`engine/sim/residency.rs`): delta handoffs, retained-KV LRU eviction with
+the discard-vs-host-park cost decision, and host reloads.
+
+Decode-tier semantics shared with the rust side (both fixed here and in
+`engine/sim/decode_pool.rs` in the same change):
+
+* the decode worker's staging gate is an in-flight IO *counter* — a
+  stage-in admitted while a stage-out is still draining keeps decode
+  compute gated until both copies finish (the old boolean flag reopened
+  the gate at the first completion);
+* admission's resident cap is *soft* on an idle, empty worker — an
+  oversized request (footprint above the whole pool, or above whatever
+  unevictable retained KV leaves free) is admitted alone rather than
+  parked forever.
 
 Regenerate after an *intentional* simulator behaviour change:
 
@@ -210,13 +226,16 @@ def staging_secs(tokens):
     return STAGING_LAT + byts / STAGING_BPS
 
 
-def cluster_config(system, routing="prefix", link_contended=False, handoff_bps=HANDOFF_BPS):
+def cluster_config(
+    system, routing="prefix", link_contended=False, handoff_bps=HANDOFF_BPS, decode_reuse=False
+):
     usable = max(MEM_BYTES * 0.9 - weight_bytes(), 1e9)
     return {
         "system": system,  # "baseline" | "prefillshare"
         "routing": routing,  # "prefix" | "rr" | "cache"
         "link_contended": link_contended,
         "handoff_bps": handoff_bps,
+        "decode_reuse": decode_reuse,
         "n_prefill_workers": 4,
         "n_models": 4,
         "max_concurrent_sessions": 64,
@@ -466,9 +485,12 @@ class DecodeReq:
     __slots__ = (
         "sid", "call_idx", "ctx_len", "out_tokens", "generated", "issued_at",
         "arrived_at", "ttft_recorded", "was_deferred",
+        "shipped_tokens", "reuse_tokens", "host_tokens", "is_last_call",
     )
 
-    def __init__(self, sid, call_idx, ctx_len, out_tokens, issued_at):
+    def __init__(self, sid, call_idx, ctx_len, out_tokens, issued_at,
+                 shipped_tokens=None, reuse_tokens=0, host_tokens=0,
+                 is_last_call=False):
         self.sid = sid
         self.call_idx = call_idx
         self.ctx_len = ctx_len
@@ -478,6 +500,13 @@ class DecodeReq:
         self.arrived_at = 0
         self.ttft_recorded = False
         self.was_deferred = False
+        # KV tokens the handoff actually shipped (== ctx_len without
+        # decode reuse; the session delta with it).
+        self.shipped_tokens = ctx_len if shipped_tokens is None else shipped_tokens
+        self.reuse_tokens = reuse_tokens
+        self.host_tokens = host_tokens
+        # Final agent call of its session: never retained on completion.
+        self.is_last_call = is_last_call
 
     def footprint(self):
         return self.ctx_len + self.out_tokens
@@ -513,10 +542,18 @@ class Simulator:
                 "pending": deque(),
                 "staging_in": 0,
                 "stepping": False,
-                "io_busy": False,
+                # In-flight host<->GPU copies (decode_pool.rs::io_inflight):
+                # decode compute is gated until the count drains to zero.
+                "io_inflight": 0,
                 "resident": 0,
                 "busy_micros": 0,
                 "peak_resident": 0,
+                # Session residency ledger (engine/sim/residency.rs):
+                # sid -> {tokens, last_use, on_host, pinned}.
+                "residency": {},
+                "res_clock": 0,
+                "retained_gpu": 0,
+                "peak_retained": 0,
             }
             for _ in range(cfg["n_models"])
         ]
@@ -546,6 +583,14 @@ class Simulator:
             "staged_tokens": 0,
             "handoffs": 0,
             "handoff_tokens": 0,
+            "handoffs_delta": 0,
+            "handoff_tokens_delta": 0,
+            "decode_reuse_tokens": 0,
+            "retained_evictions": 0,
+            "retained_evicted_tokens": 0,
+            "host_parks": 0,
+            "host_reloads": 0,
+            "host_reload_tokens": 0,
             "prefill_jobs": 0,
             "prefill_chunks": 0,
             "generated_tokens": 0,
@@ -697,12 +742,33 @@ class Simulator:
         pw["radix"].unlock(path)
         pw["radix"].insert(job["key"])
         model, out_tokens = self.trace[job["sid"]]["calls"][job["call_idx"]]
-        req = DecodeReq(job["sid"], job["call_idx"], job["ctx_len"], out_tokens, job["issued_at"])
+        # Decode reuse (sim/mod.rs::on_prefill_done): the decode worker may
+        # already retain most of the session's context — pin its ledger
+        # entry and ship only the delta over the handoff link.
+        reuse_tokens = host_tokens = 0
+        if self.cfg.get("decode_reuse"):
+            e = self.decode[model]["residency"].get(job["sid"])
+            if e is not None:
+                e["pinned"] = True
+                if e["on_host"]:
+                    host_tokens = e["tokens"]
+                else:
+                    reuse_tokens = e["tokens"]
+        shipped = job["ctx_len"] - reuse_tokens - host_tokens
+        req = DecodeReq(
+            job["sid"], job["call_idx"], job["ctx_len"], out_tokens, job["issued_at"],
+            shipped_tokens=shipped, reuse_tokens=reuse_tokens, host_tokens=host_tokens,
+            is_last_call=job["call_idx"] + 1 == len(self.trace[job["sid"]]["calls"]),
+        )
         self.m["handoffs"] += 1
-        self.m["handoff_tokens"] += job["ctx_len"]
+        self.m["handoff_tokens"] += shipped
+        if reuse_tokens + host_tokens > 0:
+            self.m["handoffs_delta"] += 1
+            self.m["handoff_tokens_delta"] += shipped
+            self.m["decode_reuse_tokens"] += reuse_tokens
         # Interconnect (engine/sim/interconnect.rs): FIFO per ingress link
         # when contended, fire-and-forget otherwise.
-        dur = secs(handoff_secs(job["ctx_len"], self.cfg.get("handoff_bps", HANDOFF_BPS)))
+        dur = secs(handoff_secs(shipped, self.cfg.get("handoff_bps", HANDOFF_BPS)))
         now = self.now
         start = max(now, self.link_free[model]) if self.cfg.get("link_contended") else now
         end = start + dur
@@ -714,9 +780,10 @@ class Simulator:
     # -- decode -----------------------------------------------------------
 
     def stage_transfer(self, w, dur):
-        # interconnect.rs staging link: FIFO when contended (covers the one
-        # overlap io_busy permits: a stage-in admitted while its own
-        # stage-out is still draining), fire-and-forget otherwise.
+        # interconnect.rs staging link: FIFO when contended, fire-and-forget
+        # otherwise.  Several copies can be on the link at once (a stage-in
+        # admitted while a stage-out drains, retained-KV host-parks); the
+        # io_inflight counter gates decode compute until all of them finish.
         start = max(self.now, self.staging_free[w]) if self.cfg.get("link_contended") else self.now
         end = start + dur
         self.staging_free[w] = max(self.staging_free[w], end)
@@ -728,36 +795,93 @@ class Simulator:
         self.try_admit_decode(w)
         self.maybe_step(w)
 
+    def evict_one(self, w):
+        # decode_pool.rs::evict_one — reclaim one LRU retained session;
+        # discard vs host-park priced by the cost model.
+        dw = self.decode[w]
+        best = None
+        for sid, e in dw["residency"].items():
+            if e["pinned"] or e["on_host"]:
+                continue
+            key = (e["last_use"], sid)
+            if best is None or key < best[0]:
+                best = (key, sid, e)
+        if best is None:
+            return False
+        _, sid, e = best
+        tokens = e["tokens"]
+        self.m["retained_evictions"] += 1
+        self.m["retained_evicted_tokens"] += tokens
+        rehandoff = handoff_secs(tokens, self.cfg.get("handoff_bps", HANDOFF_BPS))
+        round_trip = 2.0 * staging_secs(tokens)
+        if round_trip < rehandoff:
+            e["on_host"] = True
+            dw["retained_gpu"] -= tokens
+            dw["io_inflight"] += 1
+            self.m["host_parks"] += 1
+            self.m["staging_events"] += 1
+            self.m["staged_tokens"] += tokens
+            end = self.stage_transfer(w, secs(staging_secs(tokens)))
+            self.schedule(end, ("stage_out", w))
+        else:
+            del dw["residency"][sid]
+            dw["retained_gpu"] -= tokens
+        return True
+
     def try_admit_decode(self, w):
+        cap = self.cfg["decode_kv_tokens"]
         while True:
             dw = self.decode[w]
+            # Eviction pre-pass (decode_pool.rs::try_admit): reclaim
+            # retained KV until the front fits, so the admission decision
+            # (and its soft-cap override) sees post-eviction occupancy.
+            if self.cfg.get("decode_reuse"):
+                while dw["pending"]:
+                    if len(dw["active"]) + dw["staging_in"] >= self.cfg["max_decode_batch"]:
+                        break
+                    front = dw["pending"][0]
+                    need = dw["resident"] + front.footprint() + (
+                        dw["retained_gpu"] - front.reuse_tokens
+                    )
+                    if need <= cap or not self.evict_one(w):
+                        break
             if len(dw["active"]) + dw["staging_in"] >= self.cfg["max_decode_batch"]:
                 return
             if not dw["pending"]:
                 return
             front = dw["pending"][0]
             fp = front.footprint()
-            force = fp > self.cfg["decode_kv_tokens"] and dw["resident"] == 0
-            if dw["resident"] + fp > self.cfg["decode_kv_tokens"] and not force:
-                if not front.was_deferred and not dw["io_busy"]:
+            retained = dw["retained_gpu"] - front.reuse_tokens
+            force = retained + fp > cap and dw["resident"] == 0
+            if dw["resident"] + retained + fp > cap and not force:
+                if not front.was_deferred and dw["io_inflight"] == 0:
                     front.was_deferred = True
-                    dw["io_busy"] = True
+                    dw["io_inflight"] += 1
                     self.m["staging_events"] += 1
-                    self.m["staged_tokens"] += front.ctx_len
-                    end = self.stage_transfer(w, secs(staging_secs(front.ctx_len)))
+                    self.m["staged_tokens"] += front.shipped_tokens
+                    end = self.stage_transfer(w, secs(staging_secs(front.shipped_tokens)))
                     self.schedule(end, ("stage_out", w))
                 return
             req = dw["pending"].popleft()
             dw["resident"] += fp
             dw["peak_resident"] = max(dw["peak_resident"], dw["resident"])
             self.decode_qd.record(to_secs(self.now - req.arrived_at))
-            if req.was_deferred:
+            if self.cfg.get("decode_reuse"):
+                e = dw["residency"].pop(req.sid, None)
+                if e is not None and not e["on_host"]:
+                    dw["retained_gpu"] -= e["tokens"]
+            reload = req.host_tokens + (req.shipped_tokens if req.was_deferred else 0)
+            if reload > 0:
                 dw["staging_in"] += 1
-                dw["io_busy"] = True
+                dw["io_inflight"] += 1
                 self.m["staging_events"] += 1
-                self.m["staged_tokens"] += req.ctx_len
+                self.m["staged_tokens"] += reload
+                if req.host_tokens > 0:
+                    self.m["host_reloads"] += 1
+                    self.m["host_reload_tokens"] += req.host_tokens
                 req.was_deferred = False
-                end = self.stage_transfer(w, secs(staging_secs(req.ctx_len)))
+                req.host_tokens = 0
+                end = self.stage_transfer(w, secs(staging_secs(reload)))
                 self.schedule(end, ("stage_in", req, w))
                 return
             dw["active"].append(req)
@@ -765,19 +889,19 @@ class Simulator:
     def on_stage_in_done(self, req, w):
         dw = self.decode[w]
         dw["staging_in"] -= 1
-        dw["io_busy"] = False
+        dw["io_inflight"] -= 1
         dw["active"].append(req)
         self.try_admit_decode(w)
         self.maybe_step(w)
 
     def on_stage_out_done(self, w):
-        self.decode[w]["io_busy"] = False
+        self.decode[w]["io_inflight"] -= 1
         self.try_admit_decode(w)
         self.maybe_step(w)
 
     def maybe_step(self, w):
         dw = self.decode[w]
-        if dw["stepping"] or dw["io_busy"] or not dw["active"]:
+        if dw["stepping"] or dw["io_inflight"] > 0 or not dw["active"]:
             return
         kv_total = 0
         for r in dw["active"]:
@@ -804,6 +928,19 @@ class Simulator:
             if r.generated >= r.out_tokens:
                 done = swap_remove(dw["active"], i)
                 dw["resident"] -= done.footprint()
+                if self.cfg.get("decode_reuse") and not done.is_last_call:
+                    # Retain the finished request's KV on the worker
+                    # (residency.rs::retain) instead of freeing it.
+                    dw["res_clock"] += 1
+                    assert done.sid not in dw["residency"], "retain without consume"
+                    dw["residency"][done.sid] = {
+                        "tokens": done.footprint(),
+                        "last_use": dw["res_clock"],
+                        "on_host": False,
+                        "pinned": False,
+                    }
+                    dw["retained_gpu"] += done.footprint()
+                    dw["peak_retained"] = max(dw["peak_retained"], dw["retained_gpu"])
                 finished.append(done)
             else:
                 i += 1
@@ -833,6 +970,13 @@ class Simulator:
             self.session_latency.record(to_secs(self.now - s["arrival"]))
             self.m["sessions_completed"] += 1
             self.last_completion = self.now
+            if self.cfg.get("decode_reuse"):
+                # The session will never call again: free whatever KV the
+                # decode tier still retains for it (GPU and host).
+                for dw in self.decode:
+                    e = dw["residency"].pop(sid, None)
+                    if e is not None and not e["on_host"]:
+                        dw["retained_gpu"] -= e["tokens"]
             self.admitted -= 1
             if self.admission_queue:
                 self.admit(self.admission_queue.popleft())
@@ -847,9 +991,11 @@ class Simulator:
             prefill_busy += w["busy_micros"]
         decode_busy = 0
         peak_decode_resident = 0
+        peak_retained = 0
         for d in self.decode:
             decode_busy += d["busy_micros"]
             peak_decode_resident = max(peak_decode_resident, d["peak_resident"])
+            peak_retained = max(peak_retained, d["peak_retained"])
         makespan = to_secs(max(self.last_completion - min(self.first_arrival, self.last_completion), 0))
         span = max(makespan, 1e-9)
         throughput = float(self.m["generated_tokens"]) / span
@@ -880,6 +1026,7 @@ class Simulator:
         counters = dict(self.m)
         counters["evicted_tokens"] = evicted
         counters["peak_decode_resident_tokens"] = peak_decode_resident
+        counters["peak_retained_kv_tokens"] = peak_retained
         floats = {
             "p50_session_latency": p50,
             "p95_session_latency": p95,
@@ -912,6 +1059,28 @@ GOLDEN_RATE = 2.0
 GOLDEN_DURATION = 60.0
 GOLDEN_TRACE_SEED = 42
 
+# Residency counters only the reuse fixture pins; stripped from the
+# fifo/routes fixtures so their schema (and bytes, absent behaviour
+# changes) stays stable across the decode-reuse feature landing.
+REUSE_COUNTER_KEYS = (
+    "handoffs_delta",
+    "handoff_tokens_delta",
+    "decode_reuse_tokens",
+    "retained_evictions",
+    "retained_evicted_tokens",
+    "host_parks",
+    "host_reloads",
+    "host_reload_tokens",
+    "peak_retained_kv_tokens",
+)
+
+
+def strip_reuse(counters):
+    out = dict(counters)
+    for k in REUSE_COUNTER_KEYS:
+        assert out.pop(k) == 0, (k, "nonzero reuse counter in a reuse-off scenario")
+    return out
+
 
 def trace_header(trace, total_calls):
     return {
@@ -943,7 +1112,14 @@ def main():
         assert counters["sessions_completed"] == len(trace), (system, counters)
         assert counters["requests_completed"] == total_calls
         assert counters["prefix_miss_tokens"] == counters["prefill_computed_tokens"]
-        scenarios.append({"name": f"{system}-fifo", "system": system, "counters": counters, "floats": floats})
+        scenarios.append(
+            {
+                "name": f"{system}-fifo",
+                "system": system,
+                "counters": strip_reuse(counters),
+                "floats": floats,
+            }
+        )
 
     fixture = {
         "description": "Golden FIFO metrics for ClusterConfig::paper_default over "
@@ -992,7 +1168,7 @@ def main():
                 "link_contended": contended,
                 "link_gbps": gbps,
                 "decode_kv_tokens": decode_kv,
-                "counters": counters,
+                "counters": strip_reuse(counters),
                 "floats": {**floats, **extra},
             }
         )
@@ -1013,6 +1189,86 @@ def main():
         "scenarios": route_scenarios,
     }
     write_fixture("golden_routes.json", routes_fixture)
+
+    # -- golden_reuse.json: decode-side session KV residency ---------------
+    # Same trace; each scenario also records the reuse-off handoff traffic
+    # of the identical config, pinning the delta-handoff savings the rust
+    # side re-verifies (>= 40% fewer shipped tokens).
+    reuse_scenarios = []
+    for name, routing, contended, gbps, decode_kv, expect_delta in (
+        # Default capacity: retention + delta handoff (the retained pool
+        # peaks at ~55k of the ~85k cap here, so no evictions fire).
+        ("prefillshare-reuse", "prefix", False, 64.0, None, True),
+        # Contended 8 GB/s ingress: delta handoffs shrink link waits too.
+        ("prefillshare-reuse-rr-link8", "rr", True, 8.0, None, True),
+        # 4 GB/s handoff + tight decode KV: eviction prices host-parking
+        # below a future re-handoff, exercising park + reload staging.
+        ("prefillshare-reuse-link4-tight", "rr", True, 4.0, 4000, True),
+        # Tight decode KV on the default 64 GB/s link: eviction prices
+        # *discard* cheaper, so retained KV is dropped before sessions
+        # return (no delta handoffs survive) — pins the discard branch's
+        # accounting, which no other scenario reaches.
+        ("prefillshare-reuse-tight-discard", "prefix", False, 64.0, 4000, False),
+    ):
+        def build(decode_reuse):
+            cfg = cluster_config(
+                "prefillshare",
+                routing=routing,
+                link_contended=contended,
+                handoff_bps=gbps * 1e9,
+                decode_reuse=decode_reuse,
+            )
+            if decode_kv is not None:
+                cfg["decode_kv_tokens"] = decode_kv
+            return cfg
+
+        counters, floats, extra = Simulator(build(True), trace).run()
+        off_counters, _of, _oe = Simulator(build(False), trace).run()
+        assert counters["sessions_completed"] == len(trace), (name, counters)
+        assert counters["requests_completed"] == total_calls, name
+        assert off_counters["sessions_completed"] == len(trace), (name, "reuse-off lost sessions")
+        assert counters["handoff_tokens"] <= off_counters["handoff_tokens"], name
+        saved = 1.0 - counters["handoff_tokens"] / off_counters["handoff_tokens"]
+        if expect_delta:
+            assert counters["handoffs_delta"] > 0, (name, "no delta handoffs")
+            assert saved >= 0.4, (name, "delta handoff saved only", saved)
+        if name.endswith("link4-tight"):
+            assert counters["host_parks"] > 0, (name, "expected host-parked evictions")
+            assert counters["host_reloads"] > 0, (name, "expected host reloads")
+        if name.endswith("tight-discard"):
+            assert counters["retained_evictions"] > 0, (name, "expected discard evictions")
+            assert counters["host_parks"] == 0, (name, "64 GB/s link must price discard cheaper")
+        reuse_scenarios.append(
+            {
+                "name": name,
+                "routing": routing,
+                "link_contended": contended,
+                "link_gbps": gbps,
+                "decode_kv_tokens": decode_kv,
+                "expect_delta": expect_delta,
+                "handoff_tokens_no_reuse": off_counters["handoff_tokens"],
+                "counters": counters,
+                "floats": {**floats, **extra},
+            }
+        )
+        print(
+            f"  {name}: shipped {counters['handoff_tokens']} vs {off_counters['handoff_tokens']} "
+            f"tokens ({100.0 * saved:.1f}% saved), reuse {counters['decode_reuse_tokens']}, "
+            f"evictions {counters['retained_evictions']} "
+            f"(host parks {counters['host_parks']}), peak retained {counters['peak_retained_kv_tokens']}"
+        )
+
+    reuse_fixture = {
+        "description": "Golden decode-reuse metrics over the same trace: session "
+        "KV residency with delta handoff, LRU retained-KV eviction "
+        "(discard vs host-park by cost), and host reloads; generated by "
+        "gen_golden.py (bit-faithful port of the rust simulator). Counters "
+        "compare exactly, floats to 1e-6 relative tolerance; "
+        "handoff_tokens_no_reuse pins the same config with reuse off.",
+        "trace": trace_header(trace, total_calls),
+        "scenarios": reuse_scenarios,
+    }
+    write_fixture("golden_reuse.json", reuse_fixture)
 
 
 if __name__ == "__main__":
