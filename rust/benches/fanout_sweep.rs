@@ -1,0 +1,103 @@
+//! Bench: DAG-structured workloads with parallel fan-out vs the
+//! sequential agent chain.
+//!
+//! Runs the `react` chain and the `fanout`/`debate`/`mixed` DAG
+//! scenarios over identical (rate, seed) on the PrefillShare topology
+//! with prefix-aware routing, and reports the quantities the DAG axis
+//! exists to move: prefix hit ratio when *sibling* agents hit the same
+//! prefix simultaneously, TTFT per DAG depth (the per-wave latency
+//! profile), the per-session in-flight high-water mark, and — with
+//! `--decode-reuse` — delta-handoff traffic when concurrent sibling
+//! handoffs pin several residency entries of one session at once.
+//!
+//! Headline checks (the PR's acceptance bar, also asserted inside
+//! `fanout_experiment`): prefix-aware routing's shared-prefix hit ratio
+//! on `fanout` is **no worse** than on the sequential chain at the same
+//! rate, fan-out sessions really overlap (peak in-flight ≥ 3), and
+//! decode reuse never ships *more* handoff tokens than reuse-off on the
+//! identical trace.
+//!
+//! Run: `cargo bench --bench fanout_sweep`
+
+use prefillshare::engine::experiments::{fanout_experiment, FANOUT_RATES};
+use prefillshare::engine::report::{format_row, header, save_rows, Row};
+
+fn main() {
+    let seed = 0;
+    let t0 = std::time::Instant::now();
+    // fanout_experiment already asserts: fanout hit ratio >= chain hit
+    // ratio per rate, fanout peak in-flight >= 3, chain peak == 1.
+    let rows = fanout_experiment(seed);
+    println!("== DAG fan-out sweep (PrefillShare, prefix-aware, seed {seed}) ==");
+    println!("{}", header("rate"));
+    for r in &rows {
+        println!("{}", format_row(r));
+    }
+
+    let at = |sys: &str, wl: &str, rate: f64| -> &Row {
+        rows.iter()
+            .find(|r| r.system == sys && r.workload == wl && r.x == rate)
+            .expect("row")
+    };
+
+    println!("\nshared-prefix hit ratio, chain vs DAG (prefix-aware routing):");
+    for &rate in FANOUT_RATES {
+        let chain = at("ps/prefix-aware", "react", rate);
+        let tree = at("ps/prefix-aware", "fanout", rate);
+        let deb = at("ps/prefix-aware", "debate", rate);
+        let mix = at("ps/prefix-aware", "mixed", rate);
+        println!(
+            "  rate={rate:<4} react={:>5.1}%  fanout={:>5.1}%  debate={:>5.1}%  mixed={:>5.1}%  \
+             (fanout peak inflight {})",
+            100.0 * chain.result.prefix_hit_ratio,
+            100.0 * tree.result.prefix_hit_ratio,
+            100.0 * deb.result.prefix_hit_ratio,
+            100.0 * mix.result.prefix_hit_ratio,
+            tree.result.peak_session_inflight,
+        );
+        println!(
+            "OK: fanout hit ratio {:.1}% >= chain {:.1}% at rate {rate}",
+            100.0 * tree.result.prefix_hit_ratio,
+            100.0 * chain.result.prefix_hit_ratio
+        );
+    }
+
+    println!("\nmean TTFT by DAG depth (s) — fanout waves are planner/specialists/joiner:");
+    for &rate in FANOUT_RATES {
+        let tree = at("ps/prefix-aware", "fanout", rate);
+        let depths: Vec<String> =
+            tree.result.ttft_mean_by_depth.iter().map(|m| format!("{m:.3}")).collect();
+        println!("  rate={rate:<4} [{}]", depths.join(" "));
+    }
+
+    // Decode reuse under concurrent sibling handoffs: never more traffic,
+    // identical completions, and the deltas really happen.
+    println!("\nfanout decode-reuse vs off (handoff kv tokens shipped):");
+    for &rate in FANOUT_RATES {
+        let off = at("ps/prefix-aware", "fanout", rate);
+        let on = at("ps/fanout-reuse", "fanout", rate);
+        assert_eq!(
+            on.result.sessions_completed, off.result.sessions_completed,
+            "decode reuse lost sessions at rate {rate}"
+        );
+        let ratio = on.result.handoff_tokens as f64 / off.result.handoff_tokens as f64;
+        assert!(ratio <= 1.0, "reuse shipped MORE at rate {rate}: {ratio:.3}");
+        assert!(on.result.handoffs_delta > 0, "no delta handoffs at rate {rate}");
+        println!(
+            "  rate={rate:<4} off={:>9} tok  on={:>9} tok  saved={:>5.1}%  reuse={:>5.1}%  \
+             delta_handoffs={}",
+            off.result.handoff_tokens,
+            on.result.handoff_tokens,
+            100.0 * (1.0 - ratio),
+            100.0 * on.result.decode_reuse_ratio,
+            on.result.handoffs_delta,
+        );
+    }
+
+    save_rows("reports/fanout.json", &rows).expect("save");
+    println!(
+        "saved reports/fanout.json ({} rows, {:.1}s total)",
+        rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -6,7 +6,7 @@ use crate::costmodel::{LlmSpec, LLAMA8B, QWEN14B};
 use crate::engine::config::{ClusterConfig, SystemKind};
 use crate::engine::report::Row;
 use crate::engine::sim::simulate;
-use crate::workload::{generate_trace, react, reflexion, WorkloadSpec};
+use crate::workload::{debate, fanout, generate_trace, mixed, react, reflexion, WorkloadSpec};
 
 /// Arrival rates swept in Fig 3 / Fig 5 (sessions per second).
 pub const FIG3_RATES: &[f64] = &[0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 10.0, 12.0];
@@ -236,6 +236,80 @@ pub fn reuse_ablation(seed: u64) -> Vec<Row> {
     reuse_sweep(LLAMA8B, &react(), REUSE_RATES, seed)
 }
 
+/// Arrival rates swept in the DAG fan-out comparison.
+pub const FANOUT_RATES: &[f64] = &[1.0, 2.0, 4.0];
+
+/// DAG-workload comparison: the sequential `react` chain vs the
+/// `fanout`/`debate`/`mixed` DAG scenarios over identical (rate, seed),
+/// PrefillShare topology, prefix-aware routing — one row per (workload,
+/// rate), plus decode-reuse rows for `fanout` (concurrent sibling delta
+/// handoffs pinning several residency entries of one session at once).
+/// The per-depth TTFT breakdown (`ttft_mean_by_depth`) and
+/// `peak_session_inflight` are the DAG-specific columns
+/// (`bench-serving --experiment fanout`, `fanout_sweep` bench).
+pub fn fanout_sweep(llm: LlmSpec, rates: &[f64], seed: u64) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for wl in [react(), fanout(), debate(), mixed()] {
+        for &rate in rates {
+            let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
+            cfg.seed = seed;
+            let trace = generate_trace(&wl, rate, HORIZON_S, seed);
+            rows.push(Row {
+                system: "ps/prefix-aware".into(),
+                workload: wl.name.to_string(),
+                x_name: "rate".into(),
+                x: rate,
+                result: simulate(cfg, trace),
+            });
+        }
+    }
+    let wl = fanout();
+    for &rate in rates {
+        let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
+        cfg.decode_reuse = true;
+        cfg.seed = seed;
+        let trace = generate_trace(&wl, rate, HORIZON_S, seed);
+        rows.push(Row {
+            system: "ps/fanout-reuse".into(),
+            workload: wl.name.to_string(),
+            x_name: "rate".into(),
+            x: rate,
+            result: simulate(cfg, trace),
+        });
+    }
+    rows
+}
+
+/// CLI/bench wrapper: the default DAG comparison (LLaMA8B), asserting the
+/// acceptance bar — prefix-aware routing's shared-prefix hit ratio on the
+/// fanout workload is **no worse** than on the sequential chain at the
+/// same rate (siblings radix-hit the planner's context they fan out
+/// from), and fan-out sessions really do overlap their own calls.
+pub fn fanout_experiment(seed: u64) -> Vec<Row> {
+    let rows = fanout_sweep(LLAMA8B, FANOUT_RATES, seed);
+    let find = |wl: &str, rate: f64| {
+        rows.iter()
+            .find(|r| r.system == "ps/prefix-aware" && r.workload == wl && r.x == rate)
+            .expect("sweep row")
+    };
+    for &rate in FANOUT_RATES {
+        let chain = find("react", rate);
+        let tree = find("fanout", rate);
+        assert!(
+            tree.result.prefix_hit_ratio >= chain.result.prefix_hit_ratio,
+            "fanout hit ratio {} fell below the sequential chain's {} at rate {rate}",
+            tree.result.prefix_hit_ratio,
+            chain.result.prefix_hit_ratio
+        );
+        assert!(
+            tree.result.peak_session_inflight >= 3,
+            "fanout sessions must run their specialists concurrently (rate {rate})"
+        );
+        assert_eq!(chain.result.peak_session_inflight, 1, "chains never self-overlap");
+    }
+    rows
+}
+
 /// §3.3 memory equations: measured peak KV residency vs model count N.
 /// Returns (n_models, baseline_tokens, prefillshare_tokens) triples from
 /// radix residency accounting at a fixed moderate load.
@@ -251,6 +325,7 @@ pub fn memory_scaling(seed: u64) -> Vec<(usize, u64, u64)> {
                 model: m,
                 mean_out_tokens: 96.0,
                 cv: 0.3,
+                parents: if m == 0 { Vec::new() } else { vec![m - 1] },
             })
             .collect();
         let mut totals = Vec::new();

@@ -120,6 +120,11 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
                         "latency_mean_by_position_s",
                         f64_arr(&r.result.latency_mean_by_position),
                     ),
+                    ("ttft_mean_by_depth_s", f64_arr(&r.result.ttft_mean_by_depth)),
+                    (
+                        "peak_session_inflight",
+                        json::num(r.result.peak_session_inflight as f64),
+                    ),
                 ])
             })
             .collect(),

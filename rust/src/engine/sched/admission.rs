@@ -16,11 +16,13 @@ pub struct AdmissionQuery {
     /// KV tokens currently reserved by the active batch (+ staging-in).
     pub resident_tokens: usize,
     /// Retained-but-inactive session KV still occupying the pool after the
-    /// residency layer's eviction pass (`--decode-reuse`), *minus* the part
-    /// this request itself reuses.  0 when decode reuse is off.  What is
-    /// left here is unevictable right now (pinned by in-flight handoffs of
-    /// sessions queued behind this one), so liveness must not depend on it
-    /// draining — see the soft-cap override below.
+    /// residency layer's eviction pass (`--decode-reuse`), *minus* this
+    /// request's own pinned entry (admission consumes that entry whole —
+    /// reused prefix and any non-matching DAG-branch remainder alike).
+    /// 0 when decode reuse is off.  What is left here is unevictable
+    /// right now (pinned by in-flight handoffs of sessions queued behind
+    /// this one), so liveness must not depend on it draining — see the
+    /// soft-cap override below.
     pub retained_tokens: usize,
     /// The worker's resident-KV pool size.
     pub capacity_tokens: usize,

@@ -14,6 +14,9 @@
 //! finished requests leave their KV resident, later calls of the session
 //! ship only the delta, and admission reclaims retained entries LRU when
 //! it needs the space (discard vs host-park priced by the cost model).
+//! Under DAG workloads the reusable share is the longest common prefix
+//! of the retained context's segment signature and the new call's — see
+//! `residency.rs` and `ARCHITECTURE.md` ("Cross-layer invariants").
 
 use std::collections::VecDeque;
 
@@ -32,9 +35,12 @@ use super::Ev;
 #[derive(Debug, Clone)]
 pub(crate) struct DecodeReq {
     pub sid: usize,
-    /// Position within the session's agent chain — indexes the
+    /// Node index within the session's call graph — indexes the
     /// per-position TTFT/latency breakdowns.
     pub call_idx: usize,
+    /// DAG depth of the node (longest parent path; 0 for roots) —
+    /// indexes the per-depth TTFT breakdown.
+    pub depth: usize,
     pub ctx_len: usize,
     pub out_tokens: usize,
     pub generated: usize,
@@ -49,15 +55,23 @@ pub(crate) struct DecodeReq {
     /// move exactly this much (the retained remainder never left the
     /// worker).
     pub shipped_tokens: usize,
-    /// Retained GPU tokens this call reuses (its pinned ledger entry,
-    /// consumed at admission).
+    /// Retained GPU tokens this call reuses (its pinned ledger entry's
+    /// matching prefix, consumed at admission).
     pub reuse_tokens: usize,
     /// Host-parked tokens that must stage back in before joining.
     pub host_tokens: usize,
-    /// This is the session's final agent call: its KV can never be
-    /// reused, so completion frees it instead of retaining it (keeps
-    /// `peak_retained` an honest high-water mark of held-across-calls KV).
-    pub is_last_call: bool,
+    /// Shared-prefix share of `ctx_len` (system + init prompt) — the
+    /// residency signature's base (0 when reuse is off).
+    pub base: usize,
+    /// Input-context segment signature: `(node, out_tokens)` runs in
+    /// ancestor-cut order (empty when reuse is off; the ledger sizes
+    /// deltas and retention against it).
+    pub sig: Vec<(usize, usize)>,
+    /// This node is a sink of its session's call graph (no children): no
+    /// later call can extend its context, so completion frees its KV
+    /// instead of retaining it (keeps `peak_retained` an honest
+    /// high-water mark of held-across-calls KV).
+    pub is_sink: bool,
 }
 
 impl DecodeReq {
@@ -117,10 +131,16 @@ impl DecodePool {
         DecodePool { workers, admission: Box::new(CapAdmission) }
     }
 
-    /// Size an incoming handoff for worker `w`: pin the session's retained
-    /// entry and return `(gpu_reuse_tokens, host_reload_tokens)`.
-    pub fn pin_for_handoff(&mut self, w: usize, sid: usize) -> (usize, usize) {
-        self.workers[w].residency.pin_for_handoff(sid)
+    /// Size an incoming handoff for worker `w` against the retained
+    /// entry's longest matching signature prefix, pin the entry, and
+    /// return `(gpu_reuse_tokens, host_reload_tokens)`.
+    pub fn pin_for_handoff(
+        &mut self,
+        w: usize,
+        sid: usize,
+        ctx_sig: &[(usize, usize)],
+    ) -> (usize, usize) {
+        self.workers[w].residency.pin_for_handoff(sid, ctx_sig)
     }
 
     /// The session completed: drop whatever any worker still retains for it.
@@ -153,7 +173,9 @@ impl DecodePool {
             // so the admission policy decides over post-eviction occupancy
             // (its soft-cap override must fire only when what is left is
             // genuinely unevictable).  Skipped when the batch is full —
-            // the policy will `Wait` and no space is needed yet.
+            // the policy will `Wait` and no space is needed yet.  The
+            // front's own pinned entry is discounted *whole*: admitting
+            // the request consumes the entire entry, reused prefix or not.
             if cfg.decode_reuse {
                 loop {
                     let dw = &self.workers[w];
@@ -163,7 +185,8 @@ impl DecodePool {
                     }
                     let need = dw.resident_tokens
                         + front.footprint()
-                        + (dw.residency.retained_gpu_tokens - front.reuse_tokens);
+                        + (dw.residency.retained_gpu_tokens
+                            - dw.residency.entry_gpu_tokens(front.sid));
                     if need <= cfg.decode_kv_tokens || !self.evict_one(w, cfg, q, net, metrics) {
                         break;
                     }
@@ -175,9 +198,11 @@ impl DecodePool {
                 self.admission.decide(&AdmissionQuery {
                     footprint: front.footprint(),
                     resident_tokens: dw.resident_tokens,
-                    // Retained occupancy minus the share the front itself
-                    // reuses (that part changes owner, not occupancy).
-                    retained_tokens: dw.residency.retained_gpu_tokens - front.reuse_tokens,
+                    // Retained occupancy minus the front's own entry
+                    // (admission consumes it whole — the occupancy changes
+                    // owner or is freed, never double-counted).
+                    retained_tokens: dw.residency.retained_gpu_tokens
+                        - dw.residency.entry_gpu_tokens(front.sid),
                     capacity_tokens: cfg.decode_kv_tokens,
                     active: dw.active.len(),
                     staging_in: dw.staging_in,
@@ -319,10 +344,11 @@ impl DecodePool {
     }
 
     /// One decode iteration completed: every active request generated one
-    /// token (TTFT recorded on the first).  Returns finished requests in
-    /// batch order for the caller's completion accounting.  With decode
-    /// reuse on, a finished request's KV stays on the worker as a
-    /// retained ledger entry instead of being freed.
+    /// token (TTFT recorded on the first, by call position and by DAG
+    /// depth).  Returns finished requests in batch order for the caller's
+    /// completion accounting.  With decode reuse on, a finished request's
+    /// KV stays on the worker as a retained ledger entry (tagged with its
+    /// context's segment signature) instead of being freed.
     pub fn advance_batch(
         &mut self,
         w: usize,
@@ -342,12 +368,15 @@ impl DecodePool {
                 let t = to_secs(now - r.issued_at);
                 metrics.ttft.record(t);
                 record_position(&mut metrics.ttft_by_position, r.call_idx, t);
+                record_position(&mut metrics.ttft_by_depth, r.depth, t);
             }
             if r.generated >= r.out_tokens {
                 let done = dw.active.swap_remove(i);
                 dw.resident_tokens -= done.footprint();
-                if cfg.decode_reuse && !done.is_last_call {
-                    dw.residency.retain(done.sid, done.footprint());
+                if cfg.decode_reuse && !done.is_sink {
+                    let mut sig = done.sig.clone();
+                    sig.push((done.call_idx, done.out_tokens));
+                    dw.residency.retain(done.sid, done.footprint(), done.base, sig);
                 }
                 finished.push(done);
             } else {
@@ -367,6 +396,7 @@ mod tests {
         DecodeReq {
             sid,
             call_idx: 0,
+            depth: 0,
             ctx_len,
             out_tokens,
             generated: 0,
@@ -377,7 +407,9 @@ mod tests {
             shipped_tokens: ctx_len,
             reuse_tokens: 0,
             host_tokens: 0,
-            is_last_call: false,
+            base: ctx_len,
+            sig: Vec::new(),
+            is_sink: false,
         }
     }
 
@@ -468,7 +500,7 @@ mod tests {
         let mut net = Interconnect::new(1, false);
         let mut m = ServingMetrics::default();
 
-        // Session 0's first call retains 1100 tokens.
+        // Session 0's first call (node 0) retains 1100 tokens.
         pool.push_handoff(0, req(0, 1_000, 100), 0);
         pool.try_admit(0, &c, &mut q, &mut net, &mut m);
         pool.workers[0].active[0].generated = 99;
@@ -476,16 +508,67 @@ mod tests {
 
         // Its next call reuses them: the handoff ships only the delta and
         // admission folds the pinned entry into the active footprint.
-        let (gpu, host) = pool.pin_for_handoff(0, 0);
+        let next_sig = vec![(0usize, 100usize)];
+        let (gpu, host) = pool.pin_for_handoff(0, 0, &next_sig);
         assert_eq!((gpu, host), (1_100, 0));
         let mut r = req(0, 1_300, 100);
+        r.call_idx = 1;
         r.shipped_tokens = 200;
         r.reuse_tokens = gpu;
+        r.base = 1_000;
+        r.sig = next_sig;
         pool.push_handoff(0, r, 10);
         pool.try_admit(0, &c, &mut q, &mut net, &mut m);
         assert_eq!(pool.workers[0].active.len(), 1);
         assert_eq!(m.retained_evictions, 0, "pinned entry must not be evicted");
         assert_eq!(pool.workers[0].residency.retained_gpu_tokens, 0, "consumed");
         assert_eq!(pool.workers[0].resident_tokens, 1_400);
+    }
+
+    #[test]
+    fn divergent_branch_admission_discounts_the_whole_entry() {
+        // A DAG sibling's retained KV matches the new call's context only
+        // through the shared base; admission must still discount the
+        // *entire* pinned entry (it is consumed whole) so the request is
+        // not parked for space the consume is about to free.
+        let mut c = cfg(2_400);
+        c.decode_reuse = true;
+        let mut pool = DecodePool::new(1);
+        let mut q = EventQueue::new();
+        let mut net = Interconnect::new(1, false);
+        let mut m = ServingMetrics::default();
+
+        // Node 1 (a branch child of node 0) completes: retained signature
+        // base 1000 + out(0)=100 + out(1)=100.
+        let mut a = req(0, 1_100, 100);
+        a.call_idx = 1;
+        a.base = 1_000;
+        a.sig = vec![(0, 100)];
+        pool.push_handoff(0, a, 0);
+        pool.try_admit(0, &c, &mut q, &mut net, &mut m);
+        pool.workers[0].active[0].generated = 99;
+        pool.advance_batch(0, 5, &c, &mut m);
+        assert_eq!(pool.workers[0].residency.retained_gpu_tokens, 1_200);
+
+        // The session's next call on this worker sits on the *other*
+        // branch: context = base + out(0) + out(2).  LCP = base + out(0).
+        let next_sig = vec![(0usize, 100usize), (2usize, 100usize)];
+        let (gpu, host) = pool.pin_for_handoff(0, 0, &next_sig);
+        assert_eq!((gpu, host), (1_100, 0), "reuse stops at the branch point");
+        let mut b = req(0, 1_200, 100);
+        b.call_idx = 3;
+        b.shipped_tokens = 100;
+        b.reuse_tokens = gpu;
+        b.base = 1_000;
+        b.sig = next_sig;
+        pool.push_handoff(0, b, 10);
+        // footprint 1300 + entry 1200 > cap 2400 if the entry were held;
+        // discounting the consumed entry admits without any eviction.
+        pool.try_admit(0, &c, &mut q, &mut net, &mut m);
+        assert_eq!(pool.workers[0].active.len(), 1);
+        assert_eq!(m.retained_evictions, 0);
+        assert_eq!(m.staging_events, 0);
+        assert_eq!(pool.workers[0].residency.retained_gpu_tokens, 0, "entry consumed whole");
+        assert_eq!(pool.workers[0].resident_tokens, 1_300);
     }
 }

@@ -14,7 +14,13 @@
 //! duration `d` starts at `max(now, link.free_at)` — FIFO behind any
 //! in-flight copy — and completes at `start + d`; uncontended mode
 //! (`link_contended = false`, the default) starts every transfer at
-//! `now`, reproducing the original simulator event-for-event.  Staging
+//! `now`, reproducing the original simulator event-for-event.  DAG
+//! fan-out is where contention bites: sibling handoffs of one session
+//! target *different* decode workers (distinct links), but
+//! locality-blind routing can still pile their prefills onto a pool
+//! whose completions burst-arrive on one link.  The byte-conservation
+//! invariant (`ARCHITECTURE.md`, "Cross-layer invariants") is checked
+//! against the per-link logs kept here.  Staging
 //! links are mostly serialized already by the decode worker's in-flight
 //! IO counter (which gates decode compute until every copy drains —
 //! overlaps such as a stage-in admitted while its own stage-out is still

@@ -1,5 +1,7 @@
 //! The discrete-event cluster simulator — paper §3.3's execution pipeline
-//! over the analytic A100 cost model, decomposed into four components:
+//! over the analytic A100 cost model, decomposed into four components
+//! (the full component map, determinism contract and cross-layer
+//! invariants live in `ARCHITECTURE.md`):
 //!
 //! ```text
 //!             sessions        routed jobs            KV handoff
@@ -27,13 +29,22 @@
 //!   per-session residency ledger (`residency.rs`) so repeat calls of a
 //!   session ship only the KV delta and retained KV is reclaimed LRU.
 //!
+//! Sessions are **DAG-structured** (`workload::SessionScript`): the
+//! closed loop issues every node the moment its last parent completes,
+//! so sibling nodes of one session are in flight *concurrently* —
+//! multiple prefills, handoffs and decode requests per session at once
+//! (`fanout`/`debate`/`mixed` workloads; `peak_session_inflight` reports
+//! the high-water mark).  A chain is the degenerate DAG with one ready
+//! node at a time, reproducing the pre-DAG simulator event-for-event.
+//!
 //! The simulator is deterministic given (trace, config.seed): schedulers
-//! and routers break ties on fixed orders, the event queue breaks equal
-//! timestamps in insertion order, and the only RNG consumer is the
-//! `random` routing ablation.  The default configuration — FIFO
-//! scheduling, prefix-aware routing, homogeneous pool, uncontended link —
-//! reproduces the pre-decomposition simulator event-for-event (pinned by
-//! the golden-metrics regression tests).
+//! and routers break ties on fixed orders, ready DAG nodes issue in
+//! ascending node order, the event queue breaks equal timestamps in
+//! insertion order, and the only RNG consumer is the `random` routing
+//! ablation.  The default configuration — FIFO scheduling, prefix-aware
+//! routing, homogeneous pool, uncontended link — reproduces the
+//! pre-decomposition simulator event-for-event (pinned by the
+//! golden-metrics regression tests).
 
 mod decode_pool;
 mod interconnect;
@@ -72,12 +83,31 @@ pub(crate) enum Ev {
 // Per-session state
 // ---------------------------------------------------------------------------
 
+/// Mutable DAG-execution state of one session.
 #[derive(Debug, Clone)]
 struct SessionState {
-    next_call: usize,
-    /// Context tokens accumulated so far (sys + init + generated).
-    ctx_len: usize,
+    /// Unmet parent count per node; a node issues when its count hits 0.
+    pending_parents: Vec<u32>,
+    /// Nodes not yet completed (session ends at 0).
+    remaining: usize,
+    /// Calls currently in flight (prefill, handoff or decode) — > 1 under
+    /// fan-out; feeds `peak_session_inflight`.
+    inflight: u32,
     arrival: SimTime,
+}
+
+/// Immutable per-node facts precomputed from the trace: the ancestor cut
+/// defines the node's input context (join semantics: shared prefix +
+/// concatenated ancestor outputs, ascending node order).
+#[derive(Debug, Clone)]
+struct NodeMeta {
+    /// Input context length: sys + init + Σ ancestor outputs.
+    ctx_len: usize,
+    /// DAG depth (longest parent path; roots are 0).
+    depth: usize,
+    /// Sorted transitive-ancestor set.
+    anc: Vec<usize>,
+    children: Vec<usize>,
 }
 
 // ---------------------------------------------------------------------------
@@ -89,6 +119,8 @@ pub struct Simulator {
     trace: Trace,
     q: EventQueue<Ev>,
     sessions: Vec<SessionState>,
+    /// Per-session, per-node static DAG facts.
+    nodes: Vec<Vec<NodeMeta>>,
     proxy: Proxy,
     prefill: PrefillPool,
     decode: DecodePool,
@@ -104,20 +136,35 @@ impl Simulator {
         let prefill = PrefillPool::new(&cfg);
         let decode = DecodePool::new(cfg.n_models);
         let net = Interconnect::new(cfg.n_models, cfg.link_contended);
-        let sessions = trace
-            .sessions
-            .iter()
-            .map(|s| SessionState {
-                next_call: 0,
-                ctx_len: trace.workload.sys_prompt_tokens + s.init_prompt_tokens,
+        let sys = trace.workload.sys_prompt_tokens;
+        let mut sessions = Vec::with_capacity(trace.sessions.len());
+        let mut nodes = Vec::with_capacity(trace.sessions.len());
+        for s in &trace.sessions {
+            let depths = s.depths();
+            let children = s.children();
+            let metas: Vec<NodeMeta> = (0..s.calls.len())
+                .map(|i| {
+                    let anc = s.ancestors(i);
+                    let ctx_len = sys
+                        + s.init_prompt_tokens
+                        + anc.iter().map(|&a| s.calls[a].out_tokens).sum::<usize>();
+                    NodeMeta { ctx_len, depth: depths[i], anc, children: children[i].clone() }
+                })
+                .collect();
+            sessions.push(SessionState {
+                pending_parents: s.calls.iter().map(|c| c.parents.len() as u32).collect(),
+                remaining: s.calls.len(),
+                inflight: 0,
                 arrival: s.arrival,
-            })
-            .collect();
+            });
+            nodes.push(metas);
+        }
         Simulator {
             cfg,
             trace,
             q: EventQueue::new(),
             sessions,
+            nodes,
             proxy,
             prefill,
             decode,
@@ -155,23 +202,38 @@ impl Simulator {
         self.metrics.sessions_arrived += 1;
         self.first_arrival = self.first_arrival.min(self.q.now());
         if self.proxy.on_arrival(sid) {
-            self.issue_call(sid);
+            self.start_session(sid);
         }
     }
 
     // -- request lifecycle --------------------------------------------------
 
-    fn issue_call(&mut self, sid: usize) {
-        let call_idx = self.sessions[sid].next_call;
-        let call = self.trace.sessions[sid].calls[call_idx];
-        let ctx_len = self.sessions[sid].ctx_len;
+    /// Issue every root of the session's call graph (ascending node
+    /// order) — a chain has exactly one.
+    fn start_session(&mut self, sid: usize) {
+        for node in 0..self.trace.sessions[sid].calls.len() {
+            if self.trace.sessions[sid].calls[node].parents.is_empty() {
+                self.issue_node(sid, node);
+            }
+        }
+    }
+
+    fn issue_node(&mut self, sid: usize, node: usize) {
+        {
+            let s = &mut self.sessions[sid];
+            s.inflight += 1;
+            self.metrics.peak_session_inflight =
+                self.metrics.peak_session_inflight.max(s.inflight as u64);
+        }
+        let script = &self.trace.sessions[sid];
+        let meta = &self.nodes[sid][node];
         let job = PrefillJob {
             sid,
-            call_idx,
-            model: call.model,
-            ctx_len,
+            call_idx: node,
+            model: script.calls[node].model,
+            ctx_len: meta.ctx_len,
             issued_at: self.q.now(),
-            key: self.context_key(sid, ctx_len),
+            key: self.context_key(sid, node),
         };
         let w = match self.cfg.system {
             // Baseline: each model has its own dedicated prefill GPU.
@@ -191,9 +253,39 @@ impl Simulator {
         self.try_start_prefill(w);
     }
 
-    fn context_key(&self, sid: usize, ctx_len: usize) -> Vec<u64> {
-        let sys = self.trace.workload.sys_prompt_tokens.min(ctx_len);
-        simtokens::context_key(sid as u64, sys, ctx_len - sys)
+    /// Radix key for node `node`'s input context: shared system prompt,
+    /// then the session-private segments — init prompt (segment 0) and
+    /// each ancestor's output (segment `a + 1`), ascending node order.
+    fn context_key(&self, sid: usize, node: usize) -> Vec<u64> {
+        simtokens::context_key(
+            sid as u64,
+            self.trace.workload.sys_prompt_tokens,
+            &self.context_segs(sid, node),
+        )
+    }
+
+    /// `(segment, length)` runs of node `node`'s private context.
+    fn context_segs(&self, sid: usize, node: usize) -> Vec<(usize, usize)> {
+        let script = &self.trace.sessions[sid];
+        let meta = &self.nodes[sid][node];
+        let mut segs = Vec::with_capacity(meta.anc.len() + 1);
+        segs.push((0, script.init_prompt_tokens));
+        for &a in &meta.anc {
+            segs.push((a + 1, script.calls[a].out_tokens));
+        }
+        segs
+    }
+
+    /// Output-run signature of node `node`'s input context — the form the
+    /// residency ledger sizes delta handoffs against: `(node, out_tokens)`
+    /// per ancestor, ascending.
+    fn context_sig(&self, sid: usize, node: usize) -> Vec<(usize, usize)> {
+        let script = &self.trace.sessions[sid];
+        self.nodes[sid][node]
+            .anc
+            .iter()
+            .map(|&a| (a, script.calls[a].out_tokens))
+            .collect()
     }
 
     fn try_start_prefill(&mut self, w: usize) {
@@ -206,13 +298,26 @@ impl Simulator {
         if let Some(job) = self.prefill.finish_unit(w) {
             // Cache handoff: ship the prompt KV to the decode worker
             // through its ingress link.  Under `--decode-reuse` the worker
-            // may already retain most of the session's context (GPU or
-            // host-parked): only the delta crosses the handoff link, and
-            // the retained entry is pinned until the request is admitted.
-            let call = self.trace.sessions[job.sid].calls[job.call_idx];
+            // may already retain part of the session's context (GPU or
+            // host-parked): the delta is sized against the longest common
+            // prefix of the retained signature and this node's context,
+            // and the retained entry is pinned until the request is
+            // admitted — concurrent sibling handoffs of one session pin
+            // independently, one entry per decode worker.
+            let call = &self.trace.sessions[job.sid].calls[job.call_idx];
+            let out_tokens = call.out_tokens;
             let dw = call.model; // decode worker hosting this task model
+            let (sig, base) = if self.cfg.decode_reuse {
+                let script = &self.trace.sessions[job.sid];
+                (
+                    self.context_sig(job.sid, job.call_idx),
+                    self.trace.workload.sys_prompt_tokens + script.init_prompt_tokens,
+                )
+            } else {
+                (Vec::new(), 0)
+            };
             let (reuse_tokens, host_tokens) = if self.cfg.decode_reuse {
-                self.decode.pin_for_handoff(dw, job.sid)
+                self.decode.pin_for_handoff(dw, job.sid, &sig)
             } else {
                 (0, 0)
             };
@@ -220,8 +325,9 @@ impl Simulator {
             let req = DecodeReq {
                 sid: job.sid,
                 call_idx: job.call_idx,
+                depth: self.nodes[job.sid][job.call_idx].depth,
                 ctx_len: job.ctx_len,
-                out_tokens: call.out_tokens,
+                out_tokens,
                 generated: 0,
                 issued_at: job.issued_at,
                 arrived_at: 0,
@@ -230,7 +336,9 @@ impl Simulator {
                 shipped_tokens: shipped,
                 reuse_tokens,
                 host_tokens,
-                is_last_call: job.call_idx + 1 == self.trace.sessions[job.sid].calls.len(),
+                base,
+                sig,
+                is_sink: self.nodes[job.sid][job.call_idx].children.is_empty(),
             };
             let dur_us = secs(self.cfg.cost.handoff_secs(shipped));
             self.metrics.handoffs += 1;
@@ -287,13 +395,27 @@ impl Simulator {
 
     fn on_call_complete(&mut self, req: DecodeReq) {
         let sid = req.sid;
-        let s = &mut self.sessions[sid];
-        s.ctx_len += req.out_tokens;
-        s.next_call += 1;
-        if s.next_call < self.trace.sessions[sid].calls.len() {
-            self.issue_call(sid);
-        } else {
-            let lat = to_secs(self.q.now() - s.arrival);
+        let node = req.call_idx;
+        {
+            let s = &mut self.sessions[sid];
+            s.inflight -= 1;
+            s.remaining -= 1;
+        }
+        // Unblock children; every node whose last parent this was becomes
+        // ready *now* and issues immediately (ascending order — the
+        // children lists are built ascending).  Indexed loop: re-reading
+        // the child id per iteration keeps the hot completion path free
+        // of a per-request Vec clone.
+        for k in 0..self.nodes[sid][node].children.len() {
+            let c = self.nodes[sid][node].children[k];
+            let s = &mut self.sessions[sid];
+            s.pending_parents[c] -= 1;
+            if s.pending_parents[c] == 0 {
+                self.issue_node(sid, c);
+            }
+        }
+        if self.sessions[sid].remaining == 0 {
+            let lat = to_secs(self.q.now() - self.sessions[sid].arrival);
             self.metrics.session_latency.record(lat);
             self.metrics.sessions_completed += 1;
             self.last_completion = self.q.now();
@@ -303,7 +425,7 @@ impl Simulator {
                 self.decode.release_session(sid);
             }
             if let Some(next) = self.proxy.on_session_done() {
-                self.issue_call(next);
+                self.start_session(next);
             }
         }
     }
@@ -380,6 +502,8 @@ impl Simulator {
                 .iter()
                 .map(|h| h.mean())
                 .collect(),
+            ttft_mean_by_depth: self.metrics.ttft_by_depth.iter().map(|h| h.mean()).collect(),
+            peak_session_inflight: self.metrics.peak_session_inflight,
             interconnect,
             metrics: self.metrics,
         }
@@ -448,6 +572,12 @@ pub struct SimResult {
     /// `call_idx`; length = calls per session once any session finished).
     pub ttft_mean_by_position: Vec<f64>,
     pub latency_mean_by_position: Vec<f64>,
+    /// Mean TTFT per DAG depth (index = longest-parent-path depth of the
+    /// call node; equals the by-position breakdown for chain workloads).
+    pub ttft_mean_by_depth: Vec<f64>,
+    /// High-water mark of concurrently in-flight calls of any single
+    /// session — 1 for chains, > 1 once fan-out siblings overlap.
+    pub peak_session_inflight: u64,
     /// Per-link transfer accounting (conservation property tests).
     pub interconnect: InterconnectStats,
     pub metrics: ServingMetrics,
@@ -615,10 +745,8 @@ mod tests {
         let trace = small_trace(3.0, 60.0);
         let mut ctx_demand = 0u64;
         for s in &trace.sessions {
-            let mut ctx = trace.workload.sys_prompt_tokens + s.init_prompt_tokens;
-            for c in &s.calls {
-                ctx_demand += ctx as u64;
-                ctx += c.out_tokens;
+            for i in 0..s.calls.len() {
+                ctx_demand += s.input_context_len(trace.workload.sys_prompt_tokens, i) as u64;
             }
         }
         assert_eq!(
@@ -783,6 +911,108 @@ mod tests {
             "mixed {} vs homog {}",
             mixed.prefill_util_imbalance,
             homog.prefill_util_imbalance
+        );
+    }
+
+    // -- DAG workloads ------------------------------------------------------
+
+    #[test]
+    fn chain_sessions_never_overlap_their_own_calls() {
+        let r = run(SystemKind::PrefillShare, 2.0);
+        assert_eq!(r.peak_session_inflight, 1, "a chain has one ready node at a time");
+        // Depth == call position for chains: identical breakdowns.
+        assert_eq!(r.ttft_mean_by_depth.len(), r.ttft_mean_by_position.len());
+        for (d, p) in r.ttft_mean_by_depth.iter().zip(&r.ttft_mean_by_position) {
+            assert_eq!(d.to_bits(), p.to_bits());
+        }
+    }
+
+    #[test]
+    fn fanout_runs_sibling_calls_concurrently_and_completes() {
+        use crate::workload::fanout;
+        let trace = generate_trace(&fanout(), 2.0, 60.0, 42);
+        let calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
+        let cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        let r = simulate(cfg, trace.clone());
+        assert_eq!(r.sessions_completed as usize, trace.sessions.len());
+        assert_eq!(r.metrics.requests_completed as usize, calls);
+        assert!(
+            r.peak_session_inflight >= 3,
+            "three specialists must be in flight at once, peak {}",
+            r.peak_session_inflight
+        );
+        // Depth profile: planner / specialists / joiner per turn — 9
+        // depth levels over 3 turns.
+        assert_eq!(r.ttft_mean_by_depth.len(), 9);
+        assert!(r.ttft_mean_by_depth.iter().all(|m| m.is_finite() && *m > 0.0));
+    }
+
+    #[test]
+    fn fanout_siblings_share_the_planner_prefix() {
+        use crate::workload::fanout;
+        // Prefix-aware routing pins a session to one worker: the three
+        // specialists radix-hit the planner's full context, so the fanout
+        // hit ratio must beat the sequential chain's at the same rate.
+        let chain = run(SystemKind::PrefillShare, 2.0);
+        let cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        let tree = simulate(cfg, generate_trace(&fanout(), 2.0, 60.0, 42));
+        assert!(
+            tree.prefix_hit_ratio >= chain.prefix_hit_ratio,
+            "fanout {} vs chain {}",
+            tree.prefix_hit_ratio,
+            chain.prefix_hit_ratio
+        );
+    }
+
+    #[test]
+    fn dag_workloads_complete_deterministically() {
+        use crate::workload::{debate, mixed};
+        for wl in [debate(), mixed()] {
+            let trace = generate_trace(&wl, 2.0, 60.0, 7);
+            let calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
+            let run = || {
+                simulate(ClusterConfig::paper_default(SystemKind::PrefillShare), trace.clone())
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a.metrics, b.metrics, "{} not deterministic", wl.name);
+            assert_eq!(a.sessions_completed as usize, trace.sessions.len(), "{}", wl.name);
+            assert_eq!(a.metrics.requests_completed as usize, calls, "{}", wl.name);
+            assert!(a.peak_session_inflight >= 2, "{}: no fan-out overlap", wl.name);
+        }
+    }
+
+    #[test]
+    fn fanout_decode_reuse_conserves_context_demand() {
+        // Concurrent sibling handoffs pin residency entries on several
+        // workers at once; the delta accounting must still cover every
+        // call's context demand exactly: Σ ctx_len == shipped + reused +
+        // host-reloaded.
+        use crate::workload::fanout;
+        let trace = generate_trace(&fanout(), 2.0, 60.0, 42);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.decode_reuse = true;
+        let on = simulate(cfg.clone(), trace.clone());
+        cfg.decode_reuse = false;
+        let off = simulate(cfg, trace.clone());
+        assert_eq!(on.sessions_completed, off.sessions_completed);
+        let mut ctx_demand = 0u64;
+        for s in &trace.sessions {
+            for i in 0..s.calls.len() {
+                ctx_demand += s.input_context_len(trace.workload.sys_prompt_tokens, i) as u64;
+            }
+        }
+        assert_eq!(
+            on.handoff_tokens + on.decode_reuse_tokens + on.metrics.host_reload_tokens,
+            ctx_demand,
+            "delta accounting lost tokens under fan-out"
+        );
+        assert!(on.handoffs_delta > 0, "repeat visits must ship deltas");
+        assert!(
+            on.handoff_tokens < off.handoff_tokens,
+            "reuse must ship less: {} vs {}",
+            on.handoff_tokens,
+            off.handoff_tokens
         );
     }
 

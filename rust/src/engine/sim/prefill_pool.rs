@@ -7,7 +7,11 @@
 //! capacity, so a mixed A100/A10 fleet charges tier-accurate prefill
 //! durations.  The pool exposes read-only [`WorkerView`] snapshots for
 //! the router and returns event durations for the simulator to schedule;
-//! it never touches the event queue itself.
+//! it never touches the event queue itself.  Under DAG workloads,
+//! sibling calls of one session land here concurrently — routed to one
+//! worker (prefix-aware) they queue behind each other and the later
+//! siblings radix-hit the context the first one inserted
+//! (`ARCHITECTURE.md`, "Workloads are DAGs").
 
 use crate::costmodel::CostModel;
 use crate::engine::config::ClusterConfig;

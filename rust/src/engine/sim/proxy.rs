@@ -3,10 +3,13 @@
 //! The proxy is the paper's entry tier (§3.3 step 1): it admits sessions
 //! under the concurrency cap (excess arrivals queue FIFO) and assigns
 //! every prefill job a worker through the pluggable [`Router`]
-//! (`engine::route`).  It owns the routing RNG — seeded
-//! `cfg.seed ^ 0xd15a66` exactly as the pre-decomposition simulator —
-//! so `random` routing stays reproducible and no other component
-//! consumes routing randomness.
+//! (`engine::route`).  Admission is per *session*: a DAG session's
+//! concurrent sibling calls all run under its one admission slot, and
+//! the event loop routes each of them through here individually.  The
+//! proxy owns the routing RNG — seeded `cfg.seed ^ 0xd15a66` exactly as
+//! the pre-decomposition simulator — so `random` routing stays
+//! reproducible and no other component consumes routing randomness
+//! (see `ARCHITECTURE.md`, "The determinism contract").
 
 use std::collections::VecDeque;
 

@@ -11,8 +11,17 @@
 //!
 //! * when a request **finishes**, its KV (context + generated tokens)
 //!   stays on the worker as a *retained* ledger entry instead of being
-//!   freed — call *k* of the session on the same task model then ships
-//!   only the tokens generated since this worker last saw the session;
+//!   freed — the session's next call on the same task model then ships
+//!   only the tokens this worker has not already seen;
+//! * under DAG workloads the session's next call on this model may sit on
+//!   a *different branch* than the retained KV, so every entry carries
+//!   the **segment signature** of the context it holds (ancestor-cut
+//!   output runs, in node order).  A handoff is sized against the
+//!   **longest common prefix** of the retained signature and the new
+//!   call's context: KV reuse is exact-prefix reuse, never a content
+//!   mismatch.  For chain sessions the retained KV is always a full
+//!   prefix of the successor's context, reproducing the pre-DAG delta
+//!   accounting bit-for-bit;
 //! * retained entries are **reclaimable**: they count against the
 //!   resident cap, and when admission needs space the LRU session is
 //!   evicted — *discarded* (the session pays a full re-handoff if it
@@ -20,20 +29,32 @@
 //!   return), whichever the cost model prices cheaper;
 //! * an entry is **pinned** from the moment a handoff for its session is
 //!   sized against it until that request is admitted, so eviction can
-//!   never invalidate a delta already in flight.
+//!   never invalidate a delta already in flight — including when sibling
+//!   calls of one session pin entries on several workers *concurrently*
+//!   (each worker's ledger is independent; the pin protects exactly the
+//!   entry the delta was sized against).
 //!
 //! The ledger is pure bookkeeping: the [`DecodePool`](super::decode_pool)
 //! owns when to pin/consume/retain/evict and charges the actual copies
 //! through the interconnect; with `--decode-reuse` off it is never
 //! touched and the simulator is bit-identical to the golden fixtures.
+//! See `ARCHITECTURE.md` ("Cross-layer invariants") for the
+//! conservation identity this accounting must satisfy.
 
 use std::collections::BTreeMap;
 
 /// One session's retained KV on one decode worker.
 #[derive(Debug, Clone)]
 pub(crate) struct SessionEntry {
-    /// Context tokens whose KV this worker still holds for the session.
+    /// Context tokens whose KV this worker still holds for the session
+    /// (shared prefix + the signature's output runs).
     pub tokens: usize,
+    /// Shared-prefix share of `tokens` (system + init prompt).
+    base: usize,
+    /// Output runs this entry holds beyond the shared prefix:
+    /// `(node index, out_tokens)` in ascending node order — the retained
+    /// context's ancestor cut plus the retaining call itself.
+    sig: Vec<(usize, usize)>,
     /// Retention tick — LRU victim order (older retentions evict first).
     last_use: u64,
     /// Parked in host memory (stage-in required, but no GPU occupancy).
@@ -41,6 +62,9 @@ pub(crate) struct SessionEntry {
     /// A handoff sized against this entry is in flight or pending
     /// admission; pinned entries are never evicted.
     pub pinned: bool,
+    /// Tokens the pinned handoff was sized to reuse (the LCP of `sig`
+    /// and the new call's context signature, plus `base`).
+    pinned_reuse: usize,
 }
 
 /// Per-decode-worker session residency ledger.
@@ -62,53 +86,92 @@ impl ResidencyLedger {
         ResidencyLedger::default()
     }
 
-    /// Size an incoming handoff for `sid` and pin the entry against
-    /// eviction until [`consume`](Self::consume).  Returns
+    /// Size an incoming handoff for `sid` against the retained entry and
+    /// pin it until [`consume`](Self::consume).  `ctx_sig` is the new
+    /// call's context signature (ancestor-cut output runs, node order);
+    /// the reusable share is the shared prefix plus the longest common
+    /// run prefix of the two signatures.  Returns
     /// `(gpu_reuse_tokens, host_reload_tokens)` — exactly one of the two
     /// is nonzero when the worker retains the session, both zero when it
     /// does not.
-    pub fn pin_for_handoff(&mut self, sid: usize) -> (usize, usize) {
+    pub fn pin_for_handoff(&mut self, sid: usize, ctx_sig: &[(usize, usize)]) -> (usize, usize) {
         match self.sessions.get_mut(&sid) {
             None => (0, 0),
             Some(e) => {
+                let mut reuse = e.base;
+                for (have, need) in e.sig.iter().zip(ctx_sig) {
+                    if have == need {
+                        reuse += have.1;
+                    } else {
+                        break;
+                    }
+                }
                 e.pinned = true;
+                e.pinned_reuse = reuse;
                 if e.on_host {
-                    (0, e.tokens)
+                    (0, reuse)
                 } else {
-                    (e.tokens, 0)
+                    (reuse, 0)
                 }
             }
         }
     }
 
-    /// Consume the entry at admission: the retained tokens fold into the
-    /// request's active footprint (GPU) or its stage-in copy (host).
-    /// Returns the same `(gpu, host)` split `pin_for_handoff` promised.
+    /// Consume the entry at admission: the reused share folds into the
+    /// request's active footprint (GPU) or its stage-in copy (host); the
+    /// whole entry is freed either way (any non-matching remainder is
+    /// simply dropped).  Returns the same `(gpu, host)` split
+    /// `pin_for_handoff` promised.
     pub fn consume(&mut self, sid: usize) -> (usize, usize) {
         match self.sessions.remove(&sid) {
             None => (0, 0),
             Some(e) => {
+                debug_assert!(e.pinned, "consumed an unpinned entry");
                 if e.on_host {
-                    (0, e.tokens)
+                    (0, e.pinned_reuse)
                 } else {
                     self.retained_gpu_tokens -= e.tokens;
-                    (e.tokens, 0)
+                    (e.pinned_reuse, 0)
                 }
             }
         }
     }
 
-    /// Retain a finished request's KV (`tokens` = its full footprint, the
-    /// session's context as this worker now holds it).
-    pub fn retain(&mut self, sid: usize, tokens: usize) {
+    /// GPU tokens the (pinned) entry for `sid` occupies — the share the
+    /// admission math must discount, since admitting the request consumes
+    /// the whole entry.  0 when absent or host-parked.
+    pub fn entry_gpu_tokens(&self, sid: usize) -> usize {
+        match self.sessions.get(&sid) {
+            Some(e) if !e.on_host => e.tokens,
+            _ => 0,
+        }
+    }
+
+    /// Retain a finished request's KV: `tokens` = its full footprint,
+    /// `base` the shared-prefix share, `sig` the output runs (the call's
+    /// ancestor cut plus itself, node order).
+    pub fn retain(&mut self, sid: usize, tokens: usize, base: usize, sig: Vec<(usize, usize)>) {
         self.clock += 1;
         debug_assert!(
             !self.sessions.contains_key(&sid),
             "session {sid} retained twice without an intervening consume"
         );
+        debug_assert_eq!(
+            tokens,
+            base + sig.iter().map(|&(_, l)| l).sum::<usize>(),
+            "signature does not cover the retained footprint"
+        );
         self.sessions.insert(
             sid,
-            SessionEntry { tokens, last_use: self.clock, on_host: false, pinned: false },
+            SessionEntry {
+                tokens,
+                base,
+                sig,
+                last_use: self.clock,
+                on_host: false,
+                pinned: false,
+                pinned_reuse: 0,
+            },
         );
         self.retained_gpu_tokens += tokens;
         self.peak_retained = self.peak_retained.max(self.retained_gpu_tokens);
@@ -162,31 +225,66 @@ impl ResidencyLedger {
 mod tests {
     use super::*;
 
+    /// Chain-style signature: node outputs 0..n in order.
+    fn chain_sig(outs: &[usize]) -> Vec<(usize, usize)> {
+        outs.iter().enumerate().map(|(i, &o)| (i, o)).collect()
+    }
+
     #[test]
     fn retain_consume_roundtrip_tracks_gpu_share() {
         let mut l = ResidencyLedger::new();
-        l.retain(3, 1_000);
-        l.retain(5, 2_000);
+        l.retain(3, 1_000, 600, chain_sig(&[400]));
+        l.retain(5, 2_000, 600, chain_sig(&[900, 500]));
         assert_eq!(l.retained_gpu_tokens, 3_000);
         assert_eq!(l.peak_retained, 3_000);
-        assert_eq!(l.pin_for_handoff(5), (2_000, 0));
+        // The next chain call's context extends the retained signature:
+        // full reuse, exactly the pre-DAG accounting.
+        assert_eq!(l.pin_for_handoff(5, &chain_sig(&[900, 500, 300])), (2_000, 0));
         assert_eq!(l.consume(5), (2_000, 0));
         assert_eq!(l.retained_gpu_tokens, 1_000);
         assert_eq!(l.peak_retained, 3_000, "peak is a high-water mark");
         // Unknown sessions reuse nothing.
-        assert_eq!(l.pin_for_handoff(99), (0, 0));
+        assert_eq!(l.pin_for_handoff(99, &chain_sig(&[8])), (0, 0));
         assert_eq!(l.consume(99), (0, 0));
+    }
+
+    #[test]
+    fn divergent_branch_reuses_only_the_common_signature_prefix() {
+        let mut l = ResidencyLedger::new();
+        // Worker retained a specialist's branch: base 600, then outputs of
+        // node 0 (planner, 100) and node 2 (itself, 50).
+        l.retain(1, 750, 600, vec![(0, 100), (2, 50)]);
+        // The session's next call on this worker sees the *joined*
+        // context: node 0, then sibling node 1, then node 2...  The
+        // retained KV matches only through the planner's output; the
+        // (2, 50) run sits at a position the new context fills with
+        // node 1's tokens.
+        let next_ctx = vec![(0, 100), (1, 80), (2, 50), (3, 40)];
+        assert_eq!(l.pin_for_handoff(1, &next_ctx), (700, 0), "base + planner only");
+        assert_eq!(l.consume(1), (700, 0));
+        assert_eq!(l.retained_gpu_tokens, 0, "the whole entry is freed at consume");
+        assert_eq!(l.entry_gpu_tokens(1), 0);
+    }
+
+    #[test]
+    fn entry_gpu_tokens_reports_whole_entry_not_reuse() {
+        let mut l = ResidencyLedger::new();
+        l.retain(4, 750, 600, vec![(0, 100), (2, 50)]);
+        assert_eq!(l.entry_gpu_tokens(4), 750);
+        l.pin_for_handoff(4, &[(0, 100), (1, 80)]);
+        assert_eq!(l.entry_gpu_tokens(4), 750, "occupancy is the full entry");
+        assert_eq!(l.consume(4), (700, 0), "reuse is only the matching prefix");
     }
 
     #[test]
     fn lru_victim_is_oldest_unpinned_gpu_entry() {
         let mut l = ResidencyLedger::new();
-        l.retain(7, 100); // tick 1 — oldest
-        l.retain(2, 200); // tick 2
-        l.retain(9, 300); // tick 3
+        l.retain(7, 100, 60, chain_sig(&[40])); // tick 1 — oldest
+        l.retain(2, 200, 60, chain_sig(&[140])); // tick 2
+        l.retain(9, 300, 60, chain_sig(&[240])); // tick 3
         assert_eq!(l.lru_victim(), Some((7, 100)));
         // Pinning shields the oldest; next-oldest becomes the victim.
-        l.pin_for_handoff(7);
+        l.pin_for_handoff(7, &chain_sig(&[40, 8]));
         assert_eq!(l.lru_victim(), Some((2, 200)));
         // Host-parked entries no longer occupy GPU and are not victims.
         assert_eq!(l.park_to_host(2), 200);
@@ -199,20 +297,20 @@ mod tests {
     #[test]
     fn host_park_survives_until_reloaded() {
         let mut l = ResidencyLedger::new();
-        l.retain(4, 500);
+        l.retain(4, 500, 300, chain_sig(&[200]));
         l.park_to_host(4);
         assert_eq!(l.retained_gpu_tokens, 0);
         // The next call reloads from host rather than re-shipping.
-        assert_eq!(l.pin_for_handoff(4), (0, 500));
+        assert_eq!(l.pin_for_handoff(4, &chain_sig(&[200, 90])), (0, 500));
         assert_eq!(l.consume(4), (0, 500));
-        assert_eq!(l.pin_for_handoff(4), (0, 0), "consumed");
+        assert_eq!(l.pin_for_handoff(4, &chain_sig(&[200, 90])), (0, 0), "consumed");
     }
 
     #[test]
     fn release_frees_both_placements() {
         let mut l = ResidencyLedger::new();
-        l.retain(1, 100);
-        l.retain(2, 200);
+        l.retain(1, 100, 60, chain_sig(&[40]));
+        l.retain(2, 200, 60, chain_sig(&[140]));
         l.park_to_host(1);
         l.release(1);
         l.release(2);

@@ -25,7 +25,9 @@ use prefillshare::engine::report::{format_row, header, save_rows, Row};
 use prefillshare::engine::sched::SchedPolicy;
 use prefillshare::engine::sim::simulate;
 use prefillshare::util::cli::Args;
-use prefillshare::workload::{generate_trace, workload_by_name};
+use prefillshare::workload::{
+    generate_trace_with, workload_by_name, workload_names, ArrivalProcess, WorkloadSpec,
+};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -49,22 +51,56 @@ fn main() -> Result<()> {
     }
 }
 
-fn print_help() {
-    println!(
-        "prefillshare {} — PrefillShare reproduction (see README.md)\n\n\
+/// Help text, with the `--workload` choices derived from the workload
+/// registry — a new scenario appears here the moment it is registered
+/// (pinned by `help_lists_every_registered_workload` below).
+fn help_text() -> String {
+    let workloads = workload_names();
+    format!(
+        "prefillshare {} — PrefillShare reproduction (see README.md, ARCHITECTURE.md)\n\n\
          USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload> [--options]\n\n\
-         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse [--seed N] [--out file.json]\n\
+         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout [--seed N] [--out file.json]\n\
          sim           [--system baseline|prefillshare] [--sched fifo|sjf|prefix-affinity|chunked]\n\
                        [--chunk-tokens N] [--route prefix-aware|round-robin|random|cache-aware|load-aware]\n\
                        [--link-gbps G] [--prefill-gpus a100,a10,...] [--n-prefill N]\n\
-                       [--decode-reuse] [--workload react|reflexion] [--rate R] [--duration S]\n\
+                       [--decode-reuse] [--workload {workloads}] [--rate R] [--duration S]\n\
+                       [--arrivals poisson|mmpp] [--burst B] [--burst-dwell S]\n\
                        [--max-sessions N] [--seed N] [--out file.json]\n\
          accuracy      --experiment fig2|table1|table2 [--steps N] [--artifacts DIR]\n\
          train         --model tiny|small|medium --method full|cc --task arith|transform|toolcall\n\
          serve         [--system baseline|prefillshare] [--sessions N] [--artifacts DIR]\n\
-         workload      [--workload react|reflexion] [--rate R] [--duration S]",
+         workload      [--workload {workloads}] [--rate R] [--duration S]\n\
+                       [--arrivals poisson|mmpp] [--burst B] [--burst-dwell S]",
         prefillshare::version()
-    );
+    )
+}
+
+fn print_help() {
+    println!("{}", help_text());
+}
+
+/// Resolve `--workload` through the registry; unknown names list every
+/// valid choice (derived, so the message can never go stale).
+fn resolve_workload(name: &str) -> Result<WorkloadSpec> {
+    workload_by_name(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown workload `{name}` — expected one of {{{}}}", workload_names())
+    })
+}
+
+/// Parse `--arrivals` (+ `--burst`, `--burst-dwell` for MMPP).
+fn parse_arrivals(args: &Args) -> Result<ArrivalProcess> {
+    match args.get_or("arrivals", "poisson") {
+        "poisson" => Ok(ArrivalProcess::Poisson),
+        "mmpp" | "bursty" => {
+            let burst = args.get_f64("burst", 4.0);
+            let dwell_s = args.get_f64("burst-dwell", 5.0);
+            if burst <= 1.0 || dwell_s <= 0.0 || !burst.is_finite() || !dwell_s.is_finite() {
+                bail!("--arrivals mmpp needs --burst > 1 and --burst-dwell > 0");
+            }
+            Ok(ArrivalProcess::Mmpp { burst, dwell_s })
+        }
+        other => bail!("--arrivals expects one of {{poisson,mmpp}}, got `{other}`"),
+    }
 }
 
 fn cmd_bench_serving(args: &Args) -> Result<()> {
@@ -78,6 +114,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
         "sched" => sx::sched_ablation(seed),
         "routes" => sx::route_ablation_sweep(seed),
         "reuse" => sx::reuse_ablation(seed),
+        "fanout" => sx::fanout_experiment(seed),
         other => bail!("unknown serving experiment `{other}`"),
     };
     let x_name = rows.first().map(|r| r.x_name.clone()).unwrap_or_default();
@@ -85,6 +122,23 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
     println!("{}", header(&x_name));
     for r in &rows {
         println!("{}", format_row(r));
+    }
+    if exp == "fanout" {
+        // The DAG experiment's headline extras: TTFT per topological wave
+        // and the sibling-overlap high-water mark per row.
+        println!("\nmean TTFT by DAG depth (s) and peak in-flight calls per session:");
+        for r in &rows {
+            let depths: Vec<String> =
+                r.result.ttft_mean_by_depth.iter().map(|m| format!("{m:.3}")).collect();
+            println!(
+                "  {:<18} {:<10} rate={:<4} inflight={} [{}]",
+                r.system,
+                r.workload,
+                r.x,
+                r.result.peak_session_inflight,
+                depths.join(" ")
+            );
+        }
     }
     if let Some(out) = args.get("out") {
         save_rows(out, &rows)?;
@@ -123,8 +177,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
         })?,
     };
     let wl_name = args.get_or("workload", "react");
-    let wl = workload_by_name(wl_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown workload `{wl_name}`"))?;
+    let wl = resolve_workload(wl_name)?;
+    let arrivals = parse_arrivals(args)?;
     let rate = args.get_f64("rate", 4.0);
     let duration = args.get_f64("duration", 120.0);
     let seed = args.get_u64("seed", 0);
@@ -151,7 +205,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.decode_reuse = args.bool_flag("decode-reuse");
     cfg.seed = seed;
 
-    let trace = generate_trace(&wl, rate, duration, seed);
+    let trace = generate_trace_with(&wl, rate, duration, seed, &arrivals);
     let n_sessions = trace.sessions.len();
     let link = if cfg.link_contended {
         format!(" / link={}GB/s", cfg.cost.link.handoff_bytes_per_s / 1e9)
@@ -159,9 +213,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
         String::new()
     };
     let reuse = if cfg.decode_reuse { " / decode-reuse" } else { "" };
+    let bursty = match arrivals {
+        ArrivalProcess::Poisson => String::new(),
+        ArrivalProcess::Mmpp { burst, dwell_s } => format!(" / mmpp(x{burst},{dwell_s}s)"),
+    };
     let result = simulate(cfg, trace);
     println!(
-        "== sim: {} / sched={} / route={}{link}{reuse} / {wl_name} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
+        "== sim: {} / sched={} / route={}{link}{reuse} / {wl_name}{bursty} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
         system.label(),
         sched.label(),
         routing.label(),
@@ -188,6 +246,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
         row.result.prefill_queue_delay_mean,
         row.result.prefill_queue_delay_p95,
     );
+    if row.result.peak_session_inflight > 1 {
+        let depths: Vec<String> =
+            row.result.ttft_mean_by_depth.iter().map(|m| format!("{m:.3}")).collect();
+        println!(
+            "dag: peak {} concurrent calls per session | mean TTFT by depth [{}]",
+            row.result.peak_session_inflight,
+            depths.join(" ")
+        );
+    }
     if !reuse.is_empty() {
         println!(
             "decode reuse: {:.1}% of context KV from residency | {} of {} handoffs delta-sized | \
@@ -224,23 +291,35 @@ fn cmd_ablation(args: &Args) -> Result<()> {
 
 fn cmd_workload(args: &Args) -> Result<()> {
     let name = args.get_or("workload", "react");
-    let wl = workload_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?;
+    let wl = resolve_workload(name)?;
+    let arrivals = parse_arrivals(args)?;
     let rate = args.get_f64("rate", 2.0);
     let dur = args.get_f64("duration", 120.0);
-    let trace = generate_trace(&wl, rate, dur, args.get_u64("seed", 0));
+    let trace = generate_trace_with(&wl, rate, dur, args.get_u64("seed", 0), &arrivals);
     let n = trace.sessions.len();
     let calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
     let out_tokens: usize = trace.sessions.iter().map(|s| s.total_output_tokens()).sum();
-    let final_ctx: Vec<usize> = trace
-        .sessions
-        .iter()
-        .map(|s| s.context_len_after(&wl, s.calls.len() - 1))
-        .collect();
+    let final_ctx: Vec<usize> =
+        trace.sessions.iter().map(|s| s.final_context_len(wl.sys_prompt_tokens)).collect();
     let mean_ctx = final_ctx.iter().sum::<usize>() as f64 / n.max(1) as f64;
     println!(
         "workload {name}: {n} sessions, {calls} calls, {out_tokens} output tokens, \
          mean final context {mean_ctx:.0} tokens, sys prompt {} tokens",
         wl.sys_prompt_tokens
+    );
+    // DAG topology statistics: ready-set width per wave and session depth.
+    let chains = trace.sessions.iter().filter(|s| s.is_chain()).count();
+    let max_width =
+        trace.sessions.iter().flat_map(|s| s.wave_widths()).max().unwrap_or(0);
+    let mean_depth = trace
+        .sessions
+        .iter()
+        .map(|s| s.wave_widths().len())
+        .sum::<usize>() as f64
+        / n.max(1) as f64;
+    println!(
+        "topology: {chains}/{n} chain sessions, max ready-set width {max_width}, \
+         mean critical-path length {mean_depth:.1} waves"
     );
     Ok(())
 }
@@ -255,6 +334,47 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     prefillshare::training::experiments::run_train_cli(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use prefillshare::workload::workload_registry;
+
+    /// The regression the workload registry exists to prevent: help text
+    /// hardcoding a stale `--workload` list.  Both usage lines must carry
+    /// the registry-derived choices, and every registered workload must
+    /// resolve by the exact name the help advertises.
+    #[test]
+    fn help_lists_every_registered_workload() {
+        let help = help_text();
+        let names = workload_names();
+        assert_eq!(
+            help.matches(&format!("--workload {names}")).count(),
+            2,
+            "`sim` and `workload` usage lines must both list {{{names}}}:\n{help}"
+        );
+        for w in workload_registry() {
+            assert!(
+                resolve_workload(w.name).is_ok(),
+                "registered workload `{}` must resolve",
+                w.name
+            );
+        }
+        assert!(resolve_workload("nope").unwrap_err().to_string().contains(&names));
+    }
+
+    #[test]
+    fn arrivals_parse_and_reject_junk() {
+        let parse = |s: &str| Args::parse(s.split_whitespace().map(String::from));
+        assert_eq!(parse_arrivals(&parse("sim")).unwrap(), ArrivalProcess::Poisson);
+        assert_eq!(
+            parse_arrivals(&parse("sim --arrivals mmpp --burst 3 --burst-dwell 2")).unwrap(),
+            ArrivalProcess::Mmpp { burst: 3.0, dwell_s: 2.0 }
+        );
+        assert!(parse_arrivals(&parse("sim --arrivals sometimes")).is_err());
+        assert!(parse_arrivals(&parse("sim --arrivals mmpp --burst 0.5")).is_err());
+    }
 }
 
 /// Real-serving subcommand (split out to keep main slim).

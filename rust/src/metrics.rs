@@ -200,6 +200,15 @@ pub struct ServingMetrics {
     pub ttft_by_position: Vec<Histogram>,
     /// Request latency by agent-call position (same indexing).
     pub latency_by_position: Vec<Histogram>,
+    /// TTFT broken down by DAG depth (index = the call node's
+    /// longest-parent-path depth) — under fan-out, every node at one
+    /// depth is concurrent, so this is the per-wave TTFT profile; for
+    /// chains it coincides with the by-position breakdown.
+    pub ttft_by_depth: Vec<Histogram>,
+    /// High-water mark of concurrently in-flight calls of any single
+    /// session (prefill, handoff or decode).  1 for chain workloads; > 1
+    /// proves sibling fan-out overlapped.
+    pub peak_session_inflight: u64,
 }
 
 /// Record `v` into the position-indexed histogram family, growing it to

@@ -1,20 +1,45 @@
-//! Multi-model agent workload generator (paper §4.1 "Inference Setup").
+//! Multi-model agent workload generator (paper §4.1 "Inference Setup"),
+//! generalized from linear agent chains to **DAG-structured workflows**
+//! with parallel fan-out.
 //!
-//! Each session runs a four-agent, multi-turn workflow; in each turn all
-//! agents are invoked *sequentially* over a largely shared prefix.  Sessions
-//! arrive as a Poisson process; once created a session issues its next
-//! request immediately upon receiving a response (closed-loop within the
-//! session, App. B.1).  Input/output token lengths follow the ReAct /
-//! Reflexion statistics reported by Kim et al. (2025) as referenced by the
-//! paper — approximated here as lognormal draws around the published means
-//! (EXPERIMENTS.md documents the exact parameterization).
+//! Each session runs a multi-turn workflow over a largely shared prefix.
+//! A session's call structure is a dependency-edged graph
+//! ([`SessionScript::calls`], one [`CallNode`] per model invocation): a
+//! node becomes *ready* the moment every parent completes, and the
+//! simulator issues every ready node immediately — so sibling agents run
+//! **concurrently** over the same prefix, the regime where prefill
+//! sharing matters most (KVFlow's agent-workflow trees, KVCOMM's
+//! overlapping contexts).  A linear chain is the degenerate DAG: the
+//! `react`/`reflexion` workloads are encoded node-for-node as chains and
+//! reproduce the pre-DAG generator byte-for-byte (pinned by the
+//! chain-equivalence test in `tests/workload_stats.rs`).
+//!
+//! Join semantics (documented in `EXPERIMENTS.md`, mirrored in
+//! `tests/fixtures/gen_golden.py`): a node's input context is the shared
+//! prefix (system prompt + session init prompt) followed by the outputs
+//! of its **ancestor cut** — every transitive ancestor's output,
+//! concatenated in ascending node order.  Two nodes therefore share a
+//! context prefix exactly as far as their ancestor cuts agree, which is
+//! what the segment-addressed radix keys in [`simtokens`] encode.
+//!
+//! Sessions arrive as a Poisson process by default, or as a two-state
+//! MMPP (bursty) process via [`ArrivalProcess::Mmpp`]; once created a
+//! session is closed-loop (App. B.1).  Token lengths follow the ReAct /
+//! Reflexion statistics reported by Kim et al. (2025) as referenced by
+//! the paper — approximated as lognormal draws around the published
+//! means (EXPERIMENTS.md documents the exact parameterization).
+//!
+//! See `ARCHITECTURE.md` ("Workloads are DAGs", "How to add things")
+//! for the join-semantics contract and the add-a-workload walkthrough
+//! (template → registry → fixture).
 
 use crate::simtime::{secs, SimTime};
 use crate::util::rng::Rng;
 
 pub const NUM_AGENTS: usize = 4;
 
-/// One specialized agent (→ one fine-tuned model identity).
+/// One specialized agent (→ one fine-tuned model identity) within a
+/// turn's template.
 #[derive(Debug, Clone)]
 pub struct AgentSpec {
     pub name: &'static str,
@@ -22,9 +47,23 @@ pub struct AgentSpec {
     pub model: usize,
     pub mean_out_tokens: f64,
     pub cv: f64,
+    /// Intra-turn parent indices (each `<` this node's own index).
+    /// Empty = turn root: it depends on the *previous* turn's sinks (or
+    /// only on the session prompt in turn 0).
+    pub parents: Vec<usize>,
 }
 
-/// A workload pattern: agent chain + context geometry.
+/// One weighted per-session alternative template for blended workloads
+/// (e.g. [`mixed`]): each session draws a variant proportionally to
+/// `weight` before any length sampling.
+#[derive(Debug, Clone)]
+pub struct WorkloadVariant {
+    pub weight: f64,
+    pub agents: Vec<AgentSpec>,
+    pub turns: usize,
+}
+
+/// A workload pattern: per-turn agent DAG template + context geometry.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
     pub name: &'static str,
@@ -33,14 +72,30 @@ pub struct WorkloadSpec {
     /// Session-specific initial prompt length distribution.
     pub init_prompt_mean: f64,
     pub init_prompt_cv: f64,
+    /// The turn template (intra-turn DAG; turns chain root→sink).
     pub agents: Vec<AgentSpec>,
     pub turns: usize,
+    /// Weighted per-session variants.  Empty = every session uses
+    /// `(agents, turns)`; non-empty = each session draws one variant.
+    pub variants: Vec<WorkloadVariant>,
 }
 
-/// ReAct: thought → action → observation → reflect, 3 turns.  Context
-/// geometry follows agent-trace statistics (Kim et al. 2025): kilotoken
-/// initial contexts, observation segments the longest, ~2.1k-token final
-/// contexts after 12 calls (decode segments short, prefill-heavy regime).
+fn chain_agent(
+    name: &'static str,
+    model: usize,
+    mean_out_tokens: f64,
+    cv: f64,
+    idx: usize,
+) -> AgentSpec {
+    let parents = if idx == 0 { Vec::new() } else { vec![idx - 1] };
+    AgentSpec { name, model, mean_out_tokens, cv, parents }
+}
+
+/// ReAct: thought → action → observation → reflect, 3 turns — a strict
+/// chain (the degenerate DAG).  Context geometry follows agent-trace
+/// statistics (Kim et al. 2025): kilotoken initial contexts, observation
+/// segments the longest, ~2.1k-token final contexts after 12 calls
+/// (decode segments short, prefill-heavy regime).
 pub fn react() -> WorkloadSpec {
     WorkloadSpec {
         name: "react",
@@ -48,17 +103,18 @@ pub fn react() -> WorkloadSpec {
         init_prompt_mean: 1024.0,
         init_prompt_cv: 0.25,
         agents: vec![
-            AgentSpec { name: "planner", model: 0, mean_out_tokens: 96.0, cv: 0.3 },
-            AgentSpec { name: "actor", model: 1, mean_out_tokens: 48.0, cv: 0.3 },
-            AgentSpec { name: "observer", model: 2, mean_out_tokens: 128.0, cv: 0.3 },
-            AgentSpec { name: "critic", model: 3, mean_out_tokens: 64.0, cv: 0.3 },
+            chain_agent("planner", 0, 96.0, 0.3, 0),
+            chain_agent("actor", 1, 48.0, 0.3, 1),
+            chain_agent("observer", 2, 128.0, 0.3, 2),
+            chain_agent("critic", 3, 64.0, 0.3, 3),
         ],
         turns: 3,
+        variants: Vec::new(),
     }
 }
 
 /// Reflexion: longer verbal-reinforcement segments, heavier contexts
-/// (~2.5k-token final contexts).
+/// (~2.5k-token final contexts) — also a strict chain.
 pub fn reflexion() -> WorkloadSpec {
     WorkloadSpec {
         name: "reflexion",
@@ -66,46 +122,231 @@ pub fn reflexion() -> WorkloadSpec {
         init_prompt_mean: 1280.0,
         init_prompt_cv: 0.25,
         agents: vec![
-            AgentSpec { name: "actor", model: 0, mean_out_tokens: 128.0, cv: 0.35 },
-            AgentSpec { name: "evaluator", model: 1, mean_out_tokens: 48.0, cv: 0.3 },
-            AgentSpec { name: "reflector", model: 2, mean_out_tokens: 160.0, cv: 0.35 },
-            AgentSpec { name: "memory", model: 3, mean_out_tokens: 64.0, cv: 0.3 },
+            chain_agent("actor", 0, 128.0, 0.35, 0),
+            chain_agent("evaluator", 1, 48.0, 0.3, 1),
+            chain_agent("reflector", 2, 160.0, 0.35, 2),
+            chain_agent("memory", 3, 64.0, 0.3, 3),
         ],
         turns: 3,
+        variants: Vec::new(),
     }
+}
+
+fn fanout_agents() -> Vec<AgentSpec> {
+    vec![
+        AgentSpec { name: "planner", model: 0, mean_out_tokens: 96.0, cv: 0.3, parents: vec![] },
+        AgentSpec { name: "searcher", model: 1, mean_out_tokens: 128.0, cv: 0.3, parents: vec![0] },
+        AgentSpec { name: "coder", model: 2, mean_out_tokens: 96.0, cv: 0.3, parents: vec![0] },
+        AgentSpec { name: "critic", model: 3, mean_out_tokens: 64.0, cv: 0.3, parents: vec![0] },
+        AgentSpec {
+            name: "joiner",
+            model: 0,
+            mean_out_tokens: 96.0,
+            cv: 0.3,
+            parents: vec![1, 2, 3],
+        },
+    ]
+}
+
+/// Fan-out: per turn, a planner fans out to **3 parallel specialists**
+/// (searcher/coder/critic — distinct task models invoked concurrently
+/// over the identical context), then a joiner merges their outputs.
+/// This is the agent-workflow-tree shape KVFlow schedules around: all
+/// three specialists radix-hit the planner's full context at once.
+pub fn fanout() -> WorkloadSpec {
+    WorkloadSpec {
+        name: "fanout",
+        sys_prompt_tokens: 160,
+        init_prompt_mean: 1024.0,
+        init_prompt_cv: 0.25,
+        agents: fanout_agents(),
+        turns: 3,
+        variants: Vec::new(),
+    }
+}
+
+/// Debate: per round, **3 parallel proposers** draft independently over
+/// the identical context (maximal sibling overlap — the KVCOMM regime),
+/// then a judge reads all three and rules; the next round's proposers
+/// continue from the judge's ruling.
+pub fn debate() -> WorkloadSpec {
+    WorkloadSpec {
+        name: "debate",
+        sys_prompt_tokens: 200,
+        init_prompt_mean: 1280.0,
+        init_prompt_cv: 0.25,
+        agents: vec![
+            AgentSpec {
+                name: "proposer-a",
+                model: 0,
+                mean_out_tokens: 128.0,
+                cv: 0.35,
+                parents: vec![],
+            },
+            AgentSpec {
+                name: "proposer-b",
+                model: 1,
+                mean_out_tokens: 128.0,
+                cv: 0.35,
+                parents: vec![],
+            },
+            AgentSpec {
+                name: "proposer-c",
+                model: 2,
+                mean_out_tokens: 128.0,
+                cv: 0.35,
+                parents: vec![],
+            },
+            AgentSpec {
+                name: "judge",
+                model: 3,
+                mean_out_tokens: 96.0,
+                cv: 0.3,
+                parents: vec![0, 1, 2],
+            },
+        ],
+        turns: 3,
+        variants: Vec::new(),
+    }
+}
+
+/// Mixed: a weighted blend — each session is either a sequential ReAct
+/// chain or a fan-out tree (50/50), all over the same shared system
+/// prompt, so chain and sibling traffic contend for the same radix
+/// caches, links and residency ledgers.
+pub fn mixed() -> WorkloadSpec {
+    WorkloadSpec {
+        name: "mixed",
+        sys_prompt_tokens: 160,
+        init_prompt_mean: 1024.0,
+        init_prompt_cv: 0.25,
+        agents: react().agents,
+        turns: 3,
+        variants: vec![
+            WorkloadVariant { weight: 0.5, agents: react().agents, turns: 3 },
+            WorkloadVariant { weight: 0.5, agents: fanout_agents(), turns: 3 },
+        ],
+    }
+}
+
+/// The single workload registry: every scenario the CLI accepts, in help
+/// order.  `workload_by_name` and the CLI help both derive from this
+/// list, so a new scenario can never drift out of `--workload`'s
+/// documentation (pinned by a help/registry agreement test in
+/// `main.rs`).
+pub fn workload_registry() -> Vec<WorkloadSpec> {
+    vec![react(), reflexion(), fanout(), debate(), mixed()]
 }
 
 pub fn workload_by_name(name: &str) -> Option<WorkloadSpec> {
-    match name {
-        "react" => Some(react()),
-        "reflexion" => Some(reflexion()),
-        _ => None,
-    }
+    workload_registry().into_iter().find(|w| w.name == name)
 }
 
-/// One model invocation within a session.
-#[derive(Debug, Clone, Copy)]
-pub struct AgentCall {
+/// `react|reflexion|fanout|debate|mixed` — derived from the registry for
+/// CLI help and error messages.
+pub fn workload_names() -> String {
+    workload_registry().iter().map(|w| w.name).collect::<Vec<_>>().join("|")
+}
+
+/// One model invocation within a session: a node of the session's call
+/// graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CallNode {
     pub model: usize,
     pub out_tokens: usize,
+    /// Absolute indices of this node's parents within
+    /// [`SessionScript::calls`] (all `< ` this node's own index, so the
+    /// vector order is already topological).  Empty = ready at session
+    /// start.
+    pub parents: Vec<usize>,
 }
 
-/// A fully sampled session: arrival time + the exact call sequence.
+/// A fully sampled session: arrival time + the exact call graph.
 #[derive(Debug, Clone)]
 pub struct SessionScript {
     pub id: u64,
     pub arrival: SimTime,
     /// Session-specific prompt tokens (after the shared system prompt).
     pub init_prompt_tokens: usize,
-    pub calls: Vec<AgentCall>,
+    pub calls: Vec<CallNode>,
 }
 
 impl SessionScript {
-    /// Total context length after call `i` completes (sys + init + outputs).
-    pub fn context_len_after(&self, spec: &WorkloadSpec, i: usize) -> usize {
-        spec.sys_prompt_tokens
+    /// Sorted (ascending) transitive-ancestor set of node `i` — the
+    /// node's *ancestor cut*, whose outputs form its input context.
+    pub fn ancestors(&self, i: usize) -> Vec<usize> {
+        let mut seen = vec![false; self.calls.len()];
+        let mut stack: Vec<usize> = self.calls[i].parents.clone();
+        while let Some(p) = stack.pop() {
+            if !seen[p] {
+                seen[p] = true;
+                stack.extend(self.calls[p].parents.iter().copied());
+            }
+        }
+        (0..self.calls.len()).filter(|&j| seen[j]).collect()
+    }
+
+    /// Input context length of node `i`: shared prefix (system + init
+    /// prompt) plus the outputs of its ancestor cut.
+    pub fn input_context_len(&self, sys_prompt_tokens: usize, i: usize) -> usize {
+        sys_prompt_tokens
             + self.init_prompt_tokens
-            + self.calls[..=i].iter().map(|c| c.out_tokens).sum::<usize>()
+            + self.ancestors(i).iter().map(|&a| self.calls[a].out_tokens).sum::<usize>()
+    }
+
+    /// Context length once every node has completed (the virtual sink's
+    /// context): shared prefix plus every output.
+    pub fn final_context_len(&self, sys_prompt_tokens: usize) -> usize {
+        sys_prompt_tokens + self.init_prompt_tokens + self.total_output_tokens()
+    }
+
+    /// Per-node DAG depth (longest parent path; roots are depth 0).
+    pub fn depths(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.calls.len()];
+        for (i, c) in self.calls.iter().enumerate() {
+            d[i] = c.parents.iter().map(|&p| d[p] + 1).max().unwrap_or(0);
+        }
+        d
+    }
+
+    /// Nodes ready at session start (no parents), ascending.
+    pub fn roots(&self) -> Vec<usize> {
+        (0..self.calls.len()).filter(|&i| self.calls[i].parents.is_empty()).collect()
+    }
+
+    /// Per-node child lists (inverse of `parents`).
+    pub fn children(&self) -> Vec<Vec<usize>> {
+        let mut ch = vec![Vec::new(); self.calls.len()];
+        for (i, c) in self.calls.iter().enumerate() {
+            for &p in &c.parents {
+                ch[p].push(i);
+            }
+        }
+        ch
+    }
+
+    /// Width of each topological wave (nodes per depth level) — nodes at
+    /// equal depth are pairwise concurrent, so this is the session's
+    /// ready-set width profile.
+    pub fn wave_widths(&self) -> Vec<usize> {
+        let depths = self.depths();
+        let mut w = vec![0usize; depths.iter().max().map(|&m| m + 1).unwrap_or(0)];
+        for &d in &depths {
+            w[d] += 1;
+        }
+        w
+    }
+
+    /// Is this session a strict chain (every node depends exactly on its
+    /// predecessor)?
+    pub fn is_chain(&self) -> bool {
+        self.calls.iter().enumerate().all(|(i, c)| {
+            if i == 0 {
+                c.parents.is_empty()
+            } else {
+                c.parents.len() == 1 && c.parents[0] == i - 1
+            }
+        })
     }
 
     pub fn total_output_tokens(&self) -> usize {
@@ -121,25 +362,209 @@ pub struct Trace {
     pub horizon: SimTime,
 }
 
-/// Sample a trace: Poisson arrivals at `rate_per_s` over `duration_s`.
+/// Session arrival process (`--arrivals`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at the configured rate (the paper's setup and
+    /// the default — byte-identical to the pre-DAG generator).
+    Poisson,
+    /// Two-state Markov-modulated Poisson process: bursts at
+    /// `burst × rate` with mean dwell `dwell_s` seconds, quiet periods at
+    /// `rate / burst` with mean dwell `burst × dwell_s` — the dwell ratio
+    /// that makes the long-run mean rate exactly the configured `rate`
+    /// (stationary burst probability `1 / (1 + burst)`).
+    Mmpp { burst: f64, dwell_s: f64 },
+}
+
+/// Flatten `(template, turns)` into absolute-index parent lists: each
+/// turn instantiates the template's intra-turn edges, and every turn
+/// root (a template node with no intra-turn parents) depends on the
+/// previous turn's sinks (template nodes nothing in the turn depends
+/// on).
+fn flatten_parents(agents: &[AgentSpec], turns: usize) -> Vec<Vec<usize>> {
+    let mut is_parent = vec![false; agents.len()];
+    for a in agents {
+        for &p in &a.parents {
+            is_parent[p] = true;
+        }
+    }
+    let sinks: Vec<usize> = (0..agents.len()).filter(|&j| !is_parent[j]).collect();
+
+    let mut parents = Vec::with_capacity(agents.len() * turns);
+    for turn in 0..turns {
+        let base = turn * agents.len();
+        for a in agents.iter() {
+            parents.push(if a.parents.is_empty() {
+                if turn == 0 {
+                    Vec::new()
+                } else {
+                    sinks.iter().map(|&s| base - agents.len() + s).collect()
+                }
+            } else {
+                a.parents.iter().map(|&p| base + p).collect()
+            });
+        }
+    }
+    parents
+}
+
+/// Template sanity: parents topological, and no two *concurrent* nodes
+/// of a session may target the same model — the decode-side residency
+/// ledger keys retained KV by session, so same-model calls must be
+/// ordered (every template in the registry satisfies this by
+/// construction; a new one that does not fails loudly here).
+fn validate_template(name: &str, agents: &[AgentSpec], turns: usize) {
+    assert!(!agents.is_empty() && turns > 0, "workload `{name}`: empty template");
+    // Segment ids must fit `simtokens::private`'s 12-bit field (segment
+    // j + 1 per node, plus the init segment) — wrap would silently alias
+    // radix keys, so refuse loudly instead.
+    assert!(
+        agents.len() * turns + 1 < (1 << 12),
+        "workload `{name}`: {} calls per session exceeds the segment-id space",
+        agents.len() * turns
+    );
+    for (j, a) in agents.iter().enumerate() {
+        for &p in &a.parents {
+            assert!(p < j, "workload `{name}`: node {j} lists parent {p} >= itself");
+        }
+    }
+    let parents = flatten_parents(agents, turns);
+    let n = parents.len();
+    let mut anc = vec![vec![false; n]; n];
+    for i in 0..n {
+        for p in 0..n {
+            if parents[i].contains(&p) {
+                anc[i][p] = true;
+                for q in 0..n {
+                    if anc[p][q] {
+                        anc[i][q] = true;
+                    }
+                }
+            }
+        }
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (mi, mj) =
+                (agents[i % agents.len()].model, agents[j % agents.len()].model);
+            assert!(
+                mi != mj || anc[j][i],
+                "workload `{name}`: calls {i} and {j} both target model {mi} but are \
+                 concurrent; same-model calls of a session must be ordered \
+                 (add a dependency path between them)"
+            );
+        }
+    }
+}
+
+/// Draw a variant index proportionally to weight (one `f64` draw).
+fn pick_variant(spec: &WorkloadSpec, srng: &mut Rng) -> usize {
+    let total: f64 = spec.variants.iter().map(|v| v.weight).sum();
+    let mut u = srng.f64() * total;
+    for (i, v) in spec.variants.iter().enumerate() {
+        if u < v.weight {
+            return i;
+        }
+        u -= v.weight;
+    }
+    spec.variants.len() - 1
+}
+
+/// Sample a trace: Poisson arrivals at `rate_per_s` over `duration_s`
+/// (byte-identical to the pre-DAG generator for chain workloads).
 pub fn generate_trace(spec: &WorkloadSpec, rate_per_s: f64, duration_s: f64, seed: u64) -> Trace {
+    generate_trace_with(spec, rate_per_s, duration_s, seed, &ArrivalProcess::Poisson)
+}
+
+/// Sample a trace under an explicit arrival process.  RNG discipline:
+/// one arrival stream (seeded `seed ^ 0x5e5510ad`) drives inter-arrival
+/// gaps and MMPP state dwell; each session forks its own stream by id,
+/// draws its variant (blended workloads only), then its init-prompt
+/// length, then every node's output length in node order — so the
+/// Poisson + no-variant path consumes exactly the pre-DAG draws.
+pub fn generate_trace_with(
+    spec: &WorkloadSpec,
+    rate_per_s: f64,
+    duration_s: f64,
+    seed: u64,
+    arrivals: &ArrivalProcess,
+) -> Trace {
+    validate_template(spec.name, &spec.agents, spec.turns);
+    for v in &spec.variants {
+        validate_template(spec.name, &v.agents, v.turns);
+    }
+    // Flattened parent lists are per-template, not per-session.
+    let base_parents = flatten_parents(&spec.agents, spec.turns);
+    let variant_parents: Vec<Vec<Vec<usize>>> =
+        spec.variants.iter().map(|v| flatten_parents(&v.agents, v.turns)).collect();
+
     let mut rng = Rng::new(seed ^ 0x5e551_0ad);
+    // MMPP state: start quiet; dwell means chosen so the long-run mean
+    // arrival rate is exactly `rate_per_s` (see `ArrivalProcess::Mmpp`).
+    let (mut mmpp_rate, mut mmpp_in_burst, mut mmpp_switch) = match arrivals {
+        ArrivalProcess::Poisson => (rate_per_s, false, f64::INFINITY),
+        ArrivalProcess::Mmpp { burst, dwell_s } => {
+            assert!(*burst > 1.0 && *dwell_s > 0.0, "mmpp needs burst > 1 and dwell > 0");
+            (rate_per_s / burst, false, rng.exp(1.0 / (burst * dwell_s)))
+        }
+    };
+
     let mut sessions = Vec::new();
     let mut t = 0.0f64;
     let mut id = 0u64;
-    loop {
-        t += rng.exp(rate_per_s);
+    'arrivals: loop {
+        match arrivals {
+            ArrivalProcess::Poisson => t += rng.exp(rate_per_s),
+            ArrivalProcess::Mmpp { burst, dwell_s } => loop {
+                let gap = rng.exp(mmpp_rate);
+                if t + gap < mmpp_switch {
+                    t += gap;
+                    break;
+                }
+                // No arrival before the state flips; restart the
+                // (memoryless) gap from the switch point.
+                t = mmpp_switch;
+                if t >= duration_s {
+                    break 'arrivals;
+                }
+                mmpp_in_burst = !mmpp_in_burst;
+                let (rate, dwell) = if mmpp_in_burst {
+                    (rate_per_s * burst, *dwell_s)
+                } else {
+                    (rate_per_s / burst, burst * dwell_s)
+                };
+                mmpp_rate = rate;
+                mmpp_switch = t + rng.exp(1.0 / dwell);
+            },
+        }
         if t >= duration_s {
             break;
         }
+        // `simtokens::private` packs the session id into bits 28..48;
+        // beyond that, private ids would alias across sessions and fake
+        // cross-session radix hits.  No realistic sweep comes close
+        // (2^20 sessions), but fail loudly rather than corrupt silently.
+        assert!(id < 1 << 20, "trace exceeds the session-id packing limit of simtokens");
         let mut srng = rng.fork(id);
+        let (agents, turns, parents): (&[AgentSpec], usize, &[Vec<usize>]) =
+            if spec.variants.is_empty() {
+                (&spec.agents, spec.turns, &base_parents)
+            } else {
+                let vi = pick_variant(spec, &mut srng);
+                let v = &spec.variants[vi];
+                (&v.agents, v.turns, &variant_parents[vi])
+            };
         let init = srng.lognormal_mean_cv(spec.init_prompt_mean, spec.init_prompt_cv).round() as usize;
         let init = init.clamp(16, 4096);
-        let mut calls = Vec::with_capacity(spec.turns * spec.agents.len());
-        for _turn in 0..spec.turns {
-            for a in &spec.agents {
+        let mut calls = Vec::with_capacity(turns * agents.len());
+        for turn in 0..turns {
+            for (j, a) in agents.iter().enumerate() {
                 let out = srng.lognormal_mean_cv(a.mean_out_tokens, a.cv).round() as usize;
-                calls.push(AgentCall { model: a.model, out_tokens: out.clamp(8, 1024) });
+                calls.push(CallNode {
+                    model: a.model,
+                    out_tokens: out.clamp(8, 1024),
+                    parents: parents[turn * agents.len() + j].clone(),
+                });
             }
         }
         sessions.push(SessionScript { id, arrival: secs(t), init_prompt_tokens: init, calls });
@@ -151,28 +576,41 @@ pub fn generate_trace(spec: &WorkloadSpec, rate_per_s: f64, duration_s: f64, see
 /// Synthetic token ids for the simulator's radix keys.
 ///
 /// The shared system prompt maps to globally identical ids (so *every*
-/// session radix-hits it); session-specific content maps to ids unique to
-/// (session, position), so cross-session collisions are impossible.
+/// session radix-hits it).  Session-private content is addressed by
+/// **segment**: segment 0 is the session's init prompt and segment
+/// `j + 1` is node `j`'s decode output, so two DAG nodes of one session
+/// share a key prefix exactly as far as their ancestor cuts agree —
+/// sibling fan-out nodes (identical cuts) share everything, divergent
+/// branches share only up to the first differing ancestor.  Cross-session
+/// collisions are impossible (the sid is packed into every private id;
+/// packing limits: sid < 2^20, segment < 2^12, position < 2^16 — all far
+/// above what any registry workload generates).
 pub mod simtokens {
     /// System-prompt token at position `i`.
     pub fn sys(i: usize) -> u64 {
         1 + i as u64
     }
 
-    /// Session-private token: position `i` of session `sid`'s own content.
-    pub fn private(sid: u64, i: usize) -> u64 {
-        (1u64 << 40) | (sid << 20) | (i as u64 & 0xFFFFF)
+    /// Session-private token: position `i` of segment `seg` of session
+    /// `sid`'s own content (segment 0 = init prompt, `j + 1` = node `j`'s
+    /// output).
+    pub fn private(sid: u64, seg: usize, i: usize) -> u64 {
+        (1u64 << 48) | (sid << 28) | ((seg as u64 & 0xFFF) << 16) | (i as u64 & 0xFFFF)
     }
 
-    /// Build the full context key for a session given segment lengths:
-    /// sys prompt + (init prompt ++ generated segments) as private ids.
-    pub fn context_key(sid: u64, sys_len: usize, private_len: usize) -> Vec<u64> {
+    /// Build the radix key for a node's input context: the shared system
+    /// prompt, then the private `(segment, length)` runs in ancestor-cut
+    /// order.
+    pub fn context_key(sid: u64, sys_len: usize, segs: &[(usize, usize)]) -> Vec<u64> {
+        let private_len: usize = segs.iter().map(|&(_, l)| l).sum();
         let mut v = Vec::with_capacity(sys_len + private_len);
         for i in 0..sys_len {
             v.push(sys(i));
         }
-        for i in 0..private_len {
-            v.push(private(sid, i));
+        for &(seg, len) in segs {
+            for i in 0..len {
+                v.push(private(sid, seg, i));
+            }
         }
         v
     }
@@ -190,7 +628,7 @@ mod tests {
         for (x, y) in a.sessions.iter().zip(&b.sessions) {
             assert_eq!(x.arrival, y.arrival);
             assert_eq!(x.init_prompt_tokens, y.init_prompt_tokens);
-            assert_eq!(x.calls.len(), y.calls.len());
+            assert_eq!(x.calls, y.calls);
         }
     }
 
@@ -207,6 +645,7 @@ mod tests {
         let t = generate_trace(&spec, 1.0, 50.0, 3);
         for s in &t.sessions {
             assert_eq!(s.calls.len(), spec.turns * spec.agents.len());
+            assert!(s.is_chain(), "reflexion is the degenerate chain DAG");
             // model identities cycle through the agent chain
             for (i, c) in s.calls.iter().enumerate() {
                 assert_eq!(c.model, spec.agents[i % spec.agents.len()].model);
@@ -215,23 +654,151 @@ mod tests {
     }
 
     #[test]
-    fn context_grows_monotonically() {
+    fn chain_context_grows_monotonically() {
         let spec = react();
         let t = generate_trace(&spec, 1.0, 20.0, 5);
         let s = &t.sessions[0];
         let mut prev = 0;
         for i in 0..s.calls.len() {
-            let c = s.context_len_after(&spec, i);
+            let c = s.input_context_len(spec.sys_prompt_tokens, i);
             assert!(c > prev);
             prev = c;
+        }
+        assert!(s.final_context_len(spec.sys_prompt_tokens) > prev);
+    }
+
+    #[test]
+    fn fanout_topology_and_ancestor_cuts() {
+        let spec = fanout();
+        let t = generate_trace(&spec, 1.0, 30.0, 2);
+        let s = &t.sessions[0];
+        let a = spec.agents.len(); // 5 per turn
+        assert_eq!(s.calls.len(), 3 * a);
+        assert!(!s.is_chain());
+        // Turn 0: planner is the only root; specialists hang off it.
+        assert_eq!(s.roots(), vec![0]);
+        for i in 1..=3 {
+            assert_eq!(s.calls[i].parents, vec![0]);
+            assert_eq!(s.ancestors(i), vec![0], "specialists share the planner's cut");
+            // Identical ancestor cut => identical input context length.
+            assert_eq!(
+                s.input_context_len(spec.sys_prompt_tokens, i),
+                s.input_context_len(spec.sys_prompt_tokens, 1)
+            );
+        }
+        // Joiner reads all three specialists; its cut is the whole turn.
+        assert_eq!(s.calls[4].parents, vec![1, 2, 3]);
+        assert_eq!(s.ancestors(4), vec![0, 1, 2, 3]);
+        // Turn 1's planner chains off turn 0's joiner (the turn sink).
+        assert_eq!(s.calls[a].parents, vec![4]);
+        assert_eq!(s.ancestors(a), vec![0, 1, 2, 3, 4]);
+        // Depth waves: 1 planner, 3 specialists, 1 joiner — per turn.
+        assert_eq!(s.wave_widths(), vec![1, 3, 1, 1, 3, 1, 1, 3, 1]);
+        assert_eq!(s.depths()[..5], [0, 1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn debate_proposers_are_concurrent_roots() {
+        let t = generate_trace(&debate(), 1.0, 30.0, 4);
+        let s = &t.sessions[0];
+        assert_eq!(s.roots(), vec![0, 1, 2]);
+        assert_eq!(s.ancestors(3), vec![0, 1, 2]);
+        assert_eq!(s.wave_widths(), vec![3, 1, 3, 1, 3, 1]);
+        // Round 2 proposers all chain off round 1's judge.
+        for i in 4..7 {
+            assert_eq!(s.calls[i].parents, vec![3]);
         }
     }
 
     #[test]
+    fn mixed_blends_chain_and_fanout_sessions() {
+        // Structural check only — the statistical blend fraction is pinned
+        // once, in `tests/workload_stats.rs::dag_topology_statistics`.
+        let t = generate_trace(&mixed(), 2.0, 60.0, 11);
+        let chains = t.sessions.iter().filter(|s| s.is_chain()).count();
+        assert!(chains > 0, "no chain sessions in the blend");
+        assert!(chains < t.sessions.len(), "no fanout sessions in the blend");
+        for s in &t.sessions {
+            assert!(s.calls.len() == 12 || s.calls.len() == 15, "{}", s.calls.len());
+        }
+    }
+
+    #[test]
+    fn mmpp_preserves_mean_rate_but_burstifies() {
+        // Long horizon + short dwell: enough burst/quiet cycles that the
+        // realized rate concentrates (port-mirrored: 4.18/s at this seed;
+        // 3.68–4.39 across seeds, so ±20% is comfortably deterministic).
+        let rate = 4.0;
+        let dur = 2000.0;
+        let p = generate_trace(&react(), rate, dur, 9);
+        let m = generate_trace_with(
+            &react(),
+            rate,
+            dur,
+            9,
+            &ArrivalProcess::Mmpp { burst: 4.0, dwell_s: 2.0 },
+        );
+        let got = m.sessions.len() as f64 / dur;
+        assert!((got - rate).abs() < 0.2 * rate, "mmpp mean rate {got}");
+        // Burstiness: the gap coefficient of variation exceeds Poisson's ~1.
+        let cv = |tr: &Trace| {
+            let a: Vec<f64> =
+                tr.sessions.iter().map(|s| crate::simtime::to_secs(s.arrival)).collect();
+            let gaps: Vec<f64> = a.windows(2).map(|w| w[1] - w[0]).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+                / gaps.len() as f64;
+            var.sqrt() / mean
+        };
+        assert!(cv(&m) > cv(&p) + 0.2, "mmpp cv {} vs poisson {}", cv(&m), cv(&p));
+    }
+
+    #[test]
+    fn registry_names_resolve_and_are_unique() {
+        let reg = workload_registry();
+        for w in &reg {
+            assert_eq!(workload_by_name(w.name).unwrap().name, w.name);
+        }
+        let names: Vec<&str> = reg.iter().map(|w| w.name).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), reg.len(), "duplicate registry names");
+        assert!(workload_by_name("does-not-exist").is_none());
+        assert_eq!(workload_names(), names.join("|"));
+    }
+
+    #[test]
+    #[should_panic(expected = "concurrent")]
+    fn concurrent_same_model_calls_are_rejected() {
+        let mut spec = react();
+        // Two parallel roots on the same model: the residency ledger
+        // cannot key them, so generation must refuse.
+        spec.agents = vec![
+            AgentSpec { name: "a", model: 0, mean_out_tokens: 32.0, cv: 0.3, parents: vec![] },
+            AgentSpec { name: "b", model: 0, mean_out_tokens: 32.0, cv: 0.3, parents: vec![] },
+        ];
+        generate_trace(&spec, 1.0, 10.0, 0);
+    }
+
+    #[test]
     fn sim_tokens_share_sys_prefix_only() {
-        let a = simtokens::context_key(1, 8, 4);
-        let b = simtokens::context_key(2, 8, 4);
+        let a = simtokens::context_key(1, 8, &[(0, 4)]);
+        let b = simtokens::context_key(2, 8, &[(0, 4)]);
         assert_eq!(&a[..8], &b[..8], "system prompt shared");
         assert_ne!(&a[8..], &b[8..], "private content distinct");
+    }
+
+    #[test]
+    fn sim_tokens_diverge_at_the_first_differing_segment() {
+        // Sibling cuts {planner} vs {planner}: identical keys.
+        let s1 = simtokens::context_key(7, 4, &[(0, 8), (1, 3)]);
+        let s2 = simtokens::context_key(7, 4, &[(0, 8), (1, 3)]);
+        assert_eq!(s1, s2);
+        // Divergent cuts {0,2} vs {0,3}: share init + segment 1, then split.
+        let a = simtokens::context_key(7, 4, &[(0, 8), (1, 3), (3, 2)]);
+        let b = simtokens::context_key(7, 4, &[(0, 8), (1, 3), (4, 2)]);
+        assert_eq!(&a[..15], &b[..15], "shared up to the common cut");
+        assert_ne!(a[15], b[15], "first token after the cut differs");
     }
 }

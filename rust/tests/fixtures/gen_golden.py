@@ -1,38 +1,51 @@
 #!/usr/bin/env python3
-"""Reference generator for `golden_fifo.json`, `golden_routes.json` and
-`golden_reuse.json`.
+"""Reference generator for `golden_fifo.json`, `golden_routes.json`,
+`golden_reuse.json` and `golden_fanout.json`.
 
 A line-by-line Python port of the rust cluster simulator's FIFO path
-(`engine/sim/` + `engine/sched/fifo.rs`), the workload generator
+(`engine/sim/` + `engine/sched/fifo.rs`), the DAG workload generator
 (`workload.rs`), the radix prefix cache (`kvcache/radix.rs`), the cost model
 (`costmodel.rs`) and the PRNG (`util/rng.rs`).  Both implementations are
 deterministic integer-microsecond discrete-event simulations over IEEE-754
 doubles, so an exact port produces identical counters and (ulp-identical)
 float metrics.  The golden regression tests (`tests/sched_determinism.rs`,
-`tests/routing_interconnect.rs`) pin the rust simulator to this file's
-output.
+`tests/routing_interconnect.rs`, `tests/dag_workloads.rs`) pin the rust
+simulator to this file's output.
 
 Beyond the FIFO/prefix-aware default (golden_fifo.json), the port models
 the routing subsystem's `round-robin` and `cache-aware` policies and the
-contended per-link FIFO interconnect (`engine/sim/interconnect.rs`), and
-pins them in a second fixture (golden_routes.json) together with the
-decode-queue-delay / link-wait / utilization-imbalance / per-position-TTFT
-metrics those scenarios exercise.  A third fixture (golden_reuse.json)
-pins the decode-side session KV residency subsystem (`--decode-reuse`,
-`engine/sim/residency.rs`): delta handoffs, retained-KV LRU eviction with
-the discard-vs-host-park cost decision, and host reloads.
+contended per-link FIFO interconnect (`engine/sim/interconnect.rs`)
+(golden_routes.json), the decode-side session KV residency subsystem
+(`--decode-reuse`, `engine/sim/residency.rs`) with delta handoff, LRU
+retained-KV eviction and host parking (golden_reuse.json), and —
+golden_fanout.json — **DAG-structured sessions with parallel fan-out**:
 
-Decode-tier semantics shared with the rust side (both fixed here and in
-`engine/sim/decode_pool.rs` in the same change):
+* a session's calls form a dependency graph; every node issues the moment
+  its last parent completes, so sibling calls of one session are in
+  flight concurrently (`peak_session_inflight` pins the overlap — the
+  fanout scenarios must reach >= 3);
+* a node's input context = shared prefix + the outputs of its *ancestor
+  cut* in ascending node order, addressed by per-segment radix token ids
+  (`workload.rs::simtokens`), so siblings share key prefixes exactly as
+  far as their cuts agree;
+* retained decode KV carries a segment *signature*; delta handoffs are
+  sized against the longest common signature prefix (exact-prefix reuse
+  only — a divergent DAG branch reuses nothing past the branch point).
+  For chains the signature is always a full prefix, reproducing the
+  pre-DAG reuse fixtures bit-for-bit.
+
+Decode-tier semantics shared with the rust side (see
+`engine/sim/decode_pool.rs`):
 
 * the decode worker's staging gate is an in-flight IO *counter* — a
   stage-in admitted while a stage-out is still draining keeps decode
-  compute gated until both copies finish (the old boolean flag reopened
-  the gate at the first completion);
+  compute gated until both copies finish;
 * admission's resident cap is *soft* on an idle, empty worker — an
   oversized request (footprint above the whole pool, or above whatever
   unevictable retained KV leaves free) is admitted alone rather than
-  parked forever.
+  parked forever;
+* admission discounts the head-of-line request's own pinned residency
+  entry *whole* (it is consumed at admit, matching prefix or not).
 
 Regenerate after an *intentional* simulator behaviour change:
 
@@ -130,21 +143,78 @@ def to_secs(t):
 
 
 # ---------------------------------------------------------------------------
-# workload.rs — the `react` workload
+# workload.rs — DAG-structured workloads (chains are the degenerate case)
 # ---------------------------------------------------------------------------
+
+# Agent tuples: (model, mean_out_tokens, cv, intra-turn parents).  A node
+# with no intra-turn parents is a turn root and depends on the previous
+# turn's sinks (workload.rs::flatten_parents).
+
+REACT_AGENTS = [(0, 96.0, 0.3, []), (1, 48.0, 0.3, [0]), (2, 128.0, 0.3, [1]), (3, 64.0, 0.3, [2])]
+
+FANOUT_AGENTS = [
+    (0, 96.0, 0.3, []),       # planner
+    (1, 128.0, 0.3, [0]),     # searcher
+    (2, 96.0, 0.3, [0]),      # coder
+    (3, 64.0, 0.3, [0]),      # critic
+    (0, 96.0, 0.3, [1, 2, 3]),  # joiner
+]
 
 REACT = {
     "name": "react",
     "sys_prompt_tokens": 160,
     "init_prompt_mean": 1024.0,
     "init_prompt_cv": 0.25,
-    # (model, mean_out_tokens, cv)
-    "agents": [(0, 96.0, 0.3), (1, 48.0, 0.3), (2, 128.0, 0.3), (3, 64.0, 0.3)],
+    "agents": REACT_AGENTS,
     "turns": 3,
+    "variants": [],
 }
+
+FANOUT = {
+    "name": "fanout",
+    "sys_prompt_tokens": 160,
+    "init_prompt_mean": 1024.0,
+    "init_prompt_cv": 0.25,
+    "agents": FANOUT_AGENTS,
+    "turns": 3,
+    "variants": [],
+}
+
+MIXED = {
+    "name": "mixed",
+    "sys_prompt_tokens": 160,
+    "init_prompt_mean": 1024.0,
+    "init_prompt_cv": 0.25,
+    "agents": REACT_AGENTS,
+    "turns": 3,
+    # (weight, agents, turns) — drawn per session with one srng.f64().
+    "variants": [(0.5, REACT_AGENTS, 3), (0.5, FANOUT_AGENTS, 3)],
+}
+
+WORKLOADS = {"react": REACT, "fanout": FANOUT, "mixed": MIXED}
+
+
+def flatten_parents(agents, turns):
+    """workload.rs::flatten_parents — absolute-index parent lists."""
+    is_parent = [False] * len(agents)
+    for (_m, _mean, _cv, ps) in agents:
+        for p in ps:
+            is_parent[p] = True
+    sinks = [j for j in range(len(agents)) if not is_parent[j]]
+    parents = []
+    for turn in range(turns):
+        base = turn * len(agents)
+        for (_m, _mean, _cv, ps) in agents:
+            if not ps:
+                parents.append([] if turn == 0 else [base - len(agents) + s for s in sinks])
+            else:
+                parents.append([base + p for p in ps])
+    return parents
 
 
 def generate_trace(spec, rate_per_s, duration_s, seed):
+    base_parents = flatten_parents(spec["agents"], spec["turns"])
+    var_parents = [flatten_parents(a, t) for (_w, a, t) in spec["variants"]]
     rng = Rng(seed ^ 0x5E5510AD)
     sessions = []
     t = 0.0
@@ -154,20 +224,35 @@ def generate_trace(spec, rate_per_s, duration_s, seed):
         if t >= duration_s:
             break
         srng = rng.fork(sid)
+        if spec["variants"]:
+            total = sum(w for (w, _a, _t) in spec["variants"])
+            u = srng.f64() * total
+            vi = len(spec["variants"]) - 1
+            for i, (w, _a, _t) in enumerate(spec["variants"]):
+                if u < w:
+                    vi = i
+                    break
+                u -= w
+            agents, turns, parents = spec["variants"][vi][1], spec["variants"][vi][2], var_parents[vi]
+        else:
+            agents, turns, parents = spec["agents"], spec["turns"], base_parents
         init = clamp(int(rust_round(srng.lognormal_mean_cv(spec["init_prompt_mean"], spec["init_prompt_cv"]))), 16, 4096)
         calls = []
-        for _turn in range(spec["turns"]):
-            for (model, mean_out, cv) in spec["agents"]:
+        for turn in range(turns):
+            for j, (model, mean_out, cv, _ps) in enumerate(agents):
                 out = clamp(int(rust_round(srng.lognormal_mean_cv(mean_out, cv))), 8, 1024)
-                calls.append((model, out))
+                calls.append({"model": model, "out": out, "parents": parents[turn * len(agents) + j]})
         sessions.append({"id": sid, "arrival": secs(t), "init": init, "calls": calls})
         sid += 1
     return sessions
 
 
-def context_key(sid, sys_len, private_len):
+def context_key(sid, sys_len, segs):
+    """workload.rs::simtokens — segment-addressed private ids (segment 0 =
+    init prompt, j + 1 = node j's output)."""
     key = [1 + i for i in range(sys_len)]
-    key += [(1 << 40) | (sid << 20) | (i & 0xFFFFF) for i in range(private_len)]
+    for (seg, ln) in segs:
+        key += [(1 << 48) | (sid << 28) | ((seg & 0xFFF) << 16) | (i & 0xFFFF) for i in range(ln)]
     return key
 
 
@@ -227,7 +312,8 @@ def staging_secs(tokens):
 
 
 def cluster_config(
-    system, routing="prefix", link_contended=False, handoff_bps=HANDOFF_BPS, decode_reuse=False
+    system, routing="prefix", link_contended=False, handoff_bps=HANDOFF_BPS, decode_reuse=False,
+    spec=REACT,
 ):
     usable = max(MEM_BYTES * 0.9 - weight_bytes(), 1e9)
     return {
@@ -242,7 +328,7 @@ def cluster_config(
         "max_decode_batch": 48,
         "prefill_kv_tokens": int(usable * 0.30 / KV_BYTES_PER_TOKEN),
         "decode_kv_tokens": int(usable * 0.20 / KV_BYTES_PER_TOKEN),
-        "sys_prompt_tokens": REACT["sys_prompt_tokens"],
+        "sys_prompt_tokens": spec["sys_prompt_tokens"],
     }
 
 
@@ -469,6 +555,7 @@ class Histogram:
 
 # ---------------------------------------------------------------------------
 # engine/sim/ — FIFO path (Proxy + PrefillPool + Interconnect + DecodePool)
+# over DAG-structured sessions
 # ---------------------------------------------------------------------------
 
 
@@ -483,16 +570,17 @@ def swap_remove(lst, i):
 
 class DecodeReq:
     __slots__ = (
-        "sid", "call_idx", "ctx_len", "out_tokens", "generated", "issued_at",
+        "sid", "call_idx", "depth", "ctx_len", "out_tokens", "generated", "issued_at",
         "arrived_at", "ttft_recorded", "was_deferred",
-        "shipped_tokens", "reuse_tokens", "host_tokens", "is_last_call",
+        "shipped_tokens", "reuse_tokens", "host_tokens", "base", "sig", "is_sink",
     )
 
-    def __init__(self, sid, call_idx, ctx_len, out_tokens, issued_at,
+    def __init__(self, sid, call_idx, depth, ctx_len, out_tokens, issued_at,
                  shipped_tokens=None, reuse_tokens=0, host_tokens=0,
-                 is_last_call=False):
+                 base=0, sig=(), is_sink=False):
         self.sid = sid
         self.call_idx = call_idx
+        self.depth = depth
         self.ctx_len = ctx_len
         self.out_tokens = out_tokens
         self.generated = 0
@@ -505,8 +593,14 @@ class DecodeReq:
         self.shipped_tokens = ctx_len if shipped_tokens is None else shipped_tokens
         self.reuse_tokens = reuse_tokens
         self.host_tokens = host_tokens
-        # Final agent call of its session: never retained on completion.
-        self.is_last_call = is_last_call
+        # Residency signature of the input context (decode reuse only):
+        # base = sys + init, sig = [(node, out_tokens)] over the ancestor
+        # cut, ascending.
+        self.base = base
+        self.sig = list(sig)
+        # Sink of its session's graph (no children): no later call can
+        # extend its context, so it is never retained on completion.
+        self.is_sink = is_sink
 
     def footprint(self):
         return self.ctx_len + self.out_tokens
@@ -549,7 +643,8 @@ class Simulator:
                 "busy_micros": 0,
                 "peak_resident": 0,
                 # Session residency ledger (engine/sim/residency.rs):
-                # sid -> {tokens, last_use, on_host, pinned}.
+                # sid -> {tokens, base, sig, last_use, on_host, pinned,
+                #         pinned_reuse}.
                 "residency": {},
                 "res_clock": 0,
                 "retained_gpu": 0,
@@ -557,14 +652,38 @@ class Simulator:
             }
             for _ in range(cfg["n_models"])
         ]
-        self.sessions = [
-            {
-                "next_call": 0,
-                "ctx_len": cfg["sys_prompt_tokens"] + s["init"],
-                "arrival": s["arrival"],
-            }
-            for s in trace
-        ]
+        # Per-session DAG execution state + static per-node facts
+        # (sim/mod.rs::SessionState / NodeMeta).
+        self.sessions = []
+        self.meta = []
+        for s in trace:
+            calls = s["calls"]
+            anc_sets = []
+            depths = []
+            children = [[] for _ in calls]
+            for i, c in enumerate(calls):
+                a = set()
+                for p in c["parents"]:
+                    a.add(p)
+                    a |= anc_sets[p]
+                anc_sets.append(a)
+                depths.append(max((depths[p] + 1 for p in c["parents"]), default=0))
+                for p in c["parents"]:
+                    children[p].append(i)
+            metas = []
+            for i in range(len(calls)):
+                anc = sorted(anc_sets[i])
+                ctx = cfg["sys_prompt_tokens"] + s["init"] + sum(calls[a]["out"] for a in anc)
+                metas.append({"anc": anc, "ctx": ctx, "depth": depths[i], "children": children[i]})
+            self.meta.append(metas)
+            self.sessions.append(
+                {
+                    "pending": [len(c["parents"]) for c in calls],
+                    "remaining": len(calls),
+                    "inflight": 0,
+                    "arrival": s["arrival"],
+                }
+            )
         self.admitted = 0
         self.admission_queue = deque()
         # routing + interconnect state (engine/sim/{proxy,interconnect}.rs)
@@ -594,6 +713,7 @@ class Simulator:
             "prefill_jobs": 0,
             "prefill_chunks": 0,
             "generated_tokens": 0,
+            "peak_session_inflight": 0,
         }
         self.session_latency = Histogram()
         self.ttft = Histogram()
@@ -602,6 +722,7 @@ class Simulator:
         self.decode_qd = Histogram()
         self.handoff_wait = Histogram()
         self.ttft_pos = []
+        self.ttft_depth = []
         self.tput_first = None
         self.tput_last = None
         self.last_completion = 0
@@ -649,26 +770,35 @@ class Simulator:
 
     def admit(self, sid):
         self.admitted += 1
-        self.issue_call(sid)
+        self.start_session(sid)
 
-    def context_key(self, sid, ctx_len):
-        sys_len = min(self.cfg["sys_prompt_tokens"], ctx_len)
-        return context_key(sid, sys_len, ctx_len - sys_len)
+    def start_session(self, sid):
+        # Issue every root of the call graph, ascending node order.
+        for i, c in enumerate(self.trace[sid]["calls"]):
+            if not c["parents"]:
+                self.issue_node(sid, i)
 
-    def issue_call(self, sid):
-        call_idx = self.sessions[sid]["next_call"]
-        model, _out = self.trace[sid]["calls"][call_idx]
-        ctx_len = self.sessions[sid]["ctx_len"]
+    def node_key(self, sid, node):
+        s = self.trace[sid]
+        meta = self.meta[sid][node]
+        segs = [(0, s["init"])] + [(a + 1, s["calls"][a]["out"]) for a in meta["anc"]]
+        return context_key(sid, self.cfg["sys_prompt_tokens"], segs)
+
+    def issue_node(self, sid, node):
+        st = self.sessions[sid]
+        st["inflight"] += 1
+        self.m["peak_session_inflight"] = max(self.m["peak_session_inflight"], st["inflight"])
+        meta = self.meta[sid][node]
         job = {
             "sid": sid,
-            "call_idx": call_idx,
-            "model": model,
-            "ctx_len": ctx_len,
+            "call_idx": node,
+            "model": self.trace[sid]["calls"][node]["model"],
+            "ctx_len": meta["ctx"],
             "issued_at": self.now,
-            "key": self.context_key(sid, ctx_len),
+            "key": self.node_key(sid, node),
         }
         if self.cfg["system"] == "baseline":
-            w = model
+            w = job["model"]
         else:
             w = self.route(job)
         self.prefill[w]["queue"].append(job)
@@ -741,24 +871,40 @@ class Simulator:
         pw["busy"] = None
         pw["radix"].unlock(path)
         pw["radix"].insert(job["key"])
-        model, out_tokens = self.trace[job["sid"]]["calls"][job["call_idx"]]
+        sid, node = job["sid"], job["call_idx"]
+        call = self.trace[sid]["calls"][node]
+        model, out_tokens = call["model"], call["out"]
+        meta = self.meta[sid][node]
         # Decode reuse (sim/mod.rs::on_prefill_done): the decode worker may
-        # already retain most of the session's context — pin its ledger
-        # entry and ship only the delta over the handoff link.
+        # retain part of the session's context — size the delta against the
+        # longest common prefix of the retained signature and this node's
+        # context signature, pin the entry, ship only the delta.
         reuse_tokens = host_tokens = 0
+        base = 0
+        sig = []
         if self.cfg.get("decode_reuse"):
-            e = self.decode[model]["residency"].get(job["sid"])
+            base = self.cfg["sys_prompt_tokens"] + self.trace[sid]["init"]
+            sig = [(a, self.trace[sid]["calls"][a]["out"]) for a in meta["anc"]]
+            e = self.decode[model]["residency"].get(sid)
             if e is not None:
+                r = e["base"]
+                for have, need in zip(e["sig"], sig):
+                    if have == need:
+                        r += have[1]
+                    else:
+                        break
                 e["pinned"] = True
+                e["pinned_reuse"] = r
                 if e["on_host"]:
-                    host_tokens = e["tokens"]
+                    host_tokens = r
                 else:
-                    reuse_tokens = e["tokens"]
+                    reuse_tokens = r
         shipped = job["ctx_len"] - reuse_tokens - host_tokens
         req = DecodeReq(
-            job["sid"], job["call_idx"], job["ctx_len"], out_tokens, job["issued_at"],
+            sid, node, meta["depth"], job["ctx_len"], out_tokens, job["issued_at"],
             shipped_tokens=shipped, reuse_tokens=reuse_tokens, host_tokens=host_tokens,
-            is_last_call=job["call_idx"] + 1 == len(self.trace[job["sid"]]["calls"]),
+            base=base, sig=sig,
+            is_sink=not meta["children"],
         )
         self.m["handoffs"] += 1
         self.m["handoff_tokens"] += shipped
@@ -828,6 +974,12 @@ class Simulator:
             dw["retained_gpu"] -= tokens
         return True
 
+    def entry_gpu_tokens(self, dw, sid):
+        # residency.rs::entry_gpu_tokens — the front's own pinned entry is
+        # discounted whole: admission consumes it, matching prefix or not.
+        e = dw["residency"].get(sid)
+        return e["tokens"] if e is not None and not e["on_host"] else 0
+
     def try_admit_decode(self, w):
         cap = self.cfg["decode_kv_tokens"]
         while True:
@@ -841,7 +993,7 @@ class Simulator:
                         break
                     front = dw["pending"][0]
                     need = dw["resident"] + front.footprint() + (
-                        dw["retained_gpu"] - front.reuse_tokens
+                        dw["retained_gpu"] - self.entry_gpu_tokens(dw, front.sid)
                     )
                     if need <= cap or not self.evict_one(w):
                         break
@@ -851,7 +1003,7 @@ class Simulator:
                 return
             front = dw["pending"][0]
             fp = front.footprint()
-            retained = dw["retained_gpu"] - front.reuse_tokens
+            retained = dw["retained_gpu"] - self.entry_gpu_tokens(dw, front.sid)
             force = retained + fp > cap and dw["resident"] == 0
             if dw["resident"] + retained + fp > cap and not force:
                 if not front.was_deferred and dw["io_inflight"] == 0:
@@ -925,19 +1077,24 @@ class Simulator:
                 t = to_secs(now - r.issued_at)
                 self.ttft.record(t)
                 record_pos(self.ttft_pos, r.call_idx, t)
+                record_pos(self.ttft_depth, r.depth, t)
             if r.generated >= r.out_tokens:
                 done = swap_remove(dw["active"], i)
                 dw["resident"] -= done.footprint()
-                if self.cfg.get("decode_reuse") and not done.is_last_call:
+                if self.cfg.get("decode_reuse") and not done.is_sink:
                     # Retain the finished request's KV on the worker
-                    # (residency.rs::retain) instead of freeing it.
+                    # (residency.rs::retain), tagged with its context's
+                    # segment signature, instead of freeing it.
                     dw["res_clock"] += 1
                     assert done.sid not in dw["residency"], "retain without consume"
                     dw["residency"][done.sid] = {
                         "tokens": done.footprint(),
+                        "base": done.base,
+                        "sig": done.sig + [(done.call_idx, done.out_tokens)],
                         "last_use": dw["res_clock"],
                         "on_host": False,
                         "pinned": False,
+                        "pinned_reuse": 0,
                     }
                     dw["retained_gpu"] += done.footprint()
                     dw["peak_retained"] = max(dw["peak_retained"], dw["retained_gpu"])
@@ -961,13 +1118,18 @@ class Simulator:
 
     def on_call_complete(self, req):
         sid = req.sid
-        s = self.sessions[sid]
-        s["ctx_len"] += req.out_tokens
-        s["next_call"] += 1
-        if s["next_call"] < len(self.trace[sid]["calls"]):
-            self.issue_call(sid)
-        else:
-            self.session_latency.record(to_secs(self.now - s["arrival"]))
+        node = req.call_idx
+        st = self.sessions[sid]
+        st["inflight"] -= 1
+        st["remaining"] -= 1
+        # Unblock children; every node whose last parent this was issues
+        # now, ascending node order (sim/mod.rs::on_call_complete).
+        for c in self.meta[sid][node]["children"]:
+            st["pending"][c] -= 1
+            if st["pending"][c] == 0:
+                self.issue_node(sid, c)
+        if st["remaining"] == 0:
+            self.session_latency.record(to_secs(self.now - st["arrival"]))
             self.m["sessions_completed"] += 1
             self.last_completion = self.now
             if self.cfg.get("decode_reuse"):
@@ -1048,7 +1210,13 @@ class Simulator:
             "ttft_pos0_mean": self.ttft_pos[0].mean() if self.ttft_pos else float("nan"),
             "ttft_pos_last_mean": self.ttft_pos[-1].mean() if self.ttft_pos else float("nan"),
         }
-        return counters, floats, extra
+        # DAG-only floats (golden_fanout.json scenarios; kept out of
+        # `extra` so the pre-DAG fixtures stay byte-identical).
+        dag = {
+            "ttft_depth0_mean": self.ttft_depth[0].mean() if self.ttft_depth else float("nan"),
+            "ttft_depth_last_mean": self.ttft_depth[-1].mean() if self.ttft_depth else float("nan"),
+        }
+        return counters, floats, extra, dag
 
 
 # ---------------------------------------------------------------------------
@@ -1059,7 +1227,7 @@ GOLDEN_RATE = 2.0
 GOLDEN_DURATION = 60.0
 GOLDEN_TRACE_SEED = 42
 
-# Residency counters only the reuse fixture pins; stripped from the
+# Residency counters only the reuse/fanout fixtures pin; stripped from the
 # fifo/routes fixtures so their schema (and bytes, absent behaviour
 # changes) stays stable across the decode-reuse feature landing.
 REUSE_COUNTER_KEYS = (
@@ -1082,9 +1250,25 @@ def strip_reuse(counters):
     return out
 
 
-def trace_header(trace, total_calls):
+def strip_chain(counters):
+    """Chain fixtures predate the DAG axis: a chain session never overlaps
+    its own calls, and the counter stays out of those fixtures' bytes."""
+    out = dict(counters)
+    peak = out.pop("peak_session_inflight")
+    assert peak == 1, ("chain scenario overlapped its own calls", peak)
+    return out
+
+
+def context_demand(sim):
+    """Sum of every call's input-context length — the conservation target
+    for delta accounting: shipped + gpu-reused + host-reloaded must equal
+    this exactly."""
+    return sum(m["ctx"] for metas in sim.meta for m in metas)
+
+
+def trace_header(spec, trace, total_calls):
     return {
-        "workload": "react",
+        "workload": spec["name"],
         "rate": GOLDEN_RATE,
         "duration_s": GOLDEN_DURATION,
         "seed": GOLDEN_TRACE_SEED,
@@ -1108,7 +1292,7 @@ def main():
     # -- golden_fifo.json: the pre-decomposition default (unchanged) --------
     scenarios = []
     for system in ("prefillshare", "baseline"):
-        counters, floats, _extra = Simulator(cluster_config(system), trace).run()
+        counters, floats, _extra, _dag = Simulator(cluster_config(system), trace).run()
         assert counters["sessions_completed"] == len(trace), (system, counters)
         assert counters["requests_completed"] == total_calls
         assert counters["prefix_miss_tokens"] == counters["prefill_computed_tokens"]
@@ -1116,7 +1300,7 @@ def main():
             {
                 "name": f"{system}-fifo",
                 "system": system,
-                "counters": strip_reuse(counters),
+                "counters": strip_chain(strip_reuse(counters)),
                 "floats": floats,
             }
         )
@@ -1126,7 +1310,7 @@ def main():
         "generate_trace(react, 2.0, 60.0, 42); generated by gen_golden.py "
         "(bit-faithful port of the rust simulator). Counters compare exactly, "
         "floats to 1e-6 relative tolerance.",
-        "trace": trace_header(trace, total_calls),
+        "trace": trace_header(REACT, trace, total_calls),
         "scenarios": scenarios,
     }
     write_fixture("golden_fifo.json", fixture)
@@ -1156,7 +1340,7 @@ def main():
         )
         if decode_kv is not None:
             cfg["decode_kv_tokens"] = decode_kv
-        counters, floats, extra = Simulator(cfg, trace).run()
+        counters, floats, extra, _dag = Simulator(cfg, trace).run()
         assert counters["sessions_completed"] == len(trace), (name, counters)
         assert counters["requests_completed"] == total_calls, name
         if decode_kv is not None:
@@ -1168,7 +1352,7 @@ def main():
                 "link_contended": contended,
                 "link_gbps": gbps,
                 "decode_kv_tokens": decode_kv,
-                "counters": strip_reuse(counters),
+                "counters": strip_chain(strip_reuse(counters)),
                 "floats": {**floats, **extra},
             }
         )
@@ -1185,7 +1369,7 @@ def main():
         "FIFO handoff (8 GB/s), FIFO scheduling throughout; generated by "
         "gen_golden.py (bit-faithful port of the rust simulator). Counters "
         "compare exactly, floats to 1e-6 relative tolerance.",
-        "trace": trace_header(trace, total_calls),
+        "trace": trace_header(REACT, trace, total_calls),
         "scenarios": route_scenarios,
     }
     write_fixture("golden_routes.json", routes_fixture)
@@ -1222,8 +1406,8 @@ def main():
                 cfg["decode_kv_tokens"] = decode_kv
             return cfg
 
-        counters, floats, extra = Simulator(build(True), trace).run()
-        off_counters, _of, _oe = Simulator(build(False), trace).run()
+        counters, floats, extra, _dag = Simulator(build(True), trace).run()
+        off_counters, _of, _oe, _od = Simulator(build(False), trace).run()
         assert counters["sessions_completed"] == len(trace), (name, counters)
         assert counters["requests_completed"] == total_calls, name
         assert off_counters["sessions_completed"] == len(trace), (name, "reuse-off lost sessions")
@@ -1247,7 +1431,7 @@ def main():
                 "decode_kv_tokens": decode_kv,
                 "expect_delta": expect_delta,
                 "handoff_tokens_no_reuse": off_counters["handoff_tokens"],
-                "counters": counters,
+                "counters": strip_chain(counters),
                 "floats": {**floats, **extra},
             }
         )
@@ -1265,10 +1449,101 @@ def main():
         "gen_golden.py (bit-faithful port of the rust simulator). Counters "
         "compare exactly, floats to 1e-6 relative tolerance; "
         "handoff_tokens_no_reuse pins the same config with reuse off.",
-        "trace": trace_header(trace, total_calls),
+        "trace": trace_header(REACT, trace, total_calls),
         "scenarios": reuse_scenarios,
     }
     write_fixture("golden_reuse.json", reuse_fixture)
+
+    # -- golden_fanout.json: DAG workloads with parallel fan-out -----------
+    # Fresh traces per workload (same rate/duration/seed); the rust test
+    # rebuilds each scenario from (workload, routing, link, decode_reuse).
+    dag_traces = {
+        wl: generate_trace(WORKLOADS[wl], GOLDEN_RATE, GOLDEN_DURATION, GOLDEN_TRACE_SEED)
+        for wl in ("fanout", "mixed")
+    }
+    fanout_scenarios = []
+    for name, wl, routing, contended, gbps, decode_reuse in (
+        # The headline regime: prefix-aware routing, sibling specialists
+        # radix-hitting the planner's context concurrently.
+        ("prefillshare-fanout", "fanout", "prefix", False, 64.0, False),
+        # Concurrent sibling delta handoffs: one session pins residency
+        # entries on several decode workers at once.
+        ("prefillshare-fanout-reuse", "fanout", "prefix", False, 64.0, True),
+        # Sibling handoffs serialized on a contended 8 GB/s ingress under
+        # locality-destroying routing.
+        ("prefillshare-fanout-rr-link8", "fanout", "rr", True, 8.0, False),
+        # Blended chain + tree sessions with residency on: pins the
+        # variant draw and chain/DAG coexistence on one ledger.
+        ("prefillshare-mixed-reuse", "mixed", "prefix", False, 64.0, True),
+    ):
+        dag_trace = dag_traces[wl]
+        dag_calls = sum(len(s["calls"]) for s in dag_trace)
+
+        def build(reuse):
+            return cluster_config(
+                "prefillshare",
+                routing=routing,
+                link_contended=contended,
+                handoff_bps=gbps * 1e9,
+                decode_reuse=reuse,
+                spec=WORKLOADS[wl],
+            )
+
+        sim = Simulator(build(decode_reuse), dag_trace)
+        counters, floats, extra, dag = sim.run()
+        assert counters["sessions_completed"] == len(dag_trace), (name, counters)
+        assert counters["requests_completed"] == dag_calls, name
+        min_overlap = 3 if wl == "fanout" else 2
+        assert counters["peak_session_inflight"] >= min_overlap, (
+            name, "sibling calls never overlapped", counters["peak_session_inflight"])
+        scenario = {
+            "name": name,
+            "workload": wl,
+            "routing": routing,
+            "link_contended": contended,
+            "link_gbps": gbps,
+            "decode_reuse": decode_reuse,
+            "counters": counters if decode_reuse else strip_reuse(counters),
+            "floats": {**floats, **extra, **dag},
+        }
+        if decode_reuse:
+            off_counters, _of, _oe, _od = Simulator(build(False), dag_trace).run()
+            assert off_counters["sessions_completed"] == len(dag_trace), name
+            # Conservation identity under concurrent sibling pinning:
+            # every call's context demand is shipped, reused or reloaded.
+            demand = context_demand(sim)
+            assert (
+                counters["handoff_tokens"]
+                + counters["decode_reuse_tokens"]
+                + counters["host_reload_tokens"]
+                == demand
+            ), (name, "delta accounting lost tokens")
+            assert counters["handoff_tokens"] <= off_counters["handoff_tokens"], name
+            assert counters["handoffs_delta"] > 0, (name, "no delta handoffs")
+            scenario["handoff_tokens_no_reuse"] = off_counters["handoff_tokens"]
+        fanout_scenarios.append(scenario)
+        print(
+            f"  {name}: {counters['sessions_completed']} sessions, peak inflight "
+            f"{counters['peak_session_inflight']}, hit {counters['prefix_hit_tokens']}, "
+            f"shipped {counters['handoff_tokens']}, p95 {floats['p95_session_latency']:.3f}s"
+        )
+
+    fanout_fixture = {
+        "description": "Golden DAG-workload metrics: fanout (planner -> 3 parallel "
+        "specialists -> joiner) and mixed (50/50 chain/fanout blend) sessions "
+        "with parallel fan-out — multiple in-flight calls per session — under "
+        "prefix-aware and round-robin routing, contended links, and decode-side "
+        "residency with signature-LCP delta handoff; generated by gen_golden.py "
+        "(bit-faithful port of the rust simulator). Counters compare exactly, "
+        "floats to 1e-6 relative tolerance; reuse scenarios also pin the "
+        "reuse-off handoff traffic of the identical config.",
+        "traces": {
+            wl: trace_header(WORKLOADS[wl], tr, sum(len(s["calls"]) for s in tr))
+            for wl, tr in dag_traces.items()
+        },
+        "scenarios": fanout_scenarios,
+    }
+    write_fixture("golden_fanout.json", fanout_fixture)
 
 
 if __name__ == "__main__":

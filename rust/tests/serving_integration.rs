@@ -133,7 +133,7 @@ fn reflexion_contexts_are_heavier_than_react() {
     let mean = |t: &Trace| {
         t.sessions
             .iter()
-            .map(|s| s.context_len_after(&t.workload, s.calls.len() - 1))
+            .map(|s| s.final_context_len(t.workload.sys_prompt_tokens))
             .sum::<usize>() as f64
             / t.sessions.len() as f64
     };

@@ -1,11 +1,19 @@
 //! Statistical unit tests for `workload.rs`: the generated traces must
-//! actually have the shape the specs promise — agent-chain sequencing over
+//! actually have the shape the specs promise — agent sequencing over
 //! `NUM_AGENTS` models, lognormal token lengths landing on the configured
-//! means, and Poisson arrivals at the configured rate.  All seeded, with
-//! bounds ≥3σ wide so they are deterministic-pass, not flaky.
+//! means, Poisson arrivals at the configured rate, and — since the DAG
+//! generalization — dependency graphs whose topology statistics
+//! (ready-set widths, ancestor-cut context lengths) match the template,
+//! with the chain workloads staying **byte-identical** to the legacy flat
+//! generator.  All seeded, with bounds ≥3σ wide so they are
+//! deterministic-pass, not flaky.
 
-use prefillshare::simtime::to_secs;
-use prefillshare::workload::{generate_trace, react, reflexion, workload_by_name, NUM_AGENTS};
+use prefillshare::simtime::{secs, to_secs};
+use prefillshare::util::rng::Rng;
+use prefillshare::workload::{
+    debate, fanout, generate_trace, mixed, react, reflexion, workload_by_name, workload_names,
+    workload_registry, NUM_AGENTS,
+};
 
 #[test]
 fn sessions_follow_num_agents_sequencing() {
@@ -16,6 +24,7 @@ fn sessions_follow_num_agents_sequencing() {
         for s in &t.sessions {
             // Every turn invokes the full agent chain, in order.
             assert_eq!(s.calls.len(), spec.turns * NUM_AGENTS);
+            assert!(s.is_chain(), "{} is the degenerate chain DAG", spec.name);
             for (i, c) in s.calls.iter().enumerate() {
                 assert_eq!(c.model, spec.agents[i % NUM_AGENTS].model);
                 assert_eq!(c.model, i % NUM_AGENTS, "agent chain must cycle 0..NUM_AGENTS");
@@ -26,9 +35,135 @@ fn sessions_follow_num_agents_sequencing() {
 
 #[test]
 fn workloads_resolve_by_name() {
-    assert_eq!(workload_by_name("react").unwrap().name, "react");
-    assert_eq!(workload_by_name("reflexion").unwrap().name, "reflexion");
+    for name in ["react", "reflexion", "fanout", "debate", "mixed"] {
+        assert_eq!(workload_by_name(name).unwrap().name, name);
+        assert!(workload_names().split('|').any(|n| n == name), "`{name}` missing from names");
+    }
     assert!(workload_by_name("does-not-exist").is_none());
+    assert_eq!(workload_registry().len(), workload_names().split('|').count());
+}
+
+/// The chain-equivalence pin: the DAG-encoded `react`/`reflexion`
+/// workloads must reproduce the pre-DAG flat generator *byte-for-byte* —
+/// same arrivals, same init prompts, same per-call (model, out_tokens)
+/// sequence, chain edges exactly.  The legacy generator is reimplemented
+/// inline (its exact RNG discipline: one arrival stream, fork per
+/// session, init then turn-major output draws).
+#[test]
+fn dag_chain_encoding_reproduces_the_legacy_flat_generator() {
+    for spec in [react(), reflexion()] {
+        let t = generate_trace(&spec, 2.0, 60.0, 42);
+
+        let mut rng = Rng::new(42 ^ 0x5e551_0ad);
+        let mut at = 0.0f64;
+        let mut id = 0u64;
+        let mut legacy: Vec<(u64, usize, Vec<(usize, usize)>)> = Vec::new();
+        loop {
+            at += rng.exp(2.0);
+            if at >= 60.0 {
+                break;
+            }
+            let mut srng = rng.fork(id);
+            let init =
+                srng.lognormal_mean_cv(spec.init_prompt_mean, spec.init_prompt_cv).round() as usize;
+            let init = init.clamp(16, 4096);
+            let mut calls = Vec::new();
+            for _turn in 0..spec.turns {
+                for a in &spec.agents {
+                    let out = srng.lognormal_mean_cv(a.mean_out_tokens, a.cv).round() as usize;
+                    calls.push((a.model, out.clamp(8, 1024)));
+                }
+            }
+            legacy.push((secs(at), init, calls));
+            id += 1;
+        }
+
+        assert_eq!(t.sessions.len(), legacy.len(), "{}: session count drifted", spec.name);
+        for (s, (arrival, init, calls)) in t.sessions.iter().zip(&legacy) {
+            assert_eq!(s.arrival, *arrival, "{}: arrival drifted", spec.name);
+            assert_eq!(s.init_prompt_tokens, *init, "{}: init prompt drifted", spec.name);
+            assert_eq!(s.calls.len(), calls.len());
+            for (i, (node, &(model, out))) in s.calls.iter().zip(calls).enumerate() {
+                assert_eq!(node.model, model, "{}: model drifted at call {i}", spec.name);
+                assert_eq!(node.out_tokens, out, "{}: out_tokens drifted at call {i}", spec.name);
+                let want: Vec<usize> = if i == 0 { vec![] } else { vec![i - 1] };
+                assert_eq!(node.parents, want, "{}: chain edge drifted at call {i}", spec.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn dag_traces_are_deterministic() {
+    for spec in [fanout(), debate(), mixed()] {
+        let a = generate_trace(&spec, 3.0, 60.0, 11);
+        let b = generate_trace(&spec, 3.0, 60.0, 11);
+        assert_eq!(a.sessions.len(), b.sessions.len(), "{}", spec.name);
+        for (x, y) in a.sessions.iter().zip(&b.sessions) {
+            assert_eq!(x.arrival, y.arrival, "{}", spec.name);
+            assert_eq!(x.init_prompt_tokens, y.init_prompt_tokens, "{}", spec.name);
+            assert_eq!(x.calls, y.calls, "{}: call graph diverged", spec.name);
+        }
+    }
+}
+
+/// Topology statistics over many sampled sessions: the ready-set width
+/// distribution (nodes per topological wave) must match the template for
+/// every session, and the ancestor-cut join semantics must put sibling
+/// specialists on *identical* input contexts while the joiner's context
+/// is the full turn.
+#[test]
+fn dag_topology_statistics() {
+    // fanout: every session's waves are (planner, 3 specialists, joiner)
+    // per turn; debate: (3 proposers, judge) per round.
+    let cases: &[(_, &[usize])] = &[
+        (fanout(), &[1, 3, 1, 1, 3, 1, 1, 3, 1]),
+        (debate(), &[3, 1, 3, 1, 3, 1]),
+    ];
+    for (spec, want_waves) in cases {
+        let t = generate_trace(spec, 3.0, 120.0, 4);
+        assert!(t.sessions.len() > 200, "need a large sample");
+        for s in &t.sessions {
+            assert_eq!(s.wave_widths().as_slice(), *want_waves, "{}", spec.name);
+        }
+    }
+
+    // Ancestor-cut context lengths on fanout: all three specialists of a
+    // turn share one cut (=> one input context length), and the joiner's
+    // cut adds exactly their three outputs.
+    let spec = fanout();
+    let t = generate_trace(&spec, 3.0, 120.0, 4);
+    let sys = spec.sys_prompt_tokens;
+    let a = spec.agents.len();
+    for s in &t.sessions {
+        for turn in 0..spec.turns {
+            let base = turn * a;
+            let c1 = s.input_context_len(sys, base + 1);
+            assert_eq!(c1, s.input_context_len(sys, base + 2), "siblings share the cut");
+            assert_eq!(c1, s.input_context_len(sys, base + 3), "siblings share the cut");
+            let sibling_out: usize =
+                (1..=3).map(|j| s.calls[base + j].out_tokens).sum();
+            assert_eq!(
+                s.input_context_len(sys, base + 4),
+                c1 + sibling_out,
+                "joiner context = sibling context + the three sibling outputs"
+            );
+        }
+        // The final node's cut is every other node: its input context plus
+        // its own output is the session's final context.
+        let last = s.calls.len() - 1;
+        assert_eq!(
+            s.input_context_len(sys, last) + s.calls[last].out_tokens,
+            s.final_context_len(sys)
+        );
+    }
+
+    // Mixed blend: both shapes occur at roughly the configured weights.
+    let t = generate_trace(&mixed(), 4.0, 200.0, 11);
+    let chains = t.sessions.iter().filter(|s| s.is_chain()).count();
+    let frac = chains as f64 / t.sessions.len() as f64;
+    // Port-mirrored at this seed: 410/792 = 0.518; binomial σ ≈ 0.018.
+    assert!((frac - 0.5).abs() < 0.1, "mixed blend fraction {frac}");
 }
 
 #[test]
