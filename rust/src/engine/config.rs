@@ -77,6 +77,14 @@ pub struct ClusterConfig {
     /// and each worker derives its own cost model + radix capacity from
     /// its GPU tier.
     pub prefill_gpus: Vec<GpuSpec>,
+    /// Model → prefill-module compatibility class (`--prefill-classes`):
+    /// KV reuse never crosses a class boundary.  Indexed by model id;
+    /// models beyond the map's length — and every model when the map is
+    /// empty, the default — fall into class 0 (one PrefillShare-style
+    /// shared prefill module, the pre-class behaviour the golden
+    /// fixtures pin).  Must agree with the trace's `WorkloadSpec` map —
+    /// the simulator refuses a mismatch at construction.
+    pub prefill_classes: Vec<usize>,
     pub seed: u64,
 }
 
@@ -124,8 +132,21 @@ impl ClusterConfig {
             decode_reuse: false,
             link_contended: false,
             prefill_gpus: Vec::new(),
+            prefill_classes: Vec::new(),
             seed: 0,
         }
+    }
+
+    /// Compatibility class of `model` (class 0 when unmapped — mirrors
+    /// `WorkloadSpec::prefill_class_of`).
+    pub fn prefill_class_of(&self, model: usize) -> usize {
+        self.prefill_classes.get(model).copied().unwrap_or(0)
+    }
+
+    /// Number of distinct prefill-module classes in play (1 for the
+    /// default shared map) — sizes the per-class metric vectors.
+    pub fn n_prefill_classes(&self) -> usize {
+        1 + (0..self.n_models).map(|m| self.prefill_class_of(m)).max().unwrap_or(0)
     }
 
     /// Baseline forces one prefill worker per model; a heterogeneous
@@ -214,6 +235,21 @@ mod tests {
         let (cost, cap) = c.prefill_worker_profile(2);
         assert_eq!(cap, c.prefill_kv_tokens);
         assert_eq!(cost.prefill_secs(777, 33).to_bits(), c.cost.prefill_secs(777, 33).to_bits());
+    }
+
+    #[test]
+    fn prefill_class_map_defaults_to_one_shared_class() {
+        let mut c = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        assert_eq!(c.n_prefill_classes(), 1);
+        for m in 0..c.n_models {
+            assert_eq!(c.prefill_class_of(m), 0);
+        }
+        c.prefill_classes = vec![0, 0, 1, 1];
+        assert_eq!(c.n_prefill_classes(), 2);
+        assert_eq!(c.prefill_class_of(2), 1);
+        assert_eq!(c.prefill_class_of(9), 0, "unmapped models fall to class 0");
+        c.prefill_classes = crate::workload::private_prefill_classes(c.n_models);
+        assert_eq!(c.n_prefill_classes(), c.n_models);
     }
 
     #[test]

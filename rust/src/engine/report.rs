@@ -57,6 +57,10 @@ fn f64_arr(vals: &[f64]) -> Json {
     json::arr(vals.iter().map(|&v| json::num(v)).collect())
 }
 
+fn u64_arr(vals: &[u64]) -> Json {
+    json::arr(vals.iter().map(|&v| json::num(v as f64)).collect())
+}
+
 pub fn rows_to_json(rows: &[Row]) -> Json {
     json::arr(
         rows.iter()
@@ -124,6 +128,30 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
                     (
                         "peak_session_inflight",
                         json::num(r.result.peak_session_inflight as f64),
+                    ),
+                    // Per-prefill-class splits of the KV-reuse counters
+                    // (index = compatibility class; each array sums to its
+                    // scalar counterpart above).  Length 1 under the
+                    // default single shared class.
+                    (
+                        "prefix_hit_tokens_by_class",
+                        u64_arr(&r.result.metrics.prefix_hit_tokens_by_class),
+                    ),
+                    (
+                        "prefix_miss_tokens_by_class",
+                        u64_arr(&r.result.metrics.prefix_miss_tokens_by_class),
+                    ),
+                    (
+                        "handoff_tokens_by_class",
+                        u64_arr(&r.result.metrics.handoff_tokens_by_class),
+                    ),
+                    (
+                        "decode_reuse_tokens_by_class",
+                        u64_arr(&r.result.metrics.decode_reuse_tokens_by_class),
+                    ),
+                    (
+                        "host_reload_tokens_by_class",
+                        u64_arr(&r.result.metrics.host_reload_tokens_by_class),
                     ),
                 ])
             })

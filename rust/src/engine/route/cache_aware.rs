@@ -11,16 +11,23 @@
 //!
 //! * **Strong match** (best cached prefix ≥ half the context): the match
 //!   is session-specific — follow it.  Among tied-best workers the
-//!   session's home (`sid % N`) wins, then the least outstanding prefill
-//!   tokens, then the lowest index.
+//!   session's class home (`(sid + class) % N`) wins, then the least
+//!   outstanding prefill tokens, then the lowest index.
 //! * **Weak match** (best < half the context): the "match" is just the
-//!   globally shared system prompt or stale fragments.  Chasing it would
+//!   class-shared system prompt or stale fragments.  Chasing it would
 //!   herd every session onto the first warm worker (observed as a 4.0
 //!   utilization imbalance on a 4-worker pool); place by least load
-//!   instead, ties preferring the session's home (`sid % N`) so an idle
+//!   instead, ties preferring the session's class home so an idle
 //!   cluster degrades to balanced prefix-aware pinning.  The session's
 //!   next call then finds its own context resident and pins strongly to
 //!   wherever this call landed.
+//!
+//! Prefix scores are class-sound for free: radix keys are class-scoped
+//! (`workload::simtokens`), so another class's warm prefix peeks as a
+//! zero-length match and can never attract a job.  The class-affinity
+//! home — the paper's heterogeneous-model routing tie-break — spreads a
+//! session's mutually cold per-class contexts across workers; class 0
+//! (the default shared map) reduces to the pre-class `sid % N` exactly.
 //!
 //! The net effect is dynamic session pinning with load-balanced initial
 //! placement: prefix-aware's hit ratio without its fixed modulo
@@ -43,7 +50,7 @@ impl Router for CacheAware {
             // pinning (balanced) instead of herding on worker 0; further
             // ties take the lowest index.
             let min = workers.iter().map(|w| w.outstanding_tokens).min().expect("non-empty");
-            let home = job.sid % workers.len();
+            let home = (job.sid + job.class) % workers.len();
             if workers[home].outstanding_tokens == min {
                 return home;
             }
@@ -52,7 +59,7 @@ impl Router for CacheAware {
                 .position(|w| w.outstanding_tokens == min)
                 .expect("a min always exists");
         }
-        let home = job.sid % workers.len();
+        let home = (job.sid + job.class) % workers.len();
         if scores[home] == best {
             return home;
         }
@@ -136,5 +143,27 @@ mod tests {
         let mut rng = Rng::new(0);
         // Home is tied-best: stays home even though worker 2 is idle.
         assert_eq!(CacheAware.route(&job(5, 200, 0), &v, &mut rng), 1);
+    }
+
+    #[test]
+    fn class_affinity_offsets_idle_and_tied_placement() {
+        // Idle cold cluster: each class of a session pins to its own
+        // offset home, not one shared modulo slot.
+        let cold = caches(4);
+        let v = views(&cold, &[0, 0, 0, 0]);
+        let mut rng = Rng::new(0);
+        for class in 0..4 {
+            let mut j = job(5, 400, 0);
+            j.class = class;
+            assert_eq!(CacheAware.route(&j, &v, &mut rng), (5 + class) % 4);
+        }
+        // Strong regime: the tied-best preference follows the class home.
+        let mut c = caches(4);
+        let mut j = job(5, 200, 0);
+        j.class = 1; // class home = (5 + 1) % 4 = 2
+        c[2].insert(&j.key);
+        c[3].insert(&j.key);
+        let v = views(&c, &[0, 0, 9_000, 0]);
+        assert_eq!(CacheAware.route(&j, &v, &mut rng), 2, "tied class home keeps the session");
     }
 }

@@ -1,10 +1,15 @@
 //! Prefix-aware session pinning — the paper's routing policy (§3.3).
 //!
-//! Every request of session `sid` lands on worker `sid % N`, so a
-//! session's growing context stays a radix hit on one cache instead of
-//! recomputing on whichever worker happens to be free.  This reproduces
-//! the pre-subsystem simulator's inline routing exactly (pinned by the
-//! golden fixture).
+//! Every request of session `sid` lands on worker `(sid + class) % N` —
+//! the session's *class home* — so a session's growing context stays a
+//! radix hit on one cache instead of recomputing on whichever worker
+//! happens to be free.  The class offset is the paper's heterogeneous-
+//! model routing mechanism: under per-model private prefill modules a
+//! session's per-class contexts land on *different* workers (their
+//! caches share nothing anyway — the class boundary), instead of
+//! piling every class's cold misses onto one modulo slot.  Class 0 —
+//! the default shared map — reduces to the pre-class `sid % N` exactly
+//! (pinned by the golden fixture).
 
 use crate::engine::route::{Router, WorkerView};
 use crate::engine::sched::PrefillJob;
@@ -23,7 +28,7 @@ impl Router for PrefixAware {
     }
 
     fn route_indexed(&mut self, job: &PrefillJob, n_workers: usize, _rng: &mut Rng) -> usize {
-        job.sid % n_workers
+        (job.sid + job.class) % n_workers
     }
 }
 
@@ -41,6 +46,19 @@ mod tests {
         let mut r = PrefixAware;
         for sid in 0..12 {
             assert_eq!(r.route(&job(sid, 128, 0), &v, &mut rng), sid % 4);
+        }
+    }
+
+    #[test]
+    fn class_offsets_the_home_worker() {
+        let mut rng = Rng::new(0);
+        let mut r = PrefixAware;
+        for sid in 0..8 {
+            for class in 0..4 {
+                let mut j = job(sid, 128, 0);
+                j.class = class;
+                assert_eq!(r.route_indexed(&j, 4, &mut rng), (sid + class) % 4);
+            }
         }
     }
 }

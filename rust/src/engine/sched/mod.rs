@@ -49,10 +49,15 @@ pub struct PrefillJob {
     pub call_idx: usize,
     /// Task-model identity (selects the decode worker after handoff).
     pub model: usize,
+    /// Prefill-module compatibility class of `model`: the class is baked
+    /// into `key`'s token ids (disjoint across classes), and routers use
+    /// it for class-affinity tie-breaking.
+    pub class: usize,
     /// Full context length to have resident when this job completes.
     pub ctx_len: usize,
     pub issued_at: SimTime,
-    /// Radix key for the full context (sys prefix + session-private ids).
+    /// Radix key for the full context (sys prefix + session-private ids),
+    /// class-scoped via `workload::simtokens`.
     pub key: Vec<u64>,
 }
 
@@ -262,7 +267,7 @@ pub(crate) mod testutil {
     /// A job whose key is `sid`-private (no cross-job prefix sharing).
     pub fn job(sid: usize, ctx_len: usize, issued_at: SimTime) -> PrefillJob {
         let key = (0..ctx_len).map(|i| ((sid as u64) << 32) | i as u64).collect();
-        PrefillJob { sid, call_idx: 0, model: 0, ctx_len, issued_at, key }
+        PrefillJob { sid, call_idx: 0, model: 0, class: 0, ctx_len, issued_at, key }
     }
 
     /// Drain a scheduler, returning `(sid, chunk_new, is_last)` per unit,

@@ -24,7 +24,7 @@ use crate::engine::config::ClusterConfig;
 use crate::engine::sched::{
     AdmissionDecision, AdmissionQuery, CapAdmission, DecodeAdmission,
 };
-use crate::metrics::{record_position, ServingMetrics};
+use crate::metrics::{bump_class, record_position, ServingMetrics};
 use crate::simtime::{secs, to_secs, EventQueue, SimTime};
 
 use super::interconnect::Interconnect;
@@ -41,6 +41,9 @@ pub(crate) struct DecodeReq {
     /// DAG depth of the node (longest parent path; 0 for roots) —
     /// indexes the per-depth TTFT breakdown.
     pub depth: usize,
+    /// Prefill-module compatibility class of the call's model — tags
+    /// ledger retention and the per-class reuse accounting.
+    pub class: usize,
     pub ctx_len: usize,
     pub out_tokens: usize,
     pub generated: usize,
@@ -133,14 +136,17 @@ impl DecodePool {
 
     /// Size an incoming handoff for worker `w` against the retained
     /// entry's longest matching signature prefix, pin the entry, and
-    /// return `(gpu_reuse_tokens, host_reload_tokens)`.
+    /// return `(gpu_reuse_tokens, host_reload_tokens)`.  `class` is the
+    /// incoming call's prefill class — a cross-class entry yields zero
+    /// reuse (see `ResidencyLedger::pin_for_handoff`).
     pub fn pin_for_handoff(
         &mut self,
         w: usize,
         sid: usize,
+        class: usize,
         ctx_sig: &[(usize, usize)],
     ) -> (usize, usize) {
-        self.workers[w].residency.pin_for_handoff(sid, ctx_sig)
+        self.workers[w].residency.pin_for_handoff(sid, class, ctx_sig)
     }
 
     /// The session completed: drop whatever any worker still retains for it.
@@ -266,6 +272,11 @@ impl DecodePool {
                         if req.host_tokens > 0 {
                             metrics.host_reloads += 1;
                             metrics.host_reload_tokens += req.host_tokens as u64;
+                            bump_class(
+                                &mut metrics.host_reload_tokens_by_class,
+                                req.class,
+                                req.host_tokens as u64,
+                            );
                         }
                         let dur_us = secs(cfg.cost.staging_secs(reload));
                         let bytes = (reload as f64 * kv_bytes_per_token) as u64;
@@ -376,7 +387,7 @@ impl DecodePool {
                 if cfg.decode_reuse && !done.is_sink {
                     let mut sig = done.sig.clone();
                     sig.push((done.call_idx, done.out_tokens));
-                    dw.residency.retain(done.sid, done.footprint(), done.base, sig);
+                    dw.residency.retain(done.sid, done.class, done.footprint(), done.base, sig);
                 }
                 finished.push(done);
             } else {
@@ -397,6 +408,7 @@ mod tests {
             sid,
             call_idx: 0,
             depth: 0,
+            class: 0,
             ctx_len,
             out_tokens,
             generated: 0,
@@ -509,7 +521,7 @@ mod tests {
         // Its next call reuses them: the handoff ships only the delta and
         // admission folds the pinned entry into the active footprint.
         let next_sig = vec![(0usize, 100usize)];
-        let (gpu, host) = pool.pin_for_handoff(0, 0, &next_sig);
+        let (gpu, host) = pool.pin_for_handoff(0, 0, 0, &next_sig);
         assert_eq!((gpu, host), (1_100, 0));
         let mut r = req(0, 1_300, 100);
         r.call_idx = 1;
@@ -553,7 +565,7 @@ mod tests {
         // The session's next call on this worker sits on the *other*
         // branch: context = base + out(0) + out(2).  LCP = base + out(0).
         let next_sig = vec![(0usize, 100usize), (2usize, 100usize)];
-        let (gpu, host) = pool.pin_for_handoff(0, 0, &next_sig);
+        let (gpu, host) = pool.pin_for_handoff(0, 0, 0, &next_sig);
         assert_eq!((gpu, host), (1_100, 0), "reuse stops at the branch point");
         let mut b = req(0, 1_200, 100);
         b.call_idx = 3;

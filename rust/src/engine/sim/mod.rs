@@ -60,7 +60,7 @@ use proxy::Proxy;
 
 use crate::engine::config::{ClusterConfig, SystemKind};
 use crate::engine::sched::PrefillJob;
-use crate::metrics::{record_position, ServingMetrics};
+use crate::metrics::{bump_class, record_position, ServingMetrics};
 use crate::simtime::{secs, to_secs, EventQueue, SimTime};
 use crate::workload::{simtokens, Trace};
 
@@ -132,6 +132,36 @@ pub struct Simulator {
 
 impl Simulator {
     pub fn new(cfg: ClusterConfig, trace: Trace) -> Simulator {
+        // Validate the trace against the cluster before any event fires:
+        // `call.model` indexes the decode pool and its interconnect link
+        // directly, so a model id outside `0..n_models` would panic (or
+        // silently misroute) deep in the event loop; and a call whose
+        // generation-time prefill class disagrees with the cluster's map
+        // would carry radix keys from one class while routing/residency
+        // reason under another.
+        for (sid, s) in trace.sessions.iter().enumerate() {
+            for (i, c) in s.calls.iter().enumerate() {
+                assert!(
+                    c.model < cfg.n_models,
+                    "invalid trace: session {sid} call {i} targets model {} but the \
+                     cluster hosts models 0..{} (cfg.n_models) — model ids must be \
+                     dense in that range",
+                    c.model,
+                    cfg.n_models
+                );
+                assert_eq!(
+                    c.prefill_class,
+                    cfg.prefill_class_of(c.model),
+                    "prefill-class mismatch: session {sid} call {i} (model {}) was \
+                     generated under class {} but the cluster maps that model to \
+                     class {} — apply the same --prefill-classes map to the \
+                     workload and the cluster config",
+                    c.model,
+                    c.prefill_class,
+                    cfg.prefill_class_of(c.model)
+                );
+            }
+        }
         let proxy = Proxy::new(&cfg);
         let prefill = PrefillPool::new(&cfg);
         let decode = DecodePool::new(cfg.n_models);
@@ -231,6 +261,7 @@ impl Simulator {
             sid,
             call_idx: node,
             model: script.calls[node].model,
+            class: script.calls[node].prefill_class,
             ctx_len: meta.ctx_len,
             issued_at: self.q.now(),
             key: self.context_key(sid, node),
@@ -256,8 +287,12 @@ impl Simulator {
     /// Radix key for node `node`'s input context: shared system prompt,
     /// then the session-private segments — init prompt (segment 0) and
     /// each ancestor's output (segment `a + 1`), ascending node order.
+    /// The token ids are scoped to the call's prefill-module class, so
+    /// keys of different classes share no prefix and the radix cache can
+    /// never match KV across a compatibility boundary.
     fn context_key(&self, sid: usize, node: usize) -> Vec<u64> {
         simtokens::context_key(
+            self.trace.sessions[sid].calls[node].prefill_class,
             sid as u64,
             self.trace.workload.sys_prompt_tokens,
             &self.context_segs(sid, node),
@@ -317,7 +352,7 @@ impl Simulator {
                 (Vec::new(), 0)
             };
             let (reuse_tokens, host_tokens) = if self.cfg.decode_reuse {
-                self.decode.pin_for_handoff(dw, job.sid, &sig)
+                self.decode.pin_for_handoff(dw, job.sid, job.class, &sig)
             } else {
                 (0, 0)
             };
@@ -325,6 +360,7 @@ impl Simulator {
             let req = DecodeReq {
                 sid: job.sid,
                 call_idx: job.call_idx,
+                class: job.class,
                 depth: self.nodes[job.sid][job.call_idx].depth,
                 ctx_len: job.ctx_len,
                 out_tokens,
@@ -343,10 +379,16 @@ impl Simulator {
             let dur_us = secs(self.cfg.cost.handoff_secs(shipped));
             self.metrics.handoffs += 1;
             self.metrics.handoff_tokens += shipped as u64;
+            bump_class(&mut self.metrics.handoff_tokens_by_class, job.class, shipped as u64);
             if reuse_tokens + host_tokens > 0 {
                 self.metrics.handoffs_delta += 1;
                 self.metrics.handoff_tokens_delta += shipped as u64;
                 self.metrics.decode_reuse_tokens += reuse_tokens as u64;
+                bump_class(
+                    &mut self.metrics.decode_reuse_tokens_by_class,
+                    job.class,
+                    reuse_tokens as u64,
+                );
             }
             let bytes = (shipped as f64 * self.cfg.cost.llm.kv_bytes_per_token()) as u64;
             let now = self.q.now();
@@ -1014,6 +1056,99 @@ mod tests {
             on.handoff_tokens,
             off.handoff_tokens
         );
+    }
+
+    // -- prefill-module compatibility classes -------------------------------
+
+    /// Generate + simulate with one prefill-class map applied to both the
+    /// workload and the cluster (the simulator rejects disagreement).
+    fn run_with_classes(classes: Vec<usize>, rate: f64, decode_reuse: bool) -> SimResult {
+        let wl = react().with_prefill_classes(classes.clone());
+        let trace = generate_trace(&wl, rate, 60.0, 42);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.prefill_classes = classes;
+        cfg.decode_reuse = decode_reuse;
+        simulate(cfg, trace)
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid trace")]
+    fn out_of_range_model_id_is_rejected_at_construction() {
+        // Regression: `call.model` used to flow unvalidated into
+        // decode-pool / interconnect indexing and panic (or misroute)
+        // mid-event-loop.  It must fail loudly before the first event.
+        let mut trace = small_trace(1.0, 10.0);
+        trace.sessions[0].calls[0].model = 9;
+        let cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        let _ = Simulator::new(cfg, trace);
+    }
+
+    #[test]
+    #[should_panic(expected = "prefill-class mismatch")]
+    fn class_map_disagreement_is_rejected_at_construction() {
+        // Trace generated under the default shared map (all class 0) must
+        // not run on a cluster configured with per-model private classes:
+        // its radix keys would be encoded under the wrong class.
+        let trace = small_trace(1.0, 10.0);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.prefill_classes = crate::workload::private_prefill_classes(cfg.n_models);
+        let _ = Simulator::new(cfg, trace);
+    }
+
+    #[test]
+    fn single_shared_class_reproduces_the_default_run_exactly() {
+        // An explicit all-zero class map is the identity encoding: every
+        // metric (not just the headline ones) must match the implicit
+        // default bit-for-bit.  This is the invariant that keeps the four
+        // pre-class golden fixtures byte-unchanged.
+        let implicit = run(SystemKind::PrefillShare, 2.0);
+        let n = ClusterConfig::paper_default(SystemKind::PrefillShare).n_models;
+        let explicit = run_with_classes(vec![0; n], 2.0, false);
+        assert_eq!(implicit.metrics, explicit.metrics);
+    }
+
+    #[test]
+    fn private_classes_forfeit_cross_model_prefix_reuse() {
+        // The bug this PR fixes made every configuration behave like
+        // PrefillShare: distinct models freely radix-hit each other's KV.
+        // With per-model private classes the keys share no prefix, so the
+        // hit ratio must drop and computed prefill tokens must rise —
+        // while completing the same sessions.
+        let shared = run(SystemKind::PrefillShare, 2.0);
+        let n = ClusterConfig::paper_default(SystemKind::PrefillShare).n_models;
+        let private = run_with_classes(crate::workload::private_prefill_classes(n), 2.0, false);
+        assert_eq!(private.sessions_completed, shared.sessions_completed);
+        assert!(
+            private.prefix_hit_ratio < shared.prefix_hit_ratio,
+            "private {} must reuse less than shared {}",
+            private.prefix_hit_ratio,
+            shared.prefix_hit_ratio
+        );
+        assert!(
+            private.prefill_computed_tokens > shared.prefill_computed_tokens,
+            "private {} must recompute more than shared {}",
+            private.prefill_computed_tokens,
+            shared.prefill_computed_tokens
+        );
+    }
+
+    #[test]
+    fn per_class_counters_sum_to_their_global_counterparts() {
+        let n = ClusterConfig::paper_default(SystemKind::PrefillShare).n_models;
+        let r = run_with_classes(crate::workload::private_prefill_classes(n), 2.0, true);
+        assert!(r.sessions_completed > 0);
+        let m = &r.metrics;
+        // Several classes must actually be populated under a private map.
+        assert!(m.prefix_miss_tokens_by_class.iter().filter(|&&t| t > 0).count() > 1);
+        for (by_class, global, name) in [
+            (&m.prefix_hit_tokens_by_class, m.prefix_hit_tokens, "prefix_hit"),
+            (&m.prefix_miss_tokens_by_class, m.prefix_miss_tokens, "prefix_miss"),
+            (&m.handoff_tokens_by_class, m.handoff_tokens, "handoff"),
+            (&m.decode_reuse_tokens_by_class, m.decode_reuse_tokens, "decode_reuse"),
+            (&m.host_reload_tokens_by_class, m.host_reload_tokens, "host_reload"),
+        ] {
+            assert_eq!(by_class.iter().sum::<u64>(), global, "{name} per-class sum");
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::engine::config::ClusterConfig;
 use crate::engine::route::WorkerView;
 use crate::engine::sched::{make_scheduler, PrefillJob, PrefillScheduler, PrefillUnit};
 use crate::kvcache::radix::RadixCache;
-use crate::metrics::ServingMetrics;
+use crate::metrics::{bump_class, ServingMetrics};
 use crate::simtime::{secs, to_secs, SimTime};
 
 pub(crate) struct PrefillWorker {
@@ -111,6 +111,12 @@ impl PrefillPool {
             metrics.prefill_computed_tokens += total_new as u64;
             metrics.prefill_jobs += 1;
             metrics.prefill_queue_delay.record(to_secs(now - unit.entry.job.issued_at));
+            // Per-compatibility-class split of the same hit/miss tokens
+            // (radix keys are class-scoped, so `matched` is always KV the
+            // job's own prefill module produced).
+            let class = unit.entry.job.class;
+            bump_class(&mut metrics.prefix_hit_tokens_by_class, class, matched as u64);
+            bump_class(&mut metrics.prefix_miss_tokens_by_class, class, total_new as u64);
         }
         metrics.prefill_chunks += 1;
 

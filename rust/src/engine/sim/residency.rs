@@ -46,6 +46,14 @@ use std::collections::BTreeMap;
 /// One session's retained KV on one decode worker.
 #[derive(Debug, Clone)]
 pub(crate) struct SessionEntry {
+    /// Prefill-module compatibility class of the model whose KV this
+    /// entry retains.  A later call of the session from a *different*
+    /// class can never be sized against it (paper §3: heterogeneous
+    /// models cannot consume each other's KV) — decode workers host one
+    /// model each, so a mismatch is unreachable today, but the ledger
+    /// enforces the boundary itself rather than inherit it from the
+    /// topology.
+    class: usize,
     /// Context tokens whose KV this worker still holds for the session
     /// (shared prefix + the signature's output runs).
     pub tokens: usize,
@@ -86,15 +94,33 @@ impl ResidencyLedger {
         ResidencyLedger::default()
     }
 
-    /// Size an incoming handoff for `sid` against the retained entry and
-    /// pin it until [`consume`](Self::consume).  `ctx_sig` is the new
-    /// call's context signature (ancestor-cut output runs, node order);
-    /// the reusable share is the shared prefix plus the longest common
-    /// run prefix of the two signatures.  Returns
+    /// Size an incoming handoff for `sid` (a call of prefill class
+    /// `class`) against the retained entry and pin it until
+    /// [`consume`](Self::consume).  `ctx_sig` is the new call's context
+    /// signature (ancestor-cut output runs, node order); the reusable
+    /// share is the shared prefix plus the longest common run prefix of
+    /// the two signatures.  Returns
     /// `(gpu_reuse_tokens, host_reload_tokens)` — exactly one of the two
     /// is nonzero when the worker retains the session, both zero when it
-    /// does not.
-    pub fn pin_for_handoff(&mut self, sid: usize, ctx_sig: &[(usize, usize)]) -> (usize, usize) {
+    /// does not.  An entry retained by a *different* class is unusable
+    /// KV: it is dropped on the spot and the handoff sized as a full
+    /// ship.
+    pub fn pin_for_handoff(
+        &mut self,
+        sid: usize,
+        class: usize,
+        ctx_sig: &[(usize, usize)],
+    ) -> (usize, usize) {
+        if let Some(e) = self.sessions.get(&sid) {
+            if e.class != class {
+                debug_assert!(!e.pinned, "class-mismatched entry cannot be in flight");
+                let e = self.sessions.remove(&sid).expect("entry just observed");
+                if !e.on_host {
+                    self.retained_gpu_tokens -= e.tokens;
+                }
+                return (0, 0);
+            }
+        }
         match self.sessions.get_mut(&sid) {
             None => (0, 0),
             Some(e) => {
@@ -147,10 +173,18 @@ impl ResidencyLedger {
         }
     }
 
-    /// Retain a finished request's KV: `tokens` = its full footprint,
-    /// `base` the shared-prefix share, `sig` the output runs (the call's
-    /// ancestor cut plus itself, node order).
-    pub fn retain(&mut self, sid: usize, tokens: usize, base: usize, sig: Vec<(usize, usize)>) {
+    /// Retain a finished request's KV: `class` = the finishing call's
+    /// prefill class, `tokens` = its full footprint, `base` the
+    /// shared-prefix share, `sig` the output runs (the call's ancestor
+    /// cut plus itself, node order).
+    pub fn retain(
+        &mut self,
+        sid: usize,
+        class: usize,
+        tokens: usize,
+        base: usize,
+        sig: Vec<(usize, usize)>,
+    ) {
         self.clock += 1;
         debug_assert!(
             !self.sessions.contains_key(&sid),
@@ -164,6 +198,7 @@ impl ResidencyLedger {
         self.sessions.insert(
             sid,
             SessionEntry {
+                class,
                 tokens,
                 base,
                 sig,
@@ -233,18 +268,18 @@ mod tests {
     #[test]
     fn retain_consume_roundtrip_tracks_gpu_share() {
         let mut l = ResidencyLedger::new();
-        l.retain(3, 1_000, 600, chain_sig(&[400]));
-        l.retain(5, 2_000, 600, chain_sig(&[900, 500]));
+        l.retain(3, 0, 1_000, 600, chain_sig(&[400]));
+        l.retain(5, 0, 2_000, 600, chain_sig(&[900, 500]));
         assert_eq!(l.retained_gpu_tokens, 3_000);
         assert_eq!(l.peak_retained, 3_000);
         // The next chain call's context extends the retained signature:
         // full reuse, exactly the pre-DAG accounting.
-        assert_eq!(l.pin_for_handoff(5, &chain_sig(&[900, 500, 300])), (2_000, 0));
+        assert_eq!(l.pin_for_handoff(5, 0, &chain_sig(&[900, 500, 300])), (2_000, 0));
         assert_eq!(l.consume(5), (2_000, 0));
         assert_eq!(l.retained_gpu_tokens, 1_000);
         assert_eq!(l.peak_retained, 3_000, "peak is a high-water mark");
         // Unknown sessions reuse nothing.
-        assert_eq!(l.pin_for_handoff(99, &chain_sig(&[8])), (0, 0));
+        assert_eq!(l.pin_for_handoff(99, 0, &chain_sig(&[8])), (0, 0));
         assert_eq!(l.consume(99), (0, 0));
     }
 
@@ -253,14 +288,14 @@ mod tests {
         let mut l = ResidencyLedger::new();
         // Worker retained a specialist's branch: base 600, then outputs of
         // node 0 (planner, 100) and node 2 (itself, 50).
-        l.retain(1, 750, 600, vec![(0, 100), (2, 50)]);
+        l.retain(1, 0, 750, 600, vec![(0, 100), (2, 50)]);
         // The session's next call on this worker sees the *joined*
         // context: node 0, then sibling node 1, then node 2...  The
         // retained KV matches only through the planner's output; the
         // (2, 50) run sits at a position the new context fills with
         // node 1's tokens.
         let next_ctx = vec![(0, 100), (1, 80), (2, 50), (3, 40)];
-        assert_eq!(l.pin_for_handoff(1, &next_ctx), (700, 0), "base + planner only");
+        assert_eq!(l.pin_for_handoff(1, 0, &next_ctx), (700, 0), "base + planner only");
         assert_eq!(l.consume(1), (700, 0));
         assert_eq!(l.retained_gpu_tokens, 0, "the whole entry is freed at consume");
         assert_eq!(l.entry_gpu_tokens(1), 0);
@@ -269,9 +304,9 @@ mod tests {
     #[test]
     fn entry_gpu_tokens_reports_whole_entry_not_reuse() {
         let mut l = ResidencyLedger::new();
-        l.retain(4, 750, 600, vec![(0, 100), (2, 50)]);
+        l.retain(4, 0, 750, 600, vec![(0, 100), (2, 50)]);
         assert_eq!(l.entry_gpu_tokens(4), 750);
-        l.pin_for_handoff(4, &[(0, 100), (1, 80)]);
+        l.pin_for_handoff(4, 0, &[(0, 100), (1, 80)]);
         assert_eq!(l.entry_gpu_tokens(4), 750, "occupancy is the full entry");
         assert_eq!(l.consume(4), (700, 0), "reuse is only the matching prefix");
     }
@@ -279,12 +314,12 @@ mod tests {
     #[test]
     fn lru_victim_is_oldest_unpinned_gpu_entry() {
         let mut l = ResidencyLedger::new();
-        l.retain(7, 100, 60, chain_sig(&[40])); // tick 1 — oldest
-        l.retain(2, 200, 60, chain_sig(&[140])); // tick 2
-        l.retain(9, 300, 60, chain_sig(&[240])); // tick 3
+        l.retain(7, 0, 100, 60, chain_sig(&[40])); // tick 1 — oldest
+        l.retain(2, 0, 200, 60, chain_sig(&[140])); // tick 2
+        l.retain(9, 0, 300, 60, chain_sig(&[240])); // tick 3
         assert_eq!(l.lru_victim(), Some((7, 100)));
         // Pinning shields the oldest; next-oldest becomes the victim.
-        l.pin_for_handoff(7, &chain_sig(&[40, 8]));
+        l.pin_for_handoff(7, 0, &chain_sig(&[40, 8]));
         assert_eq!(l.lru_victim(), Some((2, 200)));
         // Host-parked entries no longer occupy GPU and are not victims.
         assert_eq!(l.park_to_host(2), 200);
@@ -297,20 +332,42 @@ mod tests {
     #[test]
     fn host_park_survives_until_reloaded() {
         let mut l = ResidencyLedger::new();
-        l.retain(4, 500, 300, chain_sig(&[200]));
+        l.retain(4, 0, 500, 300, chain_sig(&[200]));
         l.park_to_host(4);
         assert_eq!(l.retained_gpu_tokens, 0);
         // The next call reloads from host rather than re-shipping.
-        assert_eq!(l.pin_for_handoff(4, &chain_sig(&[200, 90])), (0, 500));
+        assert_eq!(l.pin_for_handoff(4, 0, &chain_sig(&[200, 90])), (0, 500));
         assert_eq!(l.consume(4), (0, 500));
-        assert_eq!(l.pin_for_handoff(4, &chain_sig(&[200, 90])), (0, 0), "consumed");
+        assert_eq!(l.pin_for_handoff(4, 0, &chain_sig(&[200, 90])), (0, 0), "consumed");
+    }
+
+    #[test]
+    fn cross_class_retention_is_never_reused() {
+        let mut l = ResidencyLedger::new();
+        l.retain(6, 1, 1_000, 600, chain_sig(&[400]));
+        assert_eq!(l.retained_gpu_tokens, 1_000);
+        // Same session, same signature, different prefill class: the
+        // retained KV is unusable — zero reuse, and the stale entry is
+        // dropped rather than left occupying the pool.
+        assert_eq!(l.pin_for_handoff(6, 2, &chain_sig(&[400, 300])), (0, 0));
+        assert_eq!(l.retained_gpu_tokens, 0, "stale cross-class entry freed");
+        assert_eq!(l.consume(6), (0, 0));
+        // Host-parked entries obey the same boundary.
+        l.retain(8, 1, 500, 300, chain_sig(&[200]));
+        l.park_to_host(8);
+        assert_eq!(l.pin_for_handoff(8, 0, &chain_sig(&[200, 90])), (0, 0));
+        assert_eq!(l.pin_for_handoff(8, 1, &chain_sig(&[200, 90])), (0, 0), "already dropped");
+        // Matching class still reuses in full.
+        l.retain(9, 3, 700, 500, chain_sig(&[200]));
+        assert_eq!(l.pin_for_handoff(9, 3, &chain_sig(&[200, 50])), (700, 0));
+        assert_eq!(l.consume(9), (700, 0));
     }
 
     #[test]
     fn release_frees_both_placements() {
         let mut l = ResidencyLedger::new();
-        l.retain(1, 100, 60, chain_sig(&[40]));
-        l.retain(2, 200, 60, chain_sig(&[140]));
+        l.retain(1, 0, 100, 60, chain_sig(&[40]));
+        l.retain(2, 0, 200, 60, chain_sig(&[140]));
         l.park_to_host(1);
         l.release(1);
         l.release(2);

@@ -26,7 +26,8 @@ use prefillshare::engine::sched::SchedPolicy;
 use prefillshare::engine::sim::simulate;
 use prefillshare::util::cli::Args;
 use prefillshare::workload::{
-    generate_trace_with, workload_by_name, workload_names, ArrivalProcess, WorkloadSpec,
+    generate_trace_with, private_prefill_classes, workload_by_name, workload_names,
+    ArrivalProcess, WorkloadSpec,
 };
 
 fn main() -> Result<()> {
@@ -59,10 +60,11 @@ fn help_text() -> String {
     format!(
         "prefillshare {} — PrefillShare reproduction (see README.md, ARCHITECTURE.md)\n\n\
          USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload> [--options]\n\n\
-         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout [--seed N] [--out file.json]\n\
+         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout|prefillshare [--seed N] [--out file.json]\n\
          sim           [--system baseline|prefillshare] [--sched fifo|sjf|prefix-affinity|chunked]\n\
                        [--chunk-tokens N] [--route prefix-aware|round-robin|random|cache-aware|load-aware]\n\
                        [--link-gbps G] [--prefill-gpus a100,a10,...] [--n-prefill N]\n\
+                       [--prefill-classes shared|private|c0,c1,...]\n\
                        [--decode-reuse] [--workload {workloads}] [--rate R] [--duration S]\n\
                        [--arrivals poisson|mmpp] [--burst B] [--burst-dwell S]\n\
                        [--max-sessions N] [--seed N] [--out file.json]\n\
@@ -85,6 +87,38 @@ fn resolve_workload(name: &str) -> Result<WorkloadSpec> {
     workload_by_name(name).ok_or_else(|| {
         anyhow::anyhow!("unknown workload `{name}` — expected one of {{{}}}", workload_names())
     })
+}
+
+/// Parse `--prefill-classes`: `shared` (the default — one compatibility
+/// class spanning every model), `private` (one class per model, no
+/// cross-model KV reuse), or an explicit comma-separated model→class
+/// list (`0,0,1,1`) with one entry per model.  The returned map is
+/// applied to both the workload and the cluster config — the simulator
+/// rejects traces whose map disagrees with the cluster's.
+fn parse_prefill_classes(args: &Args, n_models: usize) -> Result<Vec<usize>> {
+    match args.get("prefill-classes") {
+        None | Some("shared") => Ok(Vec::new()),
+        Some("private") => Ok(private_prefill_classes(n_models)),
+        Some(list) => {
+            let classes: Vec<usize> = list
+                .split(',')
+                .map(|t| t.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| {
+                    anyhow::anyhow!(
+                        "--prefill-classes expects `shared`, `private` or a comma-separated \
+                         class id per model, got `{list}`"
+                    )
+                })?;
+            if classes.len() != n_models {
+                bail!(
+                    "--prefill-classes lists {} classes but the cluster hosts {n_models} models",
+                    classes.len()
+                );
+            }
+            Ok(classes)
+        }
+    }
 }
 
 /// Parse `--arrivals` (+ `--burst`, `--burst-dwell` for MMPP).
@@ -115,6 +149,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
         "routes" => sx::route_ablation_sweep(seed),
         "reuse" => sx::reuse_ablation(seed),
         "fanout" => sx::fanout_experiment(seed),
+        "prefillshare" => sx::prefillshare_experiment(seed),
         other => bail!("unknown serving experiment `{other}`"),
     };
     let x_name = rows.first().map(|r| r.x_name.clone()).unwrap_or_default();
@@ -204,6 +239,10 @@ fn cmd_sim(args: &Args) -> Result<()> {
     // Decode-side session KV residency with delta handoff.
     cfg.decode_reuse = args.bool_flag("decode-reuse");
     cfg.seed = seed;
+    // Prefill-module compatibility classes, applied to workload + cluster.
+    let classes = parse_prefill_classes(args, cfg.n_models)?;
+    cfg.prefill_classes = classes.clone();
+    let wl = wl.with_prefill_classes(classes);
 
     let trace = generate_trace_with(&wl, rate, duration, seed, &arrivals);
     let n_sessions = trace.sessions.len();
@@ -213,13 +252,17 @@ fn cmd_sim(args: &Args) -> Result<()> {
         String::new()
     };
     let reuse = if cfg.decode_reuse { " / decode-reuse" } else { "" };
+    let classes_tag = match args.get("prefill-classes") {
+        None | Some("shared") => String::new(),
+        Some(v) => format!(" / classes={v}"),
+    };
     let bursty = match arrivals {
         ArrivalProcess::Poisson => String::new(),
         ArrivalProcess::Mmpp { burst, dwell_s } => format!(" / mmpp(x{burst},{dwell_s}s)"),
     };
     let result = simulate(cfg, trace);
     println!(
-        "== sim: {} / sched={} / route={}{link}{reuse} / {wl_name}{bursty} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
+        "== sim: {} / sched={} / route={}{link}{reuse}{classes_tag} / {wl_name}{bursty} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
         system.label(),
         sched.label(),
         routing.label(),
@@ -362,6 +405,26 @@ mod tests {
             );
         }
         assert!(resolve_workload("nope").unwrap_err().to_string().contains(&names));
+    }
+
+    #[test]
+    fn prefill_classes_flag_parses_and_rejects_junk() {
+        let parse = |s: &str| Args::parse(s.split_whitespace().map(String::from));
+        assert_eq!(parse_prefill_classes(&parse("sim"), 4).unwrap(), Vec::<usize>::new());
+        assert_eq!(
+            parse_prefill_classes(&parse("sim --prefill-classes shared"), 4).unwrap(),
+            Vec::<usize>::new()
+        );
+        assert_eq!(
+            parse_prefill_classes(&parse("sim --prefill-classes private"), 4).unwrap(),
+            vec![0, 1, 2, 3]
+        );
+        assert_eq!(
+            parse_prefill_classes(&parse("sim --prefill-classes 0,0,1,1"), 4).unwrap(),
+            vec![0, 0, 1, 1]
+        );
+        assert!(parse_prefill_classes(&parse("sim --prefill-classes 0,1"), 4).is_err());
+        assert!(parse_prefill_classes(&parse("sim --prefill-classes zero,one"), 2).is_err());
     }
 
     #[test]

@@ -209,6 +209,16 @@ pub struct ServingMetrics {
     /// session (prefill, handoff or decode).  1 for chain workloads; > 1
     /// proves sibling fan-out overlapped.
     pub peak_session_inflight: u64,
+    /// Per-prefill-class reuse accounting (index = compatibility class;
+    /// vectors grow on demand and each sums to its global counterpart).
+    /// Under the default single-class map every token lands in class 0;
+    /// under a private map these expose which prefill module earned the
+    /// hits, shipped the handoffs, and served the residency reuse.
+    pub prefix_hit_tokens_by_class: Vec<u64>,
+    pub prefix_miss_tokens_by_class: Vec<u64>,
+    pub handoff_tokens_by_class: Vec<u64>,
+    pub decode_reuse_tokens_by_class: Vec<u64>,
+    pub host_reload_tokens_by_class: Vec<u64>,
 }
 
 /// Record `v` into the position-indexed histogram family, growing it to
@@ -218,6 +228,15 @@ pub fn record_position(slots: &mut Vec<Histogram>, idx: usize, v: f64) {
         slots.resize_with(idx + 1, Histogram::default);
     }
     slots[idx].record(v);
+}
+
+/// Add `tokens` to the class-indexed counter family, growing it to cover
+/// `class` (classes are small dense ids; see `ClusterConfig::prefill_classes`).
+pub fn bump_class(slots: &mut Vec<u64>, class: usize, tokens: u64) {
+    if slots.len() <= class {
+        slots.resize(class + 1, 0);
+    }
+    slots[class] += tokens;
 }
 
 impl ServingMetrics {
@@ -358,5 +377,18 @@ mod tests {
         m.prefix_hit_tokens = 60;
         m.prefix_miss_tokens = 40;
         assert!((m.prefix_hit_ratio() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_counters_grow_on_demand_and_compare() {
+        let mut a = ServingMetrics::default();
+        let mut b = ServingMetrics::default();
+        bump_class(&mut a.prefix_hit_tokens_by_class, 2, 50);
+        bump_class(&mut a.prefix_hit_tokens_by_class, 0, 10);
+        assert_eq!(a.prefix_hit_tokens_by_class, vec![10, 0, 50]);
+        assert_ne!(a, b);
+        bump_class(&mut b.prefix_hit_tokens_by_class, 0, 10);
+        bump_class(&mut b.prefix_hit_tokens_by_class, 2, 50);
+        assert_eq!(a, b);
     }
 }

@@ -78,6 +78,32 @@ pub struct WorkloadSpec {
     /// Weighted per-session variants.  Empty = every session uses
     /// `(agents, turns)`; non-empty = each session draws one variant.
     pub variants: Vec<WorkloadVariant>,
+    /// Model → prefill-module compatibility class (paper §3: only models
+    /// sharing a frozen prefill module can consume each other's KV).
+    /// Indexed by model id; models beyond the map's length — and every
+    /// model when the map is empty, the default — fall into class 0, i.e.
+    /// one PrefillShare-style shared prefill module across all models.
+    pub prefill_classes: Vec<usize>,
+}
+
+impl WorkloadSpec {
+    /// Compatibility class of `model` (class 0 when unmapped).
+    pub fn prefill_class_of(&self, model: usize) -> usize {
+        self.prefill_classes.get(model).copied().unwrap_or(0)
+    }
+
+    /// Builder: assign the model → class map (used by the `prefillshare`
+    /// experiment and `--prefill-classes`).
+    pub fn with_prefill_classes(mut self, classes: Vec<usize>) -> WorkloadSpec {
+        self.prefill_classes = classes;
+        self
+    }
+}
+
+/// The per-model-private class map for `n_models` models: model `i` gets
+/// its own class `i` — no two models may share prefill KV.
+pub fn private_prefill_classes(n_models: usize) -> Vec<usize> {
+    (0..n_models).collect()
 }
 
 fn chain_agent(
@@ -110,6 +136,7 @@ pub fn react() -> WorkloadSpec {
         ],
         turns: 3,
         variants: Vec::new(),
+        prefill_classes: Vec::new(),
     }
 }
 
@@ -129,6 +156,7 @@ pub fn reflexion() -> WorkloadSpec {
         ],
         turns: 3,
         variants: Vec::new(),
+        prefill_classes: Vec::new(),
     }
 }
 
@@ -162,6 +190,7 @@ pub fn fanout() -> WorkloadSpec {
         agents: fanout_agents(),
         turns: 3,
         variants: Vec::new(),
+        prefill_classes: Vec::new(),
     }
 }
 
@@ -207,6 +236,7 @@ pub fn debate() -> WorkloadSpec {
         ],
         turns: 3,
         variants: Vec::new(),
+        prefill_classes: Vec::new(),
     }
 }
 
@@ -226,6 +256,7 @@ pub fn mixed() -> WorkloadSpec {
             WorkloadVariant { weight: 0.5, agents: react().agents, turns: 3 },
             WorkloadVariant { weight: 0.5, agents: fanout_agents(), turns: 3 },
         ],
+        prefill_classes: Vec::new(),
     }
 }
 
@@ -253,6 +284,11 @@ pub fn workload_names() -> String {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CallNode {
     pub model: usize,
+    /// Prefill-module compatibility class of `model` (stamped from
+    /// [`WorkloadSpec::prefill_classes`] at generation): KV reuse —
+    /// radix hits, routing affinity, residency deltas — never crosses a
+    /// class boundary.
+    pub prefill_class: usize,
     pub out_tokens: usize,
     /// Absolute indices of this node's parents within
     /// [`SessionScript::calls`] (all `< ` this node's own index, so the
@@ -376,12 +412,23 @@ pub enum ArrivalProcess {
     Mmpp { burst: f64, dwell_s: f64 },
 }
 
-/// Flatten `(template, turns)` into absolute-index parent lists: each
+/// One flattened call slot of a `(template, turns)` session: which
+/// template agent it instantiates and its absolute-index parents.
+struct FlatCall {
+    /// Index into the template's agent list (node `i`'s agent — the
+    /// single source for per-call model identity; `validate_template`
+    /// and `generate_trace_with` both read it, so a future per-turn
+    /// reordering cannot desynchronize the two).
+    agent: usize,
+    parents: Vec<usize>,
+}
+
+/// Flatten `(template, turns)` into absolute-index call slots: each
 /// turn instantiates the template's intra-turn edges, and every turn
 /// root (a template node with no intra-turn parents) depends on the
 /// previous turn's sinks (template nodes nothing in the turn depends
 /// on).
-fn flatten_parents(agents: &[AgentSpec], turns: usize) -> Vec<Vec<usize>> {
+fn flatten_template(agents: &[AgentSpec], turns: usize) -> Vec<FlatCall> {
     let mut is_parent = vec![false; agents.len()];
     for a in agents {
         for &p in &a.parents {
@@ -390,11 +437,11 @@ fn flatten_parents(agents: &[AgentSpec], turns: usize) -> Vec<Vec<usize>> {
     }
     let sinks: Vec<usize> = (0..agents.len()).filter(|&j| !is_parent[j]).collect();
 
-    let mut parents = Vec::with_capacity(agents.len() * turns);
+    let mut flat = Vec::with_capacity(agents.len() * turns);
     for turn in 0..turns {
         let base = turn * agents.len();
-        for a in agents.iter() {
-            parents.push(if a.parents.is_empty() {
+        for (j, a) in agents.iter().enumerate() {
+            let parents = if a.parents.is_empty() {
                 if turn == 0 {
                     Vec::new()
                 } else {
@@ -402,10 +449,11 @@ fn flatten_parents(agents: &[AgentSpec], turns: usize) -> Vec<Vec<usize>> {
                 }
             } else {
                 a.parents.iter().map(|&p| base + p).collect()
-            });
+            };
+            flat.push(FlatCall { agent: j, parents });
         }
     }
-    parents
+    flat
 }
 
 /// Template sanity: parents topological, and no two *concurrent* nodes
@@ -428,12 +476,12 @@ fn validate_template(name: &str, agents: &[AgentSpec], turns: usize) {
             assert!(p < j, "workload `{name}`: node {j} lists parent {p} >= itself");
         }
     }
-    let parents = flatten_parents(agents, turns);
-    let n = parents.len();
+    let flat = flatten_template(agents, turns);
+    let n = flat.len();
     let mut anc = vec![vec![false; n]; n];
     for i in 0..n {
         for p in 0..n {
-            if parents[i].contains(&p) {
+            if flat[i].parents.contains(&p) {
                 anc[i][p] = true;
                 for q in 0..n {
                     if anc[p][q] {
@@ -445,8 +493,7 @@ fn validate_template(name: &str, agents: &[AgentSpec], turns: usize) {
     }
     for i in 0..n {
         for j in (i + 1)..n {
-            let (mi, mj) =
-                (agents[i % agents.len()].model, agents[j % agents.len()].model);
+            let (mi, mj) = (agents[flat[i].agent].model, agents[flat[j].agent].model);
             assert!(
                 mi != mj || anc[j][i],
                 "workload `{name}`: calls {i} and {j} both target model {mi} but are \
@@ -460,6 +507,7 @@ fn validate_template(name: &str, agents: &[AgentSpec], turns: usize) {
 /// Draw a variant index proportionally to weight (one `f64` draw).
 fn pick_variant(spec: &WorkloadSpec, srng: &mut Rng) -> usize {
     let total: f64 = spec.variants.iter().map(|v| v.weight).sum();
+    assert!(total > 0.0, "workload `{}`: variant weights must sum to > 0", spec.name);
     let mut u = srng.f64() * total;
     for (i, v) in spec.variants.iter().enumerate() {
         if u < v.weight {
@@ -467,7 +515,13 @@ fn pick_variant(spec: &WorkloadSpec, srng: &mut Rng) -> usize {
         }
         u -= v.weight;
     }
-    spec.variants.len() - 1
+    // Cumulative f64 subtraction can drift `u` past every bucket; the
+    // fallback must still land on a drawable variant, never a
+    // zero-weight one that happens to sit last.
+    spec.variants
+        .iter()
+        .rposition(|v| v.weight > 0.0)
+        .expect("total > 0 implies a positive-weight variant")
 }
 
 /// Sample a trace: Poisson arrivals at `rate_per_s` over `duration_s`
@@ -493,10 +547,15 @@ pub fn generate_trace_with(
     for v in &spec.variants {
         validate_template(spec.name, &v.agents, v.turns);
     }
-    // Flattened parent lists are per-template, not per-session.
-    let base_parents = flatten_parents(&spec.agents, spec.turns);
-    let variant_parents: Vec<Vec<Vec<usize>>> =
-        spec.variants.iter().map(|v| flatten_parents(&v.agents, v.turns)).collect();
+    // `simtokens::private` packs the class into bits 49.. — beyond that
+    // the id space wraps, so refuse absurd class maps loudly.
+    for &c in &spec.prefill_classes {
+        assert!(c < 1 << 15, "workload `{}`: prefill class {c} exceeds packing limit", spec.name);
+    }
+    // Flattened call slots are per-template, not per-session.
+    let base_flat = flatten_template(&spec.agents, spec.turns);
+    let variant_flat: Vec<Vec<FlatCall>> =
+        spec.variants.iter().map(|v| flatten_template(&v.agents, v.turns)).collect();
 
     let mut rng = Rng::new(seed ^ 0x5e551_0ad);
     // MMPP state: start quiet; dwell means chosen so the long-run mean
@@ -546,26 +605,24 @@ pub fn generate_trace_with(
         // (2^20 sessions), but fail loudly rather than corrupt silently.
         assert!(id < 1 << 20, "trace exceeds the session-id packing limit of simtokens");
         let mut srng = rng.fork(id);
-        let (agents, turns, parents): (&[AgentSpec], usize, &[Vec<usize>]) =
-            if spec.variants.is_empty() {
-                (&spec.agents, spec.turns, &base_parents)
-            } else {
-                let vi = pick_variant(spec, &mut srng);
-                let v = &spec.variants[vi];
-                (&v.agents, v.turns, &variant_parents[vi])
-            };
+        let (agents, flat): (&[AgentSpec], &[FlatCall]) = if spec.variants.is_empty() {
+            (&spec.agents, &base_flat)
+        } else {
+            let vi = pick_variant(spec, &mut srng);
+            (&spec.variants[vi].agents, &variant_flat[vi])
+        };
         let init = srng.lognormal_mean_cv(spec.init_prompt_mean, spec.init_prompt_cv).round() as usize;
         let init = init.clamp(16, 4096);
-        let mut calls = Vec::with_capacity(turns * agents.len());
-        for turn in 0..turns {
-            for (j, a) in agents.iter().enumerate() {
-                let out = srng.lognormal_mean_cv(a.mean_out_tokens, a.cv).round() as usize;
-                calls.push(CallNode {
-                    model: a.model,
-                    out_tokens: out.clamp(8, 1024),
-                    parents: parents[turn * agents.len() + j].clone(),
-                });
-            }
+        let mut calls = Vec::with_capacity(flat.len());
+        for fc in flat {
+            let a = &agents[fc.agent];
+            let out = srng.lognormal_mean_cv(a.mean_out_tokens, a.cv).round() as usize;
+            calls.push(CallNode {
+                model: a.model,
+                prefill_class: spec.prefill_class_of(a.model),
+                out_tokens: out.clamp(8, 1024),
+                parents: fc.parents.clone(),
+            });
         }
         sessions.push(SessionScript { id, arrival: secs(t), init_prompt_tokens: init, calls });
         id += 1;
@@ -575,41 +632,57 @@ pub fn generate_trace_with(
 
 /// Synthetic token ids for the simulator's radix keys.
 ///
-/// The shared system prompt maps to globally identical ids (so *every*
-/// session radix-hits it).  Session-private content is addressed by
-/// **segment**: segment 0 is the session's init prompt and segment
-/// `j + 1` is node `j`'s decode output, so two DAG nodes of one session
-/// share a key prefix exactly as far as their ancestor cuts agree —
-/// sibling fan-out nodes (identical cuts) share everything, divergent
-/// branches share only up to the first differing ancestor.  Cross-session
-/// collisions are impossible (the sid is packed into every private id;
-/// packing limits: sid < 2^20, segment < 2^12, position < 2^16 — all far
-/// above what any registry workload generates).
+/// The shared system prompt maps to identical ids *within a prefill
+/// compatibility class* (so every same-class session radix-hits it).
+/// Session-private content is addressed by **segment**: segment 0 is
+/// the session's init prompt and segment `j + 1` is node `j`'s decode
+/// output, so two DAG nodes of one session share a key prefix exactly
+/// as far as their ancestor cuts agree — sibling fan-out nodes
+/// (identical cuts) share everything, divergent branches share only up
+/// to the first differing ancestor.
+///
+/// The compatibility class is folded into every id, with **class 0 as
+/// the identity encoding** — a single shared class produces bit-for-bit
+/// the pre-class token stream, which is why the four pre-class golden
+/// fixtures stay byte-unchanged.  Two keys from different classes share
+/// a zero-length prefix (their very first system token differs), so
+/// radix matching and cache-aware prefix scoring are class-sound with
+/// no extra checks anywhere downstream.
+///
+/// Cross-session collisions are impossible (the sid is packed into
+/// every private id; packing limits: sid < 2^20, segment < 2^12,
+/// position < 2^16, class < 2^15 — all far above what any registry
+/// workload generates).
 pub mod simtokens {
-    /// System-prompt token at position `i`.
-    pub fn sys(i: usize) -> u64 {
-        1 + i as u64
+    /// System-prompt token at position `i`, as seen by prefill class
+    /// `class` (class 0 encodes to the bare `1 + i`).
+    pub fn sys(class: usize, i: usize) -> u64 {
+        ((class as u64) << 32) | (1 + i as u64)
     }
 
     /// Session-private token: position `i` of segment `seg` of session
-    /// `sid`'s own content (segment 0 = init prompt, `j + 1` = node `j`'s
-    /// output).
-    pub fn private(sid: u64, seg: usize, i: usize) -> u64 {
-        (1u64 << 48) | (sid << 28) | ((seg as u64 & 0xFFF) << 16) | (i as u64 & 0xFFFF)
+    /// `sid`'s own content (segment 0 = init prompt, `j + 1` = node
+    /// `j`'s output), scoped to prefill class `class`.
+    pub fn private(class: usize, sid: u64, seg: usize, i: usize) -> u64 {
+        (1u64 << 48)
+            | ((class as u64) << 49)
+            | (sid << 28)
+            | ((seg as u64 & 0xFFF) << 16)
+            | (i as u64 & 0xFFFF)
     }
 
     /// Build the radix key for a node's input context: the shared system
     /// prompt, then the private `(segment, length)` runs in ancestor-cut
-    /// order.
-    pub fn context_key(sid: u64, sys_len: usize, segs: &[(usize, usize)]) -> Vec<u64> {
+    /// order — all scoped to the node's prefill class.
+    pub fn context_key(class: usize, sid: u64, sys_len: usize, segs: &[(usize, usize)]) -> Vec<u64> {
         let private_len: usize = segs.iter().map(|&(_, l)| l).sum();
         let mut v = Vec::with_capacity(sys_len + private_len);
         for i in 0..sys_len {
-            v.push(sys(i));
+            v.push(sys(class, i));
         }
         for &(seg, len) in segs {
             for i in 0..len {
-                v.push(private(sid, seg, i));
+                v.push(private(class, sid, seg, i));
             }
         }
         v
@@ -783,8 +856,8 @@ mod tests {
 
     #[test]
     fn sim_tokens_share_sys_prefix_only() {
-        let a = simtokens::context_key(1, 8, &[(0, 4)]);
-        let b = simtokens::context_key(2, 8, &[(0, 4)]);
+        let a = simtokens::context_key(0, 1, 8, &[(0, 4)]);
+        let b = simtokens::context_key(0, 2, 8, &[(0, 4)]);
         assert_eq!(&a[..8], &b[..8], "system prompt shared");
         assert_ne!(&a[8..], &b[8..], "private content distinct");
     }
@@ -792,13 +865,86 @@ mod tests {
     #[test]
     fn sim_tokens_diverge_at_the_first_differing_segment() {
         // Sibling cuts {planner} vs {planner}: identical keys.
-        let s1 = simtokens::context_key(7, 4, &[(0, 8), (1, 3)]);
-        let s2 = simtokens::context_key(7, 4, &[(0, 8), (1, 3)]);
+        let s1 = simtokens::context_key(0, 7, 4, &[(0, 8), (1, 3)]);
+        let s2 = simtokens::context_key(0, 7, 4, &[(0, 8), (1, 3)]);
         assert_eq!(s1, s2);
         // Divergent cuts {0,2} vs {0,3}: share init + segment 1, then split.
-        let a = simtokens::context_key(7, 4, &[(0, 8), (1, 3), (3, 2)]);
-        let b = simtokens::context_key(7, 4, &[(0, 8), (1, 3), (4, 2)]);
+        let a = simtokens::context_key(0, 7, 4, &[(0, 8), (1, 3), (3, 2)]);
+        let b = simtokens::context_key(0, 7, 4, &[(0, 8), (1, 3), (4, 2)]);
         assert_eq!(&a[..15], &b[..15], "shared up to the common cut");
         assert_ne!(a[15], b[15], "first token after the cut differs");
+    }
+
+    #[test]
+    fn sim_tokens_share_nothing_across_classes() {
+        // Identical context, different prefill class: the keys must
+        // share a zero-length prefix — the very first system token
+        // differs — so no radix node is common between classes.
+        let a = simtokens::context_key(0, 7, 4, &[(0, 8)]);
+        let b = simtokens::context_key(1, 7, 4, &[(0, 8)]);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_ne!(x, y, "token {i} collides across classes");
+        }
+        // And class 0 is the identity encoding: bit-for-bit the
+        // pre-class token stream (this is what keeps the four original
+        // golden fixtures byte-unchanged).
+        assert_eq!(simtokens::sys(0, 3), 4);
+        assert_eq!(simtokens::private(0, 7, 2, 5), (1u64 << 48) | (7 << 28) | (2 << 16) | 5);
+    }
+
+    #[test]
+    fn class_map_stamps_calls_and_defaults_to_shared() {
+        let shared = generate_trace(&fanout(), 1.0, 20.0, 2);
+        for s in &shared.sessions {
+            assert!(s.calls.iter().all(|c| c.prefill_class == 0), "default is one shared class");
+        }
+        let spec = fanout().with_prefill_classes(private_prefill_classes(NUM_AGENTS));
+        let t = generate_trace(&spec, 1.0, 20.0, 2);
+        for s in &t.sessions {
+            for c in &s.calls {
+                assert_eq!(c.prefill_class, c.model, "private map is model-identity");
+            }
+        }
+        // Same seed => same structure and lengths; only the class stamp
+        // differs (the class map must not consume RNG draws).
+        for (a, b) in shared.sessions.iter().zip(&t.sessions) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.init_prompt_tokens, b.init_prompt_tokens);
+            for (x, y) in a.calls.iter().zip(&b.calls) {
+                assert_eq!((x.model, x.out_tokens, &x.parents), (y.model, y.out_tokens, &y.parents));
+            }
+        }
+    }
+
+    #[test]
+    fn pick_variant_fallback_skips_zero_weight_variants() {
+        // A trailing zero-weight variant must never be drawn — not even
+        // via the f64-drift fallback path.  Every session of this blend
+        // must therefore be a react chain (12 calls), never a fanout
+        // tree (15 calls).
+        let mut spec = mixed();
+        spec.variants = vec![
+            WorkloadVariant { weight: 1.0, agents: react().agents, turns: 3 },
+            WorkloadVariant { weight: 0.0, agents: fanout_agents(), turns: 3 },
+        ];
+        for seed in 0..20 {
+            let t = generate_trace(&spec, 4.0, 30.0, seed);
+            assert!(!t.sessions.is_empty());
+            for s in &t.sessions {
+                assert!(s.is_chain(), "zero-weight variant was drawn (seed {seed})");
+                assert_eq!(s.calls.len(), 12);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "variant weights must sum to > 0")]
+    fn all_zero_variant_weights_are_rejected() {
+        let mut spec = mixed();
+        for v in &mut spec.variants {
+            v.weight = 0.0;
+        }
+        generate_trace(&spec, 1.0, 10.0, 0);
     }
 }

@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """Reference generator for `golden_fifo.json`, `golden_routes.json`,
-`golden_reuse.json` and `golden_fanout.json`.
+`golden_reuse.json`, `golden_fanout.json` and `golden_prefillshare.json`.
 
 A line-by-line Python port of the rust cluster simulator's FIFO path
 (`engine/sim/` + `engine/sched/fifo.rs`), the DAG workload generator
@@ -33,6 +33,16 @@ golden_fanout.json — **DAG-structured sessions with parallel fan-out**:
   only — a divergent DAG branch reuses nothing past the branch point).
   For chains the signature is always a full prefix, reproducing the
   pre-DAG reuse fixtures bit-for-bit.
+
+golden_prefillshare.json pins the **prefill-module compatibility
+classes** (`workload.rs` class map + class-scoped `simtokens` ids): every
+token id is scoped to its call's class, so keys of different classes
+share no prefix and no KV-reuse surface — radix matching, cache-aware
+probing, decode-side residency — can ever match across a module
+boundary.  Class 0 is the identity encoding (`(0 << 32) | id == id`), so
+the default single-shared-class map reproduces the four pre-class
+fixtures byte-for-byte; the fixture's per-model *private* map scenarios
+pin per-class counter splits and per-class byte conservation.
 
 Decode-tier semantics shared with the rust side (see
 `engine/sim/decode_pool.rs`):
@@ -191,7 +201,38 @@ MIXED = {
     "variants": [(0.5, REACT_AGENTS, 3), (0.5, FANOUT_AGENTS, 3)],
 }
 
-WORKLOADS = {"react": REACT, "fanout": FANOUT, "mixed": MIXED}
+# workload.rs::debate — 3 parallel proposers per round, then a judge.
+DEBATE_AGENTS = [
+    (0, 128.0, 0.35, []),
+    (1, 128.0, 0.35, []),
+    (2, 128.0, 0.35, []),
+    (3, 96.0, 0.3, [0, 1, 2]),
+]
+
+DEBATE = {
+    "name": "debate",
+    "sys_prompt_tokens": 200,
+    "init_prompt_mean": 1280.0,
+    "init_prompt_cv": 0.25,
+    "agents": DEBATE_AGENTS,
+    "turns": 3,
+    "variants": [],
+}
+
+WORKLOADS = {"react": REACT, "fanout": FANOUT, "mixed": MIXED, "debate": DEBATE}
+
+
+def class_of(spec, model):
+    """workload.rs::WorkloadSpec::prefill_class_of — missing entries (and
+    the empty default map) mean class 0, the identity encoding."""
+    classes = spec.get("prefill_classes", [])
+    return classes[model] if model < len(classes) else 0
+
+
+def with_classes(spec, classes):
+    s = dict(spec)
+    s["prefill_classes"] = list(classes)
+    return s
 
 
 def flatten_parents(agents, turns):
@@ -226,8 +267,12 @@ def generate_trace(spec, rate_per_s, duration_s, seed):
         srng = rng.fork(sid)
         if spec["variants"]:
             total = sum(w for (w, _a, _t) in spec["variants"])
+            # workload.rs::pick_variant — the f64-rounding fallback must
+            # land on the last *positive-weight* variant, never a
+            # zero-weight one; all-zero weights are rejected outright.
+            assert total > 0.0, f"workload {spec['name']}: variant weights must sum to > 0"
             u = srng.f64() * total
-            vi = len(spec["variants"]) - 1
+            vi = max(i for i, (w, _a, _t) in enumerate(spec["variants"]) if w > 0.0)
             for i, (w, _a, _t) in enumerate(spec["variants"]):
                 if u < w:
                     vi = i
@@ -241,18 +286,31 @@ def generate_trace(spec, rate_per_s, duration_s, seed):
         for turn in range(turns):
             for j, (model, mean_out, cv, _ps) in enumerate(agents):
                 out = clamp(int(rust_round(srng.lognormal_mean_cv(mean_out, cv))), 8, 1024)
-                calls.append({"model": model, "out": out, "parents": parents[turn * len(agents) + j]})
+                # The class map consumes no RNG draws: same seed + a
+                # different map yields an identical session structure.
+                calls.append({
+                    "model": model,
+                    "cls": class_of(spec, model),
+                    "out": out,
+                    "parents": parents[turn * len(agents) + j],
+                })
         sessions.append({"id": sid, "arrival": secs(t), "init": init, "calls": calls})
         sid += 1
     return sessions
 
 
-def context_key(sid, sys_len, segs):
-    """workload.rs::simtokens — segment-addressed private ids (segment 0 =
-    init prompt, j + 1 = node j's output)."""
-    key = [1 + i for i in range(sys_len)]
+def context_key(cls, sid, sys_len, segs):
+    """workload.rs::simtokens — class-scoped, segment-addressed token ids
+    (segment 0 = init prompt, j + 1 = node j's output).  Class 0 is the
+    identity encoding — `(0 << 32) | (1 + i) == 1 + i` — so single-class
+    keys are bit-identical to the pre-class fixtures; distinct classes
+    share no token id, hence no radix prefix."""
+    key = [(cls << 32) | (1 + i) for i in range(sys_len)]
     for (seg, ln) in segs:
-        key += [(1 << 48) | (sid << 28) | ((seg & 0xFFF) << 16) | (i & 0xFFFF) for i in range(ln)]
+        key += [
+            (1 << 48) | (cls << 49) | (sid << 28) | ((seg & 0xFFF) << 16) | (i & 0xFFFF)
+            for i in range(ln)
+        ]
     return key
 
 
@@ -329,6 +387,9 @@ def cluster_config(
         "prefill_kv_tokens": int(usable * 0.30 / KV_BYTES_PER_TOKEN),
         "decode_kv_tokens": int(usable * 0.20 / KV_BYTES_PER_TOKEN),
         "sys_prompt_tokens": spec["sys_prompt_tokens"],
+        # Prefill-module compatibility classes (model -> class); empty =
+        # one shared class 0 (the pre-class behaviour the goldens pin).
+        "prefill_classes": spec.get("prefill_classes", []),
     }
 
 
@@ -570,16 +631,17 @@ def swap_remove(lst, i):
 
 class DecodeReq:
     __slots__ = (
-        "sid", "call_idx", "depth", "ctx_len", "out_tokens", "generated", "issued_at",
+        "sid", "call_idx", "cls", "depth", "ctx_len", "out_tokens", "generated", "issued_at",
         "arrived_at", "ttft_recorded", "was_deferred",
         "shipped_tokens", "reuse_tokens", "host_tokens", "base", "sig", "is_sink",
     )
 
     def __init__(self, sid, call_idx, depth, ctx_len, out_tokens, issued_at,
                  shipped_tokens=None, reuse_tokens=0, host_tokens=0,
-                 base=0, sig=(), is_sink=False):
+                 base=0, sig=(), is_sink=False, cls=0):
         self.sid = sid
         self.call_idx = call_idx
+        self.cls = cls
         self.depth = depth
         self.ctx_len = ctx_len
         self.out_tokens = out_tokens
@@ -715,6 +777,17 @@ class Simulator:
             "generated_tokens": 0,
             "peak_session_inflight": 0,
         }
+        # Per-prefill-class splits (metrics.rs `*_by_class`, grow-on-demand
+        # via bump_class); each list sums to its scalar counterpart.  Kept
+        # out of `self.m` so the pre-class fixtures' counter schema (and
+        # bytes) stays untouched — only golden_prefillshare.json pins them.
+        self.by_class = {
+            "prefix_hit_tokens": [],
+            "prefix_miss_tokens": [],
+            "handoff_tokens": [],
+            "decode_reuse_tokens": [],
+            "host_reload_tokens": [],
+        }
         self.session_latency = Histogram()
         self.ttft = Histogram()
         self.request_latency = Histogram()
@@ -778,11 +851,17 @@ class Simulator:
             if not c["parents"]:
                 self.issue_node(sid, i)
 
+    def bump_class(self, key, cls, tokens):
+        slots = self.by_class[key]
+        while len(slots) <= cls:
+            slots.append(0)
+        slots[cls] += tokens
+
     def node_key(self, sid, node):
         s = self.trace[sid]
         meta = self.meta[sid][node]
         segs = [(0, s["init"])] + [(a + 1, s["calls"][a]["out"]) for a in meta["anc"]]
-        return context_key(sid, self.cfg["sys_prompt_tokens"], segs)
+        return context_key(s["calls"][node]["cls"], sid, self.cfg["sys_prompt_tokens"], segs)
 
     def issue_node(self, sid, node):
         st = self.sessions[sid]
@@ -793,6 +872,7 @@ class Simulator:
             "sid": sid,
             "call_idx": node,
             "model": self.trace[sid]["calls"][node]["model"],
+            "cls": self.trace[sid]["calls"][node]["cls"],
             "ctx_len": meta["ctx"],
             "issued_at": self.now,
             "key": self.node_key(sid, node),
@@ -824,16 +904,18 @@ class Simulator:
         if pol == "cache":
             scores = [pw["radix"].peek_prefix(job["key"]) for pw in self.prefill]
             best = max(scores)
+            # Class-affinity home (route/*.rs): sessions of different
+            # compatibility classes get different tie-break homes, so
+            # same-class traffic clusters where its warm prefixes live.
+            home = (job["sid"] + job["cls"]) % n
             if best * 2 < job["ctx_len"]:
                 # Weak match (shared sys prefix only): least-loaded
-                # placement; ties prefer the session's home worker.
+                # placement; ties prefer the session's class home.
                 outs = [self.outstanding(i) for i in range(n)]
                 m = min(outs)
-                home = job["sid"] % n
                 if outs[home] == m:
                     return home
                 return outs.index(m)
-            home = job["sid"] % n
             if scores[home] == best:
                 return home
             pick = None
@@ -843,7 +925,7 @@ class Simulator:
                 if pick is None or self.outstanding(i) < self.outstanding(pick):
                     pick = i
             return pick
-        return job["sid"] % n  # prefix-aware session pinning
+        return (job["sid"] + job["cls"]) % n  # prefix-aware class-home pinning
 
     # -- prefill ----------------------------------------------------------
 
@@ -856,6 +938,8 @@ class Simulator:
         new_tokens = job["ctx_len"] - matched
         self.m["prefix_hit_tokens"] += matched
         self.m["prefix_miss_tokens"] += new_tokens
+        self.bump_class("prefix_hit_tokens", job["cls"], matched)
+        self.bump_class("prefix_miss_tokens", job["cls"], new_tokens)
         self.m["prefill_computed_tokens"] += new_tokens
         self.m["prefill_jobs"] += 1
         self.queue_delay.record(to_secs(self.now - job["issued_at"]))
@@ -886,6 +970,14 @@ class Simulator:
             base = self.cfg["sys_prompt_tokens"] + self.trace[sid]["init"]
             sig = [(a, self.trace[sid]["calls"][a]["out"]) for a in meta["anc"]]
             e = self.decode[model]["residency"].get(sid)
+            if e is not None and e["cls"] != call["cls"]:
+                # residency.rs class boundary: KV retained under another
+                # prefill module is unusable — drop the stale entry rather
+                # than reuse across the class boundary.
+                if not e["on_host"]:
+                    self.decode[model]["retained_gpu"] -= e["tokens"]
+                del self.decode[model]["residency"][sid]
+                e = None
             if e is not None:
                 r = e["base"]
                 for have, need in zip(e["sig"], sig):
@@ -904,14 +996,16 @@ class Simulator:
             sid, node, meta["depth"], job["ctx_len"], out_tokens, job["issued_at"],
             shipped_tokens=shipped, reuse_tokens=reuse_tokens, host_tokens=host_tokens,
             base=base, sig=sig,
-            is_sink=not meta["children"],
+            is_sink=not meta["children"], cls=job["cls"],
         )
         self.m["handoffs"] += 1
         self.m["handoff_tokens"] += shipped
+        self.bump_class("handoff_tokens", job["cls"], shipped)
         if reuse_tokens + host_tokens > 0:
             self.m["handoffs_delta"] += 1
             self.m["handoff_tokens_delta"] += shipped
             self.m["decode_reuse_tokens"] += reuse_tokens
+            self.bump_class("decode_reuse_tokens", job["cls"], reuse_tokens)
         # Interconnect (engine/sim/interconnect.rs): FIFO per ingress link
         # when contended, fire-and-forget otherwise.
         dur = secs(handoff_secs(shipped, self.cfg.get("handoff_bps", HANDOFF_BPS)))
@@ -1031,6 +1125,7 @@ class Simulator:
                 if req.host_tokens > 0:
                     self.m["host_reloads"] += 1
                     self.m["host_reload_tokens"] += req.host_tokens
+                    self.bump_class("host_reload_tokens", req.cls, req.host_tokens)
                 req.was_deferred = False
                 req.host_tokens = 0
                 end = self.stage_transfer(w, secs(staging_secs(reload)))
@@ -1091,6 +1186,7 @@ class Simulator:
                         "tokens": done.footprint(),
                         "base": done.base,
                         "sig": done.sig + [(done.call_idx, done.out_tokens)],
+                        "cls": done.cls,
                         "last_use": dw["res_clock"],
                         "on_host": False,
                         "pinned": False,
@@ -1264,6 +1360,25 @@ def context_demand(sim):
     for delta accounting: shipped + gpu-reused + host-reloaded must equal
     this exactly."""
     return sum(m["ctx"] for metas in sim.meta for m in metas)
+
+
+def context_demand_by_class(sim):
+    """Per-class split of `context_demand` — the per-class conservation
+    target: within each compatibility class, shipped + gpu-reused +
+    host-reloaded must equal that class's context demand (no class ever
+    balances its books with another's KV)."""
+    d = []
+    for sid, metas in enumerate(sim.meta):
+        for i, m in enumerate(metas):
+            c = sim.trace[sid]["calls"][i]["cls"]
+            while len(d) <= c:
+                d.append(0)
+            d[c] += m["ctx"]
+    return d
+
+
+def padded(lst, n):
+    return lst + [0] * (n - len(lst))
 
 
 def trace_header(spec, trace, total_calls):
@@ -1544,6 +1659,86 @@ def main():
         "scenarios": fanout_scenarios,
     }
     write_fixture("golden_fanout.json", fanout_fixture)
+
+    # -- golden_prefillshare.json: prefill-module compatibility classes ----
+    # Fresh traces per (workload, class map); shared (one class spanning
+    # every model) vs per-model private classes.  Pins the per-class
+    # counter splits, per-class byte conservation under decode reuse, and
+    # the headline direction: private prefill forfeits cross-model reuse.
+    PRIVATE = list(range(4))  # one class per model (n_models = 4)
+    ps_scenarios = []
+    shared_hits = {}
+    for name, wl, classes, decode_reuse in (
+        ("prefillshare-shared-fanout", "fanout", [], False),
+        ("prefillshare-private-fanout", "fanout", PRIVATE, False),
+        ("prefillshare-private-debate", "debate", PRIVATE, False),
+        ("prefillshare-private-fanout-reuse", "fanout", PRIVATE, True),
+    ):
+        spec = with_classes(WORKLOADS[wl], classes)
+        tr = generate_trace(spec, GOLDEN_RATE, GOLDEN_DURATION, GOLDEN_TRACE_SEED)
+        n_calls = sum(len(s["calls"]) for s in tr)
+        sim = Simulator(cluster_config("prefillshare", decode_reuse=decode_reuse, spec=spec), tr)
+        counters, floats, extra, _dag = sim.run()
+        assert counters["sessions_completed"] == len(tr), (name, counters)
+        assert counters["requests_completed"] == n_calls, name
+        by_class = {f"{k}_by_class": list(v) for k, v in sim.by_class.items()}
+        # Per-class sums must equal the scalar counters at every point.
+        for k, v in sim.by_class.items():
+            assert sum(v) == counters[k], (name, k, v, counters[k])
+        if not classes:
+            # Single shared class: exactly one populated slot — and the
+            # run must be identical to the pre-class fanout golden
+            # (same trace, config and counters as prefillshare-fanout).
+            assert all(len(v) <= 1 for v in sim.by_class.values()), (name, sim.by_class)
+            shared_hits[wl] = counters["prefix_hit_tokens"]
+        else:
+            assert len(sim.by_class["prefix_miss_tokens"]) == len(set(classes)), name
+        if decode_reuse:
+            demand = context_demand_by_class(sim)
+            n = len(demand)
+            shipped = padded(sim.by_class["handoff_tokens"], n)
+            reused = padded(sim.by_class["decode_reuse_tokens"], n)
+            reloaded = padded(sim.by_class["host_reload_tokens"], n)
+            for c in range(n):
+                assert shipped[c] + reused[c] + reloaded[c] == demand[c], (
+                    name, "class", c, "lost tokens")
+        ps_scenarios.append(
+            {
+                "name": name,
+                "workload": wl,
+                "prefill_classes": list(classes),
+                "decode_reuse": decode_reuse,
+                "counters": {**(counters if decode_reuse else strip_reuse(counters)), **by_class},
+                "floats": {**floats, **extra},
+            }
+        )
+        print(
+            f"  {name}: hit {counters['prefix_hit_tokens']}, "
+            f"miss by class {sim.by_class['prefix_miss_tokens']}, "
+            f"p95 {floats['p95_session_latency']:.3f}s"
+        )
+    # Headline direction: the private map must forfeit cross-model reuse.
+    private_fanout = next(s for s in ps_scenarios if s["name"] == "prefillshare-private-fanout")
+    assert private_fanout["counters"]["prefix_hit_tokens"] < shared_hits["fanout"], (
+        "private classes must reuse strictly less than the shared module")
+
+    ps_fixture = {
+        "description": "Golden prefill-module compatibility-class metrics: shared "
+        "(one class spanning every model) vs per-model private classes on the "
+        "fanout/debate DAG workloads, with per-class counter splits and "
+        "per-class byte conservation under decode-side residency; generated "
+        "by gen_golden.py (bit-faithful port of the rust simulator). Counters "
+        "compare exactly, floats to 1e-6 relative tolerance.",
+        "traces": {
+            wl: trace_header(WORKLOADS[wl], tr, sum(len(s["calls"]) for s in tr))
+            for wl, tr in (
+                ("fanout", generate_trace(FANOUT, GOLDEN_RATE, GOLDEN_DURATION, GOLDEN_TRACE_SEED)),
+                ("debate", generate_trace(DEBATE, GOLDEN_RATE, GOLDEN_DURATION, GOLDEN_TRACE_SEED)),
+            )
+        },
+        "scenarios": ps_scenarios,
+    }
+    write_fixture("golden_prefillshare.json", ps_fixture)
 
 
 if __name__ == "__main__":
