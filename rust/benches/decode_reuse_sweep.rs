@@ -22,8 +22,9 @@ use prefillshare::engine::report::{format_row, header, save_rows};
 
 fn main() {
     let seed = 0;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let t0 = std::time::Instant::now();
-    let rows = reuse_ablation(seed);
+    let rows = reuse_ablation(seed, threads);
     println!("== decode-reuse sweep (PrefillShare, ReAct, seed {seed}) ==");
     println!("{}", header("rate"));
     for r in &rows {

@@ -27,7 +27,8 @@ fn main() {
     let t0 = std::time::Instant::now();
     // fanout_experiment already asserts: fanout hit ratio >= chain hit
     // ratio per rate, fanout peak in-flight >= 3, chain peak == 1.
-    let rows = fanout_experiment(seed);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let rows = fanout_experiment(seed, threads);
     println!("== DAG fan-out sweep (PrefillShare, prefix-aware, seed {seed}) ==");
     println!("{}", header("rate"));
     for r in &rows {

@@ -9,8 +9,11 @@ use prefillshare::engine::report::{format_row, header, save_rows};
 
 fn main() {
     let seed = 0;
+    // Sweep rows are byte-identical regardless of thread count (see
+    // `run_sweep`), so benches always fan out across the machine.
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let t0 = std::time::Instant::now();
-    let rows = fig3(seed);
+    let rows = fig3(seed, threads);
     println!("== Fig 3: serving performance vs arrival rate (seed {seed}) ==");
     println!("{}", header("rate"));
     for r in &rows {

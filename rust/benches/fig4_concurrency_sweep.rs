@@ -13,7 +13,8 @@ use prefillshare::engine::report::{format_row, header, save_rows};
 
 fn main() {
     let seed = 0;
-    let rows = fig4(seed);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let rows = fig4(seed, threads);
     println!("== Fig 4: hit ratio + throughput vs max concurrent sessions ==");
     println!("{}", header("max_sessions"));
     for r in &rows {

@@ -9,8 +9,9 @@ use prefillshare::engine::report::{format_row, header, save_rows};
 
 fn main() {
     let seed = 0;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("== Fig 5: arrival sweep, Qwen3-14B backbone ==");
-    let rows5 = fig5(seed);
+    let rows5 = fig5(seed, threads);
     println!("{}", header("rate"));
     for r in &rows5 {
         println!("{}", format_row(r));
@@ -18,7 +19,7 @@ fn main() {
     save_rows("reports/fig5.json", &rows5).expect("save");
 
     println!("\n== Fig 6: concurrency sweep, Qwen3-14B backbone ==");
-    let rows6 = fig6(seed);
+    let rows6 = fig6(seed, threads);
     println!("{}", header("max_sessions"));
     for r in &rows6 {
         println!("{}", format_row(r));

@@ -16,8 +16,9 @@ use prefillshare::engine::report::{format_row, header, save_rows};
 
 fn main() {
     let seed = 0;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let t0 = std::time::Instant::now();
-    let rows = route_ablation_sweep(seed);
+    let rows = route_ablation_sweep(seed, threads);
     println!("== routing-policy sweep (PrefillShare, ReAct @ {ROUTE_RATE}/s, seed {seed}) ==");
     println!(
         "(prefix-aware/round-robin/random route through the snapshot-free \

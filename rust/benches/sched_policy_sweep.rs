@@ -13,8 +13,9 @@ use prefillshare::engine::report::{format_row, header, save_rows};
 
 fn main() {
     let seed = 0;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let t0 = std::time::Instant::now();
-    let rows = sched_ablation(seed);
+    let rows = sched_ablation(seed, threads);
     println!("== scheduler-policy sweep (PrefillShare, ReAct, seed {seed}) ==");
     println!("{}", header("rate"));
     for r in &rows {

@@ -1,0 +1,60 @@
+//! Bench: the simulator's own scaling sweep — events/sec and peak
+//! footprint at 10³→10⁵ sessions, calendar queue vs the legacy
+//! `BinaryHeap` baseline, exact vs sketch metrics.
+//!
+//! Every point asserts the three arms agree (calendar == legacy
+//! metric-for-metric; sketch preserves the counter metrics exactly) and
+//! `simscale_experiment` enforces sublinear sketch-metric memory; the
+//! wall-clock numbers printed here are the only machine-dependent
+//! outputs.  CI reads the headline speedup out of `BENCH_simscale.json`.
+//!
+//! Run: `cargo bench --bench simscale`
+//! (CI smoke: `prefillshare bench-serving --experiment simscale --scale 500,2000`)
+
+use prefillshare::engine::experiments::{save_simscale, simscale_experiment, SIMSCALE_COUNTS};
+
+fn main() {
+    let seed = 0;
+    let t0 = std::time::Instant::now();
+    let points = simscale_experiment(SIMSCALE_COUNTS, seed);
+    println!("== simscale: simulator throughput and footprint (seed {seed}) ==");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>8} {:>12} {:>12} {:>12}",
+        "sessions",
+        "events",
+        "ev/s(cal)",
+        "ev/s(legacy)",
+        "speedup",
+        "peak_bytes",
+        "exact_m_B",
+        "sketch_m_B"
+    );
+    for p in &points {
+        println!(
+            "{:>10} {:>12} {:>12.0} {:>12.0} {:>8.2} {:>12} {:>12} {:>12}",
+            p.sessions,
+            p.events,
+            p.events_per_sec(),
+            p.legacy_events_per_sec(),
+            p.speedup(),
+            p.approx_peak_bytes,
+            p.exact_metric_bytes,
+            p.sketch_metric_bytes,
+        );
+    }
+    if let Some(p) = points.last() {
+        println!(
+            "\nat {} sessions: {:.2}x events/sec vs --legacy-queue, sketch metrics {:.1}% \
+             of exact-store bytes",
+            p.sessions,
+            p.speedup(),
+            100.0 * p.sketch_metric_bytes as f64 / p.exact_metric_bytes.max(1) as f64,
+        );
+    }
+    save_simscale("reports/BENCH_simscale.json", &points).expect("save");
+    println!(
+        "saved reports/BENCH_simscale.json ({} points, {:.1}s total)",
+        points.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -3,6 +3,7 @@
 use crate::costmodel::{CostModel, GpuSpec, LlmSpec, A100_80G, LLAMA8B, QWEN14B};
 use crate::engine::sched::chunked::DEFAULT_CHUNK_TOKENS;
 use crate::engine::sched::SchedPolicy;
+use crate::metrics::MetricsMode;
 use crate::workload::NUM_AGENTS;
 
 pub use crate::engine::route::RoutePolicy;
@@ -85,6 +86,16 @@ pub struct ClusterConfig {
     /// fixtures pin).  Must agree with the trace's `WorkloadSpec` map —
     /// the simulator refuses a mismatch at construction.
     pub prefill_classes: Vec<usize>,
+    /// Run the event loop on the original single-`BinaryHeap` scheduler
+    /// instead of the calendar queue (`--legacy-queue`).  Both orderings
+    /// are identical by contract — this is the pinned baseline the
+    /// `simscale` benchmark measures its speedup against.
+    pub legacy_queue: bool,
+    /// Histogram backing store (`--metrics exact|sketch`).  `Exact` (the
+    /// default) keeps raw samples and reproduces the golden fixtures
+    /// bit-for-bit; `Sketch` bounds metric memory at fleet scale at the
+    /// price of ~1%-approximate quantiles.
+    pub metrics: MetricsMode,
     pub seed: u64,
 }
 
@@ -133,6 +144,8 @@ impl ClusterConfig {
             link_contended: false,
             prefill_gpus: Vec::new(),
             prefill_classes: Vec::new(),
+            legacy_queue: false,
+            metrics: MetricsMode::Exact,
             seed: 0,
         }
     }
@@ -202,6 +215,8 @@ mod tests {
         assert!(!c.decode_reuse);
         assert!(c.prefill_gpus.is_empty());
         assert!(c.chunk_tokens > 0);
+        assert!(!c.legacy_queue, "calendar queue is the default");
+        assert_eq!(c.metrics, MetricsMode::Exact, "exact metrics are the default");
     }
 
     #[test]

@@ -1,12 +1,91 @@
 //! Serving experiment drivers — one per paper figure (DESIGN.md experiment
 //! index).  Each returns paper-style rows; benches and the CLI print them
 //! and save JSON under `reports/`.
+//!
+//! Every sweep point is a pure function of its `(ClusterConfig, Trace)`
+//! pair, so sweeps are expressed as [`SweepJob`] lists and executed by
+//! [`run_sweep`]: serial for `threads <= 1`, a scoped `std::thread` worker
+//! pool otherwise, with results written into per-job slots so the output
+//! row order — and every byte of every `SimResult` — is identical for any
+//! thread count.  Traces are shared via `Arc`: a multi-arm sweep
+//! materializes each distinct `(workload, rate, seed)` trace once instead
+//! of deep-cloning O(sessions) of DAG scripts per arm.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::costmodel::{LlmSpec, LLAMA8B, QWEN14B};
 use crate::engine::config::{ClusterConfig, SystemKind};
 use crate::engine::report::Row;
 use crate::engine::sim::simulate;
-use crate::workload::{debate, fanout, generate_trace, mixed, react, reflexion, WorkloadSpec};
+use crate::metrics::MetricsMode;
+use crate::util::json::{self, Json};
+use crate::workload::{
+    debate, fanout, generate_trace, mixed, react, reflexion, Trace, WorkloadSpec,
+};
+
+// ---------------------------------------------------------------------------
+// Parallel sweep runner
+// ---------------------------------------------------------------------------
+
+/// One independent simulation config in a sweep — the unit the parallel
+/// runner distributes across workers.
+pub struct SweepJob {
+    pub system: String,
+    pub workload: String,
+    pub x_name: String,
+    pub x: f64,
+    pub cfg: ClusterConfig,
+    pub trace: Arc<Trace>,
+}
+
+impl SweepJob {
+    fn run(&self) -> Row {
+        Row {
+            system: self.system.clone(),
+            workload: self.workload.clone(),
+            x_name: self.x_name.clone(),
+            x: self.x,
+            result: simulate(self.cfg.clone(), self.trace.clone()),
+        }
+    }
+}
+
+/// Run every job and return rows in job order.
+///
+/// `threads <= 1` runs serially on the calling thread.  Otherwise a scoped
+/// worker pool pulls job indices off a shared counter and writes each
+/// result into that job's own slot: no ordering depends on which worker
+/// finishes first, so the rows are byte-identical to the serial runner's
+/// for any thread count (each simulation is deterministic in its inputs).
+pub fn run_sweep(jobs: &[SweepJob], threads: usize) -> Vec<Row> {
+    if threads <= 1 || jobs.len() <= 1 {
+        return jobs.iter().map(SweepJob::run).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Row>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(jobs.len()) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let row = jobs[i].run();
+                *slots[i].lock().unwrap() = Some(row);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every sweep job ran"))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Paper sweeps
+// ---------------------------------------------------------------------------
 
 /// Arrival rates swept in Fig 3 / Fig 5 (sessions per second).
 pub const FIG3_RATES: &[f64] = &[0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 10.0, 12.0];
@@ -27,67 +106,96 @@ pub const BEST_OF_CONCURRENCY: &[usize] = &[24, 48, 96, 144];
 /// Simulation horizon per point (seconds of arrivals).
 pub const HORIZON_S: f64 = 240.0;
 
-fn run_point(
-    system: SystemKind,
-    llm: LlmSpec,
-    wl: &WorkloadSpec,
-    rate: f64,
-    max_concurrent: usize,
-    seed: u64,
-) -> crate::engine::sim::SimResult {
-    let mut cfg = ClusterConfig::for_llm(system, llm);
-    cfg.max_concurrent_sessions = max_concurrent;
-    cfg.seed = seed;
-    let trace = generate_trace(wl, rate, HORIZON_S, seed);
-    simulate(cfg, trace)
+fn base_job(
+    system_label: &str,
+    wl_name: &str,
+    x_name: &str,
+    x: f64,
+    cfg: ClusterConfig,
+    trace: Arc<Trace>,
+) -> SweepJob {
+    SweepJob {
+        system: system_label.to_string(),
+        workload: wl_name.to_string(),
+        x_name: x_name.to_string(),
+        x,
+        cfg,
+        trace,
+    }
 }
 
 /// Fig 3 (llama8b) / Fig 5 (qwen14b): latency/throughput/TTFT vs arrival
 /// rate, both systems, both workloads; concurrency chosen best-of per point.
-pub fn arrival_sweep(llm: LlmSpec, workloads: &[WorkloadSpec], seed: u64) -> Vec<Row> {
-    let mut rows = Vec::new();
+pub fn arrival_sweep(
+    llm: LlmSpec,
+    workloads: &[WorkloadSpec],
+    seed: u64,
+    threads: usize,
+) -> Vec<Row> {
+    let mut jobs = Vec::new();
     for wl in workloads {
+        // One trace per rate, shared by every (system, concurrency) arm.
+        let traces: Vec<Arc<Trace>> = FIG3_RATES
+            .iter()
+            .map(|&rate| Arc::new(generate_trace(wl, rate, HORIZON_S, seed)))
+            .collect();
         for &system in &[SystemKind::Baseline, SystemKind::PrefillShare] {
-            for &rate in FIG3_RATES {
-                let best = BEST_OF_CONCURRENCY
-                    .iter()
-                    .map(|&cc| run_point(system, llm, wl, rate, cc, seed))
-                    .max_by(|a, b| {
-                        a.throughput_tok_s
-                            .partial_cmp(&b.throughput_tok_s)
-                            .unwrap()
-                    })
-                    .unwrap();
-                rows.push(Row {
-                    system: system.label().to_string(),
-                    workload: wl.name.to_string(),
-                    x_name: "rate".into(),
-                    x: rate,
-                    result: best,
-                });
+            for (ri, &rate) in FIG3_RATES.iter().enumerate() {
+                for &cc in BEST_OF_CONCURRENCY {
+                    let mut cfg = ClusterConfig::for_llm(system, llm);
+                    cfg.max_concurrent_sessions = cc;
+                    cfg.seed = seed;
+                    jobs.push(base_job(
+                        system.label(),
+                        wl.name,
+                        "rate",
+                        rate,
+                        cfg,
+                        traces[ri].clone(),
+                    ));
+                }
             }
         }
+    }
+    let results = run_sweep(&jobs, threads);
+    // Fold each point's concurrency mini-sweep down to its best-throughput
+    // row.  `>=` keeps the *last* of equal maxima — the same row the old
+    // serial `max_by` selected.
+    let k = BEST_OF_CONCURRENCY.len();
+    let mut rows = Vec::with_capacity(results.len() / k);
+    for group in results.chunks(k) {
+        let mut best = &group[0];
+        for r in &group[1..] {
+            if r.result.throughput_tok_s >= best.result.throughput_tok_s {
+                best = r;
+            }
+        }
+        rows.push(best.clone());
     }
     rows
 }
 
 /// Fig 4 (llama8b) / Fig 6 (qwen14b): hit ratio + throughput vs max
-/// concurrent sessions at a fixed 4 sessions/s ReAct load.
-pub fn concurrency_sweep(llm: LlmSpec, wl: &WorkloadSpec, seed: u64) -> Vec<Row> {
-    let mut rows = Vec::new();
+/// concurrent sessions at a fixed-rate ReAct load.
+pub fn concurrency_sweep(llm: LlmSpec, wl: &WorkloadSpec, seed: u64, threads: usize) -> Vec<Row> {
+    let trace = Arc::new(generate_trace(wl, FIG4_RATE, HORIZON_S, seed));
+    let mut jobs = Vec::new();
     for &system in &[SystemKind::Baseline, SystemKind::PrefillShare] {
         for &cc in FIG4_CONCURRENCY {
-            let result = run_point(system, llm, wl, FIG4_RATE, cc, seed);
-            rows.push(Row {
-                system: system.label().to_string(),
-                workload: wl.name.to_string(),
-                x_name: "max_sessions".into(),
-                x: cc as f64,
-                result,
-            });
+            let mut cfg = ClusterConfig::for_llm(system, llm);
+            cfg.max_concurrent_sessions = cc;
+            cfg.seed = seed;
+            jobs.push(base_job(
+                system.label(),
+                wl.name,
+                "max_sessions",
+                cc as f64,
+                cfg,
+                trace.clone(),
+            ));
         }
     }
-    rows
+    run_sweep(&jobs, threads)
 }
 
 /// Arrival rates swept in the scheduler-policy comparison (a denser version
@@ -99,60 +207,60 @@ pub const SCHED_RATES: &[f64] = &[1.0, 2.0, 4.0, 6.0, 8.0];
 /// identical PrefillShare topology, one row per (policy, rate), so p95
 /// latency / TTFT / queueing delay are directly comparable across
 /// `fifo`/`sjf`/`prefix-affinity`/`chunked`.
-pub fn sched_sweep(llm: LlmSpec, wl: &WorkloadSpec, rates: &[f64], seed: u64) -> Vec<Row> {
+pub fn sched_sweep(
+    llm: LlmSpec,
+    wl: &WorkloadSpec,
+    rates: &[f64],
+    seed: u64,
+    threads: usize,
+) -> Vec<Row> {
     use crate::engine::sched::SchedPolicy;
     // One trace per rate, shared by every policy: "identical trace" by
     // construction, and no redundant re-sampling inside the policy loop.
-    let traces: Vec<crate::workload::Trace> = rates
+    let traces: Vec<Arc<Trace>> = rates
         .iter()
-        .map(|&rate| generate_trace(wl, rate, HORIZON_S, seed))
+        .map(|&rate| Arc::new(generate_trace(wl, rate, HORIZON_S, seed)))
         .collect();
-    let mut rows = Vec::new();
+    let mut jobs = Vec::new();
     for &policy in &SchedPolicy::all() {
-        for (&rate, trace) in rates.iter().zip(&traces) {
+        for (ri, &rate) in rates.iter().enumerate() {
             let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
             cfg.sched = policy;
             cfg.seed = seed;
-            let result = simulate(cfg, trace.clone());
-            rows.push(Row {
-                system: format!("ps/{}", policy.label()),
-                workload: wl.name.to_string(),
-                x_name: "rate".into(),
-                x: rate,
-                result,
-            });
+            jobs.push(base_job(
+                &format!("ps/{}", policy.label()),
+                wl.name,
+                "rate",
+                rate,
+                cfg,
+                traces[ri].clone(),
+            ));
         }
     }
-    rows
+    run_sweep(&jobs, threads)
 }
 
 /// CLI/bench wrapper: the default scheduler ablation (LLaMA8B, ReAct).
-pub fn sched_ablation(seed: u64) -> Vec<Row> {
-    sched_sweep(LLAMA8B, &react(), SCHED_RATES, seed)
+pub fn sched_ablation(seed: u64, threads: usize) -> Vec<Row> {
+    sched_sweep(LLAMA8B, &react(), SCHED_RATES, seed, threads)
 }
 
 /// Ablation: routing policy impact on PrefillShare (prefix-aware vs
 /// locality-destroying policies, plus the cache-/load-aware scorers) —
 /// DESIGN.md "ablation benches".
-pub fn routing_ablation(seed: u64) -> Vec<Row> {
+pub fn routing_ablation(seed: u64, threads: usize) -> Vec<Row> {
     use crate::engine::route::RoutePolicy;
     let wl = react();
-    let mut rows = Vec::new();
+    let trace = Arc::new(generate_trace(&wl, 3.0, HORIZON_S, seed));
+    let mut jobs = Vec::new();
     for pol in RoutePolicy::all() {
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
         cfg.routing = pol;
         cfg.seed = seed;
-        let trace = generate_trace(&wl, 3.0, HORIZON_S, seed);
-        let result = simulate(cfg, trace);
-        rows.push(Row {
-            system: format!("ps/{}", pol.label()),
-            workload: wl.name.to_string(),
-            x_name: "rate".into(),
-            x: 3.0,
-            result,
-        });
+        let label = format!("ps/{}", pol.label());
+        jobs.push(base_job(&label, wl.name, "rate", 3.0, cfg, trace.clone()));
     }
-    rows
+    run_sweep(&jobs, threads)
 }
 
 /// Concurrency points for the routing-policy sweep — the Fig-4 axis where
@@ -169,32 +277,38 @@ pub const ROUTE_RATE: f64 = 8.0;
 /// comparable across `prefix-aware`/`round-robin`/`random`/`cache-aware`/
 /// `load-aware` (`route_policy_sweep` bench, `bench-serving --experiment
 /// routes`).
-pub fn route_sweep(llm: LlmSpec, wl: &WorkloadSpec, concurrency: &[usize], seed: u64) -> Vec<Row> {
+pub fn route_sweep(
+    llm: LlmSpec,
+    wl: &WorkloadSpec,
+    concurrency: &[usize],
+    seed: u64,
+    threads: usize,
+) -> Vec<Row> {
     use crate::engine::route::RoutePolicy;
-    let trace = generate_trace(wl, ROUTE_RATE, HORIZON_S, seed);
-    let mut rows = Vec::new();
+    let trace = Arc::new(generate_trace(wl, ROUTE_RATE, HORIZON_S, seed));
+    let mut jobs = Vec::new();
     for pol in RoutePolicy::all() {
         for &cc in concurrency {
             let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
             cfg.routing = pol;
             cfg.max_concurrent_sessions = cc;
             cfg.seed = seed;
-            let result = simulate(cfg, trace.clone());
-            rows.push(Row {
-                system: format!("ps/{}", pol.label()),
-                workload: wl.name.to_string(),
-                x_name: "max_sessions".into(),
-                x: cc as f64,
-                result,
-            });
+            jobs.push(base_job(
+                &format!("ps/{}", pol.label()),
+                wl.name,
+                "max_sessions",
+                cc as f64,
+                cfg,
+                trace.clone(),
+            ));
         }
     }
-    rows
+    run_sweep(&jobs, threads)
 }
 
 /// CLI/bench wrapper: the default routing sweep (LLaMA8B, ReAct).
-pub fn route_ablation_sweep(seed: u64) -> Vec<Row> {
-    route_sweep(LLAMA8B, &react(), ROUTE_CONCURRENCY, seed)
+pub fn route_ablation_sweep(seed: u64, threads: usize) -> Vec<Row> {
+    route_sweep(LLAMA8B, &react(), ROUTE_CONCURRENCY, seed, threads)
 }
 
 /// Arrival rates swept in the decode-reuse comparison — the axis along
@@ -207,33 +321,39 @@ pub const REUSE_RATES: &[f64] = &[1.0, 2.0, 4.0, 8.0];
 /// handoff tokens/bytes, TTFT by agent-call position, staging and
 /// latency are directly comparable (`decode_reuse_sweep` bench,
 /// `bench-serving --experiment reuse`).
-pub fn reuse_sweep(llm: LlmSpec, wl: &WorkloadSpec, rates: &[f64], seed: u64) -> Vec<Row> {
-    let traces: Vec<crate::workload::Trace> = rates
+pub fn reuse_sweep(
+    llm: LlmSpec,
+    wl: &WorkloadSpec,
+    rates: &[f64],
+    seed: u64,
+    threads: usize,
+) -> Vec<Row> {
+    let traces: Vec<Arc<Trace>> = rates
         .iter()
-        .map(|&rate| generate_trace(wl, rate, HORIZON_S, seed))
+        .map(|&rate| Arc::new(generate_trace(wl, rate, HORIZON_S, seed)))
         .collect();
-    let mut rows = Vec::new();
+    let mut jobs = Vec::new();
     for &decode_reuse in &[false, true] {
-        for (&rate, trace) in rates.iter().zip(&traces) {
+        for (ri, &rate) in rates.iter().enumerate() {
             let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
             cfg.decode_reuse = decode_reuse;
             cfg.seed = seed;
-            let result = simulate(cfg, trace.clone());
-            rows.push(Row {
-                system: format!("ps/reuse-{}", if decode_reuse { "on" } else { "off" }),
-                workload: wl.name.to_string(),
-                x_name: "rate".into(),
-                x: rate,
-                result,
-            });
+            jobs.push(base_job(
+                &format!("ps/reuse-{}", if decode_reuse { "on" } else { "off" }),
+                wl.name,
+                "rate",
+                rate,
+                cfg,
+                traces[ri].clone(),
+            ));
         }
     }
-    rows
+    run_sweep(&jobs, threads)
 }
 
 /// CLI/bench wrapper: the default decode-reuse comparison (LLaMA8B, ReAct).
-pub fn reuse_ablation(seed: u64) -> Vec<Row> {
-    reuse_sweep(LLAMA8B, &react(), REUSE_RATES, seed)
+pub fn reuse_ablation(seed: u64, threads: usize) -> Vec<Row> {
+    reuse_sweep(LLAMA8B, &react(), REUSE_RATES, seed, threads)
 }
 
 /// Arrival rates swept in the DAG fan-out comparison.
@@ -247,37 +367,36 @@ pub const FANOUT_RATES: &[f64] = &[1.0, 2.0, 4.0];
 /// The per-depth TTFT breakdown (`ttft_mean_by_depth`) and
 /// `peak_session_inflight` are the DAG-specific columns
 /// (`bench-serving --experiment fanout`, `fanout_sweep` bench).
-pub fn fanout_sweep(llm: LlmSpec, rates: &[f64], seed: u64) -> Vec<Row> {
-    let mut rows = Vec::new();
+pub fn fanout_sweep(llm: LlmSpec, rates: &[f64], seed: u64, threads: usize) -> Vec<Row> {
+    let mut jobs = Vec::new();
+    let mut fanout_traces: Vec<Arc<Trace>> = Vec::new();
     for wl in [react(), fanout(), debate(), mixed()] {
         for &rate in rates {
             let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
             cfg.seed = seed;
-            let trace = generate_trace(&wl, rate, HORIZON_S, seed);
-            rows.push(Row {
-                system: "ps/prefix-aware".into(),
-                workload: wl.name.to_string(),
-                x_name: "rate".into(),
-                x: rate,
-                result: simulate(cfg, trace),
-            });
+            let trace = Arc::new(generate_trace(&wl, rate, HORIZON_S, seed));
+            if wl.name == "fanout" {
+                // The decode-reuse arm below replays these exact traces.
+                fanout_traces.push(trace.clone());
+            }
+            jobs.push(base_job("ps/prefix-aware", wl.name, "rate", rate, cfg, trace));
         }
     }
     let wl = fanout();
-    for &rate in rates {
+    for (ri, &rate) in rates.iter().enumerate() {
         let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
         cfg.decode_reuse = true;
         cfg.seed = seed;
-        let trace = generate_trace(&wl, rate, HORIZON_S, seed);
-        rows.push(Row {
-            system: "ps/fanout-reuse".into(),
-            workload: wl.name.to_string(),
-            x_name: "rate".into(),
-            x: rate,
-            result: simulate(cfg, trace),
-        });
+        jobs.push(base_job(
+            "ps/fanout-reuse",
+            wl.name,
+            "rate",
+            rate,
+            cfg,
+            fanout_traces[ri].clone(),
+        ));
     }
-    rows
+    run_sweep(&jobs, threads)
 }
 
 /// CLI/bench wrapper: the default DAG comparison (LLaMA8B), asserting the
@@ -285,8 +404,8 @@ pub fn fanout_sweep(llm: LlmSpec, rates: &[f64], seed: u64) -> Vec<Row> {
 /// fanout workload is **no worse** than on the sequential chain at the
 /// same rate (siblings radix-hit the planner's context they fan out
 /// from), and fan-out sessions really do overlap their own calls.
-pub fn fanout_experiment(seed: u64) -> Vec<Row> {
-    let rows = fanout_sweep(LLAMA8B, FANOUT_RATES, seed);
+pub fn fanout_experiment(seed: u64, threads: usize) -> Vec<Row> {
+    let rows = fanout_sweep(LLAMA8B, FANOUT_RATES, seed, threads);
     let find = |wl: &str, rate: f64| {
         rows.iter()
             .find(|r| r.system == "ps/prefix-aware" && r.workload == wl && r.x == rate)
@@ -329,10 +448,13 @@ pub const PRESHARE_RATES: &[f64] = &[1.0, 2.0, 2.5];
 /// promiscuous arm runs the shared config under its own label — the
 /// table makes explicit that sound sharing attains the unsound bound
 /// exactly while private prefill pays the full recomputation cost.
-pub fn prefillshare_sweep(llm: LlmSpec, rates: &[f64], seed: u64) -> Vec<Row> {
-    let mut rows = Vec::new();
+pub fn prefillshare_sweep(llm: LlmSpec, rates: &[f64], seed: u64, threads: usize) -> Vec<Row> {
+    let mut jobs = Vec::new();
     for wl in [fanout(), debate()] {
         for &rate in rates {
+            // Traces differ per class map (keys are class-scoped), but the
+            // shared and promiscuous arms run the identical (cfg, trace).
+            let mut shared_trace: Option<Arc<Trace>> = None;
             for &(label, private) in
                 &[("ps/private", true), ("ps/shared", false), ("ps/promiscuous", false)]
             {
@@ -344,19 +466,22 @@ pub fn prefillshare_sweep(llm: LlmSpec, rates: &[f64], seed: u64) -> Vec<Row> {
                     Vec::new()
                 };
                 cfg.prefill_classes = classes.clone();
-                let wl_c = wl.clone().with_prefill_classes(classes);
-                let trace = generate_trace(&wl_c, rate, HORIZON_S, seed);
-                rows.push(Row {
-                    system: label.into(),
-                    workload: wl.name.to_string(),
-                    x_name: "rate".into(),
-                    x: rate,
-                    result: simulate(cfg, trace),
-                });
+                let trace = if private {
+                    let wl_c = wl.clone().with_prefill_classes(classes);
+                    Arc::new(generate_trace(&wl_c, rate, HORIZON_S, seed))
+                } else {
+                    shared_trace
+                        .get_or_insert_with(|| {
+                            let wl_c = wl.clone().with_prefill_classes(classes);
+                            Arc::new(generate_trace(&wl_c, rate, HORIZON_S, seed))
+                        })
+                        .clone()
+                };
+                jobs.push(base_job(label, wl.name, "rate", rate, cfg, trace));
             }
         }
     }
-    rows
+    run_sweep(&jobs, threads)
 }
 
 /// CLI/bench wrapper (LLaMA8B, `fanout` + `debate`) asserting the
@@ -364,8 +489,8 @@ pub fn prefillshare_sweep(llm: LlmSpec, rates: &[f64], seed: u64) -> Vec<Row> {
 /// TTFT at every rate, beats it on throughput at the top swept
 /// rate, and attains the promiscuous upper bound *exactly* — metric for
 /// metric — at every point (`bench-serving --experiment prefillshare`).
-pub fn prefillshare_experiment(seed: u64) -> Vec<Row> {
-    let rows = prefillshare_sweep(LLAMA8B, PRESHARE_RATES, seed);
+pub fn prefillshare_experiment(seed: u64, threads: usize) -> Vec<Row> {
+    let rows = prefillshare_sweep(LLAMA8B, PRESHARE_RATES, seed, threads);
     let find = |sys: &str, wl: &str, rate: f64| {
         rows.iter()
             .find(|r| r.system == sys && r.workload == wl && r.x == rate)
@@ -414,6 +539,159 @@ fn rates_top(rates: &[f64]) -> f64 {
     *rates.last().expect("non-empty rate sweep")
 }
 
+// ---------------------------------------------------------------------------
+// simscale: the simulator's own scaling benchmark
+// ---------------------------------------------------------------------------
+
+/// Session counts swept by `bench-serving --experiment simscale`
+/// (10³ → 10⁵; CI smoke passes smaller counts via `--scale`).
+pub const SIMSCALE_COUNTS: &[usize] = &[1_000, 10_000, 100_000];
+
+/// Offered load for the simscale sweep — high enough that the event queue
+/// and radix caches see fleet-scale churn, with the admission cap lifted
+/// so arrivals aren't serialized by the closed-loop gate.
+pub const SIMSCALE_RATE: f64 = 50.0;
+
+/// One simscale measurement: the same trace run on the calendar queue
+/// (exact metrics), the legacy `BinaryHeap` baseline, and the calendar
+/// queue with sketch metrics.  Wall times are measured here (they are the
+/// only nondeterministic outputs); everything else is checked for exact
+/// agreement across the arms.
+pub struct SimScalePoint {
+    /// Sessions actually materialized in the trace (~ rate × horizon).
+    pub sessions: usize,
+    /// Events popped per run — identical across all three arms.
+    pub events: u64,
+    pub calendar_secs: f64,
+    pub legacy_secs: f64,
+    /// Deterministic peak-footprint estimate of the exact-metrics run.
+    pub approx_peak_bytes: u64,
+    /// Metric-store footprint, exact vs sketch histograms.
+    pub exact_metric_bytes: u64,
+    pub sketch_metric_bytes: u64,
+}
+
+impl SimScalePoint {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.calendar_secs.max(1e-12)
+    }
+
+    pub fn legacy_events_per_sec(&self) -> f64 {
+        self.events as f64 / self.legacy_secs.max(1e-12)
+    }
+
+    /// Calendar-queue speedup over the legacy heap, same job, same machine.
+    pub fn speedup(&self) -> f64 {
+        self.legacy_secs / self.calendar_secs.max(1e-12)
+    }
+}
+
+/// Run the simscale sweep over `counts` session targets.  Each point
+/// asserts the calendar and legacy runs agree metric-for-metric (the
+/// strongest cross-implementation check available at scale) and that
+/// sketch mode preserves the counter metrics exactly.
+pub fn simscale(counts: &[usize], seed: u64) -> Vec<SimScalePoint> {
+    let wl = react();
+    let mut points = Vec::with_capacity(counts.len());
+    for &n in counts {
+        let horizon = n as f64 / SIMSCALE_RATE;
+        let trace = Arc::new(generate_trace(&wl, SIMSCALE_RATE, horizon, seed));
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.max_concurrent_sessions = usize::MAX / 2;
+        cfg.seed = seed;
+
+        let t0 = Instant::now();
+        let cal = simulate(cfg.clone(), trace.clone());
+        let calendar_secs = t0.elapsed().as_secs_f64();
+
+        let mut legacy_cfg = cfg.clone();
+        legacy_cfg.legacy_queue = true;
+        let t0 = Instant::now();
+        let leg = simulate(legacy_cfg, trace.clone());
+        let legacy_secs = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            cal.metrics, leg.metrics,
+            "calendar and legacy queues diverged at {n} sessions"
+        );
+        assert_eq!(cal.events_processed, leg.events_processed);
+
+        let mut sketch_cfg = cfg.clone();
+        sketch_cfg.metrics = MetricsMode::Sketch;
+        let sk = simulate(sketch_cfg, trace.clone());
+        assert_eq!(sk.sessions_completed, cal.sessions_completed);
+        assert_eq!(sk.events_processed, cal.events_processed);
+        assert_eq!(sk.prefill_computed_tokens, cal.prefill_computed_tokens);
+
+        points.push(SimScalePoint {
+            sessions: trace.sessions.len(),
+            events: cal.events_processed,
+            calendar_secs,
+            legacy_secs,
+            approx_peak_bytes: cal.approx_peak_bytes,
+            exact_metric_bytes: cal.metrics.approx_bytes() as u64,
+            sketch_metric_bytes: sk.metrics.approx_bytes() as u64,
+        });
+    }
+    points
+}
+
+/// `bench-serving --experiment simscale`: run the sweep and enforce the
+/// deterministic acceptance property — sketch-mode metric memory is
+/// sublinear in session count (bytes per session strictly decreasing
+/// between points that at least double the count).  The events/sec
+/// speedup over `--legacy-queue` is *reported* (it is machine-dependent
+/// wall time); CI reads it out of `BENCH_simscale.json`.
+pub fn simscale_experiment(counts: &[usize], seed: u64) -> Vec<SimScalePoint> {
+    let points = simscale(counts, seed);
+    for w in points.windows(2) {
+        let (a, b) = (&w[0], &w[1]);
+        if b.sessions >= 2 * a.sessions && a.sessions > 0 {
+            assert!(
+                b.sketch_metric_bytes * (a.sessions as u64)
+                    < a.sketch_metric_bytes * (b.sessions as u64),
+                "sketch metric bytes must grow sublinearly: {} B @ {} sessions vs {} B @ {}",
+                a.sketch_metric_bytes,
+                a.sessions,
+                b.sketch_metric_bytes,
+                b.sessions
+            );
+        }
+    }
+    points
+}
+
+/// JSON rows for `BENCH_simscale.json` — the PR-over-PR perf trajectory.
+pub fn simscale_to_json(points: &[SimScalePoint]) -> Json {
+    json::arr(
+        points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("sessions", json::num(p.sessions as f64)),
+                    ("events", json::num(p.events as f64)),
+                    ("calendar_secs", json::num(p.calendar_secs)),
+                    ("legacy_secs", json::num(p.legacy_secs)),
+                    ("events_per_sec", json::num(p.events_per_sec())),
+                    ("legacy_events_per_sec", json::num(p.legacy_events_per_sec())),
+                    ("speedup_vs_legacy", json::num(p.speedup())),
+                    ("approx_peak_bytes", json::num(p.approx_peak_bytes as f64)),
+                    ("exact_metric_bytes", json::num(p.exact_metric_bytes as f64)),
+                    ("sketch_metric_bytes", json::num(p.sketch_metric_bytes as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write simscale points to a JSON file (reports land in `reports/`).
+pub fn save_simscale(path: &str, points: &[SimScalePoint]) -> anyhow::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, simscale_to_json(points).to_string_pretty())?;
+    Ok(())
+}
+
 /// §3.3 memory equations: measured peak KV residency vs model count N.
 /// Returns (n_models, baseline_tokens, prefillshare_tokens) triples from
 /// radix residency accounting at a fixed moderate load.
@@ -450,18 +728,84 @@ pub fn memory_scaling(seed: u64) -> Vec<(usize, u64, u64)> {
 }
 
 /// Convenience wrappers used by benches/CLI.
-pub fn fig3(seed: u64) -> Vec<Row> {
-    arrival_sweep(LLAMA8B, &[react(), reflexion()], seed)
+pub fn fig3(seed: u64, threads: usize) -> Vec<Row> {
+    arrival_sweep(LLAMA8B, &[react(), reflexion()], seed, threads)
 }
 
-pub fn fig4(seed: u64) -> Vec<Row> {
-    concurrency_sweep(LLAMA8B, &react(), seed)
+pub fn fig4(seed: u64, threads: usize) -> Vec<Row> {
+    concurrency_sweep(LLAMA8B, &react(), seed, threads)
 }
 
-pub fn fig5(seed: u64) -> Vec<Row> {
-    arrival_sweep(QWEN14B, &[react(), reflexion()], seed)
+pub fn fig5(seed: u64, threads: usize) -> Vec<Row> {
+    arrival_sweep(QWEN14B, &[react(), reflexion()], seed, threads)
 }
 
-pub fn fig6(seed: u64) -> Vec<Row> {
-    concurrency_sweep(QWEN14B, &react(), seed)
+pub fn fig6(seed: u64, threads: usize) -> Vec<Row> {
+    concurrency_sweep(QWEN14B, &react(), seed, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small heterogeneous job list exercising both systems, a sched
+    /// policy and a decode-reuse arm over two shared traces.
+    fn small_jobs() -> Vec<SweepJob> {
+        let wl = react();
+        let t1 = Arc::new(generate_trace(&wl, 2.0, 30.0, 7));
+        let t2 = Arc::new(generate_trace(&wl, 4.0, 30.0, 7));
+        let mut jobs = Vec::new();
+        for (i, trace) in [&t1, &t2, &t1, &t2, &t1, &t2].iter().enumerate() {
+            let system =
+                if i % 2 == 0 { SystemKind::PrefillShare } else { SystemKind::Baseline };
+            let mut cfg = ClusterConfig::paper_default(system);
+            cfg.seed = 7;
+            if i >= 4 {
+                cfg.decode_reuse = true;
+            }
+            jobs.push(base_job(system.label(), wl.name, "rate", i as f64, cfg, (*trace).clone()));
+        }
+        jobs
+    }
+
+    #[test]
+    fn parallel_sweep_is_byte_identical_to_serial() {
+        let serial = run_sweep(&small_jobs(), 1);
+        let parallel = run_sweep(&small_jobs(), 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.system, p.system);
+            assert_eq!(s.x, p.x);
+            assert_eq!(s.result.metrics, p.result.metrics, "job {} diverged", s.x);
+            assert_eq!(s.result.events_processed, p.result.events_processed);
+            assert_eq!(s.result.approx_peak_bytes, p.result.approx_peak_bytes);
+        }
+    }
+
+    #[test]
+    fn oversubscribed_thread_pool_still_covers_every_job() {
+        // More workers than jobs: the surplus threads must exit cleanly and
+        // every slot must still be filled exactly once.
+        let rows = run_sweep(&small_jobs(), 32);
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.result.sessions_completed > 0));
+    }
+
+    #[test]
+    fn simscale_smoke_asserts_queue_equivalence_and_sketch_memory() {
+        // Tiny counts keep this test cheap; the full 10³→10⁵ sweep runs via
+        // `bench-serving --experiment simscale`.  Queue-equivalence and
+        // sketch-counter checks are asserted inside simscale() itself.
+        let points = simscale_experiment(&[40, 120], 3);
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            assert!(p.sessions > 0);
+            assert!(p.events > 0);
+            assert!(p.approx_peak_bytes > 0);
+            assert!(p.calendar_secs > 0.0 && p.legacy_secs > 0.0);
+        }
+        assert!(points[1].sessions > points[0].sessions);
+        let js = simscale_to_json(&points).to_string_pretty();
+        assert!(js.contains("events_per_sec") && js.contains("sketch_metric_bytes"));
+    }
 }

@@ -129,6 +129,11 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
                         "peak_session_inflight",
                         json::num(r.result.peak_session_inflight as f64),
                     ),
+                    // Simulator self-accounting (the simscale benchmark's
+                    // raw material): events popped over the run and the
+                    // deterministic peak-footprint estimate.
+                    ("events_processed", json::num(r.result.events_processed as f64)),
+                    ("approx_peak_bytes", json::num(r.result.approx_peak_bytes as f64)),
                     // Per-prefill-class splits of the KV-reuse counters
                     // (index = compatibility class; each array sums to its
                     // scalar counterpart above).  Length 1 under the

@@ -378,8 +378,8 @@ impl DecodePool {
                 r.ttft_recorded = true;
                 let t = to_secs(now - r.issued_at);
                 metrics.ttft.record(t);
-                record_position(&mut metrics.ttft_by_position, r.call_idx, t);
-                record_position(&mut metrics.ttft_by_depth, r.depth, t);
+                record_position(&mut metrics.ttft_by_position, metrics.mode, r.call_idx, t);
+                record_position(&mut metrics.ttft_by_depth, metrics.mode, r.depth, t);
             }
             if r.generated >= r.out_tokens {
                 let done = dw.active.swap_remove(i);

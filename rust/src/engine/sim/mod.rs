@@ -58,6 +58,8 @@ use decode_pool::{DecodePool, DecodeReq};
 use prefill_pool::PrefillPool;
 use proxy::Proxy;
 
+use std::sync::Arc;
+
 use crate::engine::config::{ClusterConfig, SystemKind};
 use crate::engine::sched::PrefillJob;
 use crate::metrics::{bump_class, record_position, ServingMetrics};
@@ -116,7 +118,9 @@ struct NodeMeta {
 
 pub struct Simulator {
     cfg: ClusterConfig,
-    trace: Trace,
+    /// Shared, immutable: multi-arm sweeps hand the same `Arc` to every
+    /// arm instead of deep-cloning O(sessions) of DAG scripts per point.
+    trace: Arc<Trace>,
     q: EventQueue<Ev>,
     sessions: Vec<SessionState>,
     /// Per-session, per-node static DAG facts.
@@ -128,10 +132,13 @@ pub struct Simulator {
     pub metrics: ServingMetrics,
     last_completion: SimTime,
     first_arrival: SimTime,
+    /// Events popped off the queue — the `simscale` throughput numerator.
+    events_processed: u64,
 }
 
 impl Simulator {
-    pub fn new(cfg: ClusterConfig, trace: Trace) -> Simulator {
+    pub fn new(cfg: ClusterConfig, trace: impl Into<Arc<Trace>>) -> Simulator {
+        let trace = trace.into();
         // Validate the trace against the cluster before any event fires:
         // `call.model` indexes the decode pool and its interconnect link
         // directly, so a model id outside `0..n_models` would panic (or
@@ -189,27 +196,31 @@ impl Simulator {
             });
             nodes.push(metas);
         }
+        let q = if cfg.legacy_queue { EventQueue::legacy() } else { EventQueue::new() };
+        let metrics = ServingMetrics::with_mode(cfg.metrics);
         Simulator {
             cfg,
             trace,
-            q: EventQueue::new(),
+            q,
             sessions,
             nodes,
             proxy,
             prefill,
             decode,
             net,
-            metrics: ServingMetrics::default(),
+            metrics,
             last_completion: 0,
             first_arrival: SimTime::MAX,
+            events_processed: 0,
         }
     }
 
     pub fn run(mut self) -> SimResult {
-        for (sid, s) in self.trace.sessions.iter().enumerate() {
-            self.q.schedule(s.arrival, Ev::SessionArrive { sid });
+        for sid in 0..self.trace.sessions.len() {
+            self.q.schedule(self.trace.sessions[sid].arrival, Ev::SessionArrive { sid });
         }
         while let Some((_, ev)) = self.q.pop() {
+            self.events_processed += 1;
             self.handle(ev);
         }
         self.finish()
@@ -426,7 +437,12 @@ impl Simulator {
             self.metrics.requests_completed += 1;
             let lat = to_secs(now - req.issued_at);
             self.metrics.request_latency.record(lat);
-            record_position(&mut self.metrics.latency_by_position, req.call_idx, lat);
+            record_position(
+                &mut self.metrics.latency_by_position,
+                self.metrics.mode,
+                req.call_idx,
+                lat,
+            );
             self.on_call_complete(req);
         }
         if n_done > 0 {
@@ -492,6 +508,16 @@ impl Simulator {
         }
         let prefill_busy_total: u64 = prefill_busy.iter().sum();
         let decode_busy_total: u64 = decode_busy.iter().sum();
+        // Deterministic capacity/counter-derived footprint (not allocator
+        // introspection, so serial and parallel sweeps agree exactly):
+        // event queue high-water mark + radix arenas + metric stores +
+        // per-session DAG state.
+        let radix_bytes: usize = self.prefill.workers.iter().map(|w| w.radix.approx_bytes()).sum();
+        let approx_peak_bytes = (self.q.approx_bytes()
+            + radix_bytes
+            + self.metrics.approx_bytes()
+            + self.sessions.capacity() * std::mem::size_of::<SessionState>())
+            as u64;
         let makespan = to_secs(self.last_completion.saturating_sub(self.first_arrival.min(self.last_completion)));
         let throughput = self.metrics.generated.tokens_per_sec(Some(makespan.max(1e-9)));
         let interconnect = self.net.into_stats();
@@ -546,6 +572,8 @@ impl Simulator {
                 .collect(),
             ttft_mean_by_depth: self.metrics.ttft_by_depth.iter().map(|h| h.mean()).collect(),
             peak_session_inflight: self.metrics.peak_session_inflight,
+            events_processed: self.events_processed,
+            approx_peak_bytes,
             interconnect,
             metrics: self.metrics,
         }
@@ -620,13 +648,22 @@ pub struct SimResult {
     /// High-water mark of concurrently in-flight calls of any single
     /// session — 1 for chains, > 1 once fan-out siblings overlap.
     pub peak_session_inflight: u64,
+    /// Events popped over the whole run — divided by wall time this is the
+    /// `simscale` events/sec figure.
+    pub events_processed: u64,
+    /// Deterministic peak-footprint estimate (event-queue high-water mark +
+    /// radix arenas + metric stores + session DAG state), identical across
+    /// serial/parallel runs of the same config.
+    pub approx_peak_bytes: u64,
     /// Per-link transfer accounting (conservation property tests).
     pub interconnect: InterconnectStats,
     pub metrics: ServingMetrics,
 }
 
-/// Convenience: simulate one (config, trace) pair.
-pub fn simulate(cfg: ClusterConfig, trace: Trace) -> SimResult {
+/// Convenience: simulate one (config, trace) pair.  Accepts an owned
+/// `Trace` or a shared `Arc<Trace>` — sweeps pass the `Arc` so every arm
+/// reuses one materialized trace.
+pub fn simulate(cfg: ClusterConfig, trace: impl Into<Arc<Trace>>) -> SimResult {
     Simulator::new(cfg, trace).run()
 }
 
@@ -1149,6 +1186,55 @@ mod tests {
         ] {
             assert_eq!(by_class.iter().sum::<u64>(), global, "{name} per-class sum");
         }
+    }
+
+    // -- scale-up knobs: queue implementation + metrics backing -------------
+
+    #[test]
+    fn legacy_queue_reproduces_calendar_runs_exactly() {
+        // The calendar queue and the original BinaryHeap share one ordering
+        // contract — whole runs (every metric, every event) must agree.
+        for decode_reuse in [false, true] {
+            let trace = small_trace(3.0, 60.0);
+            let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+            cfg.decode_reuse = decode_reuse;
+            let cal = simulate(cfg.clone(), trace.clone());
+            cfg.legacy_queue = true;
+            let leg = simulate(cfg, trace);
+            assert_eq!(cal.metrics, leg.metrics, "reuse={decode_reuse}");
+            assert_eq!(cal.events_processed, leg.events_processed);
+            assert!(cal.events_processed > 0);
+        }
+    }
+
+    #[test]
+    fn sketch_metrics_preserve_counters_and_approximate_quantiles() {
+        use crate::metrics::MetricsMode;
+        let trace = small_trace(2.0, 60.0);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        let exact = simulate(cfg.clone(), trace.clone());
+        cfg.metrics = MetricsMode::Sketch;
+        let sketch = simulate(cfg, trace);
+        // Counters and event flow are mode-independent — only histogram
+        // storage changes.
+        assert_eq!(sketch.sessions_completed, exact.sessions_completed);
+        assert_eq!(sketch.prefill_computed_tokens, exact.prefill_computed_tokens);
+        assert_eq!(sketch.handoff_tokens, exact.handoff_tokens);
+        assert_eq!(sketch.events_processed, exact.events_processed);
+        // Means come from exact running sums; quantiles carry the ~1% bin
+        // error (plus nearest-rank vs interpolation skew on small samples).
+        let close = |a: f64, b: f64, rel: f64| (a - b).abs() <= rel * b.abs() + 1e-6;
+        assert!(close(sketch.mean_session_latency, exact.mean_session_latency, 1e-9));
+        assert!(close(sketch.ttft_mean, exact.ttft_mean, 1e-9));
+        assert!(
+            close(sketch.p95_session_latency, exact.p95_session_latency, 0.1),
+            "{} vs {}",
+            sketch.p95_session_latency,
+            exact.p95_session_latency
+        );
+        assert!(close(sketch.ttft_p95, exact.ttft_p95, 0.1));
+        assert!(sketch.metrics.approx_bytes() < exact.metrics.approx_bytes());
+        assert!(exact.approx_peak_bytes > 0);
     }
 
     #[test]

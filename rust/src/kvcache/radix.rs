@@ -10,16 +10,201 @@
 //! Tokens are `u64`: the real backend feeds byte-tokenizer ids, the cluster
 //! simulator feeds synthetic ids encoding (session, position) — the tree is
 //! agnostic.
-
-use std::collections::HashMap;
+//!
+//! # Memory layout
+//!
+//! Nodes live in an id-indexed arena (`Vec<Node>` + free list), and two
+//! further layout choices keep per-node overhead flat at fleet scale:
+//!
+//! * **Interned edge labels.**  Token runs are stored once in a shared
+//!   [`TokenArena`]; an edge is a `(offset, len)` segment into it.  An edge
+//!   split re-points head and tail at *subranges of the same allocation* —
+//!   no copy, no per-node `Vec` — and eviction returns the exact subrange
+//!   to the arena's coalescing free list.
+//! * **Sorted inline children.**  The child map is an enum — empty, a
+//!   single inline pair, or a sorted vec probed by binary search — instead
+//!   of a per-node `HashMap`.  Radix fanouts here are tiny (sibling keys
+//!   diverge only at branch points), so this removes the hash churn and
+//!   ~48-byte-per-entry table overhead from the match/insert hot path.
 
 type NodeId = usize;
 
+/// An interned token run: `len` tokens starting at `off` in the shared
+/// [`TokenArena`].  `len == 0` marks the root and freed node slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Seg {
+    off: u32,
+    len: u32,
+}
+
+impl Seg {
+    const EMPTY: Seg = Seg { off: 0, len: 0 };
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Shared storage for edge labels.  Alloc is append-or-first-fit; free
+/// coalesces with adjacent ranges so split-then-evict reassembles whole
+/// allocations instead of fragmenting forever.
+#[derive(Debug, Default)]
+struct TokenArena {
+    data: Vec<u64>,
+    /// Free `(off, len)` ranges; pairwise disjoint and never adjacent
+    /// (coalesced on free).
+    free: Vec<(u32, u32)>,
+}
+
+impl TokenArena {
+    fn get(&self, seg: Seg) -> &[u64] {
+        &self.data[seg.off as usize..(seg.off + seg.len) as usize]
+    }
+
+    fn first(&self, seg: Seg) -> u64 {
+        self.data[seg.off as usize]
+    }
+
+    fn alloc(&mut self, tokens: &[u64]) -> Seg {
+        let len = tokens.len() as u32;
+        debug_assert!(len > 0);
+        for i in 0..self.free.len() {
+            let (off, flen) = self.free[i];
+            if flen >= len {
+                if flen == len {
+                    self.free.swap_remove(i);
+                } else {
+                    self.free[i] = (off + len, flen - len);
+                }
+                self.data[off as usize..(off + len) as usize].copy_from_slice(tokens);
+                return Seg { off, len };
+            }
+        }
+        let off = self.data.len() as u32;
+        self.data.extend_from_slice(tokens);
+        Seg { off, len }
+    }
+
+    fn release(&mut self, seg: Seg) {
+        if seg.is_empty() {
+            return;
+        }
+        let (mut off, mut len) = (seg.off, seg.len);
+        // Absorb the (at most one each, by the non-adjacency invariant)
+        // left- and right-adjacent free ranges.
+        let mut i = 0;
+        while i < self.free.len() {
+            let (o, l) = self.free[i];
+            if o + l == off {
+                off = o;
+                len += l;
+                self.free.swap_remove(i);
+            } else if off + len == o {
+                len += l;
+                self.free.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        self.free.push((off, len));
+    }
+}
+
+/// A node's child set, keyed by the first token of each child's edge.
+/// Kept sorted so lookups are a binary search and iteration order is the
+/// key order (deterministic, unlike `HashMap`).
+#[derive(Debug, Default)]
+enum Children {
+    #[default]
+    None,
+    /// The dominant case — agent-chain contexts extend linearly, so most
+    /// interior nodes have exactly one child.  Stored inline: no heap.
+    One((u64, NodeId)),
+    /// Branch points: sorted by key, strictly ascending.
+    Many(Vec<(u64, NodeId)>),
+}
+
+impl Children {
+    fn as_slice(&self) -> &[(u64, NodeId)] {
+        match self {
+            Children::None => &[],
+            Children::One(pair) => std::slice::from_ref(pair),
+            Children::Many(v) => v,
+        }
+    }
+
+    fn get(&self, key: u64) -> Option<NodeId> {
+        match self {
+            Children::None => None,
+            Children::One((k, id)) => (*k == key).then_some(*id),
+            Children::Many(v) => {
+                v.binary_search_by_key(&key, |&(k, _)| k).ok().map(|i| v[i].1)
+            }
+        }
+    }
+
+    /// Insert a key that is not present (descents only attach at
+    /// divergence points, so keys are fresh by construction).
+    fn insert(&mut self, key: u64, id: NodeId) {
+        match self {
+            Children::None => *self = Children::One((key, id)),
+            Children::One(pair) => {
+                debug_assert_ne!(pair.0, key, "duplicate child key");
+                let mut v = Vec::with_capacity(2);
+                v.push(*pair);
+                let pos = usize::from(key > pair.0);
+                v.insert(pos, (key, id));
+                *self = Children::Many(v);
+            }
+            Children::Many(v) => {
+                let pos = v.partition_point(|&(k, _)| k < key);
+                debug_assert!(pos >= v.len() || v[pos].0 != key, "duplicate child key");
+                v.insert(pos, (key, id));
+            }
+        }
+    }
+
+    fn remove(&mut self, key: u64) {
+        match self {
+            Children::None => {}
+            Children::One((k, _)) => {
+                let k = *k;
+                debug_assert_eq!(k, key, "removing absent child");
+                if k == key {
+                    *self = Children::None;
+                }
+            }
+            Children::Many(v) => {
+                if let Ok(i) = v.binary_search_by_key(&key, |&(k, _)| k) {
+                    v.remove(i);
+                }
+                if v.len() == 1 {
+                    let pair = v[0];
+                    *self = Children::One(pair);
+                }
+            }
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        matches!(self, Children::None)
+    }
+
+    /// Heap bytes beyond the inline enum (the `Many` spill vec).
+    fn heap_bytes(&self) -> usize {
+        match self {
+            Children::Many(v) => v.capacity() * std::mem::size_of::<(u64, NodeId)>(),
+            _ => 0,
+        }
+    }
+}
+
 #[derive(Debug)]
 struct Node {
-    /// Edge label: the token run between parent and this node.
-    edge: Vec<u64>,
-    children: HashMap<u64, NodeId>, // keyed by first token of child's edge
+    /// Edge label: the token run between parent and this node, interned
+    /// in the cache's [`TokenArena`].
+    edge: Seg,
+    children: Children,
     parent: Option<NodeId>,
     /// LRU stamp (monotone counter maintained by the tree).
     last_access: u64,
@@ -35,7 +220,7 @@ struct Node {
 
 impl Node {
     fn len(&self) -> usize {
-        self.edge.len()
+        self.edge.len as usize
     }
 
     fn pinned(&self) -> bool {
@@ -94,6 +279,7 @@ impl RadixStats {
 pub struct RadixCache {
     nodes: Vec<Node>,
     free_nodes: Vec<NodeId>,
+    arena: TokenArena,
     root: NodeId,
     clock: u64,
     resident_tokens: usize,
@@ -104,8 +290,8 @@ pub struct RadixCache {
 impl RadixCache {
     pub fn new(capacity_tokens: usize) -> RadixCache {
         let root = Node {
-            edge: Vec::new(),
-            children: HashMap::new(),
+            edge: Seg::EMPTY,
+            children: Children::None,
             parent: None,
             last_access: 0,
             pins: Vec::new(),
@@ -113,6 +299,7 @@ impl RadixCache {
         RadixCache {
             nodes: vec![root],
             free_nodes: Vec::new(),
+            arena: TokenArena::default(),
             root: 0,
             clock: 0,
             resident_tokens: 0,
@@ -157,11 +344,11 @@ impl RadixCache {
             if matched == tokens.len() {
                 break;
             }
-            let Some(&child) = self.nodes[cur].children.get(&tokens[matched]) else {
+            let Some(child) = self.nodes[cur].children.get(tokens[matched]) else {
                 break;
             };
             let elen = self.nodes[child].len();
-            let common = common_len(&self.nodes[child].edge, &tokens[matched..]);
+            let common = common_len(self.arena.get(self.nodes[child].edge), &tokens[matched..]);
             matched += common;
             path.push((child, common));
             if common < elen {
@@ -224,17 +411,20 @@ impl RadixCache {
             if pos == tokens.len() {
                 return 0; // fully present
             }
-            let next = self.nodes[cur].children.get(&tokens[pos]).copied();
-            let Some(child) = next else { break };
-            let elen = self.nodes[child].len();
-            let common = common_len(&self.nodes[child].edge, &tokens[pos..]);
+            let Some(child) = self.nodes[cur].children.get(tokens[pos]) else { break };
+            let seg = self.nodes[child].edge;
+            let elen = seg.len as usize;
+            let common = common_len(self.arena.get(seg), &tokens[pos..]);
             self.nodes[child].last_access = now;
             if common == elen {
                 pos += elen;
                 cur = child;
             } else {
-                // Split the edge at `common`.
-                let tail: Vec<u64> = self.nodes[child].edge.split_off(common);
+                // Split the edge at `common`: head and tail alias disjoint
+                // subranges of the original arena allocation — no copying.
+                let head = Seg { off: seg.off, len: common as u32 };
+                let tail = Seg { off: seg.off + common as u32, len: seg.len - common as u32 };
+                self.nodes[child].edge = head;
                 let grandchildren = std::mem::take(&mut self.nodes[child].children);
                 // Partition pin depths at the split point: entries ≤ common
                 // pinned only the head and stay as-is; deeper entries pin
@@ -248,7 +438,7 @@ impl RadixCache {
                         *d = common;
                     }
                 }
-                let tail_first = tail[0];
+                let tail_first = self.arena.first(tail);
                 let tail_node = self.new_node(Node {
                     edge: tail,
                     children: grandchildren,
@@ -257,7 +447,8 @@ impl RadixCache {
                     pins: tail_pins,
                 });
                 // fix grandchildren parents
-                let gc: Vec<NodeId> = self.nodes[tail_node].children.values().copied().collect();
+                let gc: Vec<NodeId> =
+                    self.nodes[tail_node].children.as_slice().iter().map(|&(_, c)| c).collect();
                 for g in gc {
                     self.nodes[g].parent = Some(tail_node);
                 }
@@ -281,13 +472,18 @@ impl RadixCache {
         self.nodes[cur].pins.push(guard_depth);
         let freed_enough = self.ensure_capacity(need);
         self.nodes[cur].unpin(guard_depth);
-        let take = if freed_enough { need } else { self.capacity_tokens.saturating_sub(self.resident_tokens).min(need) };
+        let take = if freed_enough {
+            need
+        } else {
+            self.capacity_tokens.saturating_sub(self.resident_tokens).min(need)
+        };
         if take == 0 {
             return 0;
         }
+        let seg = self.arena.alloc(&remainder[..take]);
         let leaf = self.new_node(Node {
-            edge: remainder[..take].to_vec(),
-            children: HashMap::new(),
+            edge: seg,
+            children: Children::None,
             parent: Some(cur),
             last_access: now,
             pins: Vec::new(),
@@ -328,13 +524,15 @@ impl RadixCache {
 
     fn remove_leaf(&mut self, id: NodeId) {
         debug_assert!(self.nodes[id].children.is_empty() && !self.nodes[id].pinned());
-        let first = self.nodes[id].edge[0];
+        let seg = self.nodes[id].edge;
+        let first = self.arena.first(seg);
         let parent = self.nodes[id].parent.expect("leaf has parent");
-        self.nodes[parent].children.remove(&first);
-        let freed = self.nodes[id].len();
+        self.nodes[parent].children.remove(first);
+        let freed = seg.len as usize;
         self.resident_tokens -= freed;
         self.stats.evicted_tokens += freed as u64;
-        self.nodes[id].edge.clear();
+        self.arena.release(seg);
+        self.nodes[id].edge = Seg::EMPTY;
         self.nodes[id].parent = None;
         self.free_nodes.push(id);
     }
@@ -346,8 +544,23 @@ impl RadixCache {
         }
     }
 
-    /// Property-test invariant: resident == sum of edges; children keyed by
-    /// first token; no orphan locks on freed slots.
+    /// Deterministic footprint estimate: node arena + token arena + child
+    /// spill vecs + pin vecs.  Counter/capacity-derived (no allocator
+    /// introspection), so identical op sequences report identical bytes.
+    pub fn approx_bytes(&self) -> usize {
+        let mut bytes = self.arena.data.capacity() * std::mem::size_of::<u64>()
+            + self.arena.free.capacity() * std::mem::size_of::<(u32, u32)>()
+            + self.nodes.capacity() * std::mem::size_of::<Node>()
+            + self.free_nodes.capacity() * std::mem::size_of::<NodeId>();
+        for n in &self.nodes {
+            bytes += n.children.heap_bytes() + n.pins.capacity() * std::mem::size_of::<usize>();
+        }
+        bytes
+    }
+
+    /// Property-test invariant: resident == sum of edges; children sorted
+    /// and keyed by first token; no orphan locks on freed slots; every
+    /// arena token is exactly one of live-edge or free-list.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut total = 0usize;
         let mut stack = vec![self.root];
@@ -356,10 +569,22 @@ impl RadixCache {
             visited += 1;
             let n = &self.nodes[id];
             total += n.len();
-            for (&k, &c) in &n.children {
+            let kids = n.children.as_slice();
+            for w in kids.windows(2) {
+                if w[0].0 >= w[1].0 {
+                    return Err(format!("node {id} children not strictly sorted"));
+                }
+            }
+            for &(k, c) in kids {
                 let ce = &self.nodes[c];
-                if ce.edge.first() != Some(&k) {
-                    return Err(format!("child {c} keyed {k} but edge starts {:?}", ce.edge.first()));
+                if ce.edge.is_empty() {
+                    return Err(format!("child {c} of {id} is a freed slot"));
+                }
+                if self.arena.first(ce.edge) != k {
+                    return Err(format!(
+                        "child {c} keyed {k} but edge starts {}",
+                        self.arena.first(ce.edge)
+                    ));
                 }
                 if ce.parent != Some(id) {
                     return Err(format!("child {c} parent wrong"));
@@ -373,6 +598,23 @@ impl RadixCache {
         let live = self.nodes.len() - self.free_nodes.len();
         if visited != live {
             return Err(format!("visited {visited} != live {live}"));
+        }
+        // Arena accounting: live edges and free ranges tile `data` exactly.
+        let free_total: usize = self.arena.free.iter().map(|&(_, l)| l as usize).sum();
+        if total + free_total != self.arena.data.len() {
+            return Err(format!(
+                "arena {} != live {} + free {}",
+                self.arena.data.len(),
+                total,
+                free_total
+            ));
+        }
+        let mut ranges: Vec<(u32, u32)> = self.arena.free.clone();
+        ranges.sort_unstable();
+        for w in ranges.windows(2) {
+            if w[0].0 + w[0].1 >= w[1].0 {
+                return Err(format!("free ranges overlap or touch: {:?} {:?}", w[0], w[1]));
+            }
         }
         Ok(())
     }
@@ -533,5 +775,50 @@ mod tests {
         assert_eq!(h.matched_tokens, 3);
         c.unlock(&h);
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn edge_split_reuses_the_original_arena_allocation() {
+        let mut c = RadixCache::new(1000);
+        c.insert(&[1, 2, 3, 4, 5, 6]);
+        let tokens_before = c.arena.data.len();
+        c.insert(&[1, 2, 9, 9]); // splits [1..6] at depth 2
+        // Only the genuinely new suffix [9, 9] allocates arena space; the
+        // split head/tail alias the original six-token run.
+        assert_eq!(c.arena.data.len(), tokens_before + 2);
+        assert_eq!(c.resident_tokens(), 8);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn arena_reclaims_and_coalesces_evicted_ranges() {
+        let mut c = RadixCache::new(6);
+        c.insert(&[1, 2, 3]);
+        c.insert(&[1, 2, 9]); // split: head [1,2] + tail [3] + leaf [9]
+        c.check_invariants().unwrap();
+        let arena_high_water = c.arena.data.len();
+        c.clear_unpinned();
+        assert_eq!(c.resident_tokens(), 0);
+        c.check_invariants().unwrap();
+        // Everything came back; re-inserting fits in the freed ranges
+        // without growing the arena.
+        c.insert(&[5, 6, 7]);
+        assert!(c.arena.data.len() <= arena_high_water, "free ranges not reused");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn children_stay_sorted_across_branchy_inserts() {
+        let mut c = RadixCache::new(10_000);
+        // Insert sibling keys in descending order: the sorted-vec child set
+        // must order them ascending anyway, and lookups must hit.
+        for k in (0..24u64).rev() {
+            c.insert(&[100, k + 1, k + 1]);
+        }
+        for k in 0..24u64 {
+            assert_eq!(c.peek_prefix(&[100, k + 1, k + 1]), 3);
+        }
+        c.check_invariants().unwrap();
+        assert!(c.approx_bytes() > 0);
     }
 }

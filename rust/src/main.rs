@@ -24,6 +24,7 @@ use prefillshare::engine::experiments as sx;
 use prefillshare::engine::report::{format_row, header, save_rows, Row};
 use prefillshare::engine::sched::SchedPolicy;
 use prefillshare::engine::sim::simulate;
+use prefillshare::metrics::MetricsMode;
 use prefillshare::util::cli::Args;
 use prefillshare::workload::{
     generate_trace_with, private_prefill_classes, workload_by_name, workload_names,
@@ -60,14 +61,16 @@ fn help_text() -> String {
     format!(
         "prefillshare {} — PrefillShare reproduction (see README.md, ARCHITECTURE.md)\n\n\
          USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload> [--options]\n\n\
-         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout|prefillshare [--seed N] [--out file.json]\n\
+         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout|prefillshare|simscale\n\
+                       [--seed N] [--threads N] [--scale N,N,...] [--out file.json]\n\
          sim           [--system baseline|prefillshare] [--sched fifo|sjf|prefix-affinity|chunked]\n\
                        [--chunk-tokens N] [--route prefix-aware|round-robin|random|cache-aware|load-aware]\n\
                        [--link-gbps G] [--prefill-gpus a100,a10,...] [--n-prefill N]\n\
                        [--prefill-classes shared|private|c0,c1,...]\n\
                        [--decode-reuse] [--workload {workloads}] [--rate R] [--duration S]\n\
                        [--arrivals poisson|mmpp] [--burst B] [--burst-dwell S]\n\
-                       [--max-sessions N] [--seed N] [--out file.json]\n\
+                       [--max-sessions N] [--legacy-queue] [--metrics exact|sketch]\n\
+                       [--seed N] [--out file.json]\n\
          accuracy      --experiment fig2|table1|table2 [--steps N] [--artifacts DIR]\n\
          train         --model tiny|small|medium --method full|cc --task arith|transform|toolcall\n\
          serve         [--system baseline|prefillshare] [--sessions N] [--artifacts DIR]\n\
@@ -137,19 +140,81 @@ fn parse_arrivals(args: &Args) -> Result<ArrivalProcess> {
     }
 }
 
+/// Parse `--scale`: comma-separated session counts for the simscale
+/// experiment (defaults to the paper-scale ladder).
+fn parse_scale_counts(args: &Args) -> Result<Vec<usize>> {
+    match args.get("scale") {
+        None => Ok(sx::SIMSCALE_COUNTS.to_vec()),
+        Some(list) => {
+            let counts: Vec<usize> = list
+                .split(',')
+                .map(|t| t.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| {
+                    anyhow::anyhow!(
+                        "--scale expects comma-separated session counts, got `{list}`"
+                    )
+                })?;
+            if counts.is_empty() || counts.contains(&0) {
+                bail!("--scale needs at least one non-zero session count");
+            }
+            Ok(counts)
+        }
+    }
+}
+
 fn cmd_bench_serving(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 0);
+    let threads = args.get_usize("threads", 1);
     let exp = args.get_or("experiment", "fig3");
+    if exp == "simscale" {
+        // Self-benchmark, not a paper figure: each point runs the same
+        // trace through the calendar queue, the legacy heap, and sketch
+        // metrics, asserting equivalence along the way — so the emitted
+        // numbers are throughput/footprint, not serving metrics.
+        let counts = parse_scale_counts(args)?;
+        let points = sx::simscale_experiment(&counts, seed);
+        println!("== simscale (seed {seed}) ==");
+        println!(
+            "{:>10} {:>12} {:>12} {:>12} {:>8} {:>12} {:>12} {:>12}",
+            "sessions",
+            "events",
+            "ev/s(cal)",
+            "ev/s(legacy)",
+            "speedup",
+            "peak_bytes",
+            "exact_m_B",
+            "sketch_m_B"
+        );
+        for p in &points {
+            println!(
+                "{:>10} {:>12} {:>12.0} {:>12.0} {:>8.2} {:>12} {:>12} {:>12}",
+                p.sessions,
+                p.events,
+                p.events_per_sec(),
+                p.legacy_events_per_sec(),
+                p.speedup(),
+                p.approx_peak_bytes,
+                p.exact_metric_bytes,
+                p.sketch_metric_bytes,
+            );
+        }
+        if let Some(out) = args.get("out") {
+            sx::save_simscale(out, &points)?;
+            println!("saved {} points to {out}", points.len());
+        }
+        return Ok(());
+    }
     let rows = match exp {
-        "fig3" => sx::fig3(seed),
-        "fig4" => sx::fig4(seed),
-        "fig5" => sx::fig5(seed),
-        "fig6" => sx::fig6(seed),
-        "sched" => sx::sched_ablation(seed),
-        "routes" => sx::route_ablation_sweep(seed),
-        "reuse" => sx::reuse_ablation(seed),
-        "fanout" => sx::fanout_experiment(seed),
-        "prefillshare" => sx::prefillshare_experiment(seed),
+        "fig3" => sx::fig3(seed, threads),
+        "fig4" => sx::fig4(seed, threads),
+        "fig5" => sx::fig5(seed, threads),
+        "fig6" => sx::fig6(seed, threads),
+        "sched" => sx::sched_ablation(seed, threads),
+        "routes" => sx::route_ablation_sweep(seed, threads),
+        "reuse" => sx::reuse_ablation(seed, threads),
+        "fanout" => sx::fanout_experiment(seed, threads),
+        "prefillshare" => sx::prefillshare_experiment(seed, threads),
         other => bail!("unknown serving experiment `{other}`"),
     };
     let x_name = rows.first().map(|r| r.x_name.clone()).unwrap_or_default();
@@ -238,6 +303,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.prefill_gpus = args.get_list("prefill-gpus", GpuSpec::by_name, "a100,a10");
     // Decode-side session KV residency with delta handoff.
     cfg.decode_reuse = args.bool_flag("decode-reuse");
+    // Simulator internals: the O(1) calendar queue is the default; the
+    // BinaryHeap survives behind `--legacy-queue` as the equivalence
+    // baseline.  `--metrics sketch` trades exact quantiles for bounded
+    // memory (counters stay exact either way).
+    cfg.legacy_queue = args.bool_flag("legacy-queue");
+    cfg.metrics =
+        args.get_choice("metrics", MetricsMode::Exact, MetricsMode::parse, "exact,sketch");
     cfg.seed = seed;
     // Prefill-module compatibility classes, applied to workload + cluster.
     let classes = parse_prefill_classes(args, cfg.n_models)?;
@@ -320,7 +392,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
 
 fn cmd_ablation(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 0);
-    let rows = sx::routing_ablation(seed);
+    let threads = args.get_usize("threads", 1);
+    let rows = sx::routing_ablation(seed, threads);
     println!("== routing ablation (PrefillShare, ReAct @ 3 sess/s, all policies) ==");
     println!("{}", header("rate"));
     for r in &rows {
@@ -425,6 +498,21 @@ mod tests {
         );
         assert!(parse_prefill_classes(&parse("sim --prefill-classes 0,1"), 4).is_err());
         assert!(parse_prefill_classes(&parse("sim --prefill-classes zero,one"), 2).is_err());
+    }
+
+    #[test]
+    fn scale_flag_parses_and_rejects_junk() {
+        let parse = |s: &str| Args::parse(s.split_whitespace().map(String::from));
+        assert_eq!(
+            parse_scale_counts(&parse("bench-serving")).unwrap(),
+            sx::SIMSCALE_COUNTS.to_vec()
+        );
+        assert_eq!(
+            parse_scale_counts(&parse("bench-serving --scale 100,2000")).unwrap(),
+            vec![100, 2000]
+        );
+        assert!(parse_scale_counts(&parse("bench-serving --scale many")).is_err());
+        assert!(parse_scale_counts(&parse("bench-serving --scale 0")).is_err());
     }
 
     #[test]

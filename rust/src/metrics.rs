@@ -1,34 +1,280 @@
 //! Serving metrics: latency histograms (p50/p95/p99), counters, and
 //! throughput accounting — the quantities Figs 3–6 report.
+//!
+//! Histograms run in one of two modes ([`MetricsMode`], `--metrics
+//! exact|sketch`):
+//!
+//! * **exact** (default) — raw samples kept, quantiles sort lazily.  Bit-
+//!   reproducible; the determinism tests and golden fixtures run here.
+//! * **sketch** — a mergeable DDSketch-style log-binned quantile sketch:
+//!   O(1) per sample, memory bounded by the value range (not the sample
+//!   count), quantiles within ~1% relative error.  This is what makes
+//!   10⁵–10⁶-session simulations affordable; it is opt-in precisely
+//!   because its quantiles are approximate.
+//!
+//! The mode is an equality boundary: exact and sketch histograms never
+//! compare equal, so a determinism assertion cannot silently mix them.
 
-/// Sample-accumulating histogram with exact quantiles (runs are bounded, so
-/// we keep the raw samples; quantile sorts lazily).
+/// Histogram backing-store selector (see module docs).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum MetricsMode {
+    #[default]
+    Exact,
+    Sketch,
+}
+
+impl MetricsMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MetricsMode::Exact => "exact",
+            MetricsMode::Sketch => "sketch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MetricsMode> {
+        match s {
+            "exact" => Some(MetricsMode::Exact),
+            "sketch" => Some(MetricsMode::Sketch),
+            _ => None,
+        }
+    }
+}
+
+/// Relative-accuracy target of the sketch: quantile estimates land within
+/// `α · value` of the true order statistic.
+const SKETCH_ALPHA: f64 = 0.01;
+
+/// Values below this are counted in a dedicated zero bin (latencies are
+/// non-negative; the log binning needs a positive floor).
+const SKETCH_MIN_VALUE: f64 = 1e-9;
+
+/// Mergeable log-binned quantile sketch (DDSketch-style, fixed γ).
+///
+/// A value `v ≥ SKETCH_MIN_VALUE` lands in bin `ceil(ln v / ln γ)` with
+/// `γ = (1+α)/(1-α)`; the bin's representative value `2γ^i/(γ+1)` is
+/// within `α·v` of every value in the bin.  Count, sum, min and max are
+/// tracked exactly, so `len`/`mean`/`max` stay precise — only the
+/// quantile positions are approximate.  Bin storage is a contiguous vec
+/// over the touched index range: simulated latencies span ~9 decades at
+/// the extreme, which is ~2100 bins (≈17 KB) regardless of sample count.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    bins: Vec<u64>,
+    /// Logical bin index of `bins[0]`.
+    lo: i64,
+    /// Samples below `SKETCH_MIN_VALUE`.
+    zero: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    ln_gamma: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch {
+            bins: Vec::new(),
+            lo: 0,
+            zero: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ln_gamma: ((1.0 + SKETCH_ALPHA) / (1.0 - SKETCH_ALPHA)).ln(),
+        }
+    }
+}
+
+/// Equality is over the recorded *distribution* — bin counts, zero bin,
+/// count, min and max — not the order-dependent running `sum` (f64
+/// addition does not commute bit-for-bit), mirroring the exact
+/// histogram's order-independent multiset equality.
+impl PartialEq for QuantileSketch {
+    fn eq(&self, other: &Self) -> bool {
+        self.count == other.count
+            && self.zero == other.zero
+            && self.lo == other.lo
+            && self.bins == other.bins
+            && self.min == other.min
+            && self.max == other.max
+    }
+}
+
+impl QuantileSketch {
+    fn bin_index(&self, v: f64) -> i64 {
+        (v.ln() / self.ln_gamma).ceil() as i64
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v < SKETCH_MIN_VALUE {
+            self.zero += 1;
+            return;
+        }
+        let i = self.bin_index(v);
+        if self.bins.is_empty() {
+            self.lo = i;
+            self.bins.push(1);
+            return;
+        }
+        if i < self.lo {
+            let pad = (self.lo - i) as usize;
+            let mut grown = vec![0u64; pad + self.bins.len()];
+            grown[pad..].copy_from_slice(&self.bins);
+            self.bins = grown;
+            self.lo = i;
+        } else if (i - self.lo) as usize >= self.bins.len() {
+            self.bins.resize((i - self.lo) as usize + 1, 0);
+        }
+        self.bins[(i - self.lo) as usize] += 1;
+    }
+
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank quantile: the representative value of the bin holding
+    /// order statistic `round(q·(n-1))`, clamped to the exact [min, max].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        if rank < self.zero {
+            return 0.0;
+        }
+        let gamma = self.ln_gamma.exp();
+        let mut cum = self.zero;
+        for (j, &c) in self.bins.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                let rep =
+                    2.0 * (((self.lo + j as i64) as f64) * self.ln_gamma).exp() / (gamma + 1.0);
+                return rep.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold `other` into `self` (bin-aligned addition; min/max/count fold
+    /// exactly).  Sketches from independent shards merge losslessly — the
+    /// merged quantile error stays within the same α bound.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        self.count += other.count;
+        self.zero += other.zero;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        if other.bins.is_empty() {
+            return;
+        }
+        if self.bins.is_empty() {
+            self.lo = other.lo;
+            self.bins = other.bins.clone();
+            return;
+        }
+        let lo = self.lo.min(other.lo);
+        let hi = (self.lo + self.bins.len() as i64).max(other.lo + other.bins.len() as i64);
+        let mut merged = vec![0u64; (hi - lo) as usize];
+        for (j, &c) in self.bins.iter().enumerate() {
+            merged[(self.lo - lo) as usize + j] += c;
+        }
+        for (j, &c) in other.bins.iter().enumerate() {
+            merged[(other.lo - lo) as usize + j] += c;
+        }
+        self.bins = merged;
+        self.lo = lo;
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<QuantileSketch>() + self.bins.capacity() * std::mem::size_of::<u64>()
+    }
+}
+
+/// Latency histogram.  Exact mode keeps the raw samples (quantiles sort
+/// lazily); sketch mode delegates to a [`QuantileSketch`].
 ///
 /// `PartialEq` compares the recorded *values*, not the lazy sort state: a
-/// quantile read reorders `samples` in place, and the derived impl made two
-/// logically identical bundles compare unequal when only one of them had
-/// answered a quantile query.  The determinism regression tests assert
+/// quantile read reorders `samples` in place, and a derived impl would make
+/// two logically identical bundles compare unequal when only one of them
+/// had answered a quantile query.  The determinism regression tests assert
 /// whole-[`ServingMetrics`] equality across repeated runs, so equality must
 /// be a property of what was recorded, not of who was inspected first.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct Histogram {
     samples: Vec<f64>,
     sorted: bool,
+    /// Running maximum (order-independent, so usable as a cheap equality
+    /// reject); `NEG_INFINITY` when empty.
+    running_max: f64,
+    /// `Some` in sketch mode; `samples` stays empty then.
+    sketch: Option<Box<QuantileSketch>>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            samples: Vec::new(),
+            sorted: false,
+            running_max: f64::NEG_INFINITY,
+            sketch: None,
+        }
+    }
 }
 
 impl PartialEq for Histogram {
     fn eq(&self, other: &Self) -> bool {
-        if self.samples.len() != other.samples.len() {
-            return false;
-        }
-        let sorted = |h: &Histogram| -> Vec<f64> {
-            let mut v = h.samples.clone();
-            if !h.sorted {
-                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        match (&self.sketch, &other.sketch) {
+            (Some(a), Some(b)) => a == b,
+            (None, None) => {
+                // Cheap order-independent rejects before any sort: length,
+                // then the running max.  (No sum fast path: f64 addition is
+                // order-dependent, and equality must hold for equal
+                // multisets recorded in different orders.)
+                if self.samples.len() != other.samples.len()
+                    || self.running_max != other.running_max
+                {
+                    return false;
+                }
+                // Sort each side at most once — already-sorted sides
+                // (anything that answered a quantile) borrow in place.
+                let sorted = |h: &Histogram| -> std::borrow::Cow<'_, [f64]> {
+                    if h.sorted {
+                        std::borrow::Cow::Borrowed(&h.samples)
+                    } else {
+                        let mut v = h.samples.clone();
+                        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                        std::borrow::Cow::Owned(v)
+                    }
+                };
+                sorted(self) == sorted(other)
             }
-            v
-        };
-        sorted(self) == sorted(other)
+            _ => false, // exact vs sketch never compare equal
+        }
     }
 }
 
@@ -37,17 +283,43 @@ impl Histogram {
         Histogram::default()
     }
 
+    pub fn with_mode(mode: MetricsMode) -> Histogram {
+        match mode {
+            MetricsMode::Exact => Histogram::default(),
+            MetricsMode::Sketch => {
+                Histogram { sketch: Some(Box::default()), ..Histogram::default() }
+            }
+        }
+    }
+
+    pub fn mode(&self) -> MetricsMode {
+        if self.sketch.is_some() {
+            MetricsMode::Sketch
+        } else {
+            MetricsMode::Exact
+        }
+    }
+
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
-        self.sorted = false;
+        self.running_max = self.running_max.max(v);
+        match &mut self.sketch {
+            Some(s) => s.record(v),
+            None => {
+                self.samples.push(v);
+                self.sorted = false;
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        match &self.sketch {
+            Some(s) => s.len() as usize,
+            None => self.samples.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.len() == 0
     }
 
     fn ensure_sorted(&mut self) {
@@ -57,8 +329,13 @@ impl Histogram {
         }
     }
 
-    /// Quantile by linear interpolation; NaN on empty.
+    /// Quantile; NaN on empty.  Exact mode: linear interpolation over the
+    /// lazily sorted samples.  Sketch mode: nearest-rank bin value (±α
+    /// relative error).
     pub fn quantile(&mut self, q: f64) -> f64 {
+        if let Some(s) = &self.sketch {
+            return s.quantile(q);
+        }
         if self.samples.is_empty() {
             return f64::NAN;
         }
@@ -88,6 +365,9 @@ impl Histogram {
     }
 
     pub fn mean(&self) -> f64 {
+        if let Some(s) = &self.sketch {
+            return s.mean();
+        }
         if self.samples.is_empty() {
             f64::NAN
         } else {
@@ -95,12 +375,22 @@ impl Histogram {
         }
     }
 
-    pub fn max(&mut self) -> f64 {
-        if self.samples.is_empty() {
-            return f64::NAN;
+    /// Exact maximum from the running tracker — O(1), non-mutating.
+    pub fn max(&self) -> f64 {
+        if self.is_empty() {
+            f64::NAN
+        } else {
+            self.running_max
         }
-        self.ensure_sorted();
-        *self.samples.last().unwrap()
+    }
+
+    /// Heap footprint of the backing store (exact mode grows with the
+    /// sample count; sketch mode is bounded by the value range).
+    pub fn approx_bytes(&self) -> usize {
+        match &self.sketch {
+            Some(s) => s.approx_bytes(),
+            None => self.samples.capacity() * std::mem::size_of::<f64>(),
+        }
     }
 }
 
@@ -139,6 +429,9 @@ impl ThroughputMeter {
 /// The full per-run metric bundle the serving report prints.
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct ServingMetrics {
+    /// Histogram backing mode; every histogram in the bundle (including
+    /// the on-demand-grown position/depth families) is created in it.
+    pub mode: MetricsMode,
     /// End-to-end session latency (arrival -> last agent-call completion).
     pub session_latency: Histogram,
     /// Per-model-invocation TTFT (request issued -> first output token).
@@ -222,10 +515,12 @@ pub struct ServingMetrics {
 }
 
 /// Record `v` into the position-indexed histogram family, growing it to
-/// cover `idx` (positions are dense: call 0..calls_per_session-1).
-pub fn record_position(slots: &mut Vec<Histogram>, idx: usize, v: f64) {
+/// cover `idx` (positions are dense: call 0..calls_per_session-1).  New
+/// slots are created in `mode` so an on-demand-grown family never silently
+/// mixes exact and sketch histograms.
+pub fn record_position(slots: &mut Vec<Histogram>, mode: MetricsMode, idx: usize, v: f64) {
     if slots.len() <= idx {
-        slots.resize_with(idx + 1, Histogram::default);
+        slots.resize_with(idx + 1, || Histogram::with_mode(mode));
     }
     slots[idx].record(v);
 }
@@ -240,6 +535,21 @@ pub fn bump_class(slots: &mut Vec<u64>, class: usize, tokens: u64) {
 }
 
 impl ServingMetrics {
+    /// A bundle whose histograms (and on-demand-grown families) all use
+    /// `mode`.  `ServingMetrics::default()` is exact.
+    pub fn with_mode(mode: MetricsMode) -> ServingMetrics {
+        ServingMetrics {
+            mode,
+            session_latency: Histogram::with_mode(mode),
+            ttft: Histogram::with_mode(mode),
+            request_latency: Histogram::with_mode(mode),
+            prefill_queue_delay: Histogram::with_mode(mode),
+            decode_queue_delay: Histogram::with_mode(mode),
+            handoff_link_wait: Histogram::with_mode(mode),
+            ..ServingMetrics::default()
+        }
+    }
+
     pub fn prefix_hit_ratio(&self) -> f64 {
         let total = self.prefix_hit_tokens + self.prefix_miss_tokens;
         if total == 0 {
@@ -260,6 +570,26 @@ impl ServingMetrics {
         } else {
             reused as f64 / demand as f64
         }
+    }
+
+    /// Heap footprint of every histogram in the bundle — the quantity the
+    /// `simscale` benchmark tracks to show sketch-mode memory stays flat
+    /// while exact-mode memory grows with the session count.
+    pub fn approx_bytes(&self) -> usize {
+        let families = self
+            .ttft_by_position
+            .iter()
+            .chain(&self.latency_by_position)
+            .chain(&self.ttft_by_depth);
+        let scalars = [
+            &self.session_latency,
+            &self.ttft,
+            &self.request_latency,
+            &self.prefill_queue_delay,
+            &self.decode_queue_delay,
+            &self.handoff_link_wait,
+        ];
+        scalars.into_iter().chain(families).map(Histogram::approx_bytes).sum()
     }
 }
 
@@ -292,6 +622,20 @@ mod tests {
         let mut h = Histogram::new();
         assert!(h.p95().is_nan());
         assert!(h.mean().is_nan());
+        assert!(h.max().is_nan());
+    }
+
+    #[test]
+    fn max_is_non_mutating_and_exact() {
+        let mut h = Histogram::new();
+        h.record(3.0);
+        h.record(9.0);
+        h.record(1.0);
+        // max() must not require (or cause) a sort.
+        assert_eq!(h.max(), 9.0);
+        assert!(!h.sorted, "max() forced a sort");
+        h.record(11.0);
+        assert_eq!(h.max(), 11.0);
     }
 
     #[test]
@@ -320,12 +664,12 @@ mod tests {
     fn position_histograms_grow_on_demand_and_compare() {
         let mut a = ServingMetrics::default();
         let mut b = ServingMetrics::default();
-        record_position(&mut a.ttft_by_position, 3, 0.25);
+        record_position(&mut a.ttft_by_position, a.mode, 3, 0.25);
         assert_eq!(a.ttft_by_position.len(), 4);
         assert_eq!(a.ttft_by_position[3].len(), 1);
         assert!(a.ttft_by_position[0].is_empty());
         assert_ne!(a, b);
-        record_position(&mut b.ttft_by_position, 3, 0.25);
+        record_position(&mut b.ttft_by_position, b.mode, 3, 0.25);
         assert_eq!(a, b);
         a.decode_queue_delay.record(0.1);
         assert_ne!(a, b);
@@ -359,6 +703,123 @@ mod tests {
         let mut short = Histogram::new();
         short.record(1.0);
         assert_ne!(a, short);
+        // Same length + same max but different interior values: the fast
+        // path must not declare equality.
+        let mut x = Histogram::new();
+        x.record(1.0);
+        x.record(5.0);
+        let mut y = Histogram::new();
+        y.record(2.0);
+        y.record(5.0);
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn sketch_and_exact_histograms_never_compare_equal() {
+        let mut a = Histogram::with_mode(MetricsMode::Exact);
+        let mut b = Histogram::with_mode(MetricsMode::Sketch);
+        a.record(1.0);
+        b.record(1.0);
+        assert_ne!(a, b);
+        assert_eq!(a.mode(), MetricsMode::Exact);
+        assert_eq!(b.mode(), MetricsMode::Sketch);
+        // Two sketches recording the same values in different orders match.
+        let mut c = Histogram::with_mode(MetricsMode::Sketch);
+        b.record(0.5); // b: 1.0 then 0.5
+        c.record(0.5); // c: 0.5 then 1.0
+        c.record(1.0);
+        let mut b2 = b.clone();
+        assert_eq!(b, c);
+        assert_eq!(b2.quantile(0.5), c.clone().quantile(0.5));
+    }
+
+    #[test]
+    fn sketch_quantiles_within_relative_tolerance() {
+        // Adversarial shapes: log-spread over 8 decades, heavy ties, a
+        // far-separated bimodal mass, and a zero-spiked mixture.
+        let log_spread: Vec<f64> =
+            (0..4000).map(|i| 10f64.powf(-4.0 + 8.0 * (i as f64) / 3999.0)).collect();
+        let ties: Vec<f64> = (0..5000)
+            .map(|i| match i % 4 {
+                0 => 0.125,
+                1 => 0.125,
+                2 => 3.5,
+                _ => 777.0,
+            })
+            .collect();
+        let bimodal: Vec<f64> =
+            (0..3000).map(|i| if i < 1500 { 1e-3 } else { 1e3 }).collect();
+        let zero_spiked: Vec<f64> =
+            (0..2000).map(|i| if i % 3 == 0 { 0.0 } else { 42.0 + (i % 7) as f64 }).collect();
+        for values in [log_spread, ties, bimodal, zero_spiked] {
+            let mut sketch = QuantileSketch::default();
+            for &v in &values {
+                sketch.record(v);
+            }
+            let mut sorted = values.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+                let rank = (q * (values.len() - 1) as f64).round() as usize;
+                let truth = sorted[rank];
+                let est = sketch.quantile(q);
+                assert!(
+                    (est - truth).abs() <= 0.02 * truth.abs() + 1e-9,
+                    "q={q}: sketch {est} vs nearest-rank {truth}"
+                );
+            }
+            assert_eq!(sketch.len(), values.len() as u64);
+            let exact_mean = values.iter().sum::<f64>() / values.len() as f64;
+            assert!((sketch.mean() - exact_mean).abs() <= 1e-9 * exact_mean.abs() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn sketch_merge_matches_single_stream() {
+        let a_vals: Vec<f64> = (0..1000).map(|i| (i as f64 * 0.37).sin().abs() * 50.0).collect();
+        let b_vals: Vec<f64> = (0..800).map(|i| 1e-4 + i as f64).collect();
+        let mut merged = QuantileSketch::default();
+        let mut a = QuantileSketch::default();
+        let mut b = QuantileSketch::default();
+        for &v in &a_vals {
+            a.record(v);
+            merged.record(v);
+        }
+        for &v in &b_vals {
+            b.record(v);
+            merged.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, merged);
+        for q in [0.1, 0.5, 0.9] {
+            assert_eq!(a.quantile(q), merged.quantile(q));
+        }
+    }
+
+    #[test]
+    fn sketch_memory_is_bounded_while_exact_grows() {
+        let mut exact = Histogram::with_mode(MetricsMode::Exact);
+        let mut sketch = Histogram::with_mode(MetricsMode::Sketch);
+        for i in 0..100_000 {
+            let v = 1e-3 + (i % 977) as f64;
+            exact.record(v);
+            sketch.record(v);
+        }
+        assert!(exact.approx_bytes() >= 100_000 * 8);
+        assert!(sketch.approx_bytes() < 64 * 1024, "sketch bytes unbounded");
+        // Quantile reads agree within tolerance on this smooth-ish stream.
+        let p95_exact = exact.p95();
+        let p95_sketch = sketch.p95();
+        assert!((p95_sketch - p95_exact).abs() <= 0.03 * p95_exact);
+    }
+
+    #[test]
+    fn with_mode_propagates_to_grown_families() {
+        let mut m = ServingMetrics::with_mode(MetricsMode::Sketch);
+        assert_eq!(m.ttft.mode(), MetricsMode::Sketch);
+        record_position(&mut m.ttft_by_position, m.mode, 2, 0.5);
+        for h in &m.ttft_by_position {
+            assert_eq!(h.mode(), MetricsMode::Sketch);
+        }
     }
 
     #[test]

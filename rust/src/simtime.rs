@@ -4,9 +4,28 @@
 //! per-token decode steps (hundreds of µs at A100 scale), coarse enough to
 //! never overflow for multi-hour traces.  Events at equal timestamps pop in
 //! insertion order (stable FIFO tie-break), which keeps runs deterministic.
+//!
+//! Two interchangeable scheduler implementations live behind one
+//! [`EventQueue`] API:
+//!
+//! * **calendar** (default, [`EventQueue::new`]) — a calendar queue: a
+//!   power-of-two wheel of fixed-width time buckets plus an overflow heap
+//!   for events beyond the wheel horizon.  Scheduling into a future bucket
+//!   is O(1) (an unsorted push); only the cursor's bucket is ever sorted,
+//!   once, when the cursor reaches it.  At simulator scale (10⁵ sessions,
+//!   tens of millions of events) this replaces the O(log n) sift of a
+//!   global binary heap with amortized O(1) work per event.
+//! * **legacy** ([`EventQueue::legacy`]) — the original single
+//!   `BinaryHeap`, kept as the `--legacy-queue` baseline for the
+//!   `simscale` self-benchmark and as the reference implementation the
+//!   property tests pin the calendar queue against.
+//!
+//! Both order strictly by the `(time, seq)` tuple, so their pop sequences
+//! are identical event-for-event — the golden fixtures do not distinguish
+//! them.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Virtual time in microseconds.
 pub type SimTime = u64;
@@ -21,11 +40,52 @@ pub fn to_secs(t: SimTime) -> f64 {
     t as f64 / MICROS_PER_SEC as f64
 }
 
+/// log2 of the calendar bucket width: 1024 µs per bucket, so decode-step
+/// and prefill-chunk events (hundreds of µs to a few ms apart) land in the
+/// cursor's immediate neighbourhood.
+const BUCKET_SHIFT: u32 = 10;
+
+/// Wheel size in buckets (power of two).  4096 × 1024 µs ≈ 4.2 s of
+/// horizon: arrival events sampled over a multi-minute trace overflow to
+/// the heap, everything the hot simulation loop schedules stays O(1).
+const WHEEL_BUCKETS: u64 = 4096;
+
+const BUCKET_MASK: u64 = WHEEL_BUCKETS - 1;
+
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Reverse<(SimTime, u64, EventBox<E>)>>,
+    imp: Imp<E>,
     seq: u64,
     now: SimTime,
+    len: usize,
+    peak_len: usize,
+}
+
+#[derive(Debug)]
+enum Imp<E> {
+    Calendar(Calendar<E>),
+    Legacy(BinaryHeap<Reverse<(SimTime, u64, EventBox<E>)>>),
+}
+
+/// Calendar-queue state.  Invariants (checked in `debug_assert`s and the
+/// unit tests):
+///
+/// * `drain` holds only events of absolute bucket `cur`, sorted ascending
+///   by `(time, seq)`; the queue head is `drain.front()`.
+/// * `buckets[b & MASK]` holds events of absolute bucket `b` for
+///   `cur < b < cur + WHEEL_BUCKETS`, unsorted (`in_wheel` counts them).
+/// * `overflow` holds events of absolute bucket `>= cur + WHEEL_BUCKETS`.
+/// * After every pop, `cur == now >> BUCKET_SHIFT`, so a schedule at
+///   `at >= now` never lands behind the cursor.
+#[derive(Debug)]
+struct Calendar<E> {
+    drain: VecDeque<(SimTime, u64, E)>,
+    buckets: Vec<Vec<(SimTime, u64, E)>>,
+    /// Absolute bucket index of the cursor (time `cur << BUCKET_SHIFT`).
+    cur: u64,
+    /// Events resident in `buckets` (excludes `drain` and `overflow`).
+    in_wheel: usize,
+    overflow: BinaryHeap<Reverse<(SimTime, u64, EventBox<E>)>>,
 }
 
 /// Wrapper making the payload inert for ordering.
@@ -39,8 +99,8 @@ impl<E> PartialEq for EventBox<E> {
 }
 impl<E> Eq for EventBox<E> {}
 impl<E> PartialOrd for EventBox<E> {
-    fn partial_cmp(&self, _: &Self) -> Option<std::cmp::Ordering> {
-        Some(std::cmp::Ordering::Equal)
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
     }
 }
 impl<E> Ord for EventBox<E> {
@@ -49,9 +109,104 @@ impl<E> Ord for EventBox<E> {
     }
 }
 
+impl<E> Calendar<E> {
+    fn new() -> Calendar<E> {
+        Calendar {
+            drain: VecDeque::new(),
+            buckets: (0..WHEEL_BUCKETS).map(|_| Vec::new()).collect(),
+            cur: 0,
+            in_wheel: 0,
+            overflow: BinaryHeap::new(),
+        }
+    }
+
+    fn schedule(&mut self, at: SimTime, seq: u64, event: E) {
+        let b = at >> BUCKET_SHIFT;
+        debug_assert!(b >= self.cur, "scheduling behind the cursor");
+        if b <= self.cur {
+            // The bucket the cursor is draining: keep the drain buffer
+            // sorted by binary insertion.  A fresh `seq` is larger than
+            // every resident one, so equal-time events keep FIFO order.
+            let pos = self.drain.partition_point(|e| (e.0, e.1) < (at, seq));
+            self.drain.insert(pos, (at, seq, event));
+        } else if b - self.cur < WHEEL_BUCKETS {
+            self.buckets[(b & BUCKET_MASK) as usize].push((at, seq, event));
+            self.in_wheel += 1;
+        } else {
+            self.overflow.push(Reverse((at, seq, EventBox(event))));
+        }
+    }
+
+    /// Move overflow events whose bucket is now within the wheel horizon.
+    fn migrate_overflow(&mut self) {
+        loop {
+            let due = match self.overflow.peek() {
+                Some(Reverse((t, _, _))) => (*t >> BUCKET_SHIFT) < self.cur + WHEEL_BUCKETS,
+                None => false,
+            };
+            if !due {
+                return;
+            }
+            let Reverse((t, s, EventBox(e))) = self.overflow.pop().unwrap();
+            self.buckets[((t >> BUCKET_SHIFT) & BUCKET_MASK) as usize].push((t, s, e));
+            self.in_wheel += 1;
+        }
+    }
+
+    /// Refill `drain` from the next non-empty bucket.  Caller guarantees
+    /// the queue is non-empty and `drain` is empty.
+    fn refill(&mut self) {
+        if self.in_wheel == 0 {
+            // Nothing inside the wheel horizon: jump the cursor straight
+            // to the overflow minimum's bucket instead of scanning every
+            // empty bucket in between.
+            let min_t = match self.overflow.peek() {
+                Some(Reverse((t, _, _))) => *t,
+                None => unreachable!("refill on empty calendar"),
+            };
+            self.cur = min_t >> BUCKET_SHIFT;
+            self.migrate_overflow();
+        } else {
+            loop {
+                self.cur += 1;
+                // Each cursor step exposes one new far bucket
+                // (`cur + WHEEL_BUCKETS - 1`); pull due overflow events in
+                // so they are seen before the cursor passes them.
+                self.migrate_overflow();
+                if !self.buckets[(self.cur & BUCKET_MASK) as usize].is_empty() {
+                    break;
+                }
+            }
+        }
+        let slot = (self.cur & BUCKET_MASK) as usize;
+        let mut v = std::mem::take(&mut self.buckets[slot]);
+        self.in_wheel -= v.len();
+        v.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        self.drain = VecDeque::from(v);
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, E)> {
+        if self.drain.is_empty() {
+            if self.in_wheel == 0 && self.overflow.is_empty() {
+                return None;
+            }
+            self.refill();
+        }
+        let (t, _, e) = self.drain.pop_front().expect("refill yields a non-empty drain");
+        Some((t, e))
+    }
+}
+
 impl<E> EventQueue<E> {
+    /// Calendar-queue scheduler (the default).
     pub fn new() -> EventQueue<E> {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0 }
+        EventQueue { imp: Imp::Calendar(Calendar::new()), seq: 0, now: 0, len: 0, peak_len: 0 }
+    }
+
+    /// The original global-`BinaryHeap` scheduler, kept as the
+    /// `--legacy-queue` baseline and the property-test reference.
+    pub fn legacy() -> EventQueue<E> {
+        EventQueue { imp: Imp::Legacy(BinaryHeap::new()), seq: 0, now: 0, len: 0, peak_len: 0 }
     }
 
     pub fn now(&self) -> SimTime {
@@ -61,8 +216,14 @@ impl<E> EventQueue<E> {
     /// Schedule `event` at absolute time `at` (>= now).
     pub fn schedule(&mut self, at: SimTime, event: E) {
         debug_assert!(at >= self.now, "scheduling into the past");
+        let at = at.max(self.now);
         self.seq += 1;
-        self.heap.push(Reverse((at.max(self.now), self.seq, EventBox(event))));
+        match &mut self.imp {
+            Imp::Calendar(c) => c.schedule(at, self.seq, event),
+            Imp::Legacy(h) => h.push(Reverse((at, self.seq, EventBox(event)))),
+        }
+        self.len += 1;
+        self.peak_len = self.peak_len.max(self.len);
     }
 
     pub fn schedule_in(&mut self, delay: SimTime, event: E) {
@@ -71,18 +232,43 @@ impl<E> EventQueue<E> {
 
     /// Pop the next event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        self.heap.pop().map(|Reverse((t, _, EventBox(e)))| {
-            self.now = t;
-            (t, e)
-        })
+        let popped = match &mut self.imp {
+            Imp::Calendar(c) => c.pop(),
+            Imp::Legacy(h) => h.pop().map(|Reverse((t, _, EventBox(e)))| (t, e)),
+        };
+        if let Some((t, _)) = &popped {
+            self.now = *t;
+            self.len -= 1;
+        }
+        popped
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
+    }
+
+    /// High-water mark of pending events over the queue's lifetime.
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
+    /// Deterministic footprint estimate: peak pending events times the
+    /// per-event slot size, plus the fixed wheel directory.  Derived from
+    /// counters (not allocator state) so serial and parallel sweeps agree
+    /// byte-for-byte.
+    pub fn approx_bytes(&self) -> usize {
+        let slot = std::mem::size_of::<(SimTime, u64, E)>();
+        let directory = match &self.imp {
+            Imp::Calendar(_) => {
+                WHEEL_BUCKETS as usize * std::mem::size_of::<Vec<(SimTime, u64, E)>>()
+            }
+            Imp::Legacy(_) => 0,
+        };
+        self.peak_len * slot + directory
     }
 }
 
@@ -132,5 +318,116 @@ mod tests {
     fn secs_conversion() {
         assert_eq!(secs(1.5), 1_500_000);
         assert!((to_secs(2_250_000) - 2.25).abs() < 1e-9);
+    }
+
+    /// One wheel revolution is WHEEL_BUCKETS << BUCKET_SHIFT µs; events
+    /// past it start in the overflow heap and must still pop in order.
+    #[test]
+    fn overflow_events_pop_in_order() {
+        let horizon = WHEEL_BUCKETS << BUCKET_SHIFT;
+        let mut q = EventQueue::new();
+        q.schedule(3 * horizon + 7, "far");
+        q.schedule(horizon + 1, "mid");
+        q.schedule(5, "near");
+        q.schedule(2 * horizon, "far2");
+        assert_eq!(q.pop(), Some((5, "near")));
+        assert_eq!(q.pop(), Some((horizon + 1, "mid")));
+        assert_eq!(q.pop(), Some((2 * horizon, "far2")));
+        assert_eq!(q.pop(), Some((3 * horizon + 7, "far")));
+        assert!(q.pop().is_none());
+    }
+
+    /// FIFO ties must survive the overflow path: same timestamp beyond the
+    /// wheel horizon, insertion order preserved.
+    #[test]
+    fn overflow_ties_keep_fifo() {
+        let t = (WHEEL_BUCKETS << BUCKET_SHIFT) * 2 + 123;
+        let mut q = EventQueue::new();
+        for i in 0..8 {
+            q.schedule(t, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..8).collect::<Vec<_>>());
+    }
+
+    /// The cursor must jump over arbitrarily long empty stretches (an idle
+    /// cluster waiting for the next arrival) without scanning them.
+    #[test]
+    fn jumps_over_empty_regions() {
+        let mut q = EventQueue::new();
+        q.schedule(1, "a");
+        assert_eq!(q.pop(), Some((1, "a")));
+        let far = 3_600 * MICROS_PER_SEC; // an hour of silence
+        q.schedule(far, "b");
+        q.schedule(far + 2, "c");
+        assert_eq!(q.pop(), Some((far, "b")));
+        assert_eq!(q.pop(), Some((far + 2, "c")));
+        assert!(q.is_empty());
+    }
+
+    /// Scheduling at the current timestamp while the cursor's bucket is
+    /// mid-drain (the decode loop does this constantly: pop DecodeStepDone,
+    /// schedule the next step) must slot the event in (time, seq) order.
+    #[test]
+    fn schedule_into_draining_bucket() {
+        let mut q = EventQueue::new();
+        q.schedule(100, "a");
+        q.schedule(100, "b");
+        q.schedule(101, "d");
+        assert_eq!(q.pop(), Some((100, "a")));
+        q.schedule(100, "c"); // same bucket, same time, after a/b
+        q.schedule(101, "e");
+        assert_eq!(q.pop(), Some((100, "b")));
+        assert_eq!(q.pop(), Some((100, "c")));
+        assert_eq!(q.pop(), Some((101, "d")));
+        assert_eq!(q.pop(), Some((101, "e")));
+    }
+
+    /// The legacy heap and the calendar queue must agree pop-for-pop on an
+    /// interleaved schedule/pop workload with heavy same-time ties.  (The
+    /// large randomized version lives in `tests/properties.rs`.)
+    #[test]
+    fn calendar_matches_legacy_heap() {
+        let horizon = WHEEL_BUCKETS << BUCKET_SHIFT;
+        let times = [40u64, 40, 7, 7, 7, 900, 40, horizon + 3, horizon + 3, 12, 900, 2 * horizon];
+        let mut cal = EventQueue::new();
+        let mut leg = EventQueue::legacy();
+        for (i, &t) in times.iter().enumerate() {
+            cal.schedule(t, i);
+            leg.schedule(t, i);
+        }
+        // Interleave: pop a few, schedule relative to the popped time.
+        for k in 0..3 {
+            let a = cal.pop();
+            let b = leg.pop();
+            assert_eq!(a, b);
+            cal.schedule_in(5 * k, 100 + k as usize);
+            leg.schedule_in(5 * k, 100 + k as usize);
+        }
+        loop {
+            let a = cal.pop();
+            let b = leg.pop();
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(cal.peak_len(), leg.peak_len());
+    }
+
+    #[test]
+    fn len_and_peak_track_pending_events() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule(10, ());
+        q.schedule(20, ());
+        q.schedule(30, ());
+        assert_eq!(q.len(), 3);
+        q.pop();
+        q.pop();
+        assert_eq!(q.len(), 1);
+        q.schedule(40, ());
+        assert_eq!(q.peak_len(), 3);
+        assert!(q.approx_bytes() > 0);
     }
 }

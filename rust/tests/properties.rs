@@ -4,7 +4,10 @@
 //!   * radix prefix cache: structural invariants + semantic equivalence to
 //!     a brute-force prefix store under random workloads
 //!   * block pool: refcount conservation under random alloc/retain/release
-//!   * event queue: global time ordering under random schedules
+//!   * event queue: global time ordering under random schedules; calendar
+//!     vs legacy-heap observational equivalence under heavy time ties
+//!   * metrics: sketch-mode quantiles track exact histograms within the
+//!     sketch's relative-error bound on random mixed distributions
 //!   * simulator: conservation + determinism over random cluster configs
 //!   * KV mixing: positionwise selection correctness on random geometries
 
@@ -13,6 +16,7 @@ use prefillshare::engine::sched::SchedPolicy;
 use prefillshare::engine::sim::simulate;
 use prefillshare::kvcache::block::BlockPool;
 use prefillshare::kvcache::radix::RadixCache;
+use prefillshare::metrics::{Histogram, MetricsMode};
 use prefillshare::simtime::EventQueue;
 use prefillshare::util::rng::Rng;
 use prefillshare::workload::{generate_trace, react};
@@ -264,6 +268,94 @@ fn prop_event_queue_time_monotone() {
             assert!(t >= last, "case {case}");
             assert_eq!(t, q.now());
             last = t;
+        }
+    }
+}
+
+#[test]
+fn prop_calendar_and_legacy_queues_agree_exactly() {
+    // The calendar queue must be observationally identical to the legacy
+    // `BinaryHeap` baseline: the same (time, payload) stream under random
+    // interleavings of schedule bursts and pops.  Times are drawn from a
+    // tiny range so bursts pile many events onto the exact same tick —
+    // the (time, seq) FIFO tie-break is where the two implementations
+    // could most plausibly diverge.
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x888);
+        let mut cal = EventQueue::new();
+        let mut leg = EventQueue::legacy();
+        let mut next_payload = 0u64;
+        for _ in 0..rng.range(50, 400) {
+            if rng.bool(0.6) || cal.is_empty() {
+                let at = cal.now() + rng.range(0, 8) as u64;
+                for _ in 0..rng.range(1, 6) {
+                    cal.schedule(at, next_payload);
+                    leg.schedule(at, next_payload);
+                    next_payload += 1;
+                }
+            } else {
+                assert_eq!(cal.pop(), leg.pop(), "case {case}");
+                assert_eq!(cal.now(), leg.now(), "case {case}");
+            }
+            assert_eq!(cal.len(), leg.len(), "case {case}");
+        }
+        loop {
+            let (a, b) = (cal.pop(), leg.pop());
+            assert_eq!(a, b, "case {case}: drain diverged");
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics: sketch vs exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sketch_quantiles_track_exact_histograms() {
+    // Sketch-mode histograms promise: exact count/mean/max, and quantiles
+    // within the sketch's relative-error bound of the nearest-rank truth.
+    // Random mixed distributions: zeros, heavy ties at one value, a
+    // uniform body and a long multiplicative tail, over scales spanning
+    // several decades.
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x999);
+        let mut exact = Histogram::with_mode(MetricsMode::Exact);
+        let mut sketch = Histogram::with_mode(MetricsMode::Sketch);
+        let n = rng.range(50, 2000);
+        let scale = 10f64.powi(rng.range(0, 7) as i32 - 3);
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = match rng.range(0, 4) {
+                0 => 0.0,
+                1 => scale,
+                2 => rng.f64() * scale,
+                _ => rng.f64() * rng.f64() * 100.0 * scale,
+            };
+            exact.record(v);
+            sketch.record(v);
+            vals.push(v);
+        }
+        assert_eq!(exact.len(), sketch.len(), "case {case}");
+        assert_eq!(exact.max().to_bits(), sketch.max().to_bits(), "case {case}: max");
+        let mean_tol = 1e-9 * exact.mean().abs().max(1.0);
+        assert!(
+            (exact.mean() - sketch.mean()).abs() <= mean_tol,
+            "case {case}: mean {} vs {}",
+            exact.mean(),
+            sketch.mean()
+        );
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let rank = (q * (n - 1) as f64).round() as usize;
+            let truth = vals[rank];
+            let est = sketch.quantile(q);
+            assert!(
+                (est - truth).abs() <= 0.02 * truth.abs() + 1e-9,
+                "case {case}: q{q} est {est} truth {truth} (n {n})"
+            );
         }
     }
 }
