@@ -1,0 +1,58 @@
+//! Standalone entry point for the simlint determinism/soundness pass.
+//!
+//! Usage:
+//!   cargo run --bin simlint [-- --root DIR] [--out FILE]
+//!
+//! Exit codes: 0 clean, 1 unwaived findings, 2 I/O or parse error.
+//! The same pass is reachable as `prefillshare lint`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use prefillshare::lint;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut root = lint::repo_root();
+    let mut out: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--root" if i + 1 < argv.len() => {
+                root = PathBuf::from(&argv[i + 1]);
+                i += 2;
+            }
+            "--out" if i + 1 < argv.len() => {
+                out = Some(PathBuf::from(&argv[i + 1]));
+                i += 2;
+            }
+            "--help" | "-h" => {
+                eprintln!("USAGE: simlint [--root REPO_DIR] [--out REPORT_FILE]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("simlint: unknown argument `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let report = match lint::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("simlint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    print!("{}", report.render());
+    if let Some(path) = &out {
+        if let Err(e) = report.save(path) {
+            eprintln!("simlint: {e:#}");
+            return ExitCode::from(2);
+        }
+    }
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

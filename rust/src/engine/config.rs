@@ -96,6 +96,10 @@ pub struct ClusterConfig {
     /// bit-for-bit; `Sketch` bounds metric memory at fleet scale at the
     /// price of ~1%-approximate quantiles.
     pub metrics: MetricsMode,
+    /// Per-event invariant audit (`--audit`): byte-conservation and
+    /// class-isolation checks on every handoff, observation-only by
+    /// contract — an audited run is byte-identical to an unaudited one.
+    pub audit: bool,
     pub seed: u64,
 }
 
@@ -146,6 +150,7 @@ impl ClusterConfig {
             prefill_classes: Vec::new(),
             legacy_queue: false,
             metrics: MetricsMode::Exact,
+            audit: false,
             seed: 0,
         }
     }
@@ -217,6 +222,7 @@ mod tests {
         assert!(c.chunk_tokens > 0);
         assert!(!c.legacy_queue, "calendar queue is the default");
         assert_eq!(c.metrics, MetricsMode::Exact, "exact metrics are the default");
+        assert!(!c.audit, "audit mode is opt-in; defaults keep fixtures byte-identical");
     }
 
     #[test]

@@ -17,7 +17,8 @@
 //! Execution is synchronous (the CPU PJRT client is effectively serial on
 //! this 1-core testbed); wall-clock segments are attributed per phase.
 
-use std::collections::HashMap;
+// simlint: allow-file(R2) real-execution engine measures actual PJRT wall time
+use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -72,14 +73,19 @@ impl Default for RealEngineConfig {
 struct CacheStore {
     /// (session, model-view) -> cache.  PrefillShare uses model-view =
     /// usize::MAX (the single shared base view); baseline uses the model id.
-    entries: HashMap<(u64, usize), (KvCache, u64)>, // (cache, last-use tick)
+    ///
+    /// `BTreeMap`, not `HashMap` (simlint R1): eviction scans the entries,
+    /// and a last-use-tick tie must break on the smallest key instead of
+    /// `RandomState` iteration order — a `HashMap` here made the LRU
+    /// victim nondeterministic under equal ticks.
+    entries: BTreeMap<(u64, usize), (KvCache, u64)>, // (cache, last-use tick)
     budget_tokens: usize,
     tick: u64,
 }
 
 impl CacheStore {
     fn new(budget_tokens: usize) -> CacheStore {
-        CacheStore { entries: HashMap::new(), budget_tokens, tick: 0 }
+        CacheStore { entries: BTreeMap::new(), budget_tokens, tick: 0 }
     }
 
     fn resident_tokens(&self) -> usize {
@@ -100,15 +106,24 @@ impl CacheStore {
         self.entries.insert(key, (cache, self.tick));
         let mut evicted = 0;
         while self.resident_tokens() > self.budget_tokens && self.entries.len() > 1 {
-            // Evict least-recently-used entry that is not the one just added.
-            let victim = self
-                .entries
-                .iter()
-                .filter(|(k, _)| **k != key)
-                .min_by_key(|(_, (_, t))| *t)
-                .map(|(k, _)| *k);
+            // Evict the least-recently-used entry that is not the one just
+            // added, breaking last-use-tick ties on the smallest key so the
+            // victim is a pure function of store contents.
+            let mut victim: Option<((u64, usize), u64)> = None;
+            for (k, (_, t)) in self.entries.iter() {
+                if *k == key {
+                    continue;
+                }
+                let better = match victim {
+                    None => true,
+                    Some((vk, vt)) => (*t, *k) < (vt, vk),
+                };
+                if better {
+                    victim = Some((*k, *t));
+                }
+            }
             match victim {
-                Some(k) => {
+                Some((k, _)) => {
                     let (c, _) = self.entries.remove(&k).unwrap();
                     evicted += c.len;
                 }
@@ -356,5 +371,60 @@ impl RealEngine {
     /// Current resident KV across prefill workers (bytes) — Eq. (8)/(9).
     pub fn resident_kv_bytes(&self) -> usize {
         self.stores.iter().map(|s| s.resident_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny KvCache with `len` valid positions (geometry is irrelevant to
+    /// the store's token accounting; only `len` is read).
+    fn cache_of_len(len: usize) -> KvCache {
+        KvCache {
+            n_layers: 1,
+            n_heads: 1,
+            d_head: 1,
+            s_max: 8,
+            len,
+            k: vec![0.0; 8],
+            v: vec![0.0; 8],
+        }
+    }
+
+    #[test]
+    fn cache_store_evicts_least_recently_used() {
+        let mut store = CacheStore::new(10);
+        store.put((1, 0), cache_of_len(4));
+        store.put((2, 0), cache_of_len(4));
+        // Refresh session 1 so session 2 becomes the LRU entry.
+        let c1 = store.take((1, 0)).expect("session 1 resident");
+        store.put((1, 0), c1);
+        let evicted = store.put((3, 0), cache_of_len(4));
+        assert_eq!(evicted, 4, "one 4-token entry must be evicted");
+        assert!(store.entries.contains_key(&(1, 0)), "refreshed entry survives");
+        assert!(store.entries.contains_key(&(3, 0)), "just-added entry survives");
+        assert!(!store.entries.contains_key(&(2, 0)), "LRU entry is the victim");
+    }
+
+    #[test]
+    fn cache_store_breaks_tick_ties_on_smallest_key() {
+        // Through the public API every put/take bumps the tick, so last-use
+        // ticks are unique.  The old HashMap store was still latently
+        // nondeterministic: had two entries ever tied, `min_by_key` returned
+        // whichever RandomState enumerated first.  Manufacture that tie
+        // directly and pin the deterministic victim: smallest key wins.
+        let mut store = CacheStore::new(10);
+        store.entries.insert((5, 0), (cache_of_len(4), 7));
+        store.entries.insert((1, 0), (cache_of_len(4), 7));
+        store.tick = 7;
+        let evicted = store.put((9, 0), cache_of_len(4));
+        assert_eq!(evicted, 4, "tie-break still evicts exactly one entry");
+        assert!(
+            !store.entries.contains_key(&(1, 0)),
+            "equal ticks must evict the smallest key, not hash order"
+        );
+        assert!(store.entries.contains_key(&(5, 0)));
+        assert!(store.entries.contains_key(&(9, 0)));
     }
 }

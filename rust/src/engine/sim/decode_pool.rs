@@ -149,6 +149,12 @@ impl DecodePool {
         self.workers[w].residency.pin_for_handoff(sid, class, ctx_sig)
     }
 
+    /// Class of worker `w`'s retained entry for `sid`, if any
+    /// (observation-only passthrough for the `--audit` checks).
+    pub fn retained_class(&self, w: usize, sid: usize) -> Option<usize> {
+        self.workers[w].residency.retained_class(sid)
+    }
+
     /// The session completed: drop whatever any worker still retains for it.
     pub fn release_session(&mut self, sid: usize) {
         for dw in &mut self.workers {

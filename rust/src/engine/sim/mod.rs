@@ -116,6 +116,24 @@ struct NodeMeta {
 // Simulator
 // ---------------------------------------------------------------------------
 
+/// Observation-only state for `--audit` (`cfg.audit`): per-event checks
+/// of the byte-conservation identity and of class isolation.  The audit
+/// only *reads* simulator state and accumulates its own shadow
+/// counters, so an audited run is byte-identical to an unaudited one
+/// (pinned by `audit_mode_is_observation_only`).
+#[derive(Debug, Default)]
+struct Audit {
+    /// Σ context demand per class over every handoff sized so far.
+    demand_by_class: Vec<u64>,
+    /// Σ host-reload tokens per class *sized* at handoff.  The metrics
+    /// counter `host_reload_tokens_by_class` charges them only at decode
+    /// admission, so per-event it trails this shadow; the two must agree
+    /// exactly once the run drains (`audit_finish`).
+    host_sized_by_class: Vec<u64>,
+    /// Handoffs checked — proves in tests that the audit actually ran.
+    checks: u64,
+}
+
 pub struct Simulator {
     cfg: ClusterConfig,
     /// Shared, immutable: multi-arm sweeps hand the same `Arc` to every
@@ -134,6 +152,8 @@ pub struct Simulator {
     first_arrival: SimTime,
     /// Events popped off the queue — the `simscale` throughput numerator.
     events_processed: u64,
+    /// `Some` iff `cfg.audit`: per-event invariant checks, observation-only.
+    audit: Option<Audit>,
 }
 
 impl Simulator {
@@ -198,6 +218,7 @@ impl Simulator {
         }
         let q = if cfg.legacy_queue { EventQueue::legacy() } else { EventQueue::new() };
         let metrics = ServingMetrics::with_mode(cfg.metrics);
+        let audit = if cfg.audit { Some(Audit::default()) } else { None };
         Simulator {
             cfg,
             trace,
@@ -212,6 +233,7 @@ impl Simulator {
             last_completion: 0,
             first_arrival: SimTime::MAX,
             events_processed: 0,
+            audit,
         }
     }
 
@@ -362,6 +384,14 @@ impl Simulator {
             } else {
                 (Vec::new(), 0)
             };
+            // `--audit` reads the retained entry's class *before* the pin:
+            // `pin_for_handoff` drops a class-mismatched entry on the spot,
+            // so afterwards the evidence is gone.
+            let pre_pin_class = if self.audit.is_some() && self.cfg.decode_reuse {
+                self.decode.retained_class(dw, job.sid)
+            } else {
+                None
+            };
             let (reuse_tokens, host_tokens) = if self.cfg.decode_reuse {
                 self.decode.pin_for_handoff(dw, job.sid, job.class, &sig)
             } else {
@@ -401,6 +431,9 @@ impl Simulator {
                     reuse_tokens as u64,
                 );
             }
+            if self.audit.is_some() {
+                self.audit_handoff(&job, pre_pin_class, reuse_tokens, host_tokens, shipped);
+            }
             let bytes = (shipped as f64 * self.cfg.cost.llm.kv_bytes_per_token()) as u64;
             let now = self.q.now();
             let at = self.net.handoff(dw, now, dur_us, bytes);
@@ -408,6 +441,109 @@ impl Simulator {
             self.q.schedule(at, Ev::HandoffDone { req, worker: dw });
         }
         self.try_start_prefill(w);
+    }
+
+    /// `--audit` hook, run after a handoff is sized and its metrics
+    /// bumped.  Per event it checks: (a) the GPU-reuse/host-reload split
+    /// is exclusive and covers the context exactly; (b) a class-mismatched
+    /// residency entry yielded zero reuse; (c) every token of the job's
+    /// radix key carries the job's own class (class isolation at radix
+    /// insert/match); (d) the per-class byte-conservation identity
+    /// `shipped + reused + host_sized == context demand`.
+    fn audit_handoff(
+        &mut self,
+        job: &PrefillJob,
+        pre_pin_class: Option<usize>,
+        reuse_tokens: usize,
+        host_tokens: usize,
+        shipped: usize,
+    ) {
+        let Some(audit) = self.audit.as_mut() else { return };
+        audit.checks += 1;
+        assert!(
+            reuse_tokens == 0 || host_tokens == 0,
+            "audit: sid {} node {}: a handoff cannot draw on GPU-resident and \
+             host-parked KV at once (reuse {reuse_tokens}, host {host_tokens})",
+            job.sid,
+            job.call_idx
+        );
+        assert_eq!(
+            shipped + reuse_tokens + host_tokens,
+            job.ctx_len,
+            "audit: sid {} node {}: shipped + reused + reloaded != context demand",
+            job.sid,
+            job.call_idx
+        );
+        if let Some(c) = pre_pin_class {
+            assert!(
+                c == job.class || (reuse_tokens == 0 && host_tokens == 0),
+                "audit: sid {} node {}: KV retained under class {c} was reused by a \
+                 class-{} call",
+                job.sid,
+                job.call_idx,
+                job.class
+            );
+        }
+        for &tok in &job.key {
+            assert_eq!(
+                simtokens::class_of(tok),
+                job.class,
+                "audit: sid {} node {}: radix key token {tok:#x} encodes a foreign class",
+                job.sid,
+                job.call_idx
+            );
+        }
+        bump_class(&mut audit.demand_by_class, job.class, job.ctx_len as u64);
+        bump_class(&mut audit.host_sized_by_class, job.class, host_tokens as u64);
+        for c in 0..audit.demand_by_class.len() {
+            let shipped_c = self.metrics.handoff_tokens_by_class.get(c).copied().unwrap_or(0);
+            let reused_c =
+                self.metrics.decode_reuse_tokens_by_class.get(c).copied().unwrap_or(0);
+            let sized_c = audit.host_sized_by_class.get(c).copied().unwrap_or(0);
+            let reloaded_c =
+                self.metrics.host_reload_tokens_by_class.get(c).copied().unwrap_or(0);
+            assert!(
+                reloaded_c <= sized_c,
+                "audit: class {c}: more host KV reloaded ({reloaded_c}) than sized ({sized_c})"
+            );
+            assert_eq!(
+                shipped_c + reused_c + sized_c,
+                audit.demand_by_class[c],
+                "audit: class {c}: byte-conservation identity broken at handoff"
+            );
+        }
+    }
+
+    /// End-of-run audit: once the closed loop drains, every host reload
+    /// sized at handoff must have been charged at decode admission, and
+    /// the conservation identity must hold per class and globally.
+    fn audit_finish(&self) {
+        let Some(audit) = &self.audit else { return };
+        for c in 0..audit.demand_by_class.len() {
+            let shipped_c = self.metrics.handoff_tokens_by_class.get(c).copied().unwrap_or(0);
+            let reused_c =
+                self.metrics.decode_reuse_tokens_by_class.get(c).copied().unwrap_or(0);
+            let reloaded_c =
+                self.metrics.host_reload_tokens_by_class.get(c).copied().unwrap_or(0);
+            assert_eq!(
+                reloaded_c,
+                audit.host_sized_by_class.get(c).copied().unwrap_or(0),
+                "audit: class {c}: host KV sized at handoff was never charged at admission"
+            );
+            assert_eq!(
+                shipped_c + reused_c + reloaded_c,
+                audit.demand_by_class[c],
+                "audit: class {c}: byte-conservation identity broken at end of run"
+            );
+        }
+        let demand: u64 = audit.demand_by_class.iter().sum();
+        assert_eq!(
+            self.metrics.handoff_tokens
+                + self.metrics.decode_reuse_tokens
+                + self.metrics.host_reload_tokens,
+            demand,
+            "audit: global byte-conservation identity broken at end of run"
+        );
     }
 
     fn on_handoff_done(&mut self, req: DecodeReq, worker: usize) {
@@ -489,6 +625,7 @@ impl Simulator {
     }
 
     fn finish(mut self) -> SimResult {
+        self.audit_finish();
         // Fold per-worker radix stats into the global metrics (the per-call
         // hit/miss counters were already tracked inline; radix stats give a
         // cross-check + eviction counts).
@@ -1186,6 +1323,82 @@ mod tests {
         ] {
             assert_eq!(by_class.iter().sum::<u64>(), global, "{name} per-class sum");
         }
+    }
+
+    // -- audit mode (`--audit`): observation-only invariant checks ----------
+
+    #[test]
+    fn audit_mode_is_observation_only() {
+        // `ServingMetrics` equality covers every counter and histogram, so
+        // metric equality proves the audit layer changed nothing.  Both
+        // golden-scenario shapes from the CI smoke list are exercised:
+        // react+reuse and fanout+reuse.
+        use crate::workload::fanout;
+        let trace = small_trace(2.0, 60.0);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.decode_reuse = true;
+        let off = simulate(cfg.clone(), trace.clone());
+        cfg.audit = true;
+        let on = simulate(cfg, trace);
+        assert_eq!(on.metrics, off.metrics, "audit must not change a react+reuse run");
+
+        let trace = generate_trace(&fanout(), 2.0, 60.0, 42);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.decode_reuse = true;
+        let off = simulate(cfg.clone(), trace.clone());
+        cfg.audit = true;
+        let on = simulate(cfg, trace);
+        assert_eq!(on.metrics, off.metrics, "audit must not change a fanout+reuse run");
+        assert!(on.handoffs_delta > 0, "scenario must actually exercise reuse");
+    }
+
+    #[test]
+    fn audit_passes_under_private_classes_and_reuse() {
+        // The prefillshare golden scenario shape: per-model private classes
+        // with decode reuse — the configuration where class isolation has
+        // real bite.  Audit-on must pass every per-event check and
+        // reproduce the unaudited run exactly.
+        let n = ClusterConfig::paper_default(SystemKind::PrefillShare).n_models;
+        let classes = crate::workload::private_prefill_classes(n);
+        let wl = react().with_prefill_classes(classes.clone());
+        let trace = generate_trace(&wl, 2.0, 60.0, 42);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.prefill_classes = classes;
+        cfg.decode_reuse = true;
+        let off = simulate(cfg.clone(), trace.clone());
+        cfg.audit = true;
+        let on = simulate(cfg, trace);
+        assert_eq!(on.metrics, off.metrics);
+    }
+
+    #[test]
+    fn audit_covers_the_host_reload_path() {
+        // Narrow link + tight retained budget -> host parks and reloads:
+        // the trickiest leg of the conservation identity, because reloads
+        // are sized at handoff but charged only at decode admission.
+        let trace = small_trace(2.0, 40.0);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.decode_reuse = true;
+        cfg.decode_kv_tokens = 6_000;
+        cfg.link_contended = true;
+        cfg.cost.link.handoff_bytes_per_s = 4e9;
+        let off = simulate(cfg.clone(), trace.clone());
+        assert!(off.metrics.host_reload_tokens > 0, "scenario must exercise reloads");
+        cfg.audit = true;
+        let on = simulate(cfg, trace);
+        assert_eq!(on.metrics, off.metrics);
+    }
+
+    #[test]
+    fn audit_runs_under_default_flags_too() {
+        // No decode reuse, single shared class: the identity degenerates
+        // to handoff == demand, and every radix key is class 0.
+        let trace = small_trace(2.0, 40.0);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.audit = true;
+        let r = simulate(cfg, trace.clone());
+        assert_eq!(r.sessions_completed as usize, trace.sessions.len());
+        assert!(r.metrics.handoffs > 0, "audit hook must have run per handoff");
     }
 
     // -- scale-up knobs: queue implementation + metrics backing -------------

@@ -173,6 +173,13 @@ impl ResidencyLedger {
         }
     }
 
+    /// Class of the entry retained for `sid`, if any.  Observation-only:
+    /// the `--audit` mode reads it *before* `pin_for_handoff` to verify
+    /// that a class-mismatched entry yields zero reuse.
+    pub fn retained_class(&self, sid: usize) -> Option<usize> {
+        self.sessions.get(&sid).map(|e| e.class)
+    }
+
     /// Retain a finished request's KV: `class` = the finishing call's
     /// prefill class, `tokens` = its full footprint, `base` the
     /// shared-prefix share, `sig` the output runs (the call's ancestor

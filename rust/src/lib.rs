@@ -11,6 +11,7 @@
 pub mod costmodel;
 pub mod engine;
 pub mod kvcache;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

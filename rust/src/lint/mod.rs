@@ -1,0 +1,116 @@
+//! simlint: a hermetic static-analysis pass enforcing the simulator's
+//! determinism/soundness contract at the source level.
+//!
+//! The determinism contract (ARCHITECTURE.md) is what makes the five
+//! byte-pinned golden fixtures and `--threads N`-invariant sweeps
+//! meaningful.  Until now it was enforced only after the fact, when a
+//! fixture diff fired.  simlint turns the contract into a machine
+//! -checked gate:
+//!
+//!   R1  no HashMap/HashSet iteration in simulation-state modules
+//!   R2  no wall-clock reads outside the allowlisted timing shims
+//!   R3  no threads/atomics outside the `run_sweep` runner
+//!   R4  conservation counters (…tokens/…bytes) stay integer-typed
+//!   R5  registry names appear in help text, CI smoke list, EXPERIMENTS.md
+//!
+//! Exceptions are inline and greppable: `// simlint: allow(R2) reason`
+//! (line) or `// simlint: allow-file(R2) reason` (file).  The analyzer
+//! is dependency-free (no `syn`, no network) in the spirit of the
+//! vendored-facade constraint; entry points are `cargo run --bin
+//! simlint` and the `lint` subcommand (`prefillshare lint`, also
+//! reachable as `bench-serving --experiment lint`).
+//!
+//! The runtime half of the same contract is `--audit` (see
+//! `engine::sim`): per-event byte-conservation and class-isolation
+//! checks, observation-only by construction.
+
+pub mod registry;
+pub mod report;
+pub mod rules;
+pub mod source;
+
+pub use report::{Finding, LintReport};
+pub use rules::analyze_source;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Repo root for in-tree runs: the parent of the cargo manifest dir
+/// (`rust/`).  The simlint binary accepts `--root` to override.
+pub fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("simlint: reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(repo_root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(repo_root).unwrap_or(p);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Run the full pass (R1–R4 per file, R5 across registries) over
+/// `rust/src` under `repo_root`.  The report is deterministic: files
+/// are walked in sorted order and findings sort by (file, line, rule).
+pub fn run(repo_root: &Path) -> Result<LintReport> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut waived = 0usize;
+    for f in &files {
+        let rel = rel_path(repo_root, f);
+        let content =
+            fs::read_to_string(f).with_context(|| format!("simlint: reading {rel}"))?;
+        let (fnd, w) = rules::analyze_source(&rel, &content);
+        findings.extend(fnd);
+        waived += w;
+    }
+    findings.extend(registry::check(repo_root)?);
+    findings.sort();
+    findings.dedup();
+    Ok(LintReport { findings, waived, files_scanned: files.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repo_root_contains_the_source_tree() {
+        let root = repo_root();
+        assert!(root.join("rust/src/main.rs").is_file(), "{}", root.display());
+        assert!(root.join("EXPERIMENTS.md").is_file());
+    }
+
+    #[test]
+    fn run_scans_the_tree_deterministically() {
+        let root = repo_root();
+        let a = run(&root).expect("lint pass runs");
+        let b = run(&root).expect("lint pass runs");
+        assert!(a.files_scanned > 10, "should walk the whole src tree");
+        assert_eq!(a.render(), b.render(), "report must be byte-stable");
+    }
+}

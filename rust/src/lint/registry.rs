@@ -1,0 +1,299 @@
+//! R5: registry-agreement checks.
+//!
+//! Every name a user can pass on the CLI lives in exactly one source
+//! registry:
+//!   - scheduler policies  -> `SchedPolicy::label()` match arms
+//!   - routing policies    -> `RoutePolicy::label()` match arms
+//!   - workload scenarios  -> `workload_registry()` constructor calls
+//!   - bench experiments   -> `cmd_bench_serving()` dispatch arms
+//! R5 cross-references each registry against the places that promise
+//! coverage: the `help_text()` body in `main.rs`, the CI smoke list
+//! (`.github/workflows/ci.yml`), and EXPERIMENTS.md.  A name present in
+//! a registry but missing from any of those is a finding — new policies
+//! cannot land undocumented or unsmoked.
+//!
+//! Workloads are interpolated into the help text at runtime via the
+//! literal `{workloads}` marker, so that marker satisfies the help
+//! check for every workload name.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::report::Finding;
+use super::source;
+
+struct RegistryFile {
+    rel: &'static str,
+    raw: String,
+    /// Comment-stripped, strings blanked (for brace counting).
+    code: Vec<String>,
+    /// Comment-stripped, strings kept (for literal extraction).
+    kept: Vec<String>,
+}
+
+fn load(root: &Path, rel: &'static str) -> Result<RegistryFile> {
+    let raw = fs::read_to_string(root.join(rel))
+        .with_context(|| format!("simlint registry check: reading {rel}"))?;
+    let code = source::strip(&raw, false);
+    let kept = source::strip(&raw, true);
+    Ok(RegistryFile { rel, raw, code, kept })
+}
+
+/// 0-based inclusive line range of the function whose signature line
+/// contains `marker`, found by brace counting over stripped code.
+fn fn_span(code: &[String], marker: &str) -> Option<(usize, usize)> {
+    let start = code.iter().position(|l| l.contains(marker))?;
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (idx, line) in code.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some((start, idx));
+        }
+    }
+    None
+}
+
+/// All `"..."` literals within a span of strings-kept lines.
+fn span_literals(kept: &[String], span: (usize, usize)) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for idx in span.0..=span.1.min(kept.len().saturating_sub(1)) {
+        let line = &kept[idx];
+        let mut rest = line.as_str();
+        let mut _base = 0usize;
+        while let Some(open) = rest.find('"') {
+            let after = &rest[open + 1..];
+            let Some(close) = after.find('"') else { break };
+            let lit = &after[..close];
+            if !lit.is_empty() {
+                out.push((lit.to_string(), idx + 1));
+            }
+            rest = &after[close + 1..];
+            _base += open + close + 2;
+        }
+    }
+    out
+}
+
+/// Experiment names from the `cmd_bench_serving` dispatch: match arms of
+/// the form `"name" => ...` plus equality tests `exp == "name"`.
+fn dispatch_names(kept: &[String], span: (usize, usize)) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for idx in span.0..=span.1.min(kept.len().saturating_sub(1)) {
+        let line = &kept[idx];
+        let t = line.trim_start();
+        // `"fig3" => ...` (also `"a" | "b" => ...`).
+        if t.starts_with('"') {
+            let mut rest = t;
+            let mut names = Vec::new();
+            loop {
+                let Some(open) = rest.find('"') else { break };
+                let after = &rest[open + 1..];
+                let Some(close) = after.find('"') else { break };
+                names.push(after[..close].to_string());
+                rest = after[close + 1..].trim_start();
+                if let Some(r) = rest.strip_prefix('|') {
+                    rest = r.trim_start();
+                } else {
+                    break;
+                }
+            }
+            if rest.starts_with("=>") {
+                for n in names {
+                    out.push((n, idx + 1));
+                }
+            }
+        }
+        // `exp == "simscale"` guards outside the match.
+        let mut rest = line.as_str();
+        while let Some(p) = rest.find("== \"") {
+            let after = &rest[p + 4..];
+            let Some(close) = after.find('"') else { break };
+            out.push((after[..close].to_string(), idx + 1));
+            rest = &after[close + 1..];
+        }
+    }
+    out
+}
+
+/// Workload names from `workload_registry()`: constructor calls
+/// `ident()` in the body (skipping the `fn` signature itself).
+fn call_idents(code: &[String], span: (usize, usize)) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for idx in span.0..=span.1.min(code.len().saturating_sub(1)) {
+        let line = &code[idx];
+        let chars: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            if chars[i].is_alphabetic() || chars[i] == '_' {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                let ident: String = chars[start..i].iter().collect();
+                let called = chars.get(i) == Some(&'(') && chars.get(i + 1) == Some(&')');
+                let preceded_by_fn = line[..start].trim_end().ends_with("fn");
+                if called && !preceded_by_fn && ident != "vec" {
+                    out.push((ident, idx + 1));
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Word-boundary presence check for registry names.  `-` counts as an
+/// identifier char here so `prefix-aware` cannot be satisfied by
+/// `prefix-awareness`, and `sched` is not satisfied by `--sched`.
+fn doc_has_name(text: &str, name: &str) -> bool {
+    let is_name_char = |c: char| c.is_alphanumeric() || c == '_' || c == '-';
+    let mut from = 0;
+    while let Some(rel) = text[from..].find(name) {
+        let start = from + rel;
+        let end = start + name.len();
+        let before_ok = start == 0 || !is_name_char(text[..start].chars().next_back().unwrap());
+        let after_ok = end >= text.len() || !is_name_char(text[end..].chars().next().unwrap());
+        if before_ok && after_ok {
+            return true;
+        }
+        from = start + name.len().max(1);
+    }
+    false
+}
+
+pub fn check(repo_root: &Path) -> Result<Vec<Finding>> {
+    let main_rs = load(repo_root, "rust/src/main.rs")?;
+    let sched_rs = load(repo_root, "rust/src/engine/sched/mod.rs")?;
+    let route_rs = load(repo_root, "rust/src/engine/route/mod.rs")?;
+    let workload_rs = load(repo_root, "rust/src/workload.rs")?;
+    let ci = fs::read_to_string(repo_root.join(".github/workflows/ci.yml"))
+        .context("simlint registry check: reading .github/workflows/ci.yml")?;
+    let docs = fs::read_to_string(repo_root.join("EXPERIMENTS.md"))
+        .context("simlint registry check: reading EXPERIMENTS.md")?;
+
+    let help_span = fn_span(&main_rs.code, "fn help_text")
+        .context("simlint registry check: fn help_text not found in main.rs")?;
+    let help_text: String = main_rs.kept[help_span.0..=help_span.1].join("\n");
+
+    let mut registries: Vec<(&str, &RegistryFile, Vec<(String, usize)>)> = Vec::new();
+
+    let sched_span = fn_span(&sched_rs.code, "fn label")
+        .context("simlint registry check: SchedPolicy::label not found")?;
+    registries.push(("scheduler policy", &sched_rs, span_literals(&sched_rs.kept, sched_span)));
+
+    let route_span = fn_span(&route_rs.code, "fn label")
+        .context("simlint registry check: RoutePolicy::label not found")?;
+    registries.push(("routing policy", &route_rs, span_literals(&route_rs.kept, route_span)));
+
+    let wl_span = fn_span(&workload_rs.code, "fn workload_registry")
+        .context("simlint registry check: workload_registry not found")?;
+    registries.push(("workload scenario", &workload_rs, call_idents(&workload_rs.code, wl_span)));
+
+    let bench_span = fn_span(&main_rs.code, "fn cmd_bench_serving")
+        .context("simlint registry check: cmd_bench_serving not found")?;
+    registries.push(("experiment", &main_rs, dispatch_names(&main_rs.kept, bench_span)));
+
+    let workloads_marker = help_text.contains("{workloads}");
+    let mut findings = Vec::new();
+    let mut seen: std::collections::BTreeSet<(String, String)> = Default::default();
+    for (kind, file, names) in registries {
+        for (name, line) in names {
+            if !seen.insert((kind.to_string(), name.clone())) {
+                continue;
+            }
+            let help_ok = doc_has_name(&help_text, &name)
+                || (kind == "workload scenario" && workloads_marker);
+            let mut missing: Vec<&str> = Vec::new();
+            if !help_ok {
+                missing.push("help_text in rust/src/main.rs");
+            }
+            if !doc_has_name(&ci, &name) {
+                missing.push(".github/workflows/ci.yml smoke list");
+            }
+            if !doc_has_name(&docs, &name) {
+                missing.push("EXPERIMENTS.md");
+            }
+            for target in missing {
+                findings.push(Finding {
+                    file: file.rel.to_string(),
+                    line,
+                    rule: "R5",
+                    msg: format!("{kind} `{name}` is registered here but missing from {target}"),
+                    snippet: file
+                        .raw
+                        .lines()
+                        .nth(line.saturating_sub(1))
+                        .map(|l| l.trim().to_string())
+                        .unwrap_or_default(),
+                });
+            }
+        }
+    }
+    findings.sort();
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_span_counts_braces() {
+        let src = "fn a() {\n  if x { y(); }\n}\nfn b() {}\n";
+        let code = source::strip(src, false);
+        assert_eq!(fn_span(&code, "fn a"), Some((0, 2)));
+        assert_eq!(fn_span(&code, "fn b"), Some((3, 3)));
+    }
+
+    #[test]
+    fn dispatch_names_sees_arms_and_eq_guards() {
+        let src = "fn cmd() {\n  if exp == \"simscale\" { return; }\n  match exp {\n    \"fig3\" => run(),\n    \"a\" | \"b\" => run(),\n    other => bail(),\n  }\n}\n";
+        let code = source::strip(src, false);
+        let kept = source::strip(src, true);
+        let span = fn_span(&code, "fn cmd").unwrap();
+        let names: Vec<String> = dispatch_names(&kept, span).into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["simscale", "fig3", "a", "b"]);
+    }
+
+    #[test]
+    fn call_idents_skip_signature_and_vec() {
+        let src = "pub fn workload_registry() -> Vec<W> {\n  vec![react(), reflexion(), fanout()]\n}\n";
+        let code = source::strip(src, false);
+        let span = fn_span(&code, "fn workload_registry").unwrap();
+        let names: Vec<String> = call_idents(&code, span).into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["react", "reflexion", "fanout"]);
+    }
+
+    #[test]
+    fn doc_name_boundaries_treat_dash_as_ident() {
+        assert!(doc_has_name("run with `--sched fifo` now", "fifo"));
+        assert!(!doc_has_name("see golden_fifo.json", "fifo"));
+        assert!(doc_has_name("prefix-aware|round-robin", "prefix-aware"));
+        assert!(!doc_has_name("the --sched flag", "sched"));
+        assert!(doc_has_name("for exp in sched routes; do", "sched"));
+    }
+
+    #[test]
+    fn real_tree_registries_agree() {
+        let root = super::super::repo_root();
+        let findings = check(&root).expect("registry files readable");
+        assert!(
+            findings.is_empty(),
+            "R5 registry drift:\n{}",
+            findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Deterministic findings report for simlint.
+//!
+//! Findings sort by (file, line, rule, message) so the report is
+//! byte-stable across runs and machines — the same property the golden
+//! fixtures pin for the simulator itself.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Repo-relative path with forward slashes (`rust/src/...`).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id: `R1`..`R5`, or `WAIVER` for malformed waivers.
+    pub rule: &'static str,
+    pub msg: String,
+    /// Trimmed raw source line (may be empty for cross-file findings).
+    pub snippet: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        if self.snippet.is_empty() {
+            format!("{}:{} [{}] {}", self.file, self.line, self.rule, self.msg)
+        } else {
+            format!("{}:{} [{}] {}\n    > {}", self.file, self.line, self.rule, self.msg, self.snippet)
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct LintReport {
+    /// Unwaived findings, sorted.
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by `// simlint: allow(...)` waivers.
+    pub waived: usize,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "simlint: scanned {} files, {} finding(s), {} waived\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.waived
+        ));
+        for f in &self.findings {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        if self.is_clean() {
+            out.push_str("OK: source tree satisfies the determinism contract (R1-R5)\n");
+        } else {
+            out.push_str(
+                "FAIL: fix each finding or waive it with `// simlint: allow(rule) reason`\n",
+            );
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating report dir {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.render())
+            .with_context(|| format!("writing report to {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn findings_sort_by_file_line_rule() {
+        let mk = |file: &str, line: usize, rule: &'static str| Finding {
+            file: file.into(),
+            line,
+            rule,
+            msg: String::new(),
+            snippet: String::new(),
+        };
+        let mut v = vec![mk("b.rs", 1, "R1"), mk("a.rs", 9, "R2"), mk("a.rs", 2, "R4")];
+        v.sort();
+        let order: Vec<(String, usize)> = v.iter().map(|f| (f.file.clone(), f.line)).collect();
+        assert_eq!(order, vec![("a.rs".into(), 2), ("a.rs".into(), 9), ("b.rs".into(), 1)]);
+    }
+
+    #[test]
+    fn render_reports_counts_and_verdict() {
+        let clean = LintReport { findings: vec![], waived: 2, files_scanned: 10 };
+        assert!(clean.render().contains("OK:"));
+        let dirty = LintReport {
+            findings: vec![Finding {
+                file: "rust/src/x.rs".into(),
+                line: 3,
+                rule: "R2",
+                msg: "wall clock".into(),
+                snippet: "let t = ...;".into(),
+            }],
+            waived: 0,
+            files_scanned: 10,
+        };
+        let r = dirty.render();
+        assert!(r.contains("rust/src/x.rs:3 [R2] wall clock"), "{r}");
+        assert!(r.contains("FAIL:"), "{r}");
+    }
+}

@@ -1,0 +1,586 @@
+//! Per-file simlint rules R1–R4.
+//!
+//! All rules run over comment/string-stripped code (see `source::strip`),
+//! so a pattern word in a doc comment or a string literal never fires.
+//! R1 works on a token stream (method chains split across lines by
+//! rustfmt still match); R2–R4 are line patterns with word boundaries.
+//!
+//! | rule | contract clause (ARCHITECTURE.md)                              |
+//! |------|----------------------------------------------------------------|
+//! | R1   | no HashMap/HashSet *iteration* in simulation-state modules     |
+//! | R2   | no wall-clock reads outside the allowlisted timing shims       |
+//! | R3   | no threads/atomics outside the `run_sweep` runner              |
+//! | R4   | conservation counters (…tokens/…bytes) stay integer-typed      |
+
+use std::collections::BTreeSet;
+
+use super::report::Finding;
+use super::source;
+
+/// Modules that hold simulation state: everything the determinism
+/// contract covers.  Point lookups in a `HashMap` are fine there;
+/// ordered traversal is not.
+const SIM_STATE_PREFIXES: [&str; 4] = [
+    "rust/src/engine/sim/",
+    "rust/src/kvcache/",
+    "rust/src/engine/route/",
+    "rust/src/engine/sched/",
+];
+const SIM_STATE_FILES: [&str; 2] = ["rust/src/engine/real.rs", "rust/src/simtime.rs"];
+
+/// Timing shims that legitimately read the wall clock: the bench
+/// harness, the real PJRT runtime, and the sweep runner's progress
+/// timer.  Simulated time lives in `simtime.rs` and is integer µs.
+const R2_ALLOW: [&str; 3] = [
+    "rust/src/util/bench.rs",
+    "rust/src/runtime/engine.rs",
+    "rust/src/engine/experiments.rs",
+];
+
+/// The only module allowed to spawn threads or touch atomics: the
+/// `run_sweep` fan-out in `experiments.rs` (each worker runs a fully
+/// deterministic single-threaded simulation; `--threads N` must not
+/// change any row).
+const R3_ALLOW: [&str; 1] = ["rust/src/engine/experiments.rs"];
+
+pub fn sim_state_scope(path: &str) -> bool {
+    SIM_STATE_PREFIXES.iter().any(|p| path.starts_with(p)) || SIM_STATE_FILES.contains(&path)
+}
+
+/// Run R1–R4 plus waiver validation on one file.  Returns the unwaived
+/// findings (sorted) and the number of findings suppressed by waivers.
+pub fn analyze_source(path: &str, content: &str) -> (Vec<Finding>, usize) {
+    let raw_lines: Vec<&str> = content.lines().collect();
+    let code = source::strip(content, false);
+    let kept = source::strip(content, true);
+    let waivers = source::parse_waivers(&raw_lines, &code, &kept);
+
+    let mut out: Vec<Finding> = Vec::new();
+    for (line, problem) in &waivers.malformed {
+        out.push(finding(path, *line, "WAIVER", problem.clone(), &raw_lines));
+    }
+
+    let mut all: Vec<Finding> = Vec::new();
+    all.extend(r1_hash_iteration(path, &code, &raw_lines));
+    all.extend(r2_wall_clock(path, &code, &raw_lines));
+    all.extend(r3_threads_atomics(path, &code, &raw_lines));
+    all.extend(r4_float_counters(path, &code, &raw_lines));
+
+    let mut waived = 0usize;
+    for f in all {
+        if waivers.allows(f.rule, f.line) {
+            waived += 1;
+        } else {
+            out.push(f);
+        }
+    }
+    out.sort();
+    (out, waived)
+}
+
+fn finding(path: &str, line: usize, rule: &'static str, msg: String, raw: &[&str]) -> Finding {
+    let snippet = raw.get(line.saturating_sub(1)).map(|l| l.trim()).unwrap_or("");
+    let snippet = if snippet.chars().count() > 96 {
+        let cut: String = snippet.chars().take(93).collect();
+        format!("{cut}...")
+    } else {
+        snippet.to_string()
+    };
+    Finding { file: path.to_string(), line, rule, msg, snippet }
+}
+
+// ---------------------------------------------------------------------------
+// Word-boundary matching
+// ---------------------------------------------------------------------------
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `pat` occurs in `line` with non-identifier characters (or line ends)
+/// on both sides.  `pat` itself may contain `::`, so this is substring
+/// search plus boundary checks — `Instant` does not match
+/// `Instantiate`, `fifo` does not match `golden_fifo`.
+pub fn has_word(line: &str, pat: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = line[from..].find(pat) {
+        let start = from + rel;
+        let end = start + pat.len();
+        let before_ok = start == 0 || !is_ident_char(line[..start].chars().next_back().unwrap());
+        let after_ok = end >= line.len() || !is_ident_char(line[end..].chars().next().unwrap());
+        if before_ok && after_ok {
+            return true;
+        }
+        from = start + pat.len().max(1);
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Token stream (for R1)
+// ---------------------------------------------------------------------------
+
+struct Tok {
+    text: String,
+    line: usize, // 1-based
+}
+
+fn tokenize(code_lines: &[String]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    for (idx, line) in code_lines.iter().enumerate() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            if c.is_whitespace() {
+                i += 1;
+            } else if is_ident_char(c) {
+                let start = i;
+                while i < chars.len() && is_ident_char(chars[i]) {
+                    i += 1;
+                }
+                toks.push(Tok { text: chars[start..i].iter().collect(), line: idx + 1 });
+            } else {
+                toks.push(Tok { text: c.to_string(), line: idx + 1 });
+            }
+        }
+    }
+    toks
+}
+
+// ---------------------------------------------------------------------------
+// R1: HashMap/HashSet iteration in simulation state
+// ---------------------------------------------------------------------------
+
+/// Methods whose result depends on `RandomState` iteration order.
+const ITER_METHODS: [&str; 12] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+    "min_by_key",
+    "max_by_key",
+];
+
+fn r1_hash_iteration(path: &str, code: &[String], raw: &[&str]) -> Vec<Finding> {
+    if !sim_state_scope(path) {
+        return Vec::new();
+    }
+    let toks = tokenize(code);
+    // Pass 1: identifiers bound to a HashMap/HashSet anywhere in the file
+    // (struct fields, let bindings, fn params, collect() targets).
+    let mut tracked: BTreeSet<String> = BTreeSet::new();
+    for (idx, t) in toks.iter().enumerate() {
+        if t.text == "HashMap" || t.text == "HashSet" {
+            if let Some(name) = binder_before(&toks, idx).or_else(|| let_binder(&toks, idx)) {
+                tracked.insert(name);
+            }
+        }
+    }
+    if tracked.is_empty() {
+        return Vec::new();
+    }
+
+    let mut out = Vec::new();
+    for (idx, t) in toks.iter().enumerate() {
+        // `name.iter()` / `name.retain(...)` etc., including chains that
+        // rustfmt split across lines.
+        if tracked.contains(&t.text)
+            && toks.get(idx + 1).is_some_and(|n| n.text == ".")
+            && toks.get(idx + 2).is_some_and(|m| ITER_METHODS.contains(&m.text.as_str()))
+            && toks.get(idx + 3).is_some_and(|p| p.text == "(")
+        {
+            let method = &toks[idx + 2].text;
+            out.push(finding(
+                path,
+                t.line,
+                "R1",
+                format!(
+                    "`{}.{}()` iterates a HashMap/HashSet in simulation state \
+                     (RandomState order) — use BTreeMap or sort the keys",
+                    t.text, method
+                ),
+                raw,
+            ));
+        }
+        // `for … in <expr mentioning a tracked map> { … }`
+        if t.text == "for" {
+            let mut j = idx + 1;
+            let mut saw_in = false;
+            while j < toks.len() && j < idx + 64 {
+                let tj = &toks[j].text;
+                if tj == "{" || tj == ";" {
+                    break;
+                }
+                if !saw_in {
+                    if tj == "in" {
+                        saw_in = true;
+                    }
+                } else if tracked.contains(tj) {
+                    out.push(finding(
+                        path,
+                        toks[j].line,
+                        "R1",
+                        format!(
+                            "`for … in` over HashMap/HashSet `{}` in simulation state \
+                             (RandomState order) — use BTreeMap or sort the keys",
+                            tj
+                        ),
+                        raw,
+                    ));
+                    break;
+                }
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Declaration binder for `name: [path::]HashMap<…>` — walk back over
+/// `::`-separated path segments to the single `:`, then take the
+/// identifier before it.  Covers struct fields, fn params and annotated
+/// lets.
+fn binder_before(toks: &[Tok], idx: usize) -> Option<String> {
+    let tok = |i: usize| toks.get(i).map(|t| t.text.as_str());
+    let mut j = idx as isize - 1;
+    // Consume trailing path segments `ident::` backwards.
+    while j >= 2
+        && tok(j as usize) == Some(":")
+        && tok(j as usize - 1) == Some(":")
+        && toks[j as usize - 2].text.chars().next().is_some_and(is_ident_char)
+    {
+        j -= 3;
+    }
+    if j >= 1
+        && tok(j as usize) == Some(":")
+        && tok(j as usize - 1) != Some(":")
+        && toks[j as usize - 1].text.chars().next().is_some_and(is_ident_char)
+    {
+        return Some(toks[j as usize - 1].text.clone());
+    }
+    None
+}
+
+/// Fallback binder: the `let [mut] name` opening the statement that
+/// contains token `idx` (e.g. `let m = HashMap::new()`, or a
+/// `.collect::<HashSet<_>>()` chain).
+fn let_binder(toks: &[Tok], idx: usize) -> Option<String> {
+    let lo = idx.saturating_sub(48);
+    let mut j = idx;
+    while j > lo {
+        j -= 1;
+        let t = toks[j].text.as_str();
+        if t == ";" || t == "{" || t == "}" {
+            return None;
+        }
+        if t == "let" {
+            let mut k = j + 1;
+            if toks.get(k).is_some_and(|t| t.text == "mut") {
+                k += 1;
+            }
+            return toks.get(k).map(|t| t.text.clone());
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// R2: wall clock outside timing shims
+// ---------------------------------------------------------------------------
+
+fn r2_wall_clock(path: &str, code: &[String], raw: &[&str]) -> Vec<Finding> {
+    if R2_ALLOW.contains(&path) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (idx, line) in code.iter().enumerate() {
+        for pat in ["Instant", "SystemTime"] {
+            if has_word(line, pat) {
+                out.push(finding(
+                    path,
+                    idx + 1,
+                    "R2",
+                    format!(
+                        "wall-clock type `{pat}` outside the allowlisted timing shims \
+                         — simulated time is integer µs via simtime"
+                    ),
+                    raw,
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R3: threads/atomics outside the sweep runner
+// ---------------------------------------------------------------------------
+
+fn r3_threads_atomics(path: &str, code: &[String], raw: &[&str]) -> Vec<Finding> {
+    if R3_ALLOW.contains(&path) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (idx, line) in code.iter().enumerate() {
+        for pat in ["std::thread", "thread::spawn", "thread::scope", "std::sync::atomic", "Mutex", "RwLock", "Condvar"] {
+            if has_word(line, pat) {
+                out.push(finding(
+                    path,
+                    idx + 1,
+                    "R3",
+                    format!("concurrency primitive `{pat}` outside the run_sweep runner"),
+                    raw,
+                ));
+            }
+        }
+        // Atomic* types (AtomicUsize, AtomicU64, AtomicBool, ...).
+        let mut from = 0;
+        while let Some(rel) = line[from..].find("Atomic") {
+            let start = from + rel;
+            let before_ok =
+                start == 0 || !is_ident_char(line[..start].chars().next_back().unwrap());
+            let after = line[start + 6..].chars().next();
+            if before_ok && after.is_some_and(|c| c.is_ascii_uppercase()) {
+                out.push(finding(
+                    path,
+                    idx + 1,
+                    "R3",
+                    "atomic type outside the run_sweep runner".to_string(),
+                    raw,
+                ));
+                break;
+            }
+            from = start + 6;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R4: float accumulation into conservation counters
+// ---------------------------------------------------------------------------
+
+const INT_CASTS: [&str; 6] = ["as u64", "as usize", "as u32", "as i64", "as u128", "as i128"];
+
+fn is_counter_name(name: &str) -> bool {
+    name.ends_with("tokens") || name.ends_with("bytes")
+}
+
+fn has_int_cast(expr: &str) -> bool {
+    INT_CASTS.iter().any(|c| expr.contains(c))
+}
+
+fn r4_float_counters(path: &str, code: &[String], raw: &[&str]) -> Vec<Finding> {
+    if !sim_state_scope(path) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (idx, line) in code.iter().enumerate() {
+        // Declaration with a float type: `name: f64` (struct field, param,
+        // or annotated let) where the name is a byte/token counter.
+        for fty in ["f64", "f32"] {
+            let mut from = 0;
+            while let Some(rel) = line[from..].find(fty) {
+                let start = from + rel;
+                let end = start + fty.len();
+                let before = line[..start].trim_end();
+                let bounded = (start == 0
+                    || !is_ident_char(line[..start].chars().next_back().unwrap()))
+                    && (end >= line.len() || !is_ident_char(line[end..].chars().next().unwrap()));
+                if bounded && before.ends_with(':') && !before.ends_with("::") {
+                    let name: String = before[..before.len() - 1]
+                        .trim_end()
+                        .chars()
+                        .rev()
+                        .take_while(|&c| is_ident_char(c))
+                        .collect::<String>()
+                        .chars()
+                        .rev()
+                        .collect();
+                    if is_counter_name(&name) {
+                        out.push(finding(
+                            path,
+                            idx + 1,
+                            "R4",
+                            format!(
+                                "conservation counter `{name}` declared as {fty} \
+                                 — byte/token totals must stay integer"
+                            ),
+                            raw,
+                        ));
+                    }
+                }
+                from = end;
+            }
+        }
+        // Float-valued accumulation: `name += <expr with f64/f32, no int cast>`.
+        if let Some(p) = line.find("+=") {
+            let lhs = line[..p].trim_end();
+            let name: String = lhs
+                .chars()
+                .rev()
+                .take_while(|&c| is_ident_char(c))
+                .collect::<String>()
+                .chars()
+                .rev()
+                .collect();
+            let rhs = &line[p + 2..];
+            if is_counter_name(&name)
+                && (has_word(rhs, "f64") || has_word(rhs, "f32"))
+                && !has_int_cast(rhs)
+            {
+                out.push(finding(
+                    path,
+                    idx + 1,
+                    "R4",
+                    format!(
+                        "float expression accumulated into conservation counter `{name}` \
+                         without an integer cast"
+                    ),
+                    raw,
+                ));
+            }
+        }
+        // Float-valued binding: `let name = <expr with f64/f32, no int cast>;`
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("let ") {
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+            let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+            if is_counter_name(&name) {
+                if let Some(eq) = rest.find('=') {
+                    let expr = &rest[eq + 1..];
+                    if (has_word(expr, "f64") || has_word(expr, "f32")) && !has_int_cast(expr) {
+                        out.push(finding(
+                            path,
+                            idx + 1,
+                            "R4",
+                            format!(
+                                "float expression bound to conservation counter `{name}` \
+                                 without an integer cast"
+                            ),
+                            raw,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIM_PATH: &str = "rust/src/engine/sim/fixture.rs";
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("let t = Instant::now();", "Instant"));
+        assert!(!has_word("fn instantiate() {}", "Instant"));
+        assert!(!has_word("Instantiate one", "Instant"));
+        assert!(has_word("use std::thread;", "std::thread"));
+        assert!(!has_word("let threads = 4;", "std::thread"));
+        assert!(has_word("fifo|sjf", "fifo"));
+        assert!(!has_word("golden_fifo.json", "fifo"));
+    }
+
+    #[test]
+    fn r1_flags_split_method_chains() {
+        // The exact shape of the CacheStore eviction bug: the map field is
+        // declared as HashMap, iterated via a rustfmt-split chain.
+        let src = "\
+struct S {
+    entries: std::collections::HashMap<(u64, usize), u64>,
+}
+impl S {
+    fn victim(&self) -> Option<(u64, usize)> {
+        self.entries
+            .iter()
+            .min_by_key(|(_, t)| **t)
+            .map(|(k, _)| *k)
+    }
+}
+";
+        let (f, _) = analyze_source(SIM_PATH, src);
+        assert!(f.iter().any(|f| f.rule == "R1" && f.msg.contains("entries.iter")), "{f:?}");
+        // Same source outside the sim-state scope: clean.
+        let (f2, _) = analyze_source("rust/src/training/fixture.rs", src);
+        assert!(f2.is_empty(), "{f2:?}");
+    }
+
+    #[test]
+    fn r1_point_lookups_pass() {
+        let src = "\
+struct S { m: HashMap<u64, u64> }
+fn f(s: &mut S) -> Option<u64> {
+    s.m.insert(1, 2);
+    if s.m.contains_key(&1) { s.m.remove(&1) } else { s.m.get(&2).copied() }
+}
+";
+        let (f, _) = analyze_source(SIM_PATH, src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn r1_for_loop_and_collect() {
+        let src = "\
+fn f() {
+    let seen: std::collections::HashSet<u64> = [1u64].iter().copied().collect();
+    for x in seen { let _ = x; }
+}
+";
+        let (f, _) = analyze_source(SIM_PATH, src);
+        assert!(f.iter().any(|f| f.rule == "R1" && f.msg.contains("for … in")), "{f:?}");
+    }
+
+    #[test]
+    fn r2_and_waivers() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        let (f, w) = analyze_source(SIM_PATH, src);
+        assert_eq!(f.iter().filter(|f| f.rule == "R2").count(), 1, "{f:?}");
+        assert_eq!(w, 0);
+        let waived = "// simlint: allow(R2) fixture needs a wall clock\nfn f() { let t = Instant::now(); }\n";
+        let (f, w) = analyze_source(SIM_PATH, waived);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(w, 1);
+        // Allowlisted shim: clean without any waiver.
+        let (f, _) = analyze_source("rust/src/util/bench.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn r3_threads_and_atomics() {
+        let src = "use std::sync::atomic::AtomicUsize;\nfn f() { std::thread::scope(|_| {}); }\n";
+        let (f, _) = analyze_source("rust/src/engine/sim/mod.rs", src);
+        assert!(f.iter().filter(|f| f.rule == "R3").count() >= 2, "{f:?}");
+        let (f, _) = analyze_source("rust/src/engine/experiments.rs", src);
+        assert!(f.iter().all(|f| f.rule != "R3"), "{f:?}");
+    }
+
+    #[test]
+    fn r4_float_counters() {
+        let bad = "struct M { total_bytes: f64 }\nfn f(x: u64) { let mut shipped_tokens = 0.0; shipped_tokens += x as f64; }\n";
+        let (f, _) = analyze_source(SIM_PATH, bad);
+        assert!(f.iter().any(|f| f.rule == "R4" && f.msg.contains("total_bytes")), "{f:?}");
+        assert!(f.iter().any(|f| f.rule == "R4" && f.msg.contains("shipped_tokens")), "{f:?}");
+        // Integer-cast boundary conversion is the sanctioned idiom.
+        let good = "fn f(tokens: usize, per: f64) -> u64 { let bytes = (tokens as f64 * per) as u64; bytes }\n";
+        let (f, _) = analyze_source(SIM_PATH, good);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn comments_never_fire() {
+        let src = "// Instant::now() would break determinism; HashMap iteration too.\nfn f() {}\n";
+        let (f, _) = analyze_source(SIM_PATH, src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

@@ -1,0 +1,371 @@
+//! Source preprocessing for the simlint analyzer: comment/string
+//! stripping and waiver parsing.
+//!
+//! The analyzer is deliberately lexical — no `syn`, no rustc invocation,
+//! nothing beyond `std` (the same hermetic constraint the vendored
+//! `anyhow`/`xla` facades satisfy).  Stripping runs a small character
+//! state machine over the whole file so that rule patterns never match
+//! inside comments (`/// Instantiate one router`) or string literals
+//! (`"std::thread"` in this very module).  Blanked regions are replaced
+//! by spaces, so line numbers and column positions survive stripping.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Strip `content` into per-line analyzable code.  Comments (line, doc,
+/// nested block) are always blanked.  String/char-literal contents are
+/// blanked too unless `keep_strings` — the registry checks (R5) extract
+/// names *from* literals and pass `true`; every other rule passes
+/// `false` so patterns cannot match quoted text.
+pub fn strip(content: &str, keep_strings: bool) -> Vec<String> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        Char,
+    }
+    let b: Vec<char> = content.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(content.len());
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            out.push('\n');
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && i + 1 < n && b[i + 1] == '/' {
+                    st = St::LineComment;
+                    out.push(' ');
+                    i += 1;
+                } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+                    st = St::BlockComment(1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    out.push(if keep_strings { '"' } else { ' ' });
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident(&b, i) && raw_str_hashes(&b, i).is_some() {
+                    let hashes = raw_str_hashes(&b, i).unwrap();
+                    // Skip `r`, the hashes and the opening quote.
+                    for _ in 0..(2 + hashes) {
+                        out.push(if keep_strings { '_' } else { ' ' });
+                        i += 1;
+                    }
+                    st = St::RawStr(hashes);
+                } else if c == '\'' && char_literal_ahead(&b, i) {
+                    st = St::Char;
+                    out.push(' ');
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                out.push(' ');
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                if c == '/' && i + 1 < n && b[i + 1] == '*' {
+                    st = St::BlockComment(d + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '*' && i + 1 < n && b[i + 1] == '/' {
+                    st = if d == 1 { St::Code } else { St::BlockComment(d - 1) };
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && i + 1 < n {
+                    out.push(if keep_strings { c } else { ' ' });
+                    // An escaped newline (string continuation) must stay a
+                    // newline, or blanked and kept strips disagree on line
+                    // numbering.
+                    out.push(if b[i + 1] == '\n' {
+                        '\n'
+                    } else if keep_strings {
+                        b[i + 1]
+                    } else {
+                        ' '
+                    });
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Code;
+                    out.push(if keep_strings { '"' } else { ' ' });
+                    i += 1;
+                } else {
+                    out.push(if keep_strings { c } else { ' ' });
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && closes_raw(&b, i, hashes) {
+                    for _ in 0..(1 + hashes as usize).min(n - i) {
+                        out.push(if keep_strings { '_' } else { ' ' });
+                        i += 1;
+                    }
+                    st = St::Code;
+                } else {
+                    out.push(if keep_strings { c } else { ' ' });
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(if b[i + 1] == '\n' { '\n' } else { ' ' });
+                    i += 2;
+                } else if c == '\'' {
+                    st = St::Code;
+                    out.push(' ');
+                    i += 1;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.lines().map(str::to_string).collect()
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// At `b[i] == 'r'`: number of `#` in a raw-string opener (`r"`, `r#"`,
+/// ...), or `None` if this `r` does not open one.
+fn raw_str_hashes(b: &[char], i: usize) -> Option<u32> {
+    let mut j = i + 1;
+    let mut hashes = 0u32;
+    while j < b.len() && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == '"' {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn closes_raw(b: &[char], i: usize, hashes: u32) -> bool {
+    let mut j = i + 1;
+    for _ in 0..hashes {
+        if j >= b.len() || b[j] != '#' {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// `'` opens a char literal (vs a lifetime like `'static`) when the
+/// quoted content is an escape or a single character.
+fn char_literal_ahead(b: &[char], i: usize) -> bool {
+    if i + 1 >= b.len() {
+        return false;
+    }
+    if b[i + 1] == '\\' {
+        return true;
+    }
+    i + 2 < b.len() && b[i + 2] == '\''
+}
+
+// ---------------------------------------------------------------------------
+// Waivers
+// ---------------------------------------------------------------------------
+
+/// Parsed waiver comments of one file.
+///
+/// Syntax (ARCHITECTURE.md, "Enforcement"):
+///   `// simlint: allow(R2) reason why this exception is sound`
+///   `// simlint: allow-file(R2) reason covering the whole file`
+/// A line-level waiver on a comment-only line covers the *next* line;
+/// a trailing waiver covers its own line.  A waiver without a reason is
+/// itself reported (rule `WAIVER`) — every exception stays greppable
+/// *and* explained.
+pub struct Waivers {
+    file_rules: BTreeSet<String>,
+    line_rules: BTreeMap<usize, BTreeSet<String>>,
+    /// (1-based line, problem) for malformed waivers.
+    pub malformed: Vec<(usize, String)>,
+}
+
+pub const WAIVER_MARKER: &str = "simlint:";
+
+/// `code_lines` is the fully-blanked strip (comment-only-line detection);
+/// `kept_lines` is the strings-kept strip — a marker still visible there
+/// sits inside a string literal, not a comment, and is not a waiver.
+pub fn parse_waivers(raw_lines: &[&str], code_lines: &[String], kept_lines: &[String]) -> Waivers {
+    let mut w = Waivers {
+        file_rules: BTreeSet::new(),
+        line_rules: BTreeMap::new(),
+        malformed: Vec::new(),
+    };
+    for (idx, raw) in raw_lines.iter().enumerate() {
+        let line_no = idx + 1;
+        let Some(pos) = raw.find(WAIVER_MARKER) else { continue };
+        // Only a plain `//` comment that *starts* with the marker is a
+        // waiver candidate — prose that merely mentions simlint and doc
+        // comments (`///`, `//!`) are not parsed.
+        let before = raw[..pos].trim_end();
+        if !before.ends_with("//") || before.ends_with("///") || before.ends_with("//!") {
+            continue;
+        }
+        // In the strings-kept strip comments are blanked, so a marker
+        // that survives there is string content masquerading as one.
+        if kept_lines.get(idx).is_some_and(|k| k.contains(WAIVER_MARKER)) {
+            continue;
+        }
+        let rest = raw[pos + WAIVER_MARKER.len()..].trim_start();
+        let (file_level, rest) = if let Some(r) = rest.strip_prefix("allow-file(") {
+            (true, r)
+        } else if let Some(r) = rest.strip_prefix("allow(") {
+            (false, r)
+        } else {
+            w.malformed.push((line_no, "expected `allow(rule)` or `allow-file(rule)`".into()));
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            w.malformed.push((line_no, "unclosed waiver rule list".into()));
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let reason = rest[close + 1..].trim();
+        if rule.is_empty() {
+            w.malformed.push((line_no, "empty waiver rule".into()));
+            continue;
+        }
+        if reason.is_empty() {
+            w.malformed.push((line_no, format!("waiver for {rule} has no reason")));
+            continue;
+        }
+        if file_level {
+            w.file_rules.insert(rule);
+        } else {
+            // Comment-only line -> the waiver covers the next line.
+            let code_here = code_lines.get(idx).map(|l| l.trim()).unwrap_or("");
+            let target = if code_here.is_empty() { line_no + 1 } else { line_no };
+            w.line_rules.entry(target).or_default().insert(rule);
+        }
+    }
+    w
+}
+
+impl Waivers {
+    pub fn allows(&self, rule: &str, line: usize) -> bool {
+        self.file_rules.contains(rule)
+            || self.line_rules.get(&line).is_some_and(|rules| rules.contains(rule))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip_str(src: &str, keep: bool) -> String {
+        strip(src, keep).join("\n")
+    }
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let x = 1; // Instant::now() in a comment\nlet s = \"std::thread\";\n/* block\n   Instant */ let y = 2;";
+        let code = strip_str(src, false);
+        assert!(!code.contains("Instant"), "{code}");
+        assert!(!code.contains("std::thread"), "{code}");
+        assert!(code.contains("let x = 1;"));
+        assert!(code.contains("let y = 2;"));
+        // Line structure survives blanking.
+        assert_eq!(code.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn keep_strings_preserves_literals_but_not_comments() {
+        let src = "let s = \"fifo\"; // \"sjf\" only in a comment";
+        let code = strip_str(src, true);
+        assert!(code.contains("\"fifo\""));
+        assert!(!code.contains("sjf"));
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { '\\n' }";
+        let code = strip_str(src, false);
+        assert!(code.contains("fn f<'a>(x: &'a str)"), "{code}");
+        assert!(!code.contains("\\n"), "char literal must be blanked: {code}");
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let r = r#\"Instant \"quoted\" inside\"#; let z = 3;";
+        let code = strip_str(src, false);
+        assert!(!code.contains("Instant"), "{code}");
+        assert!(code.contains("let z = 3;"), "{code}");
+    }
+
+    #[test]
+    fn waivers_parse_target_lines_and_reasons() {
+        let src = "\
+// simlint: allow(R1) comment-only waiver covers the next line
+let a = 1;
+let b = 2; // simlint: allow(R2) trailing waiver covers this line
+// simlint: allow-file(R3) whole-file waiver
+// simlint: allow(R4)
+";
+        let raw: Vec<&str> = src.lines().collect();
+        let code = strip(src, false);
+        let kept = strip(src, true);
+        let w = parse_waivers(&raw, &code, &kept);
+        assert!(w.allows("R1", 2), "comment-only waiver covers line 2");
+        assert!(!w.allows("R1", 1));
+        assert!(w.allows("R2", 3), "trailing waiver covers its own line");
+        assert!(w.allows("R3", 1) && w.allows("R3", 999), "file waiver covers everything");
+        assert_eq!(w.malformed.len(), 1, "reason-less waiver is malformed");
+        assert!(w.malformed[0].1.contains("no reason"));
+        assert!(!w.allows("R4", 5), "malformed waiver waives nothing");
+    }
+
+    #[test]
+    fn prose_and_string_mentions_are_not_waivers() {
+        let src = "\
+//! simlint: a hermetic static-analysis pass (prose, not a waiver)
+/// simlint: doc comments are prose too, never waivers
+// the simlint: marker mid-comment is prose too -> ignored
+let usage = \"// simlint: allow(R1) string content is not a waiver\";
+";
+        let raw: Vec<&str> = src.lines().collect();
+        let code = strip(src, false);
+        let kept = strip(src, true);
+        let w = parse_waivers(&raw, &code, &kept);
+        assert!(w.malformed.is_empty(), "{:?}", w.malformed);
+        assert!(!w.allows("R1", 4), "string content must not waive anything");
+    }
+
+    #[test]
+    fn escaped_newlines_in_strings_keep_line_structure() {
+        // format! continuation strings (`...\` at end of line) must not
+        // collapse lines, or spans computed on the blanked strip would
+        // index the kept strip off-by-N.
+        let src = "let s = format!(\n    \"usage: lint\\n\\\n     more text\"\n);\n";
+        let blanked = strip(src, false);
+        let kept = strip(src, true);
+        assert_eq!(blanked.len(), src.lines().count());
+        assert_eq!(blanked.len(), kept.len());
+    }
+}

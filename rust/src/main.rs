@@ -8,6 +8,7 @@
 //!   accuracy       regenerate Fig 2 / Table 1 / Table 2 (training driver)
 //!   train          one fine-tuning run (full or cache-conditioned)
 //!   workload       print a sampled trace's shape statistics
+//!   lint           simlint static determinism/soundness gate (R1-R5)
 //!
 //! Examples:
 //!   prefillshare bench-serving --experiment fig4 --out reports/fig4.json
@@ -42,6 +43,7 @@ fn main() -> Result<()> {
         "accuracy" => cmd_accuracy(&args),
         "train" => cmd_train(&args),
         "workload" => cmd_workload(&args),
+        "lint" => cmd_lint(&args),
         "version" => {
             println!("prefillshare {}", prefillshare::version());
             Ok(())
@@ -60,7 +62,7 @@ fn help_text() -> String {
     let workloads = workload_names();
     format!(
         "prefillshare {} — PrefillShare reproduction (see README.md, ARCHITECTURE.md)\n\n\
-         USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload> [--options]\n\n\
+         USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload|lint> [--options]\n\n\
          bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout|prefillshare|simscale\n\
                        [--seed N] [--threads N] [--scale N,N,...] [--out file.json]\n\
          sim           [--system baseline|prefillshare] [--sched fifo|sjf|prefix-affinity|chunked]\n\
@@ -70,7 +72,8 @@ fn help_text() -> String {
                        [--decode-reuse] [--workload {workloads}] [--rate R] [--duration S]\n\
                        [--arrivals poisson|mmpp] [--burst B] [--burst-dwell S]\n\
                        [--max-sessions N] [--legacy-queue] [--metrics exact|sketch]\n\
-                       [--seed N] [--out file.json]\n\
+                       [--audit] [--seed N] [--out file.json]\n\
+         lint          simlint static pass: R1-R5 determinism/soundness gate [--out report.txt]\n\
          accuracy      --experiment fig2|table1|table2 [--steps N] [--artifacts DIR]\n\
          train         --model tiny|small|medium --method full|cc --task arith|transform|toolcall\n\
          serve         [--system baseline|prefillshare] [--sessions N] [--artifacts DIR]\n\
@@ -215,6 +218,9 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
         "reuse" => sx::reuse_ablation(seed, threads),
         "fanout" => sx::fanout_experiment(seed, threads),
         "prefillshare" => sx::prefillshare_experiment(seed, threads),
+        // Not a paper figure: lets CI drivers that only know bench-serving
+        // gate on the static determinism/soundness pass.
+        "lint" => return cmd_lint(args),
         other => bail!("unknown serving experiment `{other}`"),
     };
     let x_name = rows.first().map(|r| r.x_name.clone()).unwrap_or_default();
@@ -310,6 +316,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.legacy_queue = args.bool_flag("legacy-queue");
     cfg.metrics =
         args.get_choice("metrics", MetricsMode::Exact, MetricsMode::parse, "exact,sketch");
+    // Observation-only per-event invariant checks (byte conservation,
+    // class isolation); byte-identical results with or without it.
+    cfg.audit = args.bool_flag("audit");
     cfg.seed = seed;
     // Prefill-module compatibility classes, applied to workload + cluster.
     let classes = parse_prefill_classes(args, cfg.n_models)?;
@@ -450,6 +459,22 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     prefillshare::training::experiments::run_train_cli(args)
+}
+
+/// simlint: the static half of the determinism contract's enforcement
+/// (ARCHITECTURE.md "Enforcement").  Prints the sorted findings report
+/// and fails on any unwaived finding, so CI can gate on the exit code.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let report = prefillshare::lint::run(&prefillshare::lint::repo_root())?;
+    print!("{}", report.render());
+    if let Some(out) = args.get("out") {
+        report.save(std::path::Path::new(out))?;
+        println!("saved findings report to {out}");
+    }
+    if !report.is_clean() {
+        bail!("simlint: {} unwaived finding(s)", report.findings.len());
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -156,6 +156,8 @@ pub struct Dataset {
 pub fn build_dataset(task: Task, n_train: usize, n_test: usize, seed: u64) -> Dataset {
     let mut rng = Rng::new(seed ^ 0xda7a);
     let train: Vec<Example> = (0..n_train).map(|_| gen_example(task, &mut rng)).collect();
+    // HashSet is fine here (simlint-audited): membership-only dedup lookup,
+    // never iterated, and training data is outside the sim-state scope.
     let train_prompts: std::collections::HashSet<&str> =
         train.iter().map(|e| e.prompt.as_str()).collect();
     let mut test = Vec::with_capacity(n_test);
@@ -229,6 +231,7 @@ mod tests {
         assert_eq!(d.test.len(), 50);
         // With few train draws the dedup path still produces unseen prompts.
         let d2 = build_dataset(Task::Arith, 20, 30, 6);
+        // HashSet audited for simlint: used only for `.contains`, no iteration.
         let tp: std::collections::HashSet<_> = d2.train.iter().map(|e| &e.prompt).collect();
         let unseen = d2.test.iter().filter(|e| !tp.contains(&e.prompt)).count();
         assert!(unseen > 15, "mostly-unseen expected, got {unseen}");

@@ -671,6 +671,18 @@ pub mod simtokens {
             | (i as u64 & 0xFFFF)
     }
 
+    /// Compatibility class a token id was encoded under — the inverse of
+    /// the class packing in [`sys`]/[`private`].  The `--audit` mode uses
+    /// it to check class isolation at every radix insert: each token of a
+    /// job's key must carry the job's own class.
+    pub fn class_of(token: u64) -> usize {
+        if token & (1u64 << 48) != 0 {
+            (token >> 49) as usize
+        } else {
+            (token >> 32) as usize
+        }
+    }
+
     /// Build the radix key for a node's input context: the shared system
     /// prompt, then the private `(segment, length)` runs in ancestor-cut
     /// order — all scoped to the node's prefill class.
@@ -692,6 +704,22 @@ pub mod simtokens {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn simtokens_class_roundtrips() {
+        for class in [0usize, 1, 3, 255, (1 << 15) - 1] {
+            assert_eq!(simtokens::class_of(simtokens::sys(class, 0)), class);
+            assert_eq!(simtokens::class_of(simtokens::sys(class, 4095)), class);
+            assert_eq!(simtokens::class_of(simtokens::private(class, 7, 0, 0)), class);
+            assert_eq!(
+                simtokens::class_of(simtokens::private(class, (1 << 20) - 1, 4095, 65535)),
+                class
+            );
+        }
+        // Class 0 is the identity encoding: bare `1 + i` system ids.
+        assert_eq!(simtokens::sys(0, 5), 6);
+        assert_eq!(simtokens::class_of(6), 0);
+    }
 
     #[test]
     fn trace_is_deterministic() {

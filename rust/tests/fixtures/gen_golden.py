@@ -992,6 +992,12 @@ class Simulator:
                 else:
                     reuse_tokens = r
         shipped = job["ctx_len"] - reuse_tokens - host_tokens
+        # Per-event conservation (sim/mod.rs::audit_handoff, --audit): the
+        # sized split is non-negative, exclusive (GPU-retained XOR
+        # host-parked) and exhaustive against this call's context demand.
+        assert shipped >= 0, (sid, node, shipped)
+        assert reuse_tokens == 0 or host_tokens == 0, (sid, node, reuse_tokens, host_tokens)
+        assert shipped + reuse_tokens + host_tokens == job["ctx_len"], (sid, node)
         req = DecodeReq(
             sid, node, meta["depth"], job["ctx_len"], out_tokens, job["issued_at"],
             shipped_tokens=shipped, reuse_tokens=reuse_tokens, host_tokens=host_tokens,
@@ -1006,6 +1012,20 @@ class Simulator:
             self.m["handoff_tokens_delta"] += shipped
             self.m["decode_reuse_tokens"] += reuse_tokens
             self.bump_class("decode_reuse_tokens", job["cls"], reuse_tokens)
+        # Per-event per-class identity (--audit): host reload is charged
+        # later, at decode admission, so track the *sized* host tokens here
+        # and require shipped + reused + sized to cover the class demand at
+        # every handoff (not only at end of run).
+        if not hasattr(self, "audit_demand"):
+            self.audit_demand = {}
+            self.audit_host_sized = {}
+        cls = job["cls"]
+        self.audit_demand[cls] = self.audit_demand.get(cls, 0) + job["ctx_len"]
+        self.audit_host_sized[cls] = self.audit_host_sized.get(cls, 0) + host_tokens
+        shipped_c = pad_get(self.by_class["handoff_tokens"], cls)
+        reused_c = pad_get(self.by_class["decode_reuse_tokens"], cls)
+        assert shipped_c + reused_c + self.audit_host_sized[cls] == self.audit_demand[cls], (
+            sid, node, "class", cls, "lost tokens at handoff")
         # Interconnect (engine/sim/interconnect.rs): FIFO per ingress link
         # when contended, fire-and-forget otherwise.
         dur = secs(handoff_secs(shipped, self.cfg.get("handoff_bps", HANDOFF_BPS)))
@@ -1126,6 +1146,11 @@ class Simulator:
                     self.m["host_reloads"] += 1
                     self.m["host_reload_tokens"] += req.host_tokens
                     self.bump_class("host_reload_tokens", req.cls, req.host_tokens)
+                    # Per-event (--audit mirror, sim/mod.rs::audit_handoff):
+                    # a class never reloads more than its handoffs sized for
+                    # the host path.
+                    assert pad_get(self.by_class["host_reload_tokens"], req.cls) <= \
+                        self.audit_host_sized.get(req.cls, 0), (req.sid, req.cls)
                 req.was_deferred = False
                 req.host_tokens = 0
                 end = self.stage_transfer(w, secs(staging_secs(reload)))
@@ -1379,6 +1404,11 @@ def context_demand_by_class(sim):
 
 def padded(lst, n):
     return lst + [0] * (n - len(lst))
+
+
+def pad_get(lst, i):
+    """Per-class counter slot, 0 when the class has no slot yet."""
+    return lst[i] if i < len(lst) else 0
 
 
 def trace_header(spec, trace, total_calls):
@@ -1702,6 +1732,10 @@ def main():
             for c in range(n):
                 assert shipped[c] + reused[c] + reloaded[c] == demand[c], (
                     name, "class", c, "lost tokens")
+            # sim/mod.rs::audit_finish: by end of run every host-sized token
+            # has been reloaded — the in-flight gap closes exactly.
+            for c, s in getattr(sim, "audit_host_sized", {}).items():
+                assert pad_get(reloaded, c) == s, (name, "class", c, "reload vs sized")
         ps_scenarios.append(
             {
                 "name": name,

@@ -1,0 +1,209 @@
+//! simlint integration suite: one positive (violation caught) and one
+//! negative (waiver honored / allowlist passes) fixture per rule, the
+//! CacheStore-eviction bug mirrored as a fixture, and the gate itself —
+//! the real tree must lint clean.
+
+use prefillshare::lint::{analyze_source, repo_root, run};
+
+/// A path inside the simulation-state scope (R1/R4 apply there).
+const SIM_PATH: &str = "rust/src/engine/sim/fixture.rs";
+/// A path outside every scoped rule's target set.
+const PLAIN_PATH: &str = "rust/src/training/fixture.rs";
+
+fn rules_of(findings: &[prefillshare::lint::Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// R1: HashMap/HashSet iteration in simulation state
+// ---------------------------------------------------------------------------
+
+/// The exact bug simlint was built to catch: `CacheStore::put` in
+/// `engine/real.rs` selected its eviction victim by iterating a
+/// `HashMap` with `min_by_key`, so a last-use-tick tie was broken by
+/// `RandomState` enumeration order.  This fixture mirrors that shape,
+/// including the rustfmt-split method chain.
+const CACHE_STORE_BUG: &str = "\
+struct CacheStore {
+    entries: std::collections::HashMap<(u64, usize), (usize, u64)>,
+}
+impl CacheStore {
+    fn victim(&self, key: (u64, usize)) -> Option<(u64, usize)> {
+        self.entries
+            .iter()
+            .filter(|(k, _)| **k != key)
+            .min_by_key(|(_, (_, t))| *t)
+            .map(|(k, _)| *k)
+    }
+}
+";
+
+#[test]
+fn r1_catches_the_cache_store_eviction_bug() {
+    let (findings, _) = analyze_source(SIM_PATH, CACHE_STORE_BUG);
+    assert!(
+        findings.iter().any(|f| f.rule == "R1" && f.msg.contains("entries.iter")),
+        "HashMap iteration behind a split chain must be flagged: {findings:?}"
+    );
+    // Same shape in real.rs itself — the file the bug lived in is scoped.
+    let (findings, _) = analyze_source("rust/src/engine/real.rs", CACHE_STORE_BUG);
+    assert!(rules_of(&findings).contains(&"R1"), "{findings:?}");
+    // Outside simulation state the same code is allowed.
+    let (findings, _) = analyze_source(PLAIN_PATH, CACHE_STORE_BUG);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn r1_allows_point_lookups_and_btreemap() {
+    let fixed = "\
+struct CacheStore {
+    entries: std::collections::BTreeMap<(u64, usize), (usize, u64)>,
+    index: std::collections::HashMap<u64, usize>,
+}
+impl CacheStore {
+    fn get(&self, k: u64) -> Option<usize> {
+        self.index.get(&k).copied()
+    }
+    fn victims(&self) -> Vec<(u64, usize)> {
+        self.entries.iter().map(|(k, _)| *k).collect()
+    }
+}
+";
+    let (findings, _) = analyze_source(SIM_PATH, fixed);
+    assert!(
+        findings.is_empty(),
+        "BTreeMap iteration and HashMap point lookups are fine: {findings:?}"
+    );
+}
+
+#[test]
+fn r1_waiver_is_honored_and_needs_a_reason() {
+    let waived = "\
+struct S { m: std::collections::HashMap<u64, u64> }
+fn f(s: &S) -> u64 {
+    // simlint: allow(R1) summed values are order-independent
+    s.m.values().sum()
+}
+";
+    let (findings, waived_n) = analyze_source(SIM_PATH, waived);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(waived_n, 1);
+
+    let reasonless = "\
+struct S { m: std::collections::HashMap<u64, u64> }
+fn f(s: &S) -> u64 {
+    // simlint: allow(R1)
+    s.m.values().sum()
+}
+";
+    let (findings, _) = analyze_source(SIM_PATH, reasonless);
+    assert!(
+        findings.iter().any(|f| f.rule == "WAIVER"),
+        "a waiver without a reason must itself be a finding: {findings:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// R2: wall clock outside timing shims
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r2_violation_waiver_and_allowlist() {
+    let src = "fn f() -> std::time::Instant { std::time::Instant::now() }\n";
+    let (findings, _) = analyze_source(SIM_PATH, src);
+    assert!(rules_of(&findings).contains(&"R2"), "{findings:?}");
+
+    let waived = "// simlint: allow-file(R2) fixture measures its own harness\nfn f() -> std::time::Instant { std::time::Instant::now() }\n";
+    let (findings, waived_n) = analyze_source(SIM_PATH, waived);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert!(waived_n >= 1);
+
+    // The bench shim is allowlisted: clean with no waiver at all.
+    let (findings, waived_n) = analyze_source("rust/src/util/bench.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(waived_n, 0);
+}
+
+// ---------------------------------------------------------------------------
+// R3: threads/atomics outside the run_sweep runner
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r3_violation_and_allowlist() {
+    let src = "\
+use std::sync::atomic::{AtomicUsize, Ordering};
+fn f() {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    std::thread::spawn(move || N.fetch_add(1, Ordering::SeqCst));
+}
+";
+    let (findings, _) = analyze_source(PLAIN_PATH, src);
+    assert!(rules_of(&findings).contains(&"R3"), "{findings:?}");
+
+    // The sweep runner is the one sanctioned concurrency site.
+    let (findings, _) = analyze_source("rust/src/engine/experiments.rs", src);
+    assert!(findings.iter().all(|f| f.rule != "R3"), "{findings:?}");
+}
+
+// ---------------------------------------------------------------------------
+// R4: float accumulation into conservation counters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r4_violation_boundary_idiom_and_waiver() {
+    let bad = "\
+struct Metrics { handoff_bytes: f64 }
+fn f(m: &mut Metrics, tokens: usize, per: f64) {
+    m.handoff_bytes += tokens as f64 * per;
+}
+";
+    let (findings, _) = analyze_source(SIM_PATH, bad);
+    assert!(rules_of(&findings).contains(&"R4"), "{findings:?}");
+
+    // f64 at the boundary, integer storage: the sanctioned idiom.
+    let good = "\
+struct Metrics { handoff_bytes: u64 }
+fn f(m: &mut Metrics, tokens: usize, per: f64) {
+    m.handoff_bytes += (tokens as f64 * per) as u64;
+}
+";
+    let (findings, _) = analyze_source(SIM_PATH, good);
+    assert!(findings.is_empty(), "{findings:?}");
+
+    let waived = "\
+// simlint: allow(R4) fixture models an analog gauge, not a conserved total
+struct Gauge { drift_bytes: f64 }
+";
+    let (findings, waived_n) = analyze_source(SIM_PATH, waived);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(waived_n, 1);
+}
+
+// ---------------------------------------------------------------------------
+// The gate: the real tree is clean, and the report is stable
+// ---------------------------------------------------------------------------
+
+#[test]
+fn real_tree_lints_clean() {
+    let report = run(&repo_root()).expect("simlint pass over the real tree");
+    assert!(
+        report.is_clean(),
+        "the tree must carry zero unwaived findings:\n{}",
+        report.render()
+    );
+    assert!(report.files_scanned > 10, "walked {} files", report.files_scanned);
+    // The documented exceptions exist: at least the real-execution
+    // engine's allow-file(R2) waiver must have suppressed something.
+    assert!(report.waived >= 1, "expected at least one waived finding");
+}
+
+#[test]
+fn report_is_deterministic_and_sorted() {
+    let a = run(&repo_root()).expect("simlint pass");
+    let b = run(&repo_root()).expect("simlint pass");
+    assert_eq!(a.render(), b.render());
+    let keys: Vec<_> = a.findings.iter().map(|f| (f.file.clone(), f.line, f.rule)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "findings must come out sorted");
+}
