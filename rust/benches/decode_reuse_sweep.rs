@@ -1,4 +1,4 @@
-//! Bench: decode-side session KV residency (`--decode-reuse`) on vs off.
+//! Bench: decode-side session KV residency (`--reuse delta`) on vs off.
 //!
 //! Runs the PrefillShare topology over identical (trace, seed) per
 //! arrival rate with and without decode reuse and reports the quantities

@@ -7,7 +7,7 @@
 //! exists to move: prefix hit ratio when *sibling* agents hit the same
 //! prefix simultaneously, TTFT per DAG depth (the per-wave latency
 //! profile), the per-session in-flight high-water mark, and — with
-//! `--decode-reuse` — delta-handoff traffic when concurrent sibling
+//! `--reuse delta` — delta-handoff traffic when concurrent sibling
 //! handoffs pin several residency entries of one session at once.
 //!
 //! Headline checks (the PR's acceptance bar, also asserted inside

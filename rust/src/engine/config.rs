@@ -31,6 +31,76 @@ impl SystemKind {
     }
 }
 
+/// Decode-side KV reuse policy (`--reuse off|delta|delta+relay|delta+relay+fork`).
+///
+/// The three mechanisms form a ladder — each rung requires the one below,
+/// because both relay and fork size themselves against the residency
+/// ledger that delta handoff maintains:
+///
+/// * `delta` — session KV residency: a finished call's KV stays retained
+///   on its decode worker and later calls of the session ship only the
+///   delta (the former `--decode-reuse` bool);
+/// * `relay` — decode-KV relay across a DAG fan-out edge: a child call
+///   receives its parent's *decoded output* KV from the parent's decode
+///   worker as `relayed` tokens instead of freshly prefilled shipment
+///   (class-isolated, fan-out parents only — inert on chains);
+/// * `fork` — copy-on-write sibling forks: when a ready set issues N
+///   sibling nodes at once, the shared branch-point prefix is refcounted
+///   and shipped once per group, the other siblings accounting it as
+///   `forked` tokens against live-ref'd CoW blocks.
+///
+/// `ReuseOpts::OFF` (the default) reproduces the golden fixtures
+/// bit-for-bit; `DELTA` reproduces every former `--decode-reuse` run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReuseOpts {
+    /// Delta handoff against retained decode-side session KV.
+    pub delta: bool,
+    /// Relay parent decoded-output KV across fan-out edges (requires `delta`).
+    pub relay: bool,
+    /// Copy-on-write forks of the shared sibling prefix (requires `relay`).
+    pub fork: bool,
+}
+
+impl ReuseOpts {
+    pub const OFF: ReuseOpts = ReuseOpts { delta: false, relay: false, fork: false };
+    pub const DELTA: ReuseOpts = ReuseOpts { delta: true, relay: false, fork: false };
+    pub const DELTA_RELAY: ReuseOpts = ReuseOpts { delta: true, relay: true, fork: false };
+    pub const DELTA_RELAY_FORK: ReuseOpts = ReuseOpts { delta: true, relay: true, fork: true };
+
+    /// Parse a `--reuse` mode name; `None` for anything off the ladder.
+    pub fn by_name(name: &str) -> Option<ReuseOpts> {
+        match name {
+            "off" => Some(ReuseOpts::OFF),
+            "delta" => Some(ReuseOpts::DELTA),
+            "delta+relay" => Some(ReuseOpts::DELTA_RELAY),
+            "delta+relay+fork" => Some(ReuseOpts::DELTA_RELAY_FORK),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match (self.delta, self.relay, self.fork) {
+            (false, false, false) => "off",
+            (true, false, false) => "delta",
+            (true, true, false) => "delta+relay",
+            (true, true, true) => "delta+relay+fork",
+            _ => unreachable!("ReuseOpts off the ladder: {self:?}"),
+        }
+    }
+
+    /// Every mode on the ladder, weakest first (CLI help order).
+    pub fn all() -> [ReuseOpts; 4] {
+        [ReuseOpts::OFF, ReuseOpts::DELTA, ReuseOpts::DELTA_RELAY, ReuseOpts::DELTA_RELAY_FORK]
+    }
+
+    /// The ladder invariant: `fork ⇒ relay ⇒ delta`.  Constructed modes
+    /// (the consts / `by_name`) always satisfy it; hand-rolled structs are
+    /// validated by the simulator at construction.
+    pub fn is_valid(&self) -> bool {
+        (!self.fork || self.relay) && (!self.relay || self.delta)
+    }
+}
+
 /// Full simulator configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -61,13 +131,13 @@ pub struct ClusterConfig {
     /// Resident-KV capacity per decode worker, in tokens; beyond this,
     /// arriving handoffs are staged through host memory (App. B.2).
     pub decode_kv_tokens: usize,
-    /// Decode-side session KV residency with delta handoff
-    /// (`--decode-reuse`): finished requests leave their KV retained on
-    /// the decode worker, later calls of the session ship only the delta,
-    /// and retained entries are reclaimed LRU under the resident cap
-    /// (discard vs host-park priced by the cost model).  `false` (the
-    /// default) reproduces the golden fixtures bit-for-bit.
-    pub decode_reuse: bool,
+    /// Decode-side KV reuse policy (`--reuse`): delta handoff against
+    /// retained session KV, decode-KV relay across fan-out edges, and
+    /// copy-on-write sibling forks — see [`ReuseOpts`].
+    /// [`ReuseOpts::OFF`] (the default) reproduces the golden fixtures
+    /// bit-for-bit; the deprecated `--decode-reuse` flag maps to
+    /// [`ReuseOpts::DELTA`].
+    pub reuse: ReuseOpts,
     /// Serialize KV transfers FIFO per interconnect link (`--link-gbps`
     /// implies this).  `false` reproduces the original fire-and-forget
     /// fixed-cost handoff — the configuration the golden fixture pins.
@@ -144,7 +214,7 @@ impl ClusterConfig {
             max_decode_batch: 48,
             prefill_kv_tokens,
             decode_kv_tokens,
-            decode_reuse: false,
+            reuse: ReuseOpts::OFF,
             link_contended: false,
             prefill_gpus: Vec::new(),
             prefill_classes: Vec::new(),
@@ -217,12 +287,26 @@ mod tests {
         assert_eq!(c.sched, SchedPolicy::Fifo);
         assert_eq!(c.routing, RoutePolicy::PrefixAware);
         assert!(!c.link_contended);
-        assert!(!c.decode_reuse);
+        assert_eq!(c.reuse, ReuseOpts::OFF);
         assert!(c.prefill_gpus.is_empty());
         assert!(c.chunk_tokens > 0);
         assert!(!c.legacy_queue, "calendar queue is the default");
         assert_eq!(c.metrics, MetricsMode::Exact, "exact metrics are the default");
         assert!(!c.audit, "audit mode is opt-in; defaults keep fixtures byte-identical");
+    }
+
+    #[test]
+    fn reuse_modes_roundtrip_and_respect_the_ladder() {
+        for mode in ReuseOpts::all() {
+            assert_eq!(ReuseOpts::by_name(mode.label()), Some(mode));
+            assert!(mode.is_valid(), "{mode:?}");
+        }
+        assert_eq!(ReuseOpts::by_name("delta"), Some(ReuseOpts::DELTA));
+        assert_eq!(ReuseOpts::by_name("on"), None);
+        assert_eq!(ReuseOpts::default(), ReuseOpts::OFF);
+        // Off-ladder combinations are rejected.
+        assert!(!ReuseOpts { delta: false, relay: true, fork: false }.is_valid());
+        assert!(!ReuseOpts { delta: true, relay: false, fork: true }.is_valid());
     }
 
     #[test]

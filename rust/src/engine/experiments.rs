@@ -16,9 +16,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::costmodel::{LlmSpec, LLAMA8B, QWEN14B};
-use crate::engine::config::{ClusterConfig, SystemKind};
+use crate::engine::config::{ClusterConfig, ReuseOpts, SystemKind};
 use crate::engine::report::Row;
-use crate::engine::sim::simulate;
+use crate::engine::sim::{simulate, ConservationLedger};
 use crate::metrics::MetricsMode;
 use crate::util::json::{self, Json};
 use crate::workload::{
@@ -316,8 +316,8 @@ pub fn route_ablation_sweep(seed: u64, threads: usize) -> Vec<Row> {
 /// whole context without reuse, only the delta with it).
 pub const REUSE_RATES: &[f64] = &[1.0, 2.0, 4.0, 8.0];
 
-/// Decode-side session KV residency comparison (`--decode-reuse` on vs
-/// off) over identical (trace, seed) per rate: one row pair per rate, so
+/// Decode-side session KV residency comparison (`--reuse delta` vs
+/// `off`) over identical (trace, seed) per rate: one row pair per rate, so
 /// handoff tokens/bytes, TTFT by agent-call position, staging and
 /// latency are directly comparable (`decode_reuse_sweep` bench,
 /// `bench-serving --experiment reuse`).
@@ -333,13 +333,13 @@ pub fn reuse_sweep(
         .map(|&rate| Arc::new(generate_trace(wl, rate, HORIZON_S, seed)))
         .collect();
     let mut jobs = Vec::new();
-    for &decode_reuse in &[false, true] {
+    for &reuse in &[ReuseOpts::OFF, ReuseOpts::DELTA] {
         for (ri, &rate) in rates.iter().enumerate() {
             let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
-            cfg.decode_reuse = decode_reuse;
+            cfg.reuse = reuse;
             cfg.seed = seed;
             jobs.push(base_job(
-                &format!("ps/reuse-{}", if decode_reuse { "on" } else { "off" }),
+                &format!("ps/reuse-{}", if reuse.delta { "on" } else { "off" }),
                 wl.name,
                 "rate",
                 rate,
@@ -385,7 +385,7 @@ pub fn fanout_sweep(llm: LlmSpec, rates: &[f64], seed: u64, threads: usize) -> V
     let wl = fanout();
     for (ri, &rate) in rates.iter().enumerate() {
         let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
-        cfg.decode_reuse = true;
+        cfg.reuse = ReuseOpts::DELTA;
         cfg.seed = seed;
         jobs.push(base_job(
             "ps/fanout-reuse",
@@ -537,6 +537,117 @@ pub fn prefillshare_experiment(seed: u64, threads: usize) -> Vec<Row> {
 
 fn rates_top(rates: &[f64]) -> f64 {
     *rates.last().expect("non-empty rate sweep")
+}
+
+/// Offered load for the fork/relay reuse-ladder comparison (below the
+/// fanout saturation knee, same reasoning as [`PRESHARE_RATES`]).
+pub const FORKRELAY_RATE: f64 = 2.0;
+
+/// Seeds the fork/relay comparison pins: the `golden_forkrelay.json`
+/// fixture (and the Python port) replays exactly these, so the strict
+/// shipped-byte ordering below is cross-validated outside this crate.
+pub const FORKRELAY_SEEDS: &[u64] = &[0, 1];
+
+/// Reuse-ladder comparison on the DAG workloads: `delta` vs
+/// `delta+relay` vs `delta+relay+fork` over identical (trace, seed) —
+/// the x-axis is the trace seed, one row triple per (workload, seed).
+/// All three arms share one materialized trace per point, so shipped /
+/// relayed / forked token counts are directly comparable.
+pub fn forkrelay_sweep(llm: LlmSpec, seeds: &[u64], threads: usize) -> Vec<Row> {
+    let mut jobs = Vec::new();
+    for wl in [fanout(), debate()] {
+        for &seed in seeds {
+            let trace = Arc::new(generate_trace(&wl, FORKRELAY_RATE, HORIZON_S, seed));
+            for reuse in [ReuseOpts::DELTA, ReuseOpts::DELTA_RELAY, ReuseOpts::DELTA_RELAY_FORK]
+            {
+                let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
+                cfg.reuse = reuse;
+                cfg.seed = seed;
+                jobs.push(base_job(
+                    &format!("ps/{}", reuse.label()),
+                    wl.name,
+                    "seed",
+                    seed as f64,
+                    cfg,
+                    trace.clone(),
+                ));
+            }
+        }
+    }
+    run_sweep(&jobs, threads)
+}
+
+/// CLI/bench wrapper (`bench-serving --experiment forkrelay`, emitted to
+/// `BENCH_forkrelay.json` by CI).  Always runs the pinned
+/// [`FORKRELAY_SEEDS`] (plus `--seed` when it names a third one) and
+/// asserts the acceptance shape at every point: each arm completes the
+/// same sessions and covers the same per-class context demand through
+/// its own channel mix; relay strictly reduces shipped handoff tokens on
+/// `fanout`; adding CoW forks strictly reduces them further on both
+/// workloads (sibling batches fork on `fanout` *and* `debate`).
+pub fn forkrelay_experiment(seed: u64, threads: usize) -> Vec<Row> {
+    let mut seeds: Vec<u64> = FORKRELAY_SEEDS.to_vec();
+    if !seeds.contains(&seed) {
+        seeds.push(seed);
+    }
+    let rows = forkrelay_sweep(LLAMA8B, &seeds, threads);
+    let find = |sys: &str, wl: &str, seed: u64| {
+        rows.iter()
+            .find(|r| r.system == sys && r.workload == wl && r.x == seed as f64)
+            .expect("sweep row")
+    };
+    for wl in ["fanout", "debate"] {
+        for &seed in &seeds {
+            let delta = find("ps/delta", wl, seed);
+            let relay = find("ps/delta+relay", wl, seed);
+            let fork = find("ps/delta+relay+fork", wl, seed);
+            for arm in [relay, fork] {
+                assert_eq!(
+                    arm.result.sessions_completed, delta.result.sessions_completed,
+                    "arms must complete the same sessions ({wl}, seed {seed})"
+                );
+                // The five-channel conservation identity: every arm covers
+                // the identical context demand, per class.
+                let demand: Vec<u64> =
+                    ConservationLedger::from_metrics(&delta.result.metrics)
+                        .by_class
+                        .iter()
+                        .map(|c| c.covered())
+                        .collect();
+                ConservationLedger::from_metrics(&arm.result.metrics)
+                    .assert_covers(&demand, &format!("{} {wl} seed {seed}", arm.system));
+            }
+            assert_eq!(delta.result.forked_tokens + delta.result.relayed_tokens, 0);
+            assert!(
+                relay.result.relayed_tokens > 0,
+                "relay must cover parent output ({wl}, seed {seed})"
+            );
+            assert_eq!(relay.result.forked_tokens, 0, "fork off in delta+relay");
+            assert!(
+                fork.result.forked_tokens > 0,
+                "sibling batches must fork ({wl}, seed {seed})"
+            );
+            if wl == "fanout" {
+                assert!(
+                    relay.result.handoff_tokens < delta.result.handoff_tokens,
+                    "relay must ship strictly less than delta on fanout \
+                     ({} vs {}, seed {seed})",
+                    relay.result.handoff_tokens,
+                    delta.result.handoff_tokens
+                );
+            }
+            // The headline acceptance bar: the full ladder ships strictly
+            // fewer interconnect bytes than plain delta.
+            assert!(
+                fork.result.handoff_tokens < delta.result.handoff_tokens,
+                "delta+relay+fork must ship strictly less than delta \
+                 ({} vs {}, {wl}, seed {seed})",
+                fork.result.handoff_tokens,
+                delta.result.handoff_tokens
+            );
+        }
+    }
+    rows
 }
 
 // ---------------------------------------------------------------------------
@@ -761,7 +872,7 @@ mod tests {
             let mut cfg = ClusterConfig::paper_default(system);
             cfg.seed = 7;
             if i >= 4 {
-                cfg.decode_reuse = true;
+                cfg.reuse = ReuseOpts::DELTA;
             }
             jobs.push(base_job(system.label(), wl.name, "rate", i as f64, cfg, (*trace).clone()));
         }

@@ -1,6 +1,6 @@
 //! Experiment report formatting: paper-style table rows + JSON export.
 
-use crate::engine::sim::SimResult;
+use crate::engine::sim::{ConservationLedger, SimResult};
 use crate::util::json::{self, Json};
 
 /// One (system, workload, sweep-point) row.
@@ -65,6 +65,7 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
     json::arr(
         rows.iter()
             .map(|r| {
+                let ledger = ConservationLedger::from_metrics(&r.result.metrics);
                 json::obj(vec![
                     ("system", json::s(&r.system)),
                     ("workload", json::s(&r.workload)),
@@ -90,6 +91,10 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
                     ("decode_reuse_ratio", json::num(r.result.decode_reuse_ratio)),
                     ("handoffs_delta", json::num(r.result.handoffs_delta as f64)),
                     ("decode_reuse_tokens", json::num(r.result.decode_reuse_tokens as f64)),
+                    ("forked_tokens", json::num(r.result.forked_tokens as f64)),
+                    ("relayed_tokens", json::num(r.result.relayed_tokens as f64)),
+                    ("handoffs_forked", json::num(r.result.metrics.handoffs_forked as f64)),
+                    ("handoffs_relayed", json::num(r.result.metrics.handoffs_relayed as f64)),
                     ("retained_evictions", json::num(r.result.retained_evictions as f64)),
                     ("host_reload_tokens", json::num(r.result.host_reload_tokens as f64)),
                     (
@@ -157,6 +162,21 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
                     (
                         "host_reload_tokens_by_class",
                         u64_arr(&r.result.metrics.host_reload_tokens_by_class),
+                    ),
+                    // The fork/relay splits come through the shared
+                    // conservation ledger so the report states the same
+                    // five-channel identity the `--audit` hooks assert.
+                    (
+                        "forked_tokens_by_class",
+                        u64_arr(&ledger.by_class.iter().map(|t| t.forked).collect::<Vec<u64>>()),
+                    ),
+                    (
+                        "relayed_tokens_by_class",
+                        u64_arr(&ledger.by_class.iter().map(|t| t.relayed).collect::<Vec<u64>>()),
+                    ),
+                    (
+                        "ctx_covered_tokens",
+                        json::num(ledger.total().covered() as f64),
                     ),
                 ])
             })

@@ -31,9 +31,11 @@
 //!
 //! The net effect is dynamic session pinning with load-balanced initial
 //! placement: prefix-aware's hit ratio without its fixed modulo
-//! assignment.
+//! assignment.  This policy *does* materialize the worker snapshot (its
+//! first statement probes every radix), so the lazy provider builds it
+//! exactly once per routed job.
 
-use crate::engine::route::{Router, WorkerView};
+use crate::engine::route::{Router, WorkerViewProvider};
 use crate::engine::sched::PrefillJob;
 use crate::util::rng::Rng;
 
@@ -41,7 +43,13 @@ use crate::util::rng::Rng;
 pub struct CacheAware;
 
 impl Router for CacheAware {
-    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], _rng: &mut Rng) -> usize {
+    fn route(
+        &mut self,
+        job: &PrefillJob,
+        views: &mut dyn WorkerViewProvider<'_>,
+        _rng: &mut Rng,
+    ) -> usize {
+        let workers = views.views();
         let scores: Vec<usize> = workers.iter().map(|w| w.radix.peek_prefix(&job.key)).collect();
         let best = *scores.iter().max().expect("non-empty worker set");
         if best * 2 < job.ctx_len {
@@ -96,9 +104,10 @@ mod tests {
         let mut c = caches(4);
         // Session 5's context cached on worker 2 (home would be 5 % 4 = 1).
         c[2].insert(&job(5, 200, 0).key);
-        let v = views(&c, &[0, 0, 0, 0]);
+        let mut v = views(&c, &[0, 0, 0, 0]);
         let mut rng = Rng::new(0);
-        assert_eq!(CacheAware.route(&job(5, 240, 0), &v, &mut rng), 2);
+        assert_eq!(CacheAware.route(&job(5, 240, 0), &mut v, &mut rng), 2);
+        assert!(v.materializations > 0, "cache-aware must probe the snapshot");
     }
 
     #[test]
@@ -108,16 +117,16 @@ mod tests {
         // chasing it would herd; the router must place by load instead.
         c[1].insert(&job(9, 40, 0).key);
         let mut rng = Rng::new(0);
-        let v = views(&c, &[500, 300, 0, 900]);
-        assert_eq!(CacheAware.route(&job(9, 400, 0), &v, &mut rng), 2);
+        let mut v = views(&c, &[500, 300, 0, 900]);
+        assert_eq!(CacheAware.route(&job(9, 400, 0), &mut v, &mut rng), 2);
         // Cold cluster degenerates the same way: pure least-loaded.
         let cold = caches(4);
-        let v = views(&cold, &[500, 100, 700, 900]);
-        assert_eq!(CacheAware.route(&job(0, 400, 0), &v, &mut rng), 1);
+        let mut v = views(&cold, &[500, 100, 700, 900]);
+        assert_eq!(CacheAware.route(&job(0, 400, 0), &mut v, &mut rng), 1);
         // ...but an *idle* cold cluster pins by session, not worker 0.
-        let v = views(&cold, &[0, 0, 0, 0]);
+        let mut v = views(&cold, &[0, 0, 0, 0]);
         for sid in 0..8 {
-            assert_eq!(CacheAware.route(&job(sid, 400, 0), &v, &mut rng), sid % 4);
+            assert_eq!(CacheAware.route(&job(sid, 400, 0), &mut v, &mut rng), sid % 4);
         }
     }
 
@@ -128,10 +137,14 @@ mod tests {
         c[2].insert(&job(8, 100, 0).key);
         c[3].insert(&job(8, 100, 0).key);
         let mut rng = Rng::new(0);
-        let v = views(&c, &[0, 0, 5_000, 100]);
-        assert_eq!(CacheAware.route(&job(8, 160, 0), &v, &mut rng), 3, "less loaded tie wins");
-        let v = views(&c, &[0, 0, 700, 700]);
-        assert_eq!(CacheAware.route(&job(8, 160, 0), &v, &mut rng), 2, "lowest index on full tie");
+        let mut v = views(&c, &[0, 0, 5_000, 100]);
+        assert_eq!(CacheAware.route(&job(8, 160, 0), &mut v, &mut rng), 3, "less loaded tie wins");
+        let mut v = views(&c, &[0, 0, 700, 700]);
+        assert_eq!(
+            CacheAware.route(&job(8, 160, 0), &mut v, &mut rng),
+            2,
+            "lowest index on full tie"
+        );
     }
 
     #[test]
@@ -139,10 +152,10 @@ mod tests {
         let mut c = caches(4);
         c[1].insert(&job(5, 150, 0).key); // home of session 5 (5 % 4 = 1)
         c[2].insert(&job(5, 150, 0).key); // equally warm elsewhere
-        let v = views(&c, &[0, 9_000, 0, 0]);
+        let mut v = views(&c, &[0, 9_000, 0, 0]);
         let mut rng = Rng::new(0);
         // Home is tied-best: stays home even though worker 2 is idle.
-        assert_eq!(CacheAware.route(&job(5, 200, 0), &v, &mut rng), 1);
+        assert_eq!(CacheAware.route(&job(5, 200, 0), &mut v, &mut rng), 1);
     }
 
     #[test]
@@ -150,12 +163,12 @@ mod tests {
         // Idle cold cluster: each class of a session pins to its own
         // offset home, not one shared modulo slot.
         let cold = caches(4);
-        let v = views(&cold, &[0, 0, 0, 0]);
+        let mut v = views(&cold, &[0, 0, 0, 0]);
         let mut rng = Rng::new(0);
         for class in 0..4 {
             let mut j = job(5, 400, 0);
             j.class = class;
-            assert_eq!(CacheAware.route(&j, &v, &mut rng), (5 + class) % 4);
+            assert_eq!(CacheAware.route(&j, &mut v, &mut rng), (5 + class) % 4);
         }
         // Strong regime: the tied-best preference follows the class home.
         let mut c = caches(4);
@@ -163,7 +176,7 @@ mod tests {
         j.class = 1; // class home = (5 + 1) % 4 = 2
         c[2].insert(&j.key);
         c[3].insert(&j.key);
-        let v = views(&c, &[0, 0, 9_000, 0]);
-        assert_eq!(CacheAware.route(&j, &v, &mut rng), 2, "tied class home keeps the session");
+        let mut v = views(&c, &[0, 0, 9_000, 0]);
+        assert_eq!(CacheAware.route(&j, &mut v, &mut rng), 2, "tied class home keeps the session");
     }
 }

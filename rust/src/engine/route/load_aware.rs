@@ -6,9 +6,10 @@
 //! join-shortest-queue ablation: it levels worker utilization — the
 //! imbalance column in the routing sweep — at the price of prefix
 //! locality, sitting between `prefix-aware` and `round-robin` on hit
-//! ratio under skewed session lengths.
+//! ratio under skewed session lengths.  Materializes the snapshot (with
+//! backlog summation — `uses_load`) on every routed job.
 
-use crate::engine::route::{Router, WorkerView};
+use crate::engine::route::{Router, WorkerViewProvider};
 use crate::engine::sched::PrefillJob;
 use crate::util::rng::Rng;
 
@@ -16,7 +17,13 @@ use crate::util::rng::Rng;
 pub struct LoadAware;
 
 impl Router for LoadAware {
-    fn route(&mut self, _job: &PrefillJob, workers: &[WorkerView<'_>], _rng: &mut Rng) -> usize {
+    fn route(
+        &mut self,
+        _job: &PrefillJob,
+        views: &mut dyn WorkerViewProvider<'_>,
+        _rng: &mut Rng,
+    ) -> usize {
+        let workers = views.views();
         let mut pick = 0usize;
         for (i, w) in workers.iter().enumerate().skip(1) {
             if w.outstanding_tokens < workers[pick].outstanding_tokens {
@@ -41,9 +48,10 @@ mod tests {
     fn least_loaded_wins_lowest_index_ties() {
         let c = caches(4);
         let mut rng = Rng::new(0);
-        let v = views(&c, &[900, 100, 2_000, 100]);
-        assert_eq!(LoadAware.route(&job(0, 64, 0), &v, &mut rng), 1);
-        let v = views(&c, &[0, 0, 0, 0]);
-        assert_eq!(LoadAware.route(&job(3, 64, 0), &v, &mut rng), 0);
+        let mut v = views(&c, &[900, 100, 2_000, 100]);
+        assert_eq!(LoadAware.route(&job(0, 64, 0), &mut v, &mut rng), 1);
+        assert!(v.materializations > 0, "load-aware must read the snapshot");
+        let mut v = views(&c, &[0, 0, 0, 0]);
+        assert_eq!(LoadAware.route(&job(3, 64, 0), &mut v, &mut rng), 0);
     }
 }

@@ -53,35 +53,71 @@ pub struct WorkerView<'a> {
     pub outstanding_tokens: usize,
 }
 
-/// Per-job prefill-worker selection.  `workers` is never empty; the
-/// returned index must be `< workers.len()`.
+/// Lazy access to the per-worker snapshot, handed to [`Router::route`].
+///
+/// The snapshot is materialized on the **first** [`views`](Self::views)
+/// call and cached for the rest of the routing decision; a policy that
+/// never calls it (prefix-aware, round-robin, random — the static
+/// policies) pays only [`n_workers`](Self::n_workers), preserving the
+/// snapshot-free fast path the routing microbench pins.  This replaces
+/// the old three-method surface (`route`/`route_indexed`/`needs_views`)
+/// with one `route` signature: the *policy body* now decides whether a
+/// snapshot exists, instead of declaring it out-of-band and trusting two
+/// code paths to agree.
+pub trait WorkerViewProvider<'a> {
+    /// Pool size — always available without materializing the snapshot.
+    /// Never 0; routed indices must stay below it.
+    fn n_workers(&self) -> usize;
+
+    /// The per-worker snapshot (materialized lazily on first access).
+    fn views(&mut self) -> &[WorkerView<'a>];
+}
+
+/// Per-job prefill-worker selection.  The returned index must be
+/// `< views.n_workers()`.
 pub trait Router {
-    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize;
+    fn route(
+        &mut self,
+        job: &PrefillJob,
+        views: &mut dyn WorkerViewProvider<'_>,
+        rng: &mut Rng,
+    ) -> usize;
 
     /// Whether this policy reads [`WorkerView::outstanding_tokens`].
-    /// When `false` (the default), the pool skips the O(queue-depth)
-    /// backlog summation per routed job and passes 0 — the prefix-aware
-    /// hot path pays only pointer collection.
+    /// When `false` (the default), a provider that does materialize skips
+    /// the O(queue-depth) backlog summation and reports 0 — cache-aware's
+    /// radix probing stays cheap even though it snapshots.
     fn uses_load(&self) -> bool {
         false
     }
+}
 
-    /// Whether this policy reads the [`WorkerView`] snapshot at all
-    /// (parallel to [`Router::uses_load`], one rung further down).  When
-    /// `false`, the simulator skips the per-call `Vec<WorkerView>`
-    /// allocation entirely and routes through
-    /// [`Router::route_indexed`] — the static policies (prefix-aware,
-    /// round-robin, random) only ever need the pool size.
-    fn needs_views(&self) -> bool {
-        true
+/// The trivial [`WorkerViewProvider`]: a pre-built snapshot slice, with a
+/// counter of how many times it was (re-)materialized.  Tests use the
+/// counter to pin which policies touch the snapshot at all; the simulator
+/// itself routes through the lazy pool-backed provider in
+/// `engine::sim::prefill_pool`.
+#[derive(Debug)]
+pub struct SliceViews<'a> {
+    views: Vec<WorkerView<'a>>,
+    /// `views()` calls observed — 0 proves a policy ran snapshot-free.
+    pub materializations: usize,
+}
+
+impl<'a> SliceViews<'a> {
+    pub fn new(views: Vec<WorkerView<'a>>) -> SliceViews<'a> {
+        SliceViews { views, materializations: 0 }
+    }
+}
+
+impl<'a> WorkerViewProvider<'a> for SliceViews<'a> {
+    fn n_workers(&self) -> usize {
+        self.views.len()
     }
 
-    /// Snapshot-free fast path, called instead of [`Router::route`] when
-    /// [`Router::needs_views`] is `false`.  Must pick the same worker
-    /// `route` would over any snapshot of the same pool size.
-    fn route_indexed(&mut self, job: &PrefillJob, n_workers: usize, rng: &mut Rng) -> usize {
-        let _ = (job, n_workers, rng);
-        unreachable!("route_indexed called on a snapshot-reading policy");
+    fn views(&mut self) -> &[WorkerView<'a>] {
+        self.materializations += 1;
+        &self.views
     }
 }
 
@@ -153,12 +189,14 @@ pub(crate) mod testutil {
         (0..n).map(|_| RadixCache::new(100_000)).collect()
     }
 
-    pub fn views<'a>(caches: &'a [RadixCache], outstanding: &[usize]) -> Vec<WorkerView<'a>> {
-        caches
-            .iter()
-            .zip(outstanding)
-            .map(|(radix, &outstanding_tokens)| WorkerView { radix, outstanding_tokens })
-            .collect()
+    pub fn views<'a>(caches: &'a [RadixCache], outstanding: &[usize]) -> SliceViews<'a> {
+        SliceViews::new(
+            caches
+                .iter()
+                .zip(outstanding)
+                .map(|(radix, &outstanding_tokens)| WorkerView { radix, outstanding_tokens })
+                .collect(),
+        )
     }
 }
 
@@ -180,44 +218,56 @@ mod tests {
     }
 
     #[test]
-    fn static_policies_skip_the_snapshot_and_match_the_view_path() {
+    fn static_policies_never_materialize_the_snapshot() {
+        // The consolidated `route` signature keeps the snapshot-free fast
+        // path: a static policy's body never calls `views()`, so a lazy
+        // provider never builds the snapshot — pinned by the
+        // materialization counter, per policy.
         let caches = testutil::caches(4);
-        let views = testutil::views(&caches, &[0, 0, 0, 0]);
         for p in RoutePolicy::all() {
-            let wants_views = make_router(p).needs_views();
-            let reads_views =
-                matches!(p, RoutePolicy::CacheAware | RoutePolicy::LoadAware);
-            assert_eq!(wants_views, reads_views, "{p:?}");
-            if wants_views {
-                continue;
-            }
-            // The snapshot-free fast path must pick exactly what the
-            // view path picks — two routers, identical RNG streams.
-            let mut via_views = make_router(p);
-            let mut via_index = make_router(p);
-            let mut rng_a = Rng::new(13);
-            let mut rng_b = Rng::new(13);
+            let mut views = testutil::views(&caches, &[0, 0, 0, 0]);
+            let mut r = make_router(p);
+            let mut rng = Rng::new(13);
             for sid in 0..32 {
-                let j = job(sid, 64, 0);
-                assert_eq!(
-                    via_views.route(&j, &views, &mut rng_a),
-                    via_index.route_indexed(&j, views.len(), &mut rng_b),
-                    "{p:?} fast path diverged at sid {sid}"
-                );
+                let w = r.route(&job(sid, 64, 0), &mut views, &mut rng);
+                assert!(w < 4, "{p:?} routed out of range: {w}");
             }
+            let reads_views = matches!(p, RoutePolicy::CacheAware | RoutePolicy::LoadAware);
+            assert_eq!(
+                views.materializations > 0,
+                reads_views,
+                "{p:?}: snapshot materialized {} times",
+                views.materializations
+            );
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic_per_seed() {
+        // Same policy, same RNG seed, same job stream → same choices
+        // (the contract the simulator's determinism rests on).
+        let caches = testutil::caches(4);
+        for p in RoutePolicy::all() {
+            let draw = || -> Vec<usize> {
+                let mut views = testutil::views(&caches, &[7, 0, 3, 0]);
+                let mut r = make_router(p);
+                let mut rng = Rng::new(13);
+                (0..32).map(|sid| r.route(&job(sid, 64, 0), &mut views, &mut rng)).collect()
+            };
+            assert_eq!(draw(), draw(), "{p:?} not deterministic");
         }
     }
 
     #[test]
     fn factory_builds_every_policy_and_stays_in_range() {
         let caches = testutil::caches(3);
-        let views = testutil::views(&caches, &[0, 0, 0]);
         let mut rng = Rng::new(7);
         for p in RoutePolicy::all() {
+            let mut views = testutil::views(&caches, &[0, 0, 0]);
             let mut r = make_router(p);
             for sid in 0..16 {
-                let w = r.route(&job(sid, 64, 0), &views, &mut rng);
-                assert!(w < views.len(), "{p:?} routed out of range: {w}");
+                let w = r.route(&job(sid, 64, 0), &mut views, &mut rng);
+                assert!(w < views.n_workers(), "{p:?} routed out of range: {w}");
             }
         }
     }

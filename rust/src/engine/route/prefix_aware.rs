@@ -10,8 +10,12 @@
 //! piling every class's cold misses onto one modulo slot.  Class 0 —
 //! the default shared map — reduces to the pre-class `sid % N` exactly
 //! (pinned by the golden fixture).
+//!
+//! Static policy: the body never touches the snapshot, so a lazy
+//! [`WorkerViewProvider`] never materializes one — the snapshot-free
+//! fast path pinned by the routing microbench.
 
-use crate::engine::route::{Router, WorkerView};
+use crate::engine::route::{Router, WorkerViewProvider};
 use crate::engine::sched::PrefillJob;
 use crate::util::rng::Rng;
 
@@ -19,16 +23,13 @@ use crate::util::rng::Rng;
 pub struct PrefixAware;
 
 impl Router for PrefixAware {
-    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize {
-        self.route_indexed(job, workers.len(), rng)
-    }
-
-    fn needs_views(&self) -> bool {
-        false
-    }
-
-    fn route_indexed(&mut self, job: &PrefillJob, n_workers: usize, _rng: &mut Rng) -> usize {
-        (job.sid + job.class) % n_workers
+    fn route(
+        &mut self,
+        job: &PrefillJob,
+        views: &mut dyn WorkerViewProvider<'_>,
+        _rng: &mut Rng,
+    ) -> usize {
+        (job.sid + job.class) % views.n_workers()
     }
 }
 
@@ -41,23 +42,26 @@ mod tests {
     #[test]
     fn pins_sessions_regardless_of_load() {
         let c = caches(4);
-        let v = views(&c, &[9_000, 0, 0, 0]);
+        let mut v = views(&c, &[9_000, 0, 0, 0]);
         let mut rng = Rng::new(0);
         let mut r = PrefixAware;
         for sid in 0..12 {
-            assert_eq!(r.route(&job(sid, 128, 0), &v, &mut rng), sid % 4);
+            assert_eq!(r.route(&job(sid, 128, 0), &mut v, &mut rng), sid % 4);
         }
+        assert_eq!(v.materializations, 0, "static policy must stay snapshot-free");
     }
 
     #[test]
     fn class_offsets_the_home_worker() {
+        let c = caches(4);
+        let mut v = views(&c, &[0, 0, 0, 0]);
         let mut rng = Rng::new(0);
         let mut r = PrefixAware;
         for sid in 0..8 {
             for class in 0..4 {
                 let mut j = job(sid, 128, 0);
                 j.class = class;
-                assert_eq!(r.route_indexed(&j, 4, &mut rng), (sid + class) % 4);
+                assert_eq!(r.route(&j, &mut v, &mut rng), (sid + class) % 4);
             }
         }
     }

@@ -3,8 +3,10 @@
 //! Draws from the proxy-owned routing RNG (seeded `cfg.seed ^ 0xd15a66`),
 //! the simulator's only routing-side randomness; runs stay reproducible
 //! per seed.
+//!
+//! Static policy: never materializes the worker snapshot.
 
-use crate::engine::route::{Router, WorkerView};
+use crate::engine::route::{Router, WorkerViewProvider};
 use crate::engine::sched::PrefillJob;
 use crate::util::rng::Rng;
 
@@ -12,16 +14,13 @@ use crate::util::rng::Rng;
 pub struct Random;
 
 impl Router for Random {
-    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize {
-        self.route_indexed(job, workers.len(), rng)
-    }
-
-    fn needs_views(&self) -> bool {
-        false
-    }
-
-    fn route_indexed(&mut self, _job: &PrefillJob, n_workers: usize, rng: &mut Rng) -> usize {
-        rng.range(0, n_workers)
+    fn route(
+        &mut self,
+        _job: &PrefillJob,
+        views: &mut dyn WorkerViewProvider<'_>,
+        rng: &mut Rng,
+    ) -> usize {
+        rng.range(0, views.n_workers())
     }
 }
 
@@ -34,10 +33,13 @@ mod tests {
     #[test]
     fn deterministic_per_rng_seed_and_in_range() {
         let c = caches(4);
-        let v = views(&c, &[0, 0, 0, 0]);
         let draw = |seed: u64| -> Vec<usize> {
+            let mut v = views(&c, &[0, 0, 0, 0]);
             let mut rng = Rng::new(seed);
-            (0..32).map(|sid| Random.route(&job(sid, 64, 0), &v, &mut rng)).collect()
+            let picks =
+                (0..32).map(|sid| Random.route(&job(sid, 64, 0), &mut v, &mut rng)).collect();
+            assert_eq!(v.materializations, 0, "static policy must stay snapshot-free");
+            picks
         };
         let a = draw(42);
         assert_eq!(a, draw(42));

@@ -5,8 +5,10 @@
 //! near-full re-prefill.  The counter advances *before* use (first route
 //! goes to worker 1), matching the pre-subsystem simulator's counter
 //! semantics bit-for-bit.
+//!
+//! Static policy: never materializes the worker snapshot.
 
-use crate::engine::route::{Router, WorkerView};
+use crate::engine::route::{Router, WorkerViewProvider};
 use crate::engine::sched::PrefillJob;
 use crate::util::rng::Rng;
 
@@ -22,16 +24,13 @@ impl RoundRobin {
 }
 
 impl Router for RoundRobin {
-    fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>], rng: &mut Rng) -> usize {
-        self.route_indexed(job, workers.len(), rng)
-    }
-
-    fn needs_views(&self) -> bool {
-        false
-    }
-
-    fn route_indexed(&mut self, _job: &PrefillJob, n_workers: usize, _rng: &mut Rng) -> usize {
-        self.counter = (self.counter + 1) % n_workers;
+    fn route(
+        &mut self,
+        _job: &PrefillJob,
+        views: &mut dyn WorkerViewProvider<'_>,
+        _rng: &mut Rng,
+    ) -> usize {
+        self.counter = (self.counter + 1) % views.n_workers();
         self.counter
     }
 }
@@ -45,11 +44,12 @@ mod tests {
     #[test]
     fn rotates_starting_at_worker_one() {
         let c = caches(3);
-        let v = views(&c, &[0, 0, 0]);
+        let mut v = views(&c, &[0, 0, 0]);
         let mut rng = Rng::new(0);
         let mut r = RoundRobin::new();
         let order: Vec<usize> =
-            (0..7).map(|sid| r.route(&job(sid, 64, 0), &v, &mut rng)).collect();
+            (0..7).map(|sid| r.route(&job(sid, 64, 0), &mut v, &mut rng)).collect();
         assert_eq!(order, vec![1, 2, 0, 1, 2, 0, 1]);
+        assert_eq!(v.materializations, 0, "static policy must stay snapshot-free");
     }
 }

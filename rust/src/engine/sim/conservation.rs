@@ -1,0 +1,188 @@
+//! The byte-conservation ledger: one shared statement of the identity
+//! `shipped + reused + reloaded + forked + relayed == context demand`,
+//! per prefill-compatibility class.
+//!
+//! Every token of context KV a decode request needs is covered by
+//! exactly one supply channel: *shipped* over the handoff link,
+//! *reused* from the worker's retained GPU residency, *reloaded* from a
+//! host park, *forked* from a sibling group's copy-on-write shared
+//! blocks, or *relayed* from a parent's decoded output on another
+//! worker.  The identity used to be restated independently by the
+//! `--audit` hooks, the report, and two test suites — this module is
+//! the single source all of them now consume, so a new supply channel
+//! (like fork/relay) is added in one place and every checker sees it.
+
+use crate::metrics::ServingMetrics;
+
+/// One class's supply-channel totals.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ClassTerms {
+    /// Tokens shipped over the handoff links (`handoff_tokens`).
+    pub shipped: u64,
+    /// Tokens served from retained GPU residency (`decode_reuse_tokens`).
+    pub reused: u64,
+    /// Tokens staged back in from host parks (`host_reload_tokens`).
+    pub reloaded: u64,
+    /// Tokens covered by a sibling fork group's shared CoW blocks
+    /// (`forked_tokens`).
+    pub forked: u64,
+    /// Tokens relayed from a parent's decoded output (`relayed_tokens`).
+    pub relayed: u64,
+}
+
+impl ClassTerms {
+    /// Total context demand these channels cover.
+    pub fn covered(&self) -> u64 {
+        self.shipped + self.reused + self.reloaded + self.forked + self.relayed
+    }
+}
+
+/// Per-class conservation terms, read out of a [`ServingMetrics`] bundle.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ConservationLedger {
+    /// Index = compatibility class (dense, like the metric families).
+    pub by_class: Vec<ClassTerms>,
+}
+
+impl ConservationLedger {
+    /// Snapshot the five supply channels from the per-class metric
+    /// families (families grow on demand, so lengths may differ — the
+    /// ledger covers the longest).
+    pub fn from_metrics(m: &ServingMetrics) -> ConservationLedger {
+        let n = m
+            .handoff_tokens_by_class
+            .len()
+            .max(m.decode_reuse_tokens_by_class.len())
+            .max(m.host_reload_tokens_by_class.len())
+            .max(m.forked_tokens_by_class.len())
+            .max(m.relayed_tokens_by_class.len());
+        let at = |v: &Vec<u64>, c: usize| v.get(c).copied().unwrap_or(0);
+        ConservationLedger {
+            by_class: (0..n)
+                .map(|c| ClassTerms {
+                    shipped: at(&m.handoff_tokens_by_class, c),
+                    reused: at(&m.decode_reuse_tokens_by_class, c),
+                    reloaded: at(&m.host_reload_tokens_by_class, c),
+                    forked: at(&m.forked_tokens_by_class, c),
+                    relayed: at(&m.relayed_tokens_by_class, c),
+                })
+                .collect(),
+        }
+    }
+
+    /// Terms of class `c` (all-zero when the class never appeared).
+    pub fn class(&self, c: usize) -> ClassTerms {
+        self.by_class.get(c).copied().unwrap_or_default()
+    }
+
+    /// Sum over every class — the global identity's left-hand side.
+    pub fn total(&self) -> ClassTerms {
+        let mut t = ClassTerms::default();
+        for c in &self.by_class {
+            t.shipped += c.shipped;
+            t.reused += c.reused;
+            t.reloaded += c.reloaded;
+            t.forked += c.forked;
+            t.relayed += c.relayed;
+        }
+        t
+    }
+
+    /// Replace the `reloaded` terms with an externally tracked per-class
+    /// shadow.  The `--audit` per-event checks need this: reloads are
+    /// *sized* at handoff but the metrics counter charges them only at
+    /// decode admission, so mid-run the ledger must check against the
+    /// audit's sized-at-handoff shadow instead.
+    pub fn set_reloaded(&mut self, by_class: &[u64]) {
+        if self.by_class.len() < by_class.len() {
+            self.by_class.resize(by_class.len(), ClassTerms::default());
+        }
+        for (c, terms) in self.by_class.iter_mut().enumerate() {
+            terms.reloaded = by_class.get(c).copied().unwrap_or(0);
+        }
+    }
+
+    /// Assert the identity against a per-class demand vector: every
+    /// class's covered total equals its demand (classes absent from
+    /// either side count as zero).  `what` names the checkpoint in the
+    /// panic message.
+    pub fn assert_covers(&self, demand_by_class: &[u64], what: &str) {
+        let n = self.by_class.len().max(demand_by_class.len());
+        for c in 0..n {
+            let terms = self.class(c);
+            let demand = demand_by_class.get(c).copied().unwrap_or(0);
+            assert_eq!(
+                terms.covered(),
+                demand,
+                "conservation ({what}): class {c}: shipped {} + reused {} + reloaded {} \
+                 + forked {} + relayed {} != context demand {demand}",
+                terms.shipped,
+                terms.reused,
+                terms.reloaded,
+                terms.forked,
+                terms.relayed,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::bump_class;
+
+    fn metrics_with(classes: &[(usize, u64, u64, u64, u64, u64)]) -> ServingMetrics {
+        let mut m = ServingMetrics::default();
+        for &(c, ship, reuse, reload, fork, relay) in classes {
+            bump_class(&mut m.handoff_tokens_by_class, c, ship);
+            bump_class(&mut m.decode_reuse_tokens_by_class, c, reuse);
+            bump_class(&mut m.host_reload_tokens_by_class, c, reload);
+            bump_class(&mut m.forked_tokens_by_class, c, fork);
+            bump_class(&mut m.relayed_tokens_by_class, c, relay);
+        }
+        m
+    }
+
+    #[test]
+    fn ledger_reads_all_five_channels_per_class() {
+        let m = metrics_with(&[(0, 100, 20, 5, 3, 2), (2, 50, 0, 0, 10, 0)]);
+        let l = ConservationLedger::from_metrics(&m);
+        assert_eq!(l.by_class.len(), 3);
+        assert_eq!(l.class(0).covered(), 130);
+        assert_eq!(l.class(1), ClassTerms::default());
+        assert_eq!(l.class(2), ClassTerms { shipped: 50, forked: 10, ..Default::default() });
+        assert_eq!(l.class(9), ClassTerms::default(), "out-of-range class is zero");
+        let t = l.total();
+        assert_eq!((t.shipped, t.reused, t.reloaded, t.forked, t.relayed), (150, 20, 5, 13, 2));
+        assert_eq!(t.covered(), 190);
+    }
+
+    #[test]
+    fn assert_covers_accepts_exact_demand_and_zero_padding() {
+        let m = metrics_with(&[(0, 100, 20, 5, 3, 2), (1, 40, 0, 0, 0, 0)]);
+        let l = ConservationLedger::from_metrics(&m);
+        l.assert_covers(&[130, 40], "test");
+        // Trailing zero-demand classes on either side are fine.
+        l.assert_covers(&[130, 40, 0, 0], "test");
+    }
+
+    #[test]
+    #[should_panic(expected = "conservation (end of run): class 1")]
+    fn assert_covers_panics_on_the_broken_class() {
+        let m = metrics_with(&[(0, 100, 0, 0, 0, 0), (1, 40, 0, 0, 0, 0)]);
+        ConservationLedger::from_metrics(&m).assert_covers(&[100, 41], "end of run");
+    }
+
+    #[test]
+    fn set_reloaded_substitutes_the_audit_shadow() {
+        let m = metrics_with(&[(0, 100, 0, 0, 0, 0)]);
+        let mut l = ConservationLedger::from_metrics(&m);
+        // The metrics charged no reload yet, but 25 were sized at handoff
+        // (class 1 never appeared in any metric family — the shadow grows
+        // the ledger).
+        l.set_reloaded(&[7, 25]);
+        assert_eq!(l.class(0).reloaded, 7);
+        assert_eq!(l.class(1).reloaded, 25);
+        l.assert_covers(&[107, 25], "per event");
+    }
+}

@@ -1,6 +1,6 @@
 //! The decode tier: iteration-level continuous batching under a
 //! resident-KV cap, with host staging on overflow and (optionally)
-//! session KV residency with delta handoff (`--decode-reuse`).
+//! session KV residency with delta handoff (`--reuse delta` and up).
 //!
 //! Each worker hosts one task model.  Batch-join decisions go through
 //! the [`DecodeAdmission`] policy (`engine::sched::admission`): a parked
@@ -63,6 +63,21 @@ pub(crate) struct DecodeReq {
     pub reuse_tokens: usize,
     /// Host-parked tokens that must stage back in before joining.
     pub host_tokens: usize,
+    /// Context tokens covered by this call's CoW fork group (zero-copy
+    /// references to the siblings' shared prefix blocks; `--reuse
+    /// delta+relay+fork`).
+    pub forked_tokens: usize,
+    /// Context tokens relayed from a fan-out parent's decoded output on
+    /// the parent's decode worker (`--reuse delta+relay`).  Relayed KV
+    /// moves over the handoff link like shipped KV and parks/stages with
+    /// it.
+    pub relayed_tokens: usize,
+    /// Worker whose residency entry sourced the relay — its eviction
+    /// shield (`relay_pin`) is released when this handoff lands.
+    pub relay_src: Option<usize>,
+    /// CoW fork group this call references — its block reference is
+    /// dropped when this handoff lands (`ForkRegistry::drop_ref`).
+    pub fork_gid: Option<u64>,
     /// Shared-prefix share of `ctx_len` (system + init prompt) — the
     /// residency signature's base (0 when reuse is off).
     pub base: usize,
@@ -99,7 +114,7 @@ pub(crate) struct DecodeWorker {
     /// compute overlap the remaining copy.
     io_inflight: usize,
     resident_tokens: usize,
-    /// Per-session retained KV (`--decode-reuse`; untouched when off).
+    /// Per-session retained KV (`--reuse delta`; untouched when off).
     pub residency: ResidencyLedger,
     pub busy_micros: u64,
     pub peak_resident: usize,
@@ -155,6 +170,31 @@ impl DecodePool {
         self.workers[w].residency.retained_class(sid)
     }
 
+    /// Length of worker `w`'s relay-usable residency for `sid`: the
+    /// retained entry's base plus its longest signature prefix shared
+    /// with `ctx_sig`, zero for cross-class or host-parked entries.
+    /// Observation-only (see `ResidencyLedger::relay_probe`).
+    pub fn relay_probe(
+        &self,
+        w: usize,
+        sid: usize,
+        class: usize,
+        ctx_sig: &[(usize, usize)],
+    ) -> usize {
+        self.workers[w].residency.relay_probe(sid, class, ctx_sig)
+    }
+
+    /// Shield worker `w`'s entry for `sid` from LRU reclaim while a relay
+    /// copy sourced from it is in flight.
+    pub fn relay_pin(&mut self, w: usize, sid: usize) {
+        self.workers[w].residency.relay_pin(sid);
+    }
+
+    /// Release one relay shield on worker `w`'s entry for `sid`.
+    pub fn relay_unpin(&mut self, w: usize, sid: usize) {
+        self.workers[w].residency.relay_unpin(sid);
+    }
+
     /// The session completed: drop whatever any worker still retains for it.
     pub fn release_session(&mut self, sid: usize) {
         for dw in &mut self.workers {
@@ -188,7 +228,7 @@ impl DecodePool {
             // the policy will `Wait` and no space is needed yet.  The
             // front's own pinned entry is discounted *whole*: admitting
             // the request consumes the entire entry, reused prefix or not.
-            if cfg.decode_reuse {
+            if cfg.reuse.delta {
                 loop {
                     let dw = &self.workers[w];
                     let Some(front) = dw.pending.front() else { return };
@@ -232,7 +272,7 @@ impl DecodePool {
                         if !front.was_deferred && !dw.io_busy() {
                             front.was_deferred = true;
                             dw.io_inflight += 1;
-                            Some(front.shipped_tokens)
+                            Some(front.shipped_tokens + front.relayed_tokens)
                         } else {
                             None
                         }
@@ -256,7 +296,7 @@ impl DecodePool {
                         req
                     };
                     metrics.decode_queue_delay.record(to_secs(q.now() - req.arrived_at));
-                    if cfg.decode_reuse {
+                    if cfg.reuse.delta {
                         // The pinned entry folds into the active footprint
                         // (GPU) or the stage-in copy below (host).
                         let (gpu, host) = self.workers[w].residency.consume(req.sid);
@@ -265,7 +305,8 @@ impl DecodePool {
                     }
                     // One reload copy covers both host-parked KV and a
                     // parked handoff delta (mutually rare, additive size).
-                    let deferred = if req.was_deferred { req.shipped_tokens } else { 0 };
+                    let deferred =
+                        if req.was_deferred { req.shipped_tokens + req.relayed_tokens } else { 0 };
                     let reload = req.host_tokens + deferred;
                     if reload > 0 {
                         {
@@ -390,7 +431,7 @@ impl DecodePool {
             if r.generated >= r.out_tokens {
                 let done = dw.active.swap_remove(i);
                 dw.resident_tokens -= done.footprint();
-                if cfg.decode_reuse && !done.is_sink {
+                if cfg.reuse.delta && !done.is_sink {
                     let mut sig = done.sig.clone();
                     sig.push((done.call_idx, done.out_tokens));
                     dw.residency.retain(done.sid, done.class, done.footprint(), done.base, sig);
@@ -407,7 +448,7 @@ impl DecodePool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::config::{ClusterConfig, SystemKind};
+    use crate::engine::config::{ClusterConfig, ReuseOpts, SystemKind};
 
     fn req(sid: usize, ctx_len: usize, out_tokens: usize) -> DecodeReq {
         DecodeReq {
@@ -425,6 +466,10 @@ mod tests {
             shipped_tokens: ctx_len,
             reuse_tokens: 0,
             host_tokens: 0,
+            forked_tokens: 0,
+            relayed_tokens: 0,
+            relay_src: None,
+            fork_gid: None,
             base: ctx_len,
             sig: Vec::new(),
             is_sink: false,
@@ -482,7 +527,7 @@ mod tests {
     #[test]
     fn decode_reuse_retains_and_reclaims_lru() {
         let mut c = cfg(2_000);
-        c.decode_reuse = true;
+        c.reuse = ReuseOpts::DELTA;
         let mut pool = DecodePool::new(1);
         let mut q = EventQueue::new();
         let mut net = Interconnect::new(1, false);
@@ -512,7 +557,7 @@ mod tests {
     #[test]
     fn pinned_retained_entry_is_consumed_not_evicted() {
         let mut c = cfg(2_000);
-        c.decode_reuse = true;
+        c.reuse = ReuseOpts::DELTA;
         let mut pool = DecodePool::new(1);
         let mut q = EventQueue::new();
         let mut net = Interconnect::new(1, false);
@@ -550,7 +595,7 @@ mod tests {
         // *entire* pinned entry (it is consumed whole) so the request is
         // not parked for space the consume is about to free.
         let mut c = cfg(2_400);
-        c.decode_reuse = true;
+        c.reuse = ReuseOpts::DELTA;
         let mut pool = DecodePool::new(1);
         let mut q = EventQueue::new();
         let mut net = Interconnect::new(1, false);

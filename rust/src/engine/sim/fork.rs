@@ -1,0 +1,244 @@
+//! Copy-on-write KV fork groups for DAG fan-out (`--reuse
+//! delta+relay+fork`).
+//!
+//! When a session's ready set issues N ≥ 2 sibling nodes of one prefill
+//! class in the same event (fan-out roots at session start, or the
+//! children a completing parent unblocks together), their input contexts
+//! share an ancestor-cut prefix: the shared system/init prompt plus the
+//! common ancestors' output runs up to the branch point.  Without
+//! forking, every sibling's handoff ships that shared span again (or
+//! re-reads it from its own worker's residency).  A fork group instead
+//! allocates the shared span *once* in a refcounted [`BlockPool`]
+//! (ForkKV-style copy-on-write shipping): one reference per sibling, and
+//! each non-primary sibling's handoff accounts the span as `forked` —
+//! zero bytes on its ingress link, zero transfer time.  The primary (the
+//! lowest node index, deterministic) pays for the span through the
+//! normal ship/reuse path; it is the copy the group's blocks stand for.
+//!
+//! Lifecycle: a group opens at issue time (blocks allocated, one ref per
+//! member, a pending sizing record per member); each member's prefill
+//! completion consumes its pending record to size the handoff; each
+//! member's *handoff completion* drops its reference.  The last drop
+//! returns every block to the free list — the property tests assert each
+//! block is freed exactly once and refcounts never underflow
+//! (`BlockPool::release` panics on a free block).  Allocation failure
+//! under a tiny pool degrades gracefully: the group silently does not
+//! fork and every sibling ships in full.  The simulator asserts the
+//! registry has fully drained when the event loop ends.
+
+use std::collections::BTreeMap;
+
+use crate::kvcache::block::{BlockId, BlockPool};
+
+/// Tokens of KV per fork-pool block — matches the paged-KV granularity
+/// the real backend's `BlockPool` instances use.
+const FORK_BLOCK_TOKENS: usize = 16;
+
+/// One sibling's pending fork sizing, consumed at its prefill completion.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PendingFork {
+    pub gid: u64,
+    /// Length of the group's shared context prefix (base + LCP of the
+    /// members' ancestor-cut signatures).
+    pub shared_tokens: usize,
+    /// The group's designated payer: accounts no `forked` tokens (its
+    /// handoff ships/reuses the shared span; the others reference it).
+    pub primary: bool,
+}
+
+#[derive(Debug)]
+struct ForkGroup {
+    blocks: Vec<BlockId>,
+    /// Members whose handoff has not yet completed.
+    live_refs: u32,
+}
+
+/// Registry of open fork groups, backed by a refcounted block pool.
+#[derive(Debug)]
+pub(crate) struct ForkRegistry {
+    pool: BlockPool,
+    groups: BTreeMap<u64, ForkGroup>,
+    /// `(sid, node)` → the member's sizing record, consumed at prefill
+    /// completion (BTreeMap for deterministic Debug/iteration).
+    pending: BTreeMap<(usize, usize), PendingFork>,
+    next_gid: u64,
+    /// Lifetime group count (reporting/tests).
+    pub groups_opened: u64,
+    /// Groups that could not allocate shared blocks and were not forked.
+    pub alloc_failures: u64,
+    /// High-water mark of live shared blocks.
+    pub peak_blocks: usize,
+}
+
+impl ForkRegistry {
+    /// `capacity_tokens` bounds the live shared-KV the registry may hold
+    /// (the simulator passes the decode worker KV budget).
+    pub fn new(capacity_tokens: usize) -> ForkRegistry {
+        ForkRegistry {
+            pool: BlockPool::new(
+                capacity_tokens.div_ceil(FORK_BLOCK_TOKENS).max(1),
+                FORK_BLOCK_TOKENS,
+            ),
+            groups: BTreeMap::new(),
+            pending: BTreeMap::new(),
+            next_gid: 0,
+            groups_opened: 0,
+            alloc_failures: 0,
+            peak_blocks: 0,
+        }
+    }
+
+    /// Open a fork group over sibling nodes `members` (ascending node
+    /// order; the first is the primary) of session `sid` sharing
+    /// `shared_tokens` of context prefix.  Allocates the shared blocks
+    /// with one reference per member.  Returns `false` (no group, no
+    /// pending records) when the pool cannot hold the span.
+    pub fn open(&mut self, sid: usize, members: &[usize], shared_tokens: usize) -> bool {
+        debug_assert!(members.len() >= 2, "a fork group needs at least two siblings");
+        debug_assert!(members.windows(2).all(|w| w[0] < w[1]), "members must ascend");
+        let n_blocks = self.pool.blocks_for(shared_tokens);
+        let Some(blocks) = self.pool.alloc(n_blocks) else {
+            self.alloc_failures += 1;
+            return false;
+        };
+        for &b in &blocks {
+            for _ in 1..members.len() {
+                self.pool.retain(b);
+            }
+        }
+        self.peak_blocks = self.peak_blocks.max(self.pool.used_blocks());
+        let gid = self.next_gid;
+        self.next_gid += 1;
+        self.groups_opened += 1;
+        self.groups.insert(gid, ForkGroup { blocks, live_refs: members.len() as u32 });
+        for (i, &node) in members.iter().enumerate() {
+            let prev = self
+                .pending
+                .insert((sid, node), PendingFork { gid, shared_tokens, primary: i == 0 });
+            debug_assert!(prev.is_none(), "node ({sid}, {node}) forked twice");
+        }
+        true
+    }
+
+    /// Consume the sizing record for `(sid, node)` at its prefill
+    /// completion; `None` when the node is not part of a fork group.
+    pub fn take_pending(&mut self, sid: usize, node: usize) -> Option<PendingFork> {
+        self.pending.remove(&(sid, node))
+    }
+
+    /// One member's handoff completed: drop its reference on every shared
+    /// block.  The last member's drop frees the blocks (refcount 0) and
+    /// closes the group.
+    pub fn drop_ref(&mut self, gid: u64) {
+        let g = self.groups.get_mut(&gid).expect("dropping a ref on a closed fork group");
+        debug_assert!(g.live_refs > 0);
+        g.live_refs -= 1;
+        let done = g.live_refs == 0;
+        // Each drop releases one reference per block; BlockPool panics on
+        // underflow, so over-dropping cannot pass silently.
+        let blocks = g.blocks.clone();
+        self.pool.release_all(&blocks);
+        if done {
+            self.groups.remove(&gid);
+        }
+    }
+
+    /// Every group closed, every pending record consumed, every block
+    /// back in the free list — asserted by the simulator once the event
+    /// loop drains.
+    pub fn drained(&self) -> bool {
+        self.groups.is_empty() && self.pending.is_empty() && self.pool.used_blocks() == 0
+    }
+
+    /// Pool-level structural invariants (property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.pool.check_invariants()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_lifecycle_frees_every_block_exactly_once() {
+        let mut reg = ForkRegistry::new(1_000);
+        assert!(reg.open(0, &[1, 2, 3], 700));
+        assert_eq!(reg.groups_opened, 1);
+        assert!(!reg.drained());
+        // 700 tokens / 16 per block = 44 blocks live.
+        assert_eq!(reg.peak_blocks, 44);
+
+        // Members size in any completion order; exactly one is primary
+        // (the lowest node index) and all share one gid and span.
+        let p2 = reg.take_pending(0, 2).unwrap();
+        let p1 = reg.take_pending(0, 1).unwrap();
+        let p3 = reg.take_pending(0, 3).unwrap();
+        assert!(p1.primary && !p2.primary && !p3.primary);
+        assert_eq!(p1.gid, p2.gid);
+        assert_eq!(p2.gid, p3.gid);
+        assert_eq!(p1.shared_tokens, 700);
+        assert!(reg.take_pending(0, 1).is_none(), "pending records consume once");
+        assert!(reg.take_pending(0, 9).is_none(), "non-members have none");
+
+        // Handoff completions drop refs; the pool only frees at the last.
+        reg.drop_ref(p1.gid);
+        reg.drop_ref(p2.gid);
+        assert!(!reg.drained(), "blocks still referenced by the last member");
+        reg.check_invariants().unwrap();
+        reg.drop_ref(p3.gid);
+        assert!(reg.drained(), "last drop must free every block");
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "closed fork group")]
+    fn over_dropping_a_group_panics() {
+        let mut reg = ForkRegistry::new(1_000);
+        reg.open(0, &[0, 1], 100);
+        reg.drop_ref(0);
+        reg.drop_ref(0);
+        reg.drop_ref(0); // third drop on a two-member group
+    }
+
+    #[test]
+    fn alloc_failure_degrades_to_no_fork() {
+        let mut reg = ForkRegistry::new(64); // 4 blocks
+        assert!(reg.open(0, &[0, 1], 64), "exactly fits");
+        assert!(!reg.open(1, &[0, 1], 16), "pool exhausted");
+        assert_eq!(reg.alloc_failures, 1);
+        assert!(reg.take_pending(1, 0).is_none(), "failed group leaves no pending");
+        assert!(reg.take_pending(1, 1).is_none());
+        // The failed open leaked nothing; draining the live group empties
+        // the pool.
+        let p = reg.take_pending(0, 0).unwrap();
+        reg.take_pending(0, 1).unwrap();
+        reg.drop_ref(p.gid);
+        reg.drop_ref(p.gid);
+        assert!(reg.drained());
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn concurrent_groups_are_independent() {
+        let mut reg = ForkRegistry::new(10_000);
+        assert!(reg.open(0, &[1, 2], 320));
+        assert!(reg.open(5, &[0, 1, 2], 160));
+        let a = reg.take_pending(0, 1).unwrap();
+        let b = reg.take_pending(5, 0).unwrap();
+        assert_ne!(a.gid, b.gid);
+        assert_eq!(a.shared_tokens, 320);
+        assert_eq!(b.shared_tokens, 160);
+        reg.drop_ref(a.gid);
+        reg.drop_ref(a.gid);
+        assert!(!reg.drained(), "group b still open");
+        reg.take_pending(0, 2).unwrap();
+        reg.take_pending(5, 1).unwrap();
+        reg.take_pending(5, 2).unwrap();
+        reg.drop_ref(b.gid);
+        reg.drop_ref(b.gid);
+        reg.drop_ref(b.gid);
+        assert!(reg.drained());
+        reg.check_invariants().unwrap();
+    }
+}

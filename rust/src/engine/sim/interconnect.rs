@@ -36,6 +36,15 @@ struct Link {
     free_at: SimTime,
     transfers: u64,
     bytes: u64,
+    /// Bytes covered by CoW fork references instead of moved: zero-copy,
+    /// accounted separately so `bytes` stays exactly what crossed the
+    /// wire (the conservation tests divide it by `kv_bytes_per_token`).
+    forked_bytes: u64,
+    /// Bytes relayed from a parent's decode worker.  These do occupy the
+    /// transfer window (the handoff duration is sized over shipped +
+    /// relayed tokens) but are kept out of `bytes` so the shipped-byte
+    /// identity is unchanged.
+    relayed_bytes: u64,
     busy_micros: u64,
     /// Every transfer's `(start, end)`, in request order — the
     /// conservation property tests check FIFO non-overlap against this.
@@ -62,6 +71,8 @@ impl Link {
         LinkStats {
             transfers: self.transfers,
             bytes: self.bytes,
+            forked_bytes: self.forked_bytes,
+            relayed_bytes: self.relayed_bytes,
             busy_micros: self.busy_micros,
             log: self.log,
         }
@@ -88,9 +99,23 @@ impl Interconnect {
     /// Queue a prefill→decode handoff on worker `w`'s ingress link;
     /// returns the absolute completion time (`now + dur_us` when the
     /// link is uncontended or idle, later when serialized behind
-    /// in-flight copies).
-    pub(crate) fn handoff(&mut self, w: usize, now: SimTime, dur_us: SimTime, bytes: u64) -> SimTime {
-        self.handoff_links[w].transfer(self.contended, now, dur_us, bytes)
+    /// in-flight copies).  `bytes` is the shipped payload that actually
+    /// crosses this link; `forked_bytes` (CoW references, zero-copy) and
+    /// `relayed_bytes` (copied from the source worker's residency) are
+    /// category accounting for the reuse-ladder reports.
+    pub(crate) fn handoff(
+        &mut self,
+        w: usize,
+        now: SimTime,
+        dur_us: SimTime,
+        bytes: u64,
+        forked_bytes: u64,
+        relayed_bytes: u64,
+    ) -> SimTime {
+        let link = &mut self.handoff_links[w];
+        link.forked_bytes += forked_bytes;
+        link.relayed_bytes += relayed_bytes;
+        link.transfer(self.contended, now, dur_us, bytes)
     }
 
     /// Queue a host↔GPU staging copy on worker `w`'s staging link.
@@ -114,6 +139,10 @@ impl Interconnect {
 pub struct LinkStats {
     pub transfers: u64,
     pub bytes: u64,
+    /// Bytes covered by CoW fork references (never crossed the link).
+    pub forked_bytes: u64,
+    /// Bytes relayed from another worker's retained decode KV.
+    pub relayed_bytes: u64,
     pub busy_micros: u64,
     pub log: Vec<(SimTime, SimTime)>,
 }
@@ -133,8 +162,8 @@ mod tests {
     #[test]
     fn uncontended_transfers_overlap_freely() {
         let mut net = Interconnect::new(1, false);
-        assert_eq!(net.handoff(0, 100, 50, 10), 150);
-        assert_eq!(net.handoff(0, 110, 50, 10), 160, "second copy not delayed");
+        assert_eq!(net.handoff(0, 100, 50, 10, 0, 0), 150);
+        assert_eq!(net.handoff(0, 110, 50, 10, 0, 0), 160, "second copy not delayed");
         let s = net.into_stats();
         assert_eq!(s.handoff[0].transfers, 2);
         assert_eq!(s.handoff[0].bytes, 20);
@@ -144,11 +173,11 @@ mod tests {
     #[test]
     fn contended_transfers_serialize_fifo() {
         let mut net = Interconnect::new(2, true);
-        assert_eq!(net.handoff(0, 100, 50, 1), 150);
-        assert_eq!(net.handoff(0, 110, 50, 1), 200, "queued behind the first");
-        assert_eq!(net.handoff(0, 500, 50, 1), 550, "idle link starts immediately");
+        assert_eq!(net.handoff(0, 100, 50, 1, 0, 0), 150);
+        assert_eq!(net.handoff(0, 110, 50, 1, 0, 0), 200, "queued behind the first");
+        assert_eq!(net.handoff(0, 500, 50, 1, 0, 0), 550, "idle link starts immediately");
         // Links are independent: worker 1's link is untouched.
-        assert_eq!(net.handoff(1, 110, 50, 1), 160);
+        assert_eq!(net.handoff(1, 110, 50, 1, 0, 0), 160);
         for w in net.into_stats().handoff {
             for pair in w.log.windows(2) {
                 assert!(pair[1].0 >= pair[0].1, "overlap: {pair:?}");
@@ -157,9 +186,21 @@ mod tests {
     }
 
     #[test]
+    fn fork_and_relay_bytes_are_categorized_not_shipped() {
+        let mut net = Interconnect::new(1, false);
+        net.handoff(0, 0, 50, 100, 40, 60);
+        net.handoff(0, 10, 50, 200, 0, 0);
+        let s = net.into_stats();
+        assert_eq!(s.handoff[0].bytes, 300, "only shipped bytes cross the link");
+        assert_eq!(s.handoff[0].forked_bytes, 40);
+        assert_eq!(s.handoff[0].relayed_bytes, 60);
+        assert_eq!(s.staging[0].forked_bytes, 0);
+    }
+
+    #[test]
     fn staging_links_are_separate_from_handoff_links() {
         let mut net = Interconnect::new(1, true);
-        assert_eq!(net.handoff(0, 0, 100, 1), 100);
+        assert_eq!(net.handoff(0, 0, 100, 1, 0, 0), 100);
         assert_eq!(net.stage(0, 0, 100, 1), 100, "staging fabric not blocked by handoff");
         let s = net.into_stats();
         assert_eq!(s.handoff[0].transfers, 1);

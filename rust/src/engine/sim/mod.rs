@@ -25,9 +25,22 @@
 //! * `DecodePool` (`decode_pool.rs`) — iteration-level continuous
 //!   batching with a resident-KV cap and host staging on overflow,
 //!   behind the `DecodeAdmission` policy trait (Fig 4's rollover,
-//!   App. B.2); with `--decode-reuse` each worker additionally keeps a
-//!   per-session residency ledger (`residency.rs`) so repeat calls of a
-//!   session ship only the KV delta and retained KV is reclaimed LRU.
+//!   App. B.2); under `--reuse delta` (and up) each worker additionally
+//!   keeps a per-session residency ledger (`residency.rs`) so repeat
+//!   calls of a session ship only the KV delta and retained KV is
+//!   reclaimed LRU.
+//!
+//! The unified reuse-policy ladder (`--reuse`,
+//! [`ReuseOpts`](crate::engine::config::ReuseOpts)) stacks two
+//! more supply channels on the delta machinery: **decode-KV relay**
+//! (`delta+relay`) sizes a fan-out child's handoff against the decoded
+//! output its parent already retains on the parent's decode worker, and
+//! **copy-on-write forking** (`delta+relay+fork`, `fork.rs`) lets
+//! sibling nodes issued in one batch reference their shared ancestor-cut
+//! prefix through refcounted blocks instead of shipping it N times.
+//! Both are accounted in the [`ConservationLedger`] identity
+//! (`conservation.rs`): `shipped + reused + reloaded + forked + relayed
+//! == context demand`, per prefill class.
 //!
 //! Sessions are **DAG-structured** (`workload::SessionScript`): the
 //! closed loop issues every node the moment its last parent completes,
@@ -46,15 +59,19 @@
 //! pre-decomposition simulator event-for-event (pinned by the
 //! golden-metrics regression tests).
 
+pub mod conservation;
 mod decode_pool;
+mod fork;
 mod interconnect;
 mod prefill_pool;
 mod proxy;
 mod residency;
 
+pub use conservation::{ClassTerms, ConservationLedger};
 pub use interconnect::{Interconnect, InterconnectStats, LinkStats};
 
 use decode_pool::{DecodePool, DecodeReq};
+use fork::ForkRegistry;
 use prefill_pool::PrefillPool;
 use proxy::Proxy;
 
@@ -146,6 +163,9 @@ pub struct Simulator {
     proxy: Proxy,
     prefill: PrefillPool,
     decode: DecodePool,
+    /// Copy-on-write fork groups (`--reuse delta+relay+fork`; untouched
+    /// otherwise, so off-ladder runs stay bit-identical).
+    forks: ForkRegistry,
     net: Interconnect,
     pub metrics: ServingMetrics,
     last_completion: SimTime,
@@ -159,6 +179,12 @@ pub struct Simulator {
 impl Simulator {
     pub fn new(cfg: ClusterConfig, trace: impl Into<Arc<Trace>>) -> Simulator {
         let trace = trace.into();
+        assert!(
+            cfg.reuse.is_valid(),
+            "invalid reuse policy {:?}: the ladder is off ⊂ delta ⊂ delta+relay ⊂ \
+             delta+relay+fork — relay requires delta, fork requires relay",
+            cfg.reuse
+        );
         // Validate the trace against the cluster before any event fires:
         // `call.model` indexes the decode pool and its interconnect link
         // directly, so a model id outside `0..n_models` would panic (or
@@ -192,6 +218,7 @@ impl Simulator {
         let proxy = Proxy::new(&cfg);
         let prefill = PrefillPool::new(&cfg);
         let decode = DecodePool::new(cfg.n_models);
+        let forks = ForkRegistry::new(cfg.decode_kv_tokens);
         let net = Interconnect::new(cfg.n_models, cfg.link_contended);
         let sys = trace.workload.sys_prompt_tokens;
         let mut sessions = Vec::with_capacity(trace.sessions.len());
@@ -228,6 +255,7 @@ impl Simulator {
             proxy,
             prefill,
             decode,
+            forks,
             net,
             metrics,
             last_completion: 0,
@@ -274,10 +302,55 @@ impl Simulator {
     /// Issue every root of the session's call graph (ascending node
     /// order) — a chain has exactly one.
     fn start_session(&mut self, sid: usize) {
-        for node in 0..self.trace.sessions[sid].calls.len() {
-            if self.trace.sessions[sid].calls[node].parents.is_empty() {
-                self.issue_node(sid, node);
+        let roots: Vec<usize> = (0..self.trace.sessions[sid].calls.len())
+            .filter(|&n| self.trace.sessions[sid].calls[n].parents.is_empty())
+            .collect();
+        self.issue_batch(sid, &roots);
+    }
+
+    /// Issue one ready set of a session's nodes (ascending node order —
+    /// a chain always passes exactly one).  Under `--reuse
+    /// delta+relay+fork`, sibling nodes of one prefill class issued in
+    /// the same batch share an ancestor-cut context prefix: a CoW fork
+    /// group is opened over it *before* any of them is issued, so each
+    /// member's handoff sizing finds its pending fork record regardless
+    /// of prefill completion order.
+    fn issue_batch(&mut self, sid: usize, nodes: &[usize]) {
+        if self.cfg.reuse.fork && nodes.len() >= 2 {
+            let script = &self.trace.sessions[sid];
+            let base = self.trace.workload.sys_prompt_tokens + script.init_prompt_tokens;
+            // Group the batch by prefill class (BTreeMap: deterministic
+            // group-open order), keeping members in ascending node order.
+            let mut by_class: std::collections::BTreeMap<usize, Vec<usize>> =
+                std::collections::BTreeMap::new();
+            for &n in nodes {
+                by_class.entry(script.calls[n].prefill_class).or_default().push(n);
             }
+            // Sizing pass (immutable): shared span = base + the longest
+            // common run prefix of the members' context signatures.
+            let mut groups: Vec<(Vec<usize>, usize)> = Vec::new();
+            for members in by_class.into_values().filter(|m| m.len() >= 2) {
+                let mut lcp = self.context_sig(sid, members[0]);
+                for &m in &members[1..] {
+                    let other = self.context_sig(sid, m);
+                    let common = lcp
+                        .iter()
+                        .zip(&other)
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    lcp.truncate(common);
+                }
+                let shared = base + lcp.iter().map(|&(_, l)| l).sum::<usize>();
+                groups.push((members, shared));
+            }
+            for (members, shared) in groups {
+                // Allocation failure (tiny pool) degrades to no fork:
+                // every member simply ships its context in full.
+                self.forks.open(sid, &members, shared);
+            }
+        }
+        for &n in nodes {
+            self.issue_node(sid, n);
         }
     }
 
@@ -303,14 +376,10 @@ impl Simulator {
             // Baseline: each model has its own dedicated prefill GPU.
             SystemKind::Baseline => job.model,
             SystemKind::PrefillShare => {
-                if self.proxy.needs_views() {
-                    let views = self.prefill.views(self.proxy.uses_load());
-                    self.proxy.route(&job, &views)
-                } else {
-                    // Static policies (prefix-aware/round-robin/random)
-                    // never read the snapshot: skip building it.
-                    self.proxy.route_indexed(&job, self.prefill.len())
-                }
+                // Lazy snapshot: static policies (prefix-aware/round-robin/
+                // random) never read it, so it is never built for them.
+                let mut views = self.prefill.lazy_views(self.proxy.uses_load());
+                self.proxy.route(&job, &mut views)
             }
         };
         self.prefill.enqueue(w, job);
@@ -365,17 +434,21 @@ impl Simulator {
     fn on_prefill_done(&mut self, w: usize) {
         if let Some(job) = self.prefill.finish_unit(w) {
             // Cache handoff: ship the prompt KV to the decode worker
-            // through its ingress link.  Under `--decode-reuse` the worker
-            // may already retain part of the session's context (GPU or
-            // host-parked): the delta is sized against the longest common
-            // prefix of the retained signature and this node's context,
-            // and the retained entry is pinned until the request is
-            // admitted — concurrent sibling handoffs of one session pin
-            // independently, one entry per decode worker.
+            // through its ingress link.  Under `--reuse delta` (and up)
+            // the worker may already retain part of the session's context
+            // (GPU or host-parked): the delta is sized against the
+            // longest common prefix of the retained signature and this
+            // node's context, and the retained entry is pinned until the
+            // request is admitted — concurrent sibling handoffs of one
+            // session pin independently, one entry per decode worker.
+            // Coverage order per handoff: own residency first ([0,
+            // reuse+host)), then the fork group's shared span, then a
+            // relay from one parent's decoded output; the remainder
+            // ships.
             let call = &self.trace.sessions[job.sid].calls[job.call_idx];
             let out_tokens = call.out_tokens;
             let dw = call.model; // decode worker hosting this task model
-            let (sig, base) = if self.cfg.decode_reuse {
+            let (sig, base) = if self.cfg.reuse.delta {
                 let script = &self.trace.sessions[job.sid];
                 (
                     self.context_sig(job.sid, job.call_idx),
@@ -387,17 +460,80 @@ impl Simulator {
             // `--audit` reads the retained entry's class *before* the pin:
             // `pin_for_handoff` drops a class-mismatched entry on the spot,
             // so afterwards the evidence is gone.
-            let pre_pin_class = if self.audit.is_some() && self.cfg.decode_reuse {
+            let pre_pin_class = if self.audit.is_some() && self.cfg.reuse.delta {
                 self.decode.retained_class(dw, job.sid)
             } else {
                 None
             };
-            let (reuse_tokens, host_tokens) = if self.cfg.decode_reuse {
+            let (reuse_tokens, host_tokens) = if self.cfg.reuse.delta {
                 self.decode.pin_for_handoff(dw, job.sid, job.class, &sig)
             } else {
                 (0, 0)
             };
-            let shipped = job.ctx_len - reuse_tokens - host_tokens;
+            let own = reuse_tokens + host_tokens;
+            // CoW fork cover: a non-primary fork-group member references
+            // the shared span [own, shared) through the group's blocks —
+            // zero bytes, zero transfer time.  The primary pays for the
+            // span through ship/reuse.  Every member (primary included)
+            // holds a block reference until its handoff completes.
+            let (forked, fork_gid) = match self.forks.take_pending(job.sid, job.call_idx) {
+                Some(p) => {
+                    let f = if p.primary {
+                        0
+                    } else {
+                        p.shared_tokens.min(job.ctx_len).saturating_sub(own)
+                    };
+                    (f, Some(p.gid))
+                }
+                None => (0, None),
+            };
+            // Decode-KV relay: cover the best single parent's decoded
+            // output from the residency entry on *that parent's* decode
+            // worker.  Only fan-out parents (≥ 2 children) are sources —
+            // a chain child lands on the worker that already retains the
+            // whole context, so relay is structurally inert there.  The
+            // relayed span is clipped to the parent's own output run
+            // within this context, so it can never exceed what the
+            // parent actually decoded.
+            let mut relayed = 0usize;
+            let mut relay_src: Option<usize> = None;
+            if self.cfg.reuse.relay {
+                let cov = own + forked;
+                let script = &self.trace.sessions[job.sid];
+                let meta = &self.nodes[job.sid][job.call_idx];
+                for &p in &script.calls[job.call_idx].parents {
+                    if self.nodes[job.sid][p].children.len() < 2 {
+                        continue;
+                    }
+                    let src_w = script.calls[p].model;
+                    let r_src = self.decode.relay_probe(src_w, job.sid, job.class, &sig);
+                    if r_src == 0 {
+                        continue;
+                    }
+                    // Position of p's output run in this node's context.
+                    let mut run_start = base;
+                    for &a in &meta.anc {
+                        if a >= p {
+                            break;
+                        }
+                        run_start += script.calls[a].out_tokens;
+                    }
+                    let run_end = run_start + script.calls[p].out_tokens;
+                    let cand = run_end.min(r_src).saturating_sub(run_start.max(cov));
+                    // Strict max; ties keep the lowest parent index
+                    // (parents iterate ascending) — deterministic.
+                    if cand > relayed {
+                        relayed = cand;
+                        relay_src = Some(src_w);
+                    }
+                }
+                if let Some(src_w) = relay_src {
+                    // Shield the source entry from LRU reclaim until the
+                    // relay copy lands (unpinned at HandoffDone).
+                    self.decode.relay_pin(src_w, job.sid);
+                }
+            }
+            let shipped = job.ctx_len - own - forked - relayed;
             let req = DecodeReq {
                 sid: job.sid,
                 call_idx: job.call_idx,
@@ -413,11 +549,18 @@ impl Simulator {
                 shipped_tokens: shipped,
                 reuse_tokens,
                 host_tokens,
+                forked_tokens: forked,
+                relayed_tokens: relayed,
+                relay_src,
+                fork_gid,
                 base,
                 sig,
                 is_sink: self.nodes[job.sid][job.call_idx].children.is_empty(),
             };
-            let dur_us = secs(self.cfg.cost.handoff_secs(shipped));
+            // Shipped and relayed tokens both move over the worker's
+            // ingress link; forked tokens are a CoW block reference and
+            // cost no transfer time at all.
+            let dur_us = secs(self.cfg.cost.handoff_secs(shipped + relayed));
             self.metrics.handoffs += 1;
             self.metrics.handoff_tokens += shipped as u64;
             bump_class(&mut self.metrics.handoff_tokens_by_class, job.class, shipped as u64);
@@ -431,12 +574,25 @@ impl Simulator {
                     reuse_tokens as u64,
                 );
             }
-            if self.audit.is_some() {
-                self.audit_handoff(&job, pre_pin_class, reuse_tokens, host_tokens, shipped);
+            if forked > 0 {
+                self.metrics.handoffs_forked += 1;
+                self.metrics.forked_tokens += forked as u64;
+                bump_class(&mut self.metrics.forked_tokens_by_class, job.class, forked as u64);
             }
-            let bytes = (shipped as f64 * self.cfg.cost.llm.kv_bytes_per_token()) as u64;
+            if relayed > 0 {
+                self.metrics.handoffs_relayed += 1;
+                self.metrics.relayed_tokens += relayed as u64;
+                bump_class(&mut self.metrics.relayed_tokens_by_class, job.class, relayed as u64);
+            }
+            if self.audit.is_some() {
+                self.audit_handoff(&job, pre_pin_class, reuse_tokens, host_tokens, forked, relayed, shipped);
+            }
+            let kv_bytes = self.cfg.cost.llm.kv_bytes_per_token();
+            let bytes = (shipped as f64 * kv_bytes) as u64;
+            let forked_bytes = (forked as f64 * kv_bytes) as u64;
+            let relayed_bytes = (relayed as f64 * kv_bytes) as u64;
             let now = self.q.now();
-            let at = self.net.handoff(dw, now, dur_us, bytes);
+            let at = self.net.handoff(dw, now, dur_us, bytes, forked_bytes, relayed_bytes);
             self.metrics.handoff_link_wait.record(to_secs(at - dur_us - now));
             self.q.schedule(at, Ev::HandoffDone { req, worker: dw });
         }
@@ -445,17 +601,22 @@ impl Simulator {
 
     /// `--audit` hook, run after a handoff is sized and its metrics
     /// bumped.  Per event it checks: (a) the GPU-reuse/host-reload split
-    /// is exclusive and covers the context exactly; (b) a class-mismatched
-    /// residency entry yielded zero reuse; (c) every token of the job's
-    /// radix key carries the job's own class (class isolation at radix
-    /// insert/match); (d) the per-class byte-conservation identity
-    /// `shipped + reused + host_sized == context demand`.
+    /// is exclusive and the five supply channels cover the context
+    /// exactly; (b) a class-mismatched residency entry yielded zero
+    /// reuse; (c) every token of the job's radix key carries the job's
+    /// own class (class isolation at radix insert/match); (d) a relayed
+    /// span never exceeds the decoded output of any fan-out parent; (e)
+    /// the per-class [`ConservationLedger`] identity `shipped + reused +
+    /// reloaded + forked + relayed == context demand` (with reloads
+    /// checked against the sized-at-handoff shadow).
     fn audit_handoff(
         &mut self,
         job: &PrefillJob,
         pre_pin_class: Option<usize>,
         reuse_tokens: usize,
         host_tokens: usize,
+        forked: usize,
+        relayed: usize,
         shipped: usize,
     ) {
         let Some(audit) = self.audit.as_mut() else { return };
@@ -468,9 +629,10 @@ impl Simulator {
             job.call_idx
         );
         assert_eq!(
-            shipped + reuse_tokens + host_tokens,
+            shipped + reuse_tokens + host_tokens + forked + relayed,
             job.ctx_len,
-            "audit: sid {} node {}: shipped + reused + reloaded != context demand",
+            "audit: sid {} node {}: shipped + reused + reloaded + forked + relayed \
+             != context demand",
             job.sid,
             job.call_idx
         );
@@ -493,60 +655,75 @@ impl Simulator {
                 job.call_idx
             );
         }
+        if relayed > 0 {
+            // A relay copies one parent's decoded output run — it cannot
+            // hold more tokens than the largest fan-out parent decoded.
+            let script = &self.trace.sessions[job.sid];
+            let max_parent_out = script.calls[job.call_idx]
+                .parents
+                .iter()
+                .filter(|&&p| self.nodes[job.sid][p].children.len() >= 2)
+                .map(|&p| script.calls[p].out_tokens)
+                .max()
+                .unwrap_or(0);
+            assert!(
+                relayed <= max_parent_out,
+                "audit: sid {} node {}: relayed {relayed} tokens but no fan-out parent \
+                 decoded more than {max_parent_out}",
+                job.sid,
+                job.call_idx
+            );
+        }
         bump_class(&mut audit.demand_by_class, job.class, job.ctx_len as u64);
         bump_class(&mut audit.host_sized_by_class, job.class, host_tokens as u64);
-        for c in 0..audit.demand_by_class.len() {
-            let shipped_c = self.metrics.handoff_tokens_by_class.get(c).copied().unwrap_or(0);
-            let reused_c =
-                self.metrics.decode_reuse_tokens_by_class.get(c).copied().unwrap_or(0);
-            let sized_c = audit.host_sized_by_class.get(c).copied().unwrap_or(0);
+        for c in 0..audit.host_sized_by_class.len() {
+            let sized_c = audit.host_sized_by_class[c];
             let reloaded_c =
                 self.metrics.host_reload_tokens_by_class.get(c).copied().unwrap_or(0);
             assert!(
                 reloaded_c <= sized_c,
                 "audit: class {c}: more host KV reloaded ({reloaded_c}) than sized ({sized_c})"
             );
-            assert_eq!(
-                shipped_c + reused_c + sized_c,
-                audit.demand_by_class[c],
-                "audit: class {c}: byte-conservation identity broken at handoff"
-            );
         }
+        let mut ledger = ConservationLedger::from_metrics(&self.metrics);
+        ledger.set_reloaded(&audit.host_sized_by_class);
+        ledger.assert_covers(&audit.demand_by_class, "per event");
     }
 
     /// End-of-run audit: once the closed loop drains, every host reload
     /// sized at handoff must have been charged at decode admission, and
-    /// the conservation identity must hold per class and globally.
+    /// the [`ConservationLedger`] identity must hold per class and
+    /// globally.
     fn audit_finish(&self) {
         let Some(audit) = &self.audit else { return };
-        for c in 0..audit.demand_by_class.len() {
-            let shipped_c = self.metrics.handoff_tokens_by_class.get(c).copied().unwrap_or(0);
-            let reused_c =
-                self.metrics.decode_reuse_tokens_by_class.get(c).copied().unwrap_or(0);
+        for c in 0..audit.host_sized_by_class.len() {
             let reloaded_c =
                 self.metrics.host_reload_tokens_by_class.get(c).copied().unwrap_or(0);
             assert_eq!(
-                reloaded_c,
-                audit.host_sized_by_class.get(c).copied().unwrap_or(0),
+                reloaded_c, audit.host_sized_by_class[c],
                 "audit: class {c}: host KV sized at handoff was never charged at admission"
             );
-            assert_eq!(
-                shipped_c + reused_c + reloaded_c,
-                audit.demand_by_class[c],
-                "audit: class {c}: byte-conservation identity broken at end of run"
-            );
         }
+        let ledger = ConservationLedger::from_metrics(&self.metrics);
+        ledger.assert_covers(&audit.demand_by_class, "end of run");
         let demand: u64 = audit.demand_by_class.iter().sum();
         assert_eq!(
-            self.metrics.handoff_tokens
-                + self.metrics.decode_reuse_tokens
-                + self.metrics.host_reload_tokens,
+            ledger.total().covered(),
             demand,
             "audit: global byte-conservation identity broken at end of run"
         );
     }
 
     fn on_handoff_done(&mut self, req: DecodeReq, worker: usize) {
+        // The transfer has landed: release the relay source's eviction
+        // shield and this member's reference on its fork group's shared
+        // blocks (the last member's drop frees them).
+        if let Some(src_w) = req.relay_src {
+            self.decode.relay_unpin(src_w, req.sid);
+        }
+        if let Some(gid) = req.fork_gid {
+            self.forks.drop_ref(gid);
+        }
         self.decode.push_handoff(worker, req, self.q.now());
         self.decode.try_admit(worker, &self.cfg, &mut self.q, &mut self.net, &mut self.metrics);
         self.decode.maybe_step(worker, &self.cfg, &mut self.q);
@@ -597,23 +774,27 @@ impl Simulator {
         }
         // Unblock children; every node whose last parent this was becomes
         // ready *now* and issues immediately (ascending order — the
-        // children lists are built ascending).  Indexed loop: re-reading
-        // the child id per iteration keeps the hot completion path free
-        // of a per-request Vec clone.
+        // children lists are built ascending).  The ready set is issued
+        // as one batch so sibling nodes unblocked together can open a
+        // CoW fork group over their shared prefix.
+        let mut ready: Vec<usize> = Vec::new();
         for k in 0..self.nodes[sid][node].children.len() {
             let c = self.nodes[sid][node].children[k];
             let s = &mut self.sessions[sid];
             s.pending_parents[c] -= 1;
             if s.pending_parents[c] == 0 {
-                self.issue_node(sid, c);
+                ready.push(c);
             }
+        }
+        if !ready.is_empty() {
+            self.issue_batch(sid, &ready);
         }
         if self.sessions[sid].remaining == 0 {
             let lat = to_secs(self.q.now() - self.sessions[sid].arrival);
             self.metrics.session_latency.record(lat);
             self.metrics.sessions_completed += 1;
             self.last_completion = self.q.now();
-            if self.cfg.decode_reuse {
+            if self.cfg.reuse.delta {
                 // The session will never call again: free whatever KV the
                 // decode tier still retains for it (GPU and host).
                 self.decode.release_session(sid);
@@ -626,6 +807,11 @@ impl Simulator {
 
     fn finish(mut self) -> SimResult {
         self.audit_finish();
+        assert!(
+            self.forks.drained(),
+            "CoW fork registry leaked shared blocks past the event loop \
+             (open groups, unconsumed sizing records, or un-freed blocks)"
+        );
         // Fold per-worker radix stats into the global metrics (the per-call
         // hit/miss counters were already tracked inline; radix stats give a
         // cross-check + eviction counts).
@@ -688,6 +874,8 @@ impl Simulator {
             decode_reuse_ratio: self.metrics.decode_reuse_ratio(),
             handoffs_delta: self.metrics.handoffs_delta,
             decode_reuse_tokens: self.metrics.decode_reuse_tokens,
+            forked_tokens: self.metrics.forked_tokens,
+            relayed_tokens: self.metrics.relayed_tokens,
             retained_evictions: self.metrics.retained_evictions,
             host_reload_tokens: self.metrics.host_reload_tokens,
             peak_retained_kv_tokens: peak_retained,
@@ -748,14 +936,19 @@ pub struct SimResult {
     pub prefill_util: f64,
     pub decode_util: f64,
     pub peak_decode_resident_tokens: usize,
-    /// Decode-side session KV residency (`--decode-reuse`; zeros when
-    /// off): fraction of context-KV demand served from retained KV, delta
-    /// handoffs performed, tokens reused from GPU residency, retained-KV
-    /// LRU evictions, tokens staged back in from host parks, and the
-    /// retained-pool high-water mark.
+    /// Decode-side session KV residency (`--reuse delta` and up; zeros
+    /// when off): fraction of context-KV demand served from retained KV,
+    /// delta handoffs performed, tokens reused from GPU residency,
+    /// retained-KV LRU evictions, tokens staged back in from host parks,
+    /// and the retained-pool high-water mark.
     pub decode_reuse_ratio: f64,
     pub handoffs_delta: u64,
     pub decode_reuse_tokens: u64,
+    /// Context tokens covered by CoW fork groups (`--reuse
+    /// delta+relay+fork`) and by decode-KV relays (`--reuse delta+relay`
+    /// and up) — the two channels the `forkrelay` experiment sweeps.
+    pub forked_tokens: u64,
+    pub relayed_tokens: u64,
     pub retained_evictions: u64,
     pub host_reload_tokens: u64,
     pub peak_retained_kv_tokens: usize,
@@ -807,6 +1000,7 @@ pub fn simulate(cfg: ClusterConfig, trace: impl Into<Arc<Trace>>) -> SimResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::config::ReuseOpts;
     use crate::engine::route::RoutePolicy;
     use crate::engine::sched::SchedPolicy;
     use crate::workload::{generate_trace, react};
@@ -898,22 +1092,22 @@ mod tests {
         // idle, empty worker.  Without it they park forever, the event
         // queue drains, and sessions are silently lost.
         let trace = small_trace(2.0, 40.0);
-        for decode_reuse in [false, true] {
+        for reuse in [ReuseOpts::OFF, ReuseOpts::DELTA] {
             let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
             cfg.decode_kv_tokens = 150;
-            cfg.decode_reuse = decode_reuse;
+            cfg.reuse = reuse;
             let r = simulate(cfg, trace.clone());
             assert_eq!(
                 r.sessions_completed as usize,
                 trace.sessions.len(),
-                "sessions lost under oversized-request livelock (reuse={decode_reuse})"
+                "sessions lost under oversized-request livelock (reuse={reuse:?})"
             );
             let calls: usize = trace.sessions.iter().map(|s| s.calls.len()).sum();
             assert_eq!(r.metrics.requests_completed as usize, calls);
         }
     }
 
-    // -- decode-side session KV residency (`--decode-reuse`) ---------------
+    // -- decode-side session KV residency (`--reuse delta`) -----------------
 
     #[test]
     fn decode_reuse_ships_fewer_handoff_tokens_at_load() {
@@ -923,7 +1117,7 @@ mod tests {
         let trace = small_trace(2.0, 60.0);
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
         let off = simulate(cfg.clone(), trace.clone());
-        cfg.decode_reuse = true;
+        cfg.reuse = ReuseOpts::DELTA;
         let on = simulate(cfg, trace.clone());
         assert_eq!(on.sessions_completed, off.sessions_completed);
         assert_eq!(on.metrics.requests_completed, off.metrics.requests_completed);
@@ -947,12 +1141,12 @@ mod tests {
     fn decode_reuse_is_deterministic_and_conserves_demand() {
         let a = {
             let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
-            cfg.decode_reuse = true;
+            cfg.reuse = ReuseOpts::DELTA;
             simulate(cfg, small_trace(3.0, 60.0))
         };
         let b = {
             let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
-            cfg.decode_reuse = true;
+            cfg.reuse = ReuseOpts::DELTA;
             simulate(cfg, small_trace(3.0, 60.0))
         };
         assert_eq!(a.metrics, b.metrics);
@@ -975,7 +1169,7 @@ mod tests {
     #[test]
     fn decode_reuse_evicts_retained_kv_under_pressure() {
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
-        cfg.decode_reuse = true;
+        cfg.reuse = ReuseOpts::DELTA;
         cfg.decode_kv_tokens = 6_000; // a couple of sessions' worth
         let trace = small_trace(2.0, 40.0);
         let r = simulate(cfg, trace.clone());
@@ -994,7 +1188,7 @@ mod tests {
         // a 12 GB/s staging round trip, so evictions park to host and the
         // returning calls stage their KV back in.
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
-        cfg.decode_reuse = true;
+        cfg.reuse = ReuseOpts::DELTA;
         cfg.decode_kv_tokens = 6_000;
         cfg.link_contended = true;
         cfg.cost.link.handoff_bytes_per_s = 4e9;
@@ -1207,9 +1401,9 @@ mod tests {
         use crate::workload::fanout;
         let trace = generate_trace(&fanout(), 2.0, 60.0, 42);
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
-        cfg.decode_reuse = true;
+        cfg.reuse = ReuseOpts::DELTA;
         let on = simulate(cfg.clone(), trace.clone());
-        cfg.decode_reuse = false;
+        cfg.reuse = ReuseOpts::OFF;
         let off = simulate(cfg, trace.clone());
         assert_eq!(on.sessions_completed, off.sessions_completed);
         let mut ctx_demand = 0u64;
@@ -1236,12 +1430,12 @@ mod tests {
 
     /// Generate + simulate with one prefill-class map applied to both the
     /// workload and the cluster (the simulator rejects disagreement).
-    fn run_with_classes(classes: Vec<usize>, rate: f64, decode_reuse: bool) -> SimResult {
+    fn run_with_classes(classes: Vec<usize>, rate: f64, reuse: ReuseOpts) -> SimResult {
         let wl = react().with_prefill_classes(classes.clone());
         let trace = generate_trace(&wl, rate, 60.0, 42);
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
         cfg.prefill_classes = classes;
-        cfg.decode_reuse = decode_reuse;
+        cfg.reuse = reuse;
         simulate(cfg, trace)
     }
 
@@ -1277,7 +1471,7 @@ mod tests {
         // pre-class golden fixtures byte-unchanged.
         let implicit = run(SystemKind::PrefillShare, 2.0);
         let n = ClusterConfig::paper_default(SystemKind::PrefillShare).n_models;
-        let explicit = run_with_classes(vec![0; n], 2.0, false);
+        let explicit = run_with_classes(vec![0; n], 2.0, ReuseOpts::OFF);
         assert_eq!(implicit.metrics, explicit.metrics);
     }
 
@@ -1290,7 +1484,7 @@ mod tests {
         // while completing the same sessions.
         let shared = run(SystemKind::PrefillShare, 2.0);
         let n = ClusterConfig::paper_default(SystemKind::PrefillShare).n_models;
-        let private = run_with_classes(crate::workload::private_prefill_classes(n), 2.0, false);
+        let private = run_with_classes(crate::workload::private_prefill_classes(n), 2.0, ReuseOpts::OFF);
         assert_eq!(private.sessions_completed, shared.sessions_completed);
         assert!(
             private.prefix_hit_ratio < shared.prefix_hit_ratio,
@@ -1309,7 +1503,7 @@ mod tests {
     #[test]
     fn per_class_counters_sum_to_their_global_counterparts() {
         let n = ClusterConfig::paper_default(SystemKind::PrefillShare).n_models;
-        let r = run_with_classes(crate::workload::private_prefill_classes(n), 2.0, true);
+        let r = run_with_classes(crate::workload::private_prefill_classes(n), 2.0, ReuseOpts::DELTA);
         assert!(r.sessions_completed > 0);
         let m = &r.metrics;
         // Several classes must actually be populated under a private map.
@@ -1336,7 +1530,7 @@ mod tests {
         use crate::workload::fanout;
         let trace = small_trace(2.0, 60.0);
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
-        cfg.decode_reuse = true;
+        cfg.reuse = ReuseOpts::DELTA;
         let off = simulate(cfg.clone(), trace.clone());
         cfg.audit = true;
         let on = simulate(cfg, trace);
@@ -1344,7 +1538,7 @@ mod tests {
 
         let trace = generate_trace(&fanout(), 2.0, 60.0, 42);
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
-        cfg.decode_reuse = true;
+        cfg.reuse = ReuseOpts::DELTA;
         let off = simulate(cfg.clone(), trace.clone());
         cfg.audit = true;
         let on = simulate(cfg, trace);
@@ -1364,7 +1558,7 @@ mod tests {
         let trace = generate_trace(&wl, 2.0, 60.0, 42);
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
         cfg.prefill_classes = classes;
-        cfg.decode_reuse = true;
+        cfg.reuse = ReuseOpts::DELTA;
         let off = simulate(cfg.clone(), trace.clone());
         cfg.audit = true;
         let on = simulate(cfg, trace);
@@ -1378,7 +1572,7 @@ mod tests {
         // are sized at handoff but charged only at decode admission.
         let trace = small_trace(2.0, 40.0);
         let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
-        cfg.decode_reuse = true;
+        cfg.reuse = ReuseOpts::DELTA;
         cfg.decode_kv_tokens = 6_000;
         cfg.link_contended = true;
         cfg.cost.link.handoff_bytes_per_s = 4e9;
@@ -1401,20 +1595,171 @@ mod tests {
         assert!(r.metrics.handoffs > 0, "audit hook must have run per handoff");
     }
 
+    // -- CoW forking + decode-KV relay (`--reuse delta+relay[+fork]`) -------
+
+    fn run_reuse(wl: &crate::workload::WorkloadSpec, rate: f64, reuse: ReuseOpts) -> SimResult {
+        let trace = generate_trace(wl, rate, 60.0, 42);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.reuse = reuse;
+        simulate(cfg, trace)
+    }
+
+    #[test]
+    #[should_panic(expected = "ladder")]
+    fn reuse_ladder_violations_are_rejected_at_construction() {
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.reuse = ReuseOpts { delta: false, relay: true, fork: false };
+        let _ = Simulator::new(cfg, small_trace(1.0, 10.0));
+    }
+
+    #[test]
+    fn fork_and_relay_are_inert_on_chain_workloads() {
+        // A chain has one ready node at a time (no sibling batches, no
+        // fan-out parents), so the full ladder must reproduce the plain
+        // delta run metric-for-metric — the invariant that keeps the
+        // five pre-fork golden fixtures byte-unchanged.
+        let delta = run_reuse(&react(), 2.0, ReuseOpts::DELTA);
+        let full = run_reuse(&react(), 2.0, ReuseOpts::DELTA_RELAY_FORK);
+        assert_eq!(full.metrics, delta.metrics);
+        assert_eq!(full.forked_tokens, 0);
+        assert_eq!(full.relayed_tokens, 0);
+    }
+
+    #[test]
+    fn relay_covers_parent_output_on_fanout_and_ships_less() {
+        use crate::workload::fanout;
+        let delta = run_reuse(&fanout(), 2.0, ReuseOpts::DELTA);
+        let relay = run_reuse(&fanout(), 2.0, ReuseOpts::DELTA_RELAY);
+        assert_eq!(relay.sessions_completed, delta.sessions_completed);
+        assert!(relay.relayed_tokens > 0, "specialists must relay the planner's output");
+        assert_eq!(relay.forked_tokens, 0, "fork is off in delta+relay");
+        assert!(
+            relay.handoff_tokens < delta.handoff_tokens,
+            "relay must ship strictly less: {} vs {}",
+            relay.handoff_tokens,
+            delta.handoff_tokens
+        );
+        // Conservation: relayed tokens substitute shipped ones exactly.
+        assert_eq!(
+            relay.handoff_tokens + relay.decode_reuse_tokens
+                + relay.metrics.host_reload_tokens
+                + relay.relayed_tokens,
+            delta.handoff_tokens + delta.decode_reuse_tokens
+                + delta.metrics.host_reload_tokens,
+            "relay changed total context coverage"
+        );
+    }
+
+    #[test]
+    fn fork_covers_shared_prefixes_of_sibling_batches() {
+        // debate: three proposer roots issue in one batch (shared
+        // system+init prompt) and the judge fans in; fanout: the three
+        // specialists are unblocked together by the planner.
+        use crate::workload::{debate, fanout};
+        for wl in [debate(), fanout()] {
+            let relay = run_reuse(&wl, 2.0, ReuseOpts::DELTA_RELAY);
+            let fork = run_reuse(&wl, 2.0, ReuseOpts::DELTA_RELAY_FORK);
+            assert_eq!(fork.sessions_completed, relay.sessions_completed, "{}", wl.name);
+            assert!(fork.forked_tokens > 0, "{}: sibling batches must fork", wl.name);
+            assert!(
+                fork.handoff_tokens + fork.relayed_tokens
+                    < relay.handoff_tokens + relay.relayed_tokens,
+                "{}: forked spans must leave the link ({} vs {})",
+                wl.name,
+                fork.handoff_tokens + fork.relayed_tokens,
+                relay.handoff_tokens + relay.relayed_tokens
+            );
+        }
+    }
+
+    #[test]
+    fn full_ladder_conserves_context_demand_per_class() {
+        use crate::workload::fanout;
+        let trace = generate_trace(&fanout(), 2.0, 60.0, 42);
+        let mut ctx_demand = 0u64;
+        for s in &trace.sessions {
+            for i in 0..s.calls.len() {
+                ctx_demand += s.input_context_len(trace.workload.sys_prompt_tokens, i) as u64;
+            }
+        }
+        for reuse in ReuseOpts::all() {
+            let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+            cfg.reuse = reuse;
+            let r = simulate(cfg, trace.clone());
+            let t = ConservationLedger::from_metrics(&r.metrics).total();
+            assert_eq!(t.covered(), ctx_demand, "{}: five-channel identity", reuse.label());
+            // The by-class families must sum to the globals.
+            assert_eq!(
+                r.metrics.forked_tokens_by_class.iter().sum::<u64>(),
+                r.metrics.forked_tokens,
+                "{}", reuse.label()
+            );
+            assert_eq!(
+                r.metrics.relayed_tokens_by_class.iter().sum::<u64>(),
+                r.metrics.relayed_tokens,
+                "{}", reuse.label()
+            );
+        }
+    }
+
+    #[test]
+    fn audit_passes_across_the_reuse_ladder_on_dag_workloads() {
+        // `--audit` must pass its per-event ledger checks and stay
+        // observation-only under fork+relay on both fan-out shapes.
+        use crate::workload::{debate, fanout};
+        for wl in [fanout(), debate()] {
+            let trace = generate_trace(&wl, 2.0, 60.0, 42);
+            for reuse in ReuseOpts::all() {
+                let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+                cfg.reuse = reuse;
+                let off = simulate(cfg.clone(), trace.clone());
+                cfg.audit = true;
+                let on = simulate(cfg, trace.clone());
+                assert_eq!(on.metrics, off.metrics, "{} {}", wl.name, reuse.label());
+            }
+        }
+    }
+
+    #[test]
+    fn full_ladder_is_deterministic_across_routing_policies() {
+        use crate::workload::fanout;
+        let trace = generate_trace(&fanout(), 2.0, 60.0, 42);
+        for policy in RoutePolicy::all() {
+            let run = || {
+                let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+                cfg.reuse = ReuseOpts::DELTA_RELAY_FORK;
+                cfg.routing = policy;
+                simulate(cfg, trace.clone())
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a.metrics, b.metrics, "{policy:?}");
+            let t = ConservationLedger::from_metrics(&a.metrics).total();
+            let mut ctx_demand = 0u64;
+            for s in &trace.sessions {
+                for i in 0..s.calls.len() {
+                    ctx_demand +=
+                        s.input_context_len(trace.workload.sys_prompt_tokens, i) as u64;
+                }
+            }
+            assert_eq!(t.covered(), ctx_demand, "{policy:?}: identity across policies");
+        }
+    }
+
     // -- scale-up knobs: queue implementation + metrics backing -------------
 
     #[test]
     fn legacy_queue_reproduces_calendar_runs_exactly() {
         // The calendar queue and the original BinaryHeap share one ordering
         // contract — whole runs (every metric, every event) must agree.
-        for decode_reuse in [false, true] {
+        for reuse in [ReuseOpts::OFF, ReuseOpts::DELTA] {
             let trace = small_trace(3.0, 60.0);
             let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
-            cfg.decode_reuse = decode_reuse;
+            cfg.reuse = reuse;
             let cal = simulate(cfg.clone(), trace.clone());
             cfg.legacy_queue = true;
             let leg = simulate(cfg, trace);
-            assert_eq!(cal.metrics, leg.metrics, "reuse={decode_reuse}");
+            assert_eq!(cal.metrics, leg.metrics, "reuse={reuse:?}");
             assert_eq!(cal.events_processed, leg.events_processed);
             assert!(cal.events_processed > 0);
         }

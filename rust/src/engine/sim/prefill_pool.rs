@@ -15,7 +15,7 @@
 
 use crate::costmodel::CostModel;
 use crate::engine::config::ClusterConfig;
-use crate::engine::route::WorkerView;
+use crate::engine::route::{WorkerView, WorkerViewProvider};
 use crate::engine::sched::{make_scheduler, PrefillJob, PrefillScheduler, PrefillUnit};
 use crate::kvcache::radix::RadixCache;
 use crate::metrics::{bump_class, ServingMetrics};
@@ -91,6 +91,15 @@ impl PrefillPool {
         self.workers[w].sched.enqueue(job);
     }
 
+    /// A lazy [`WorkerViewProvider`] over this pool for one routing
+    /// decision: the snapshot (and, under `with_load`, the backlog
+    /// summation) is built only if the policy's body actually reads it —
+    /// the static policies (prefix-aware/round-robin/random) route on
+    /// `n_workers()` alone and keep the pre-consolidation fast path.
+    pub fn lazy_views(&self, with_load: bool) -> LazyViews<'_> {
+        LazyViews { pool: self, with_load, cache: None }
+    }
+
     /// Dispatch worker `w`'s next scheduler-chosen unit if it is idle;
     /// returns the unit duration (µs) for the caller to schedule
     /// `PrefillDone`, `None` when busy or out of work.
@@ -145,5 +154,25 @@ impl PrefillPool {
             pw.sched.requeue(unit.entry);
             None
         }
+    }
+}
+
+/// Lazily materialized routing snapshot over one [`PrefillPool`] — the
+/// simulator-side [`WorkerViewProvider`].  Built per routing decision;
+/// the snapshot `Vec` exists only after the policy's first `views()`
+/// call and is cached for the rest of the decision.
+pub(crate) struct LazyViews<'a> {
+    pool: &'a PrefillPool,
+    with_load: bool,
+    cache: Option<Vec<WorkerView<'a>>>,
+}
+
+impl<'a> WorkerViewProvider<'a> for LazyViews<'a> {
+    fn n_workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn views(&mut self) -> &[WorkerView<'a>] {
+        self.cache.get_or_insert_with(|| self.pool.views(self.with_load))
     }
 }

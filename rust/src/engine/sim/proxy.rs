@@ -14,7 +14,7 @@
 use std::collections::VecDeque;
 
 use crate::engine::config::ClusterConfig;
-use crate::engine::route::{make_router, Router, WorkerView};
+use crate::engine::route::{make_router, Router, WorkerViewProvider};
 use crate::engine::sched::PrefillJob;
 use crate::util::rng::Rng;
 
@@ -60,25 +60,16 @@ impl Proxy {
         next
     }
 
-    /// Pick a prefill worker for `job` over the pool snapshot.
-    pub fn route(&mut self, job: &PrefillJob, workers: &[WorkerView<'_>]) -> usize {
-        self.router.route(job, workers, &mut self.rng)
-    }
-
-    /// Snapshot-free routing for policies with `needs_views() == false`.
-    pub fn route_indexed(&mut self, job: &PrefillJob, n_workers: usize) -> usize {
-        self.router.route_indexed(job, n_workers, &mut self.rng)
+    /// Pick a prefill worker for `job`.  `views` materializes the pool
+    /// snapshot lazily: static policies never trigger it, so the
+    /// snapshot-free fast path needs no out-of-band declaration.
+    pub fn route(&mut self, job: &PrefillJob, views: &mut dyn WorkerViewProvider<'_>) -> usize {
+        self.router.route(job, views, &mut self.rng)
     }
 
     /// Whether the active policy reads the per-worker load signal (gates
-    /// the pool's backlog summation when building views).
+    /// the pool's backlog summation when the snapshot materializes).
     pub fn uses_load(&self) -> bool {
         self.router.uses_load()
-    }
-
-    /// Whether the active policy reads the snapshot at all (gates the
-    /// per-call `Vec<WorkerView>` construction).
-    pub fn needs_views(&self) -> bool {
-        self.router.needs_views()
     }
 }

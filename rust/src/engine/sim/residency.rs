@@ -73,6 +73,14 @@ pub(crate) struct SessionEntry {
     /// Tokens the pinned handoff was sized to reuse (the LCP of `sig`
     /// and the new call's context signature, plus `base`).
     pinned_reuse: usize,
+    /// In-flight decode-KV relays reading this entry as their *source*
+    /// (`--reuse delta+relay`): a child call on another worker was sized
+    /// against the parent output this entry holds.  A counter, not a
+    /// bool — concurrent sibling handoffs can relay from one entry at
+    /// once.  Relay-pinned entries are never LRU-evicted (neither
+    /// discarded nor host-parked), so the source KV a relay copy was
+    /// sized against stays on the GPU until every relay drains.
+    relay_pins: u32,
 }
 
 /// Per-decode-worker session residency ledger.
@@ -163,6 +171,53 @@ impl ResidencyLedger {
         }
     }
 
+    /// Non-destructive relay probe (`--reuse delta+relay`): tokens of
+    /// `ctx_sig`'s context that this worker's retained entry for `sid`
+    /// could source a relay copy from — `base` plus the longest common
+    /// run prefix, exactly the `pin_for_handoff` sizing — without
+    /// pinning, consuming, or dropping anything.  0 when the worker
+    /// retains nothing for the session, the entry is host-parked (a
+    /// relay reads GPU-resident KV), or it belongs to another
+    /// compatibility class (a foreign class's decoded KV is unusable,
+    /// same boundary as `pin_for_handoff` — but observation-only, so
+    /// the stale entry is left in place).
+    pub fn relay_probe(&self, sid: usize, class: usize, ctx_sig: &[(usize, usize)]) -> usize {
+        match self.sessions.get(&sid) {
+            Some(e) if e.class == class && !e.on_host => {
+                let mut reuse = e.base;
+                for (have, need) in e.sig.iter().zip(ctx_sig) {
+                    if have == need {
+                        reuse += have.1;
+                    } else {
+                        break;
+                    }
+                }
+                reuse
+            }
+            _ => 0,
+        }
+    }
+
+    /// Mark the entry for `sid` as an in-flight relay *source*.  Must
+    /// follow a successful [`relay_probe`](Self::relay_probe) in the same
+    /// event (the entry cannot disappear in between — eviction runs only
+    /// at decode admission).
+    pub fn relay_pin(&mut self, sid: usize) {
+        let e = self.sessions.get_mut(&sid).expect("relay-pinning an absent entry");
+        e.relay_pins += 1;
+    }
+
+    /// A relay sourced from `sid`'s entry completed.  Tolerant of a
+    /// vanished entry: the session's *own* next call on this worker may
+    /// have consumed it while the relay copy was in flight (the bytes
+    /// were already charged at sizing), and session completion releases
+    /// entries wholesale.
+    pub fn relay_unpin(&mut self, sid: usize) {
+        if let Some(e) = self.sessions.get_mut(&sid) {
+            e.relay_pins = e.relay_pins.saturating_sub(1);
+        }
+    }
+
     /// GPU tokens the (pinned) entry for `sid` occupies — the share the
     /// admission math must discount, since admitting the request consumes
     /// the whole entry.  0 when absent or host-parked.
@@ -213,6 +268,7 @@ impl ResidencyLedger {
                 on_host: false,
                 pinned: false,
                 pinned_reuse: 0,
+                relay_pins: 0,
             },
         );
         self.retained_gpu_tokens += tokens;
@@ -221,11 +277,14 @@ impl ResidencyLedger {
 
     /// LRU eviction candidate: the unpinned GPU-resident entry with the
     /// oldest retention tick (sid breaks exact ties deterministically,
-    /// though ticks are unique by construction).  Returns `(sid, tokens)`.
+    /// though ticks are unique by construction).  Entries serving as an
+    /// in-flight relay source (`relay_pins > 0`) are shielded exactly
+    /// like handoff-pinned ones — reclaim must never free KV a live
+    /// fork/relay still references.  Returns `(sid, tokens)`.
     pub fn lru_victim(&self) -> Option<(usize, usize)> {
         self.sessions
             .iter()
-            .filter(|(_, e)| !e.pinned && !e.on_host)
+            .filter(|(_, e)| !e.pinned && !e.on_host && e.relay_pins == 0)
             .min_by_key(|(sid, e)| (e.last_use, **sid))
             .map(|(sid, e)| (*sid, e.tokens))
     }
@@ -256,6 +315,11 @@ impl ResidencyLedger {
     pub fn release(&mut self, sid: usize) {
         if let Some(e) = self.sessions.remove(&sid) {
             debug_assert!(!e.pinned, "released session {sid} with a handoff in flight");
+            debug_assert_eq!(
+                e.relay_pins, 0,
+                "released session {sid} while a relay sourced from it is in flight \
+                 (a relaying child of the session cannot have completed)"
+            );
             if !e.on_host {
                 self.retained_gpu_tokens -= e.tokens;
             }
@@ -368,6 +432,48 @@ mod tests {
         l.retain(9, 3, 700, 500, chain_sig(&[200]));
         assert_eq!(l.pin_for_handoff(9, 3, &chain_sig(&[200, 50])), (700, 0));
         assert_eq!(l.consume(9), (700, 0));
+    }
+
+    #[test]
+    fn relay_probe_is_non_destructive_and_class_sound() {
+        let mut l = ResidencyLedger::new();
+        l.retain(2, 1, 750, 600, vec![(0, 100), (2, 50)]);
+        // Probe sizes exactly like pin_for_handoff: base + LCP.
+        assert_eq!(l.relay_probe(2, 1, &[(0, 100), (1, 80)]), 700);
+        assert_eq!(l.relay_probe(2, 1, &[(0, 100), (2, 50), (3, 40)]), 750);
+        // ...but changes nothing: entry still whole, still evictable.
+        assert_eq!(l.retained_gpu_tokens, 750);
+        assert_eq!(l.lru_victim(), Some((2, 750)));
+        // Foreign class sources nothing and the entry is NOT dropped
+        // (unlike pin_for_handoff, the probe is observation-only).
+        assert_eq!(l.relay_probe(2, 0, &[(0, 100)]), 0);
+        assert_eq!(l.retained_gpu_tokens, 750);
+        // Unknown sessions and host-parked entries source nothing.
+        assert_eq!(l.relay_probe(9, 1, &[(0, 100)]), 0);
+        l.park_to_host(2);
+        assert_eq!(l.relay_probe(2, 1, &[(0, 100)]), 0, "host KV cannot source a relay");
+    }
+
+    #[test]
+    fn relay_pins_shield_the_source_from_eviction() {
+        let mut l = ResidencyLedger::new();
+        l.retain(1, 0, 100, 60, chain_sig(&[40])); // oldest — natural victim
+        l.retain(2, 0, 200, 60, chain_sig(&[140]));
+        // Two concurrent relays read session 1's entry.
+        l.relay_pin(1);
+        l.relay_pin(1);
+        assert_eq!(l.lru_victim(), Some((2, 200)), "relay source shielded");
+        l.relay_unpin(1);
+        assert_eq!(l.lru_victim(), Some((2, 200)), "still one relay in flight");
+        l.relay_unpin(1);
+        assert_eq!(l.lru_victim(), Some((1, 100)), "unpinned source evictable again");
+        // Unpin after the entry vanished (own-call consume mid-relay) is a
+        // tolerated no-op.
+        l.pin_for_handoff(1, 0, &chain_sig(&[40, 8]));
+        l.relay_pin(1);
+        l.consume(1);
+        l.relay_unpin(1);
+        assert_eq!(l.retained_gpu_tokens, 200);
     }
 
     #[test]

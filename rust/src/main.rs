@@ -20,7 +20,7 @@
 use anyhow::{bail, Result};
 
 use prefillshare::costmodel::GpuSpec;
-use prefillshare::engine::config::{ClusterConfig, RoutingPolicy, SystemKind};
+use prefillshare::engine::config::{ClusterConfig, ReuseOpts, RoutingPolicy, SystemKind};
 use prefillshare::engine::experiments as sx;
 use prefillshare::engine::report::{format_row, header, save_rows, Row};
 use prefillshare::engine::sched::SchedPolicy;
@@ -63,13 +63,14 @@ fn help_text() -> String {
     format!(
         "prefillshare {} — PrefillShare reproduction (see README.md, ARCHITECTURE.md)\n\n\
          USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload|lint> [--options]\n\n\
-         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout|prefillshare|simscale\n\
+         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout|prefillshare|forkrelay|simscale\n\
                        [--seed N] [--threads N] [--scale N,N,...] [--out file.json]\n\
          sim           [--system baseline|prefillshare] [--sched fifo|sjf|prefix-affinity|chunked]\n\
                        [--chunk-tokens N] [--route prefix-aware|round-robin|random|cache-aware|load-aware]\n\
                        [--link-gbps G] [--prefill-gpus a100,a10,...] [--n-prefill N]\n\
                        [--prefill-classes shared|private|c0,c1,...]\n\
-                       [--decode-reuse] [--workload {workloads}] [--rate R] [--duration S]\n\
+                       [--reuse off|delta|delta+relay|delta+relay+fork] [--workload {workloads}]\n\
+                       [--rate R] [--duration S]\n\
                        [--arrivals poisson|mmpp] [--burst B] [--burst-dwell S]\n\
                        [--max-sessions N] [--legacy-queue] [--metrics exact|sketch]\n\
                        [--audit] [--seed N] [--out file.json]\n\
@@ -218,6 +219,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
         "reuse" => sx::reuse_ablation(seed, threads),
         "fanout" => sx::fanout_experiment(seed, threads),
         "prefillshare" => sx::prefillshare_experiment(seed, threads),
+        "forkrelay" => sx::forkrelay_experiment(seed, threads),
         // Not a paper figure: lets CI drivers that only know bench-serving
         // gate on the static determinism/soundness pass.
         "lint" => return cmd_lint(args),
@@ -307,8 +309,24 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     // Heterogeneous prefill pool: one GPU tier per worker, comma-separated.
     cfg.prefill_gpus = args.get_list("prefill-gpus", GpuSpec::by_name, "a100,a10");
-    // Decode-side session KV residency with delta handoff.
-    cfg.decode_reuse = args.bool_flag("decode-reuse");
+    // Decode-side KV reuse ladder: residency/delta handoff, decode-KV
+    // relay, CoW forking.  `--decode-reuse` survives as a deprecated
+    // alias for `--reuse delta`.
+    cfg.reuse = args.get_choice(
+        "reuse",
+        ReuseOpts::OFF,
+        ReuseOpts::by_name,
+        "off,delta,delta+relay,delta+relay+fork",
+    );
+    if args.bool_flag("decode-reuse") {
+        eprintln!(
+            "warning: --decode-reuse is deprecated; use --reuse delta (or delta+relay, \
+             delta+relay+fork)"
+        );
+        if cfg.reuse == ReuseOpts::OFF {
+            cfg.reuse = ReuseOpts::DELTA;
+        }
+    }
     // Simulator internals: the O(1) calendar queue is the default; the
     // BinaryHeap survives behind `--legacy-queue` as the equivalence
     // baseline.  `--metrics sketch` trades exact quantiles for bounded
@@ -332,7 +350,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
     } else {
         String::new()
     };
-    let reuse = if cfg.decode_reuse { " / decode-reuse" } else { "" };
+    let reuse_opts = cfg.reuse;
+    let reuse =
+        if reuse_opts.delta { format!(" / reuse={}", reuse_opts.label()) } else { String::new() };
     let classes_tag = match args.get("prefill-classes") {
         None | Some("shared") => String::new(),
         Some(v) => format!(" / classes={v}"),
@@ -391,6 +411,16 @@ fn cmd_sim(args: &Args) -> Result<()> {
             row.result.host_reload_tokens,
             row.result.peak_retained_kv_tokens,
         );
+        if reuse_opts.relay || reuse_opts.fork {
+            println!(
+                "fork/relay: {} tokens forked over {} handoffs (CoW, zero-copy) | \
+                 {} tokens relayed over {} handoffs",
+                row.result.forked_tokens,
+                row.result.metrics.handoffs_forked,
+                row.result.relayed_tokens,
+                row.result.metrics.handoffs_relayed,
+            );
+        }
     }
     if let Some(out) = args.get("out") {
         save_rows(out, &[row])?;

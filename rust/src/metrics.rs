@@ -463,6 +463,18 @@ pub struct ServingMetrics {
     pub handoffs_delta: u64,
     pub handoff_tokens_delta: u64,
     pub decode_reuse_tokens: u64,
+    /// Copy-on-write fork + decode-KV relay accounting (`--reuse
+    /// delta+relay` / `delta+relay+fork`, all zero otherwise): context
+    /// tokens covered by referencing a sibling fork group's shared
+    /// branch-point KV (zero-copy — never bytes on a link) and context
+    /// tokens relayed from a parent's decoded output retained on its
+    /// decode worker, plus the handoffs that used each mechanism.  Both
+    /// enter the byte-conservation identity: `shipped + reused + reloaded
+    /// + forked + relayed == context demand` per class.
+    pub forked_tokens: u64,
+    pub relayed_tokens: u64,
+    pub handoffs_forked: u64,
+    pub handoffs_relayed: u64,
     /// Retained-KV reclamation: LRU evictions under the resident cap, the
     /// tokens they freed, and the evictions that parked KV to host memory
     /// (priced cheaper than a future full re-handoff) plus the tokens
@@ -512,6 +524,8 @@ pub struct ServingMetrics {
     pub handoff_tokens_by_class: Vec<u64>,
     pub decode_reuse_tokens_by_class: Vec<u64>,
     pub host_reload_tokens_by_class: Vec<u64>,
+    pub forked_tokens_by_class: Vec<u64>,
+    pub relayed_tokens_by_class: Vec<u64>,
 }
 
 /// Record `v` into the position-indexed histogram family, growing it to

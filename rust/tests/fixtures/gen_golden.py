@@ -1,6 +1,7 @@
 #!/usr/bin/env python3
 """Reference generator for `golden_fifo.json`, `golden_routes.json`,
-`golden_reuse.json`, `golden_fanout.json` and `golden_prefillshare.json`.
+`golden_reuse.json`, `golden_fanout.json`, `golden_prefillshare.json` and
+`golden_forkrelay.json`.
 
 A line-by-line Python port of the rust cluster simulator's FIFO path
 (`engine/sim/` + `engine/sched/fifo.rs`), the DAG workload generator
@@ -43,6 +44,25 @@ boundary.  Class 0 is the identity encoding (`(0 << 32) | id == id`), so
 the default single-shared-class map reproduces the four pre-class
 fixtures byte-for-byte; the fixture's per-model *private* map scenarios
 pin per-class counter splits and per-class byte conservation.
+
+golden_forkrelay.json pins the **`--reuse` ladder's two new rungs** (see
+`engine/sim/fork.rs` and the relay path in `engine/sim/residency.rs`):
+
+* **CoW fork** (`delta+relay+fork`): same-class sibling nodes issued in
+  one batch block-refcount the shared ancestor-cut prefix of their
+  contexts (16-token blocks); every non-primary member's `forked` tokens
+  arrive by reference — zero transfer time, zero shipped bytes — and the
+  group's blocks free only when the last member's handoff completes;
+* **decode-KV relay** (`delta+relay`): a fan-out parent's decoded output
+  run, still resident on the parent's decode worker (same class, not
+  host-parked), covers the child's context as `relayed` tokens instead
+  of fresh shipping; the source entry is relay-pinned for the transfer
+  (unpin is tolerant — the source's own next call may consume it) and
+  relayed KV pays wire time and pages out/in with shipped KV;
+* the five-channel conservation identity `shipped + reused + reloaded +
+  forked + relayed == context demand` holds per class and in total for
+  every scenario, and the full ladder ships strictly fewer tokens than
+  plain `delta` on the fanout workload at the pinned seeds.
 
 Decode-tier semantics shared with the rust side (see
 `engine/sim/decode_pool.rs`):
@@ -371,7 +391,7 @@ def staging_secs(tokens):
 
 def cluster_config(
     system, routing="prefix", link_contended=False, handoff_bps=HANDOFF_BPS, decode_reuse=False,
-    spec=REACT,
+    relay=False, fork=False, spec=REACT,
 ):
     usable = max(MEM_BYTES * 0.9 - weight_bytes(), 1e9)
     return {
@@ -379,7 +399,12 @@ def cluster_config(
         "routing": routing,  # "prefix" | "rr" | "cache"
         "link_contended": link_contended,
         "handoff_bps": handoff_bps,
+        # The `--reuse` ladder (config.rs::ReuseOpts): decode_reuse is the
+        # `delta` rung; relay and fork are the upper rungs (fork => relay
+        # => delta, enforced by the rust side at construction).
         "decode_reuse": decode_reuse,
+        "relay": relay,
+        "fork": fork,
         "n_prefill_workers": 4,
         "n_models": 4,
         "max_concurrent_sessions": 64,
@@ -633,11 +658,14 @@ class DecodeReq:
     __slots__ = (
         "sid", "call_idx", "cls", "depth", "ctx_len", "out_tokens", "generated", "issued_at",
         "arrived_at", "ttft_recorded", "was_deferred",
-        "shipped_tokens", "reuse_tokens", "host_tokens", "base", "sig", "is_sink",
+        "shipped_tokens", "reuse_tokens", "host_tokens",
+        "forked_tokens", "relayed_tokens", "relay_src", "fork_gid",
+        "base", "sig", "is_sink",
     )
 
     def __init__(self, sid, call_idx, depth, ctx_len, out_tokens, issued_at,
                  shipped_tokens=None, reuse_tokens=0, host_tokens=0,
+                 forked_tokens=0, relayed_tokens=0, relay_src=None, fork_gid=None,
                  base=0, sig=(), is_sink=False, cls=0):
         self.sid = sid
         self.call_idx = call_idx
@@ -655,6 +683,15 @@ class DecodeReq:
         self.shipped_tokens = ctx_len if shipped_tokens is None else shipped_tokens
         self.reuse_tokens = reuse_tokens
         self.host_tokens = host_tokens
+        # Fork/relay cover (sim/mod.rs::on_prefill_done, `--reuse
+        # delta+relay[+fork]`): forked tokens reference a sibling group's
+        # shared CoW blocks (zero bytes, zero transfer time); relayed
+        # tokens copy a fan-out parent's decoded output from its worker's
+        # residency entry (they share the transfer window with shipped).
+        self.forked_tokens = forked_tokens
+        self.relayed_tokens = relayed_tokens
+        self.relay_src = relay_src
+        self.fork_gid = fork_gid
         # Residency signature of the input context (decode reuse only):
         # base = sys + init, sig = [(node, out_tokens)] over the ancestor
         # cut, ascending.
@@ -788,6 +825,27 @@ class Simulator:
             "decode_reuse_tokens": [],
             "host_reload_tokens": [],
         }
+        # Fork/relay counters (metrics.rs forked_tokens/relayed_tokens/
+        # handoffs_forked/handoffs_relayed) and their per-class splits.
+        # Kept out of `self.m` / `self.by_class` so the five pre-forkrelay
+        # fixtures' counter schema (and bytes) stays untouched — only
+        # golden_forkrelay.json pins them.
+        self.forkrelay = {
+            "forked_tokens": 0,
+            "relayed_tokens": 0,
+            "handoffs_forked": 0,
+            "handoffs_relayed": 0,
+        }
+        self.forkrelay_by_class = {"forked_tokens": [], "relayed_tokens": []}
+        # CoW fork registry (engine/sim/fork.rs): a refcounted block pool
+        # capped at the decode worker KV budget, 16 tokens per block.
+        # Only block *counts* are observable (alloc fails iff the free
+        # count is short), so the free list itself is not modelled.
+        self.fork_capacity = max(-(-cfg["decode_kv_tokens"] // 16), 1)
+        self.fork_used = 0
+        self.fork_groups = {}   # gid -> [n_blocks, live_refs]
+        self.fork_pending = {}  # (sid, node) -> (gid, shared_tokens, primary)
+        self.next_gid = 0
         self.session_latency = Histogram()
         self.ttft = Histogram()
         self.request_latency = Histogram()
@@ -847,9 +905,83 @@ class Simulator:
 
     def start_session(self, sid):
         # Issue every root of the call graph, ascending node order.
-        for i, c in enumerate(self.trace[sid]["calls"]):
-            if not c["parents"]:
-                self.issue_node(sid, i)
+        roots = [i for i, c in enumerate(self.trace[sid]["calls"]) if not c["parents"]]
+        self.issue_batch(sid, roots)
+
+    def context_sig(self, sid, node):
+        # sim/mod.rs::context_sig — (node, out_tokens) per ancestor, ascending.
+        s = self.trace[sid]
+        return [(a, s["calls"][a]["out"]) for a in self.meta[sid][node]["anc"]]
+
+    def issue_batch(self, sid, nodes):
+        # sim/mod.rs::issue_batch — under `--reuse delta+relay+fork`,
+        # sibling nodes of one prefill class issued in the same batch open
+        # a CoW fork group over their shared ancestor-cut prefix *before*
+        # any of them is issued (class groups open in ascending class
+        # order; members stay in ascending node order).
+        if self.cfg.get("fork") and len(nodes) >= 2:
+            s = self.trace[sid]
+            base = self.cfg["sys_prompt_tokens"] + s["init"]
+            by_cls = {}
+            for n in nodes:
+                by_cls.setdefault(s["calls"][n]["cls"], []).append(n)
+            for cls in sorted(by_cls):
+                members = by_cls[cls]
+                if len(members) < 2:
+                    continue
+                lcp = self.context_sig(sid, members[0])
+                for m in members[1:]:
+                    other = self.context_sig(sid, m)
+                    common = 0
+                    for a, b in zip(lcp, other):
+                        if a != b:
+                            break
+                        common += 1
+                    lcp = lcp[:common]
+                shared = base + sum(ln for (_n, ln) in lcp)
+                self.fork_open(sid, members, shared)
+        for n in nodes:
+            self.issue_node(sid, n)
+
+    def fork_open(self, sid, members, shared_tokens):
+        # fork.rs::ForkRegistry::open — allocation failure (tiny pool)
+        # degrades to no fork: no pending records, every member ships.
+        n_blocks = -(-shared_tokens // 16)  # BlockPool::blocks_for
+        if self.fork_used + n_blocks > self.fork_capacity:
+            return False
+        self.fork_used += n_blocks
+        gid = self.next_gid
+        self.next_gid += 1
+        self.fork_groups[gid] = [n_blocks, len(members)]
+        for i, node in enumerate(members):
+            assert (sid, node) not in self.fork_pending, "node forked twice"
+            self.fork_pending[(sid, node)] = (gid, shared_tokens, i == 0)
+        return True
+
+    def fork_drop_ref(self, gid):
+        # fork.rs::drop_ref — one member's handoff completed; the last
+        # drop frees the group's blocks.
+        g = self.fork_groups[gid]
+        assert g[1] > 0, "dropping a ref on a closed fork group"
+        g[1] -= 1
+        if g[1] == 0:
+            self.fork_used -= g[0]
+            del self.fork_groups[gid]
+
+    def relay_probe(self, w, sid, cls, ctx_sig):
+        # residency.rs::relay_probe — observation-only sizing of worker
+        # w's entry for sid: base + signature LCP.  Class-mismatched,
+        # host-parked and absent entries source nothing (and unlike
+        # pin_for_handoff a foreign-class entry is NOT dropped).
+        e = self.decode[w]["residency"].get(sid)
+        if e is None or e["cls"] != cls or e["on_host"]:
+            return 0
+        r = e["base"]
+        for have, need in zip(e["sig"], ctx_sig):
+            if have != need:
+                break
+            r += have[1]
+        return r
 
     def bump_class(self, key, cls, tokens):
         slots = self.by_class[key]
@@ -991,16 +1123,69 @@ class Simulator:
                     host_tokens = r
                 else:
                     reuse_tokens = r
-        shipped = job["ctx_len"] - reuse_tokens - host_tokens
+        own = reuse_tokens + host_tokens
+        # CoW fork cover (sim/mod.rs::on_prefill_done): a non-primary
+        # fork-group member references the shared span [own, shared)
+        # through the group's blocks — zero bytes, zero transfer time.
+        # The pending record is consumed unconditionally (it only exists
+        # when fork is on).
+        forked = 0
+        fork_gid = None
+        p = self.fork_pending.pop((sid, node), None)
+        if p is not None:
+            gid, shared, primary = p
+            fork_gid = gid
+            if not primary:
+                forked = max(min(shared, job["ctx_len"]) - own, 0)
+        # Decode-KV relay: cover the best single fan-out parent's decoded
+        # output from the residency entry on *that parent's* decode
+        # worker, clipped to the parent's own output run.  Strict max;
+        # ties keep the lowest parent (parents iterate ascending).
+        relayed = 0
+        relay_src = None
+        if self.cfg.get("relay"):
+            cov = own + forked
+            for par in call["parents"]:
+                if len(self.meta[sid][par]["children"]) < 2:
+                    continue
+                src_w = self.trace[sid]["calls"][par]["model"]
+                r_src = self.relay_probe(src_w, sid, call["cls"], sig)
+                if r_src == 0:
+                    continue
+                run_start = base
+                for a in meta["anc"]:
+                    if a >= par:
+                        break
+                    run_start += self.trace[sid]["calls"][a]["out"]
+                run_end = run_start + self.trace[sid]["calls"][par]["out"]
+                cand = max(min(run_end, r_src) - max(run_start, cov), 0)
+                if cand > relayed:
+                    relayed = cand
+                    relay_src = src_w
+            if relay_src is not None:
+                # Shield the source entry from LRU reclaim until the
+                # relay copy lands (unpinned at handoff_done).
+                self.decode[relay_src]["residency"][sid]["relay_pins"] += 1
+        shipped = job["ctx_len"] - own - forked - relayed
         # Per-event conservation (sim/mod.rs::audit_handoff, --audit): the
         # sized split is non-negative, exclusive (GPU-retained XOR
-        # host-parked) and exhaustive against this call's context demand.
+        # host-parked) and exhaustive against this call's context demand
+        # across all five supply channels.
         assert shipped >= 0, (sid, node, shipped)
         assert reuse_tokens == 0 or host_tokens == 0, (sid, node, reuse_tokens, host_tokens)
-        assert shipped + reuse_tokens + host_tokens == job["ctx_len"], (sid, node)
+        assert shipped + reuse_tokens + host_tokens + forked + relayed == job["ctx_len"], (sid, node)
+        if relayed:
+            # A relayed span never exceeds any fan-out parent's decoded
+            # output (audit_handoff check (d)).
+            assert relayed <= max(
+                self.trace[sid]["calls"][par]["out"]
+                for par in call["parents"]
+                if len(self.meta[sid][par]["children"]) >= 2
+            ), (sid, node, relayed)
         req = DecodeReq(
             sid, node, meta["depth"], job["ctx_len"], out_tokens, job["issued_at"],
             shipped_tokens=shipped, reuse_tokens=reuse_tokens, host_tokens=host_tokens,
+            forked_tokens=forked, relayed_tokens=relayed, relay_src=relay_src, fork_gid=fork_gid,
             base=base, sig=sig,
             is_sink=not meta["children"], cls=job["cls"],
         )
@@ -1012,6 +1197,20 @@ class Simulator:
             self.m["handoff_tokens_delta"] += shipped
             self.m["decode_reuse_tokens"] += reuse_tokens
             self.bump_class("decode_reuse_tokens", job["cls"], reuse_tokens)
+        if forked > 0:
+            self.forkrelay["handoffs_forked"] += 1
+            self.forkrelay["forked_tokens"] += forked
+            slots = self.forkrelay_by_class["forked_tokens"]
+            while len(slots) <= job["cls"]:
+                slots.append(0)
+            slots[job["cls"]] += forked
+        if relayed > 0:
+            self.forkrelay["handoffs_relayed"] += 1
+            self.forkrelay["relayed_tokens"] += relayed
+            slots = self.forkrelay_by_class["relayed_tokens"]
+            while len(slots) <= job["cls"]:
+                slots.append(0)
+            slots[job["cls"]] += relayed
         # Per-event per-class identity (--audit): host reload is charged
         # later, at decode admission, so track the *sized* host tokens here
         # and require shipped + reused + sized to cover the class demand at
@@ -1024,11 +1223,17 @@ class Simulator:
         self.audit_host_sized[cls] = self.audit_host_sized.get(cls, 0) + host_tokens
         shipped_c = pad_get(self.by_class["handoff_tokens"], cls)
         reused_c = pad_get(self.by_class["decode_reuse_tokens"], cls)
-        assert shipped_c + reused_c + self.audit_host_sized[cls] == self.audit_demand[cls], (
-            sid, node, "class", cls, "lost tokens at handoff")
+        forked_c = pad_get(self.forkrelay_by_class["forked_tokens"], cls)
+        relayed_c = pad_get(self.forkrelay_by_class["relayed_tokens"], cls)
+        assert (
+            shipped_c + reused_c + self.audit_host_sized[cls] + forked_c + relayed_c
+            == self.audit_demand[cls]
+        ), (sid, node, "class", cls, "lost tokens at handoff")
         # Interconnect (engine/sim/interconnect.rs): FIFO per ingress link
-        # when contended, fire-and-forget otherwise.
-        dur = secs(handoff_secs(shipped, self.cfg.get("handoff_bps", HANDOFF_BPS)))
+        # when contended, fire-and-forget otherwise.  Shipped and relayed
+        # tokens both occupy the transfer window; forked tokens are a CoW
+        # block reference and cost no transfer time.
+        dur = secs(handoff_secs(shipped + relayed, self.cfg.get("handoff_bps", HANDOFF_BPS)))
         now = self.now
         start = max(now, self.link_free[model]) if self.cfg.get("link_contended") else now
         end = start + dur
@@ -1050,6 +1255,15 @@ class Simulator:
         return end
 
     def on_handoff_done(self, req, w):
+        # Relay source unpin (tolerant — the source session's own next
+        # call may have consumed the entry mid-relay) and fork-group ref
+        # drop happen before admission (sim/mod.rs::on_handoff_done).
+        if req.relay_src is not None:
+            e = self.decode[req.relay_src]["residency"].get(req.sid)
+            if e is not None:
+                e["relay_pins"] = max(e["relay_pins"] - 1, 0)
+        if req.fork_gid is not None:
+            self.fork_drop_ref(req.fork_gid)
         req.arrived_at = self.now
         self.decode[w]["pending"].append(req)
         self.try_admit_decode(w)
@@ -1061,7 +1275,9 @@ class Simulator:
         dw = self.decode[w]
         best = None
         for sid, e in dw["residency"].items():
-            if e["pinned"] or e["on_host"]:
+            # Handoff-pinned, host-parked and in-flight relay-source
+            # entries are all shielded (residency.rs::lru_victim).
+            if e["pinned"] or e["on_host"] or e["relay_pins"] > 0:
                 continue
             key = (e["last_use"], sid)
             if best is None or key < best[0]:
@@ -1124,8 +1340,12 @@ class Simulator:
                     front.was_deferred = True
                     dw["io_inflight"] += 1
                     self.m["staging_events"] += 1
-                    self.m["staged_tokens"] += front.shipped_tokens
-                    end = self.stage_transfer(w, secs(staging_secs(front.shipped_tokens)))
+                    # Relayed KV arrived over the wire like shipped KV, so
+                    # it pages out (and back in) with it; forked KV is
+                    # shared-by-reference and never staged.
+                    park = front.shipped_tokens + front.relayed_tokens
+                    self.m["staged_tokens"] += park
+                    end = self.stage_transfer(w, secs(staging_secs(park)))
                     self.schedule(end, ("stage_out", w))
                 return
             req = dw["pending"].popleft()
@@ -1136,7 +1356,9 @@ class Simulator:
                 e = dw["residency"].pop(req.sid, None)
                 if e is not None and not e["on_host"]:
                     dw["retained_gpu"] -= e["tokens"]
-            reload = req.host_tokens + (req.shipped_tokens if req.was_deferred else 0)
+            reload = req.host_tokens + (
+                (req.shipped_tokens + req.relayed_tokens) if req.was_deferred else 0
+            )
             if reload > 0:
                 dw["staging_in"] += 1
                 dw["io_inflight"] += 1
@@ -1216,6 +1438,7 @@ class Simulator:
                         "on_host": False,
                         "pinned": False,
                         "pinned_reuse": 0,
+                        "relay_pins": 0,
                     }
                     dw["retained_gpu"] += done.footprint()
                     dw["peak_retained"] = max(dw["peak_retained"], dw["retained_gpu"])
@@ -1244,11 +1467,15 @@ class Simulator:
         st["inflight"] -= 1
         st["remaining"] -= 1
         # Unblock children; every node whose last parent this was issues
-        # now, ascending node order (sim/mod.rs::on_call_complete).
+        # now as ONE batch, ascending node order, so same-class siblings
+        # unblocked together can CoW-fork (sim/mod.rs::on_call_complete).
+        ready = []
         for c in self.meta[sid][node]["children"]:
             st["pending"][c] -= 1
             if st["pending"][c] == 0:
-                self.issue_node(sid, c)
+                ready.append(c)
+        if ready:
+            self.issue_batch(sid, ready)
         if st["remaining"] == 0:
             self.session_latency.record(to_secs(self.now - st["arrival"]))
             self.m["sessions_completed"] += 1
@@ -1267,6 +1494,10 @@ class Simulator:
     # -- results ----------------------------------------------------------
 
     def finish(self):
+        # Every fork group must have been fully dereferenced by handoff
+        # completions (fork.rs::drained, asserted in sim finish()).
+        assert not self.fork_groups and not self.fork_pending and self.fork_used == 0, \
+            "fork registry not drained at finish"
         evicted = 0
         prefill_busy = 0
         for w in self.prefill:
@@ -1773,6 +2004,108 @@ def main():
         "scenarios": ps_scenarios,
     }
     write_fixture("golden_prefillshare.json", ps_fixture)
+
+    # -- golden_forkrelay.json: CoW fork + decode-KV relay reuse ladder ----
+    # Fresh fanout/debate traces at the forkrelay experiment's pinned
+    # seeds (0, 1); each (workload, seed) runs the three reuse-ladder arms
+    # above `off` — delta, delta+relay, delta+relay+fork — and pins the
+    # fork/relay counters, their per-class splits, the five-channel
+    # conservation identity, and the ladder's shipped-token direction.
+    FORKRELAY_RATE = 2.0  # experiments.rs::FORKRELAY_RATE
+    FORKRELAY_SEEDS = (0, 1)  # experiments.rs::FORKRELAY_SEEDS
+    ARMS = (
+        ("delta", {}),
+        ("delta+relay", {"relay": True}),
+        ("delta+relay+fork", {"relay": True, "fork": True}),
+    )
+    fr_scenarios = []
+    fr_traces = {}
+    for wl in ("fanout", "debate"):
+        for seed in FORKRELAY_SEEDS:
+            tr = generate_trace(WORKLOADS[wl], FORKRELAY_RATE, GOLDEN_DURATION, seed)
+            n_calls = sum(len(s["calls"]) for s in tr)
+            fr_traces[f"{wl}-{seed}"] = {
+                "workload": wl,
+                "rate": FORKRELAY_RATE,
+                "duration_s": GOLDEN_DURATION,
+                "seed": seed,
+                "sessions": len(tr),
+                "calls": n_calls,
+            }
+            shipped = {}
+            for reuse, kw in ARMS:
+                sim = Simulator(
+                    cluster_config(
+                        "prefillshare", decode_reuse=True, spec=WORKLOADS[wl], **kw
+                    ),
+                    tr,
+                )
+                counters, floats, extra, dag = sim.run()
+                tag = (wl, seed, reuse)
+                assert counters["sessions_completed"] == len(tr), (tag, counters)
+                assert counters["requests_completed"] == n_calls, tag
+                fr = dict(sim.forkrelay)
+                # Five-channel conservation: every call's context demand is
+                # shipped, gpu-reused, host-reloaded, forked or relayed.
+                demand = context_demand(sim)
+                assert (
+                    counters["handoff_tokens"]
+                    + counters["decode_reuse_tokens"]
+                    + counters["host_reload_tokens"]
+                    + fr["forked_tokens"]
+                    + fr["relayed_tokens"]
+                    == demand
+                ), (tag, "five-channel accounting lost tokens")
+                if reuse == "delta":
+                    assert fr["forked_tokens"] == 0 and fr["relayed_tokens"] == 0, tag
+                if reuse == "delta+relay":
+                    assert fr["forked_tokens"] == 0, tag
+                    assert fr["relayed_tokens"] > 0, (tag, "relay rung never relayed")
+                if reuse == "delta+relay+fork":
+                    assert fr["forked_tokens"] > 0, (tag, "fork rung never forked")
+                shipped[reuse] = counters["handoff_tokens"]
+                fr_by_class = {
+                    f"{k}_by_class": list(v) for k, v in sim.forkrelay_by_class.items()
+                }
+                fr_scenarios.append(
+                    {
+                        "name": f"{wl}-s{seed}-{reuse}",
+                        "workload": wl,
+                        "seed": seed,
+                        "reuse": reuse,
+                        "counters": {**counters, **fr, **fr_by_class},
+                        "floats": {**floats, **extra, **dag},
+                    }
+                )
+                print(
+                    f"  {wl}-s{seed}-{reuse}: shipped {counters['handoff_tokens']}, "
+                    f"forked {fr['forked_tokens']}, relayed {fr['relayed_tokens']}, "
+                    f"reused {counters['decode_reuse_tokens']}, "
+                    f"p95 {floats['p95_session_latency']:.3f}s"
+                )
+            # Ladder direction: each rung never ships more than the one
+            # below it; on fanout (the ISSUE's pinned acceptance regime)
+            # the relay rung and the full ladder save strictly.
+            assert shipped["delta+relay"] <= shipped["delta"], (wl, seed, shipped)
+            assert shipped["delta+relay+fork"] <= shipped["delta+relay"], (wl, seed, shipped)
+            if wl == "fanout":
+                assert shipped["delta+relay"] < shipped["delta"], (wl, seed, shipped)
+            assert shipped["delta+relay+fork"] < shipped["delta"], (wl, seed, shipped)
+
+    fr_fixture = {
+        "description": "Golden reuse-ladder metrics for CoW KV forking and "
+        "decode-KV relay: fanout/debate traces at the forkrelay experiment's "
+        "pinned seeds (0, 1), each run under --reuse delta, delta+relay and "
+        "delta+relay+fork, pinning forked/relayed token counters (and their "
+        "per-class splits) plus the five-channel conservation identity "
+        "shipped + reused + reloaded + forked + relayed == context demand; "
+        "generated by gen_golden.py (bit-faithful port of the rust "
+        "simulator). Counters compare exactly, floats to 1e-6 relative "
+        "tolerance.",
+        "traces": fr_traces,
+        "scenarios": fr_scenarios,
+    }
+    write_fixture("golden_forkrelay.json", fr_fixture)
 
 
 if __name__ == "__main__":
