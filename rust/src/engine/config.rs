@@ -6,6 +6,7 @@ use crate::engine::sched::SchedPolicy;
 use crate::metrics::MetricsMode;
 use crate::workload::NUM_AGENTS;
 
+pub use crate::engine::faults::{ControlPlanePolicy, FaultSpec};
 pub use crate::engine::route::RoutePolicy;
 
 /// Backwards-compatible name for [`RoutePolicy`] (the enum moved into the
@@ -170,6 +171,18 @@ pub struct ClusterConfig {
     /// class-isolation checks on every handoff, observation-only by
     /// contract — an audited run is byte-identical to an unaudited one.
     pub audit: bool,
+    /// Deterministic fault schedule (`--faults`): worker crashes, link
+    /// degradation windows, straggler GPUs.  Empty (the default) keeps
+    /// the simulator byte-identical to the golden fixtures.
+    pub faults: Vec<FaultSpec>,
+    /// Seconds after a crash before the worker revives cold
+    /// (`--fault-recovery-s`).
+    pub fault_recovery_s: f64,
+    /// Proxy control-plane policy (`--control-plane`):
+    /// static | slo-shed | repartition.
+    pub control_plane: ControlPlanePolicy,
+    /// Rolling-p95 TTFT target for the `slo-shed` plane (`--slo-ttft-ms`).
+    pub slo_ttft_ms: f64,
     pub seed: u64,
 }
 
@@ -221,6 +234,10 @@ impl ClusterConfig {
             legacy_queue: false,
             metrics: MetricsMode::Exact,
             audit: false,
+            faults: Vec::new(),
+            fault_recovery_s: crate::engine::faults::DEFAULT_RECOVERY_S,
+            control_plane: ControlPlanePolicy::Static,
+            slo_ttft_ms: crate::engine::faults::DEFAULT_SLO_TTFT_MS,
             seed: 0,
         }
     }
@@ -293,6 +310,10 @@ mod tests {
         assert!(!c.legacy_queue, "calendar queue is the default");
         assert_eq!(c.metrics, MetricsMode::Exact, "exact metrics are the default");
         assert!(!c.audit, "audit mode is opt-in; defaults keep fixtures byte-identical");
+        assert!(c.faults.is_empty(), "fault injection is opt-in");
+        assert_eq!(c.control_plane, ControlPlanePolicy::Static);
+        assert!(c.fault_recovery_s > 0.0);
+        assert!(c.slo_ttft_ms > 0.0);
     }
 
     #[test]

@@ -651,6 +651,201 @@ pub fn forkrelay_experiment(seed: u64, threads: usize) -> Vec<Row> {
 }
 
 // ---------------------------------------------------------------------------
+// faults: failure injection + SLO control plane
+// ---------------------------------------------------------------------------
+
+/// Offered load for the absorbable-fault arms (crash / link / straggler):
+/// below saturation, so every session still completes and the fault's
+/// cost shows up as lost tokens and recovery time, not as collapse.
+pub const FAULTS_RATE: f64 = 2.0;
+
+/// Overload point where the `slo-shed` plane separates from `static` —
+/// past the react saturation knee, rolling p95 TTFT breaches the SLO and
+/// shedding is the only way to protect admitted sessions.
+pub const FAULTS_OVERLOAD_RATE: f64 = 6.0;
+
+/// TTFT SLO for the overload arms (tight enough that `static` visibly
+/// violates it at [`FAULTS_OVERLOAD_RATE`]).
+pub const FAULTS_SLO_TTFT_MS: f64 = 40.0;
+
+/// Decode-pressure rate for the `repartition` arm (paired with a decode
+/// batch cap of 1 so the flex GPU is worth lending).
+pub const FAULTS_REPARTITION_RATE: f64 = 4.0;
+
+/// Failure-injection sweep: one clean control row plus one row per fault
+/// type under the `static` plane, the static-vs-`slo-shed` overload
+/// pair, and a decode-pressure `repartition` arm.  Fault arms share the
+/// clean arm's (trace, seed) so lost/recovery/goodput deltas are
+/// attributable to the injected fault alone.
+pub fn faults_sweep(llm: LlmSpec, seed: u64, threads: usize) -> Vec<Row> {
+    use crate::engine::config::ControlPlanePolicy;
+    use crate::engine::faults::parse_faults;
+    let wl = react();
+    let base_trace = Arc::new(generate_trace(&wl, FAULTS_RATE, HORIZON_S, seed));
+    let overload_trace = Arc::new(generate_trace(&wl, FAULTS_OVERLOAD_RATE, HORIZON_S, seed));
+    let repart_trace = Arc::new(generate_trace(&wl, FAULTS_REPARTITION_RATE, HORIZON_S, seed));
+
+    let mut jobs = Vec::new();
+    let mut arm = |label: &str,
+                   faults: &str,
+                   plane: ControlPlanePolicy,
+                   reuse: ReuseOpts,
+                   rate: f64,
+                   trace: &Arc<Trace>,
+                   jobs: &mut Vec<SweepJob>| {
+        let mut cfg = ClusterConfig::for_llm(SystemKind::PrefillShare, llm);
+        cfg.seed = seed;
+        cfg.reuse = reuse;
+        cfg.faults = parse_faults(faults).expect("experiment fault schedule");
+        cfg.control_plane = plane;
+        cfg.slo_ttft_ms = FAULTS_SLO_TTFT_MS;
+        if plane == ControlPlanePolicy::Repartition {
+            // Decode-bound operating point: batch cap 1 starves the decode
+            // tier so lending the flex prefill GPU pays for its migration.
+            cfg.max_decode_batch = 1;
+        }
+        jobs.push(base_job(label, wl.name, "rate", rate, cfg, trace.clone()));
+    };
+    arm("ps/clean", "", ControlPlanePolicy::Static, ReuseOpts::OFF, FAULTS_RATE, &base_trace, &mut jobs);
+    arm(
+        "ps/crash-prefill",
+        "crash:p1@10",
+        ControlPlanePolicy::Static,
+        ReuseOpts::OFF,
+        FAULTS_RATE,
+        &base_trace,
+        &mut jobs,
+    );
+    arm(
+        "ps/crash-decode",
+        "crash:d0@15",
+        ControlPlanePolicy::Static,
+        ReuseOpts::DELTA,
+        FAULTS_RATE,
+        &base_trace,
+        &mut jobs,
+    );
+    arm(
+        "ps/link-degrade",
+        "link:l0@5-60",
+        ControlPlanePolicy::Static,
+        ReuseOpts::OFF,
+        FAULTS_RATE,
+        &base_trace,
+        &mut jobs,
+    );
+    arm(
+        "ps/straggler",
+        "straggler:d1@5-60x2.5",
+        ControlPlanePolicy::Static,
+        ReuseOpts::OFF,
+        FAULTS_RATE,
+        &base_trace,
+        &mut jobs,
+    );
+    arm(
+        "ps/static",
+        "",
+        ControlPlanePolicy::Static,
+        ReuseOpts::OFF,
+        FAULTS_OVERLOAD_RATE,
+        &overload_trace,
+        &mut jobs,
+    );
+    arm(
+        "ps/slo-shed",
+        "",
+        ControlPlanePolicy::SloShed,
+        ReuseOpts::OFF,
+        FAULTS_OVERLOAD_RATE,
+        &overload_trace,
+        &mut jobs,
+    );
+    arm(
+        "ps/repartition",
+        "",
+        ControlPlanePolicy::Repartition,
+        ReuseOpts::OFF,
+        FAULTS_REPARTITION_RATE,
+        &repart_trace,
+        &mut jobs,
+    );
+    run_sweep(&jobs, threads)
+}
+
+/// CLI/bench wrapper (`bench-serving --experiment faults`, emitted to
+/// `BENCH_faults.json` by CI).  Asserts the failure-injection acceptance
+/// shape: fault channels are zero without faults (goodput == throughput
+/// exactly), every fault arm reports a recovery time and goodput under
+/// failure, a decode crash loses KV while every session still completes,
+/// and at the pinned overload point `slo-shed` sheds (while `static`
+/// does not) and strictly improves p95 TTFT over `static`.
+pub fn faults_experiment(seed: u64, threads: usize) -> Vec<Row> {
+    let rows = faults_sweep(LLAMA8B, seed, threads);
+    let find = |sys: &str| rows.iter().find(|r| r.system == sys).expect("sweep row");
+
+    let clean = find("ps/clean");
+    assert_eq!(clean.result.lost_tokens, 0, "clean run must lose nothing");
+    assert_eq!(clean.result.shed_requests, 0, "static plane never sheds");
+    assert_eq!(clean.result.recovery_mean_s, 0.0, "no faults, no recoveries");
+    assert_eq!(
+        clean.result.goodput_tok_s, clean.result.throughput_tok_s,
+        "without faults, goodput and throughput are the same number"
+    );
+
+    let crash_p = find("ps/crash-prefill");
+    assert_eq!(
+        crash_p.result.lost_tokens, 0,
+        "prefill crashes re-route jobs; only decode crashes lose KV"
+    );
+    assert!(crash_p.result.recovery_mean_s > 0.0, "torn prefill calls must recover");
+    assert_eq!(crash_p.result.sessions_completed, clean.result.sessions_completed);
+
+    let crash_d = find("ps/crash-decode");
+    assert!(crash_d.result.lost_tokens > 0, "a decode crash destroys resident KV");
+    assert!(crash_d.result.recovery_mean_s > 0.0, "torn decode calls must recover");
+    assert!(
+        crash_d.result.goodput_tok_s <= crash_d.result.throughput_tok_s,
+        "goodput discounts the crash-wasted generation"
+    );
+    assert_eq!(
+        crash_d.result.sessions_completed, clean.result.sessions_completed,
+        "every session still completes after the crash (reissued calls)"
+    );
+
+    for sys in ["ps/link-degrade", "ps/straggler"] {
+        let r = find(sys);
+        assert_eq!(r.result.lost_tokens, 0, "{sys} slows work without destroying it");
+        assert_eq!(r.result.sessions_completed, clean.result.sessions_completed);
+        assert!(
+            r.result.mean_session_latency > clean.result.mean_session_latency,
+            "{sys} must cost latency over the clean run"
+        );
+    }
+
+    let stat = find("ps/static");
+    let shed = find("ps/slo-shed");
+    assert_eq!(stat.result.shed_requests, 0, "static admits everything");
+    assert!(shed.result.shed_requests > 0, "slo-shed must shed under overload");
+    assert!(
+        shed.result.ttft_p95 < stat.result.ttft_p95,
+        "slo-shed must strictly improve p95 TTFT over static at rate {FAULTS_OVERLOAD_RATE} \
+         ({} vs {})",
+        shed.result.ttft_p95,
+        stat.result.ttft_p95
+    );
+
+    let repart = find("ps/repartition");
+    assert!(
+        repart.result.repartition_events >= 1,
+        "decode pressure must flip the flex GPU at least once"
+    );
+    assert_eq!(repart.result.lost_tokens, 0, "repartition drains, it does not crash");
+    assert!(repart.result.sessions_completed > 0);
+    rows
+}
+
+// ---------------------------------------------------------------------------
 // simscale: the simulator's own scaling benchmark
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,462 @@
+//! Deterministic failure injection + control-plane policy selection.
+//!
+//! The `--faults` flag carries a *schedule*: a comma-separated list of
+//! fault specs, each `kind:target@start[-end][xfactor]`:
+//!
+//! * `crash:p1@30` — prefill worker 1 crashes at t=30s (its radix cache
+//!   and queued jobs are lost; jobs re-route to surviving workers) and
+//!   recovers cold after `--fault-recovery-s`;
+//! * `crash:d0@45` — decode worker 0 crashes at t=45s (residency ledger
+//!   and in-flight batch lost; torn calls re-issue at recovery);
+//! * `link:l2@10-25x8` — decode worker 2's handoff link runs 8× slower
+//!   for t∈[10,25)s;
+//! * `straggler:d3@15-60x2` — decode worker 3 computes 2× slower for
+//!   t∈[15,60)s (`straggler:p0@...` slows a prefill worker).
+//!
+//! `--faults random[:K]` resolves to K concrete specs drawn from
+//! `--faults-seed` via [`sample_random`] — the resolution happens at
+//! parse time, so the simulator only ever sees explicit schedules and
+//! the same seed always yields a byte-identical schedule (pinned by the
+//! `golden_faults.json` fixture).  Everything here is pure over
+//! [`Rng`]; the independent Python port mirrors the draw sequence
+//! exactly.
+
+use crate::simtime::SimTime;
+use crate::util::rng::Rng;
+
+/// Combined slowdown multiplier of every `(start, end, factor)` window
+/// covering `now` (half-open `[start, end)`), or `None` when no window
+/// does.  The `None` path lets callers keep the no-fault arithmetic
+/// byte-identical to the pre-fault simulator: the factor multiplies the
+/// *float* cost before [`secs`](crate::simtime::secs) rounds, and is
+/// simply absent outside every window.
+pub(crate) fn slow_factor(windows: &[(SimTime, SimTime, f64)], now: SimTime) -> Option<f64> {
+    let mut f = None;
+    for &(s, e, m) in windows {
+        if now >= s && now < e {
+            f = Some(f.unwrap_or(1.0) * m);
+        }
+    }
+    f
+}
+
+/// Default bandwidth multiplier for `link:` specs without `x`.
+pub const DEFAULT_LINK_FACTOR: f64 = 4.0;
+/// Default compute-slowdown multiplier for `straggler:` specs without `x`.
+pub const DEFAULT_STRAGGLER_FACTOR: f64 = 2.0;
+/// Default `--fault-recovery-s`: crashed workers revive (cold) this many
+/// seconds after the crash.
+pub const DEFAULT_RECOVERY_S: f64 = 10.0;
+/// Default `--slo-ttft-ms` for the `slo-shed` control plane.
+pub const DEFAULT_SLO_TTFT_MS: f64 = 500.0;
+/// Default K for `--faults random` without an explicit count.
+pub const DEFAULT_RANDOM_FAULTS: usize = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Worker dies: all its KV state is lost, it revives cold after the
+    /// recovery window.
+    Crash,
+    /// A handoff link's transfers run `factor`× slower inside the window.
+    LinkDegrade,
+    /// A GPU computes `factor`× slower inside the window.
+    Straggler,
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::LinkDegrade => "link",
+            FaultKind::Straggler => "straggler",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// Prefill worker index (`p<N>`).
+    Prefill(usize),
+    /// Decode worker index (`d<N>`).
+    Decode(usize),
+    /// Decode worker `N`'s handoff link (`l<N>`).
+    Link(usize),
+}
+
+impl FaultTarget {
+    pub fn label(&self) -> String {
+        match self {
+            FaultTarget::Prefill(i) => format!("p{i}"),
+            FaultTarget::Decode(i) => format!("d{i}"),
+            FaultTarget::Link(i) => format!("l{i}"),
+        }
+    }
+}
+
+/// One scheduled fault.  Crashes have no `end_s` (recovery is governed by
+/// `--fault-recovery-s`) and a factor of 1; windowed kinds carry their
+/// multiplier and an optional end (open windows run to the end of the
+/// trace).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub target: FaultTarget,
+    pub start_s: f64,
+    pub end_s: Option<f64>,
+    pub factor: f64,
+}
+
+impl FaultSpec {
+    /// The spec back in `--faults` grammar (diagnostics + fixture pins).
+    pub fn label(&self) -> String {
+        let mut s = format!("{}:{}@{}", self.kind.label(), self.target.label(), self.start_s);
+        if let Some(end) = self.end_s {
+            s.push_str(&format!("-{end}"));
+        }
+        if self.kind != FaultKind::Crash {
+            s.push_str(&format!("x{}", self.factor));
+        }
+        s
+    }
+}
+
+fn parse_target(s: &str) -> Result<FaultTarget, String> {
+    let (tier, idx) = s.split_at(1);
+    let idx: usize = idx.parse().map_err(|_| format!("bad fault target `{s}`"))?;
+    match tier {
+        "p" => Ok(FaultTarget::Prefill(idx)),
+        "d" => Ok(FaultTarget::Decode(idx)),
+        "l" => Ok(FaultTarget::Link(idx)),
+        _ => Err(format!("bad fault target `{s}` (want p<N>, d<N> or l<N>)")),
+    }
+}
+
+fn parse_one(item: &str) -> Result<FaultSpec, String> {
+    let (kind_s, rest) = item
+        .split_once(':')
+        .ok_or_else(|| format!("bad fault spec `{item}` (want kind:target@start[-end][xfactor])"))?;
+    let kind = match kind_s {
+        "crash" => FaultKind::Crash,
+        "link" => FaultKind::LinkDegrade,
+        "straggler" => FaultKind::Straggler,
+        _ => return Err(format!("unknown fault kind `{kind_s}` (crash|link|straggler)")),
+    };
+    let (target_s, when) = rest
+        .split_once('@')
+        .ok_or_else(|| format!("fault spec `{item}` is missing `@start`"))?;
+    let target = parse_target(target_s)?;
+
+    let (window, factor_s) = match when.split_once('x') {
+        Some((w, f)) => (w, Some(f)),
+        None => (when, None),
+    };
+    let (start_s, end_s) = match window.split_once('-') {
+        Some((a, b)) => {
+            let start: f64 = a.parse().map_err(|_| format!("bad fault start in `{item}`"))?;
+            let end: f64 = b.parse().map_err(|_| format!("bad fault end in `{item}`"))?;
+            (start, Some(end))
+        }
+        None => (window.parse().map_err(|_| format!("bad fault start in `{item}`"))?, None),
+    };
+    let factor = match factor_s {
+        Some(f) => f.parse().map_err(|_| format!("bad fault factor in `{item}`"))?,
+        None => match kind {
+            FaultKind::Crash => 1.0,
+            FaultKind::LinkDegrade => DEFAULT_LINK_FACTOR,
+            FaultKind::Straggler => DEFAULT_STRAGGLER_FACTOR,
+        },
+    };
+
+    if kind == FaultKind::Crash && (end_s.is_some() || factor_s.is_some()) {
+        return Err(format!(
+            "crash spec `{item}` takes no window end or factor (recovery is --fault-recovery-s)"
+        ));
+    }
+    Ok(FaultSpec { kind, target, start_s, end_s, factor })
+}
+
+/// Parse a `--faults` schedule (the explicit, non-random grammar).
+pub fn parse_faults(spec: &str) -> Result<Vec<FaultSpec>, String> {
+    spec.split(',')
+        .filter(|s| !s.is_empty())
+        .map(parse_one)
+        .collect()
+}
+
+/// Resolve `--faults random[:K]` into K concrete specs.  Pure over the
+/// seed: the same `(k, n_prefill, n_decode, duration_s, seed)` always
+/// yields the identical schedule — the Python port mirrors every draw.
+pub fn sample_random(
+    k: usize,
+    n_prefill: usize,
+    n_decode: usize,
+    duration_s: f64,
+    seed: u64,
+) -> Vec<FaultSpec> {
+    let mut rng = Rng::new(seed ^ 0x00FA_075E);
+    let pick = |r: f64, n: usize| ((r * n as f64) as usize).min(n.saturating_sub(1));
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        let kind = (rng.f64() * 3.0) as usize;
+        match kind {
+            0 => {
+                // Crash — never a prefill worker when the pool has only
+                // one (the cluster must keep a prefill path alive).
+                let side = rng.f64();
+                let t = rng.f64();
+                let target = if n_prefill >= 2 && side < 0.5 {
+                    FaultTarget::Prefill(pick(t, n_prefill))
+                } else {
+                    FaultTarget::Decode(pick(t, n_decode))
+                };
+                let start_s = 1.0 + rng.f64() * (duration_s * 0.5);
+                out.push(FaultSpec {
+                    kind: FaultKind::Crash,
+                    target,
+                    start_s,
+                    end_s: None,
+                    factor: 1.0,
+                });
+            }
+            1 => {
+                let target = FaultTarget::Link(pick(rng.f64(), n_decode));
+                let start_s = 1.0 + rng.f64() * (duration_s * 0.5);
+                let len = duration_s * (0.1 + 0.2 * rng.f64());
+                let factor = 2.0 + 6.0 * rng.f64();
+                out.push(FaultSpec {
+                    kind: FaultKind::LinkDegrade,
+                    target,
+                    start_s,
+                    end_s: Some(start_s + len),
+                    factor,
+                });
+            }
+            _ => {
+                let side = rng.f64();
+                let t = rng.f64();
+                let target = if side < 0.5 {
+                    FaultTarget::Prefill(pick(t, n_prefill))
+                } else {
+                    FaultTarget::Decode(pick(t, n_decode))
+                };
+                let start_s = 1.0 + rng.f64() * (duration_s * 0.5);
+                let len = duration_s * (0.1 + 0.2 * rng.f64());
+                let factor = 1.5 + 2.5 * rng.f64();
+                out.push(FaultSpec {
+                    kind: FaultKind::Straggler,
+                    target,
+                    start_s,
+                    end_s: Some(start_s + len),
+                    factor,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Structural validation against the cluster topology; the simulator
+/// calls this at construction.
+pub fn validate(faults: &[FaultSpec], n_prefill: usize, n_decode: usize) -> Result<(), String> {
+    for f in faults {
+        let (tier, idx, n) = match f.target {
+            FaultTarget::Prefill(i) => ("prefill", i, n_prefill),
+            FaultTarget::Decode(i) => ("decode", i, n_decode),
+            FaultTarget::Link(i) => ("link", i, n_decode),
+        };
+        if idx >= n {
+            return Err(format!("{}: {tier} index {idx} out of range (n={n})", f.label()));
+        }
+        match f.kind {
+            FaultKind::Crash => {
+                if matches!(f.target, FaultTarget::Link(_)) {
+                    return Err(format!("{}: crash targets a worker, not a link", f.label()));
+                }
+                if f.end_s.is_some() {
+                    return Err(format!("{}: crash takes no window end", f.label()));
+                }
+            }
+            FaultKind::LinkDegrade => {
+                if !matches!(f.target, FaultTarget::Link(_)) {
+                    return Err(format!("{}: link degradation targets l<N>", f.label()));
+                }
+            }
+            FaultKind::Straggler => {
+                if matches!(f.target, FaultTarget::Link(_)) {
+                    return Err(format!("{}: straggler targets a worker, not a link", f.label()));
+                }
+            }
+        }
+        if f.start_s < 0.0 {
+            return Err(format!("{}: fault starts before t=0", f.label()));
+        }
+        if let Some(end) = f.end_s {
+            if end <= f.start_s {
+                return Err(format!("{}: empty fault window", f.label()));
+            }
+        }
+        if f.factor <= 0.0 {
+            return Err(format!("{}: factor must be positive", f.label()));
+        }
+    }
+    Ok(())
+}
+
+/// Control-plane admission/repartition policy (`--control-plane`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ControlPlanePolicy {
+    /// No control plane: admit everything, never repartition — byte
+    /// identical to the pre-control-plane proxy (the golden default).
+    #[default]
+    Static,
+    /// Shed new sessions while the rolling p95 TTFT breaches
+    /// `--slo-ttft-ms` (vLLM production-stack style SLO guard).
+    SloShed,
+    /// Move the flex GPU between the prefill and decode pools under
+    /// sustained queue imbalance, paying drain + KV-migration cost.
+    Repartition,
+}
+
+impl ControlPlanePolicy {
+    pub fn by_name(name: &str) -> Option<ControlPlanePolicy> {
+        match name {
+            "static" => Some(ControlPlanePolicy::Static),
+            "slo-shed" => Some(ControlPlanePolicy::SloShed),
+            "repartition" => Some(ControlPlanePolicy::Repartition),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ControlPlanePolicy::Static => "static",
+            ControlPlanePolicy::SloShed => "slo-shed",
+            ControlPlanePolicy::Repartition => "repartition",
+        }
+    }
+
+    pub fn all() -> [ControlPlanePolicy; 3] {
+        [ControlPlanePolicy::Static, ControlPlanePolicy::SloShed, ControlPlanePolicy::Repartition]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let fs = parse_faults("crash:p1@30,link:l0@10-20x8,straggler:d2@15-50x2").unwrap();
+        assert_eq!(fs.len(), 3);
+        assert_eq!(
+            fs[0],
+            FaultSpec {
+                kind: FaultKind::Crash,
+                target: FaultTarget::Prefill(1),
+                start_s: 30.0,
+                end_s: None,
+                factor: 1.0,
+            }
+        );
+        assert_eq!(fs[1].kind, FaultKind::LinkDegrade);
+        assert_eq!(fs[1].target, FaultTarget::Link(0));
+        assert_eq!(fs[1].end_s, Some(20.0));
+        assert_eq!(fs[1].factor, 8.0);
+        assert_eq!(fs[2].kind, FaultKind::Straggler);
+        assert_eq!(fs[2].target, FaultTarget::Decode(2));
+        // Round-trip through the label.
+        for f in &fs {
+            assert_eq!(parse_faults(&f.label()).unwrap()[0], *f);
+        }
+    }
+
+    #[test]
+    fn default_factors_fill_in() {
+        let fs = parse_faults("link:l1@5-9,straggler:p0@3-4").unwrap();
+        assert_eq!(fs[0].factor, DEFAULT_LINK_FACTOR);
+        assert_eq!(fs[1].factor, DEFAULT_STRAGGLER_FACTOR);
+    }
+
+    #[test]
+    fn open_straggler_window_is_allowed() {
+        let fs = parse_faults("straggler:d0@12x3").unwrap();
+        assert_eq!(fs[0].end_s, None);
+        assert_eq!(fs[0].factor, 3.0);
+    }
+
+    #[test]
+    fn junk_specs_are_rejected() {
+        for junk in [
+            "crash",
+            "crash:p1",
+            "crash:x1@3",
+            "crash:p@3",
+            "crash:p1@3-9",
+            "crash:p1@3x2",
+            "meteor:p1@3",
+            "link:p1@3-4",
+            "link:l0@9-4",
+            "straggler:l0@3-4",
+            "straggler:d0@3-4x0",
+            "crash:p1@-3",
+        ] {
+            let parsed = parse_faults(junk);
+            let bad = match parsed {
+                Err(_) => true,
+                Ok(fs) => validate(&fs, 4, 4).is_err(),
+            };
+            assert!(bad, "`{junk}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn validate_checks_topology_bounds() {
+        let fs = parse_faults("crash:p5@3").unwrap();
+        assert!(validate(&fs, 4, 4).is_err());
+        assert!(validate(&fs, 6, 4).is_ok());
+        let fs = parse_faults("link:l4@3-5").unwrap();
+        assert!(validate(&fs, 4, 4).is_err());
+    }
+
+    #[test]
+    fn random_schedules_are_seed_deterministic() {
+        let a = sample_random(5, 4, 4, 60.0, 7);
+        let b = sample_random(5, 4, 4, 60.0, 7);
+        assert_eq!(a, b, "same seed must yield a byte-identical schedule");
+        assert_eq!(a.len(), 5);
+        validate(&a, 4, 4).expect("sampled schedules are always valid");
+        let c = sample_random(5, 4, 4, 60.0, 8);
+        assert_ne!(a, c, "different seeds should differ");
+        // Sampled faults stay inside the trace horizon's first half
+        // (start) and never produce empty windows.
+        for f in &a {
+            assert!(f.start_s >= 1.0 && f.start_s <= 31.0, "{f:?}");
+            if let Some(end) = f.end_s {
+                assert!(end > f.start_s);
+            }
+        }
+    }
+
+    #[test]
+    fn single_prefill_pools_never_lose_their_only_prefill_worker() {
+        for seed in 0..32 {
+            for f in sample_random(8, 1, 4, 60.0, seed) {
+                if f.kind == FaultKind::Crash {
+                    assert!(
+                        !matches!(f.target, FaultTarget::Prefill(_)),
+                        "seed {seed}: sampled a crash of the only prefill worker"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn control_plane_policies_roundtrip() {
+        for p in ControlPlanePolicy::all() {
+            assert_eq!(ControlPlanePolicy::by_name(p.label()), Some(p));
+        }
+        assert_eq!(ControlPlanePolicy::by_name("chaos"), None);
+        assert_eq!(ControlPlanePolicy::default(), ControlPlanePolicy::Static);
+    }
+}

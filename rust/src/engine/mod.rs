@@ -12,6 +12,7 @@
 
 pub mod config;
 pub mod experiments;
+pub mod faults;
 pub mod real;
 pub mod report;
 pub mod route;

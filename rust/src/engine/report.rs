@@ -178,6 +178,25 @@ pub fn rows_to_json(rows: &[Row]) -> Json {
                         "ctx_covered_tokens",
                         json::num(ledger.total().covered() as f64),
                     ),
+                    // Failure-injection / control-plane channel (all zero
+                    // on a clean run): the sixth conservation term plus
+                    // the recovery and goodput figures the `faults`
+                    // experiment asserts on.
+                    ("recovery_time_s", json::num(r.result.recovery_mean_s)),
+                    (
+                        "goodput_under_failure_tok_s",
+                        json::num(r.result.goodput_tok_s),
+                    ),
+                    ("shed_requests", json::num(r.result.shed_requests as f64)),
+                    ("lost_tokens", json::num(r.result.lost_tokens as f64)),
+                    (
+                        "lost_tokens_by_class",
+                        u64_arr(&r.result.metrics.lost_tokens_by_class),
+                    ),
+                    (
+                        "repartition_events",
+                        json::num(r.result.repartition_events as f64),
+                    ),
                 ])
             })
             .collect(),

@@ -44,6 +44,10 @@ impl PrefillScheduler for Fifo {
     fn queued_tokens(&self) -> usize {
         self.queue.iter().map(remaining_tokens).sum()
     }
+
+    fn drain(&mut self) -> Vec<PrefillJob> {
+        self.queue.drain(..).map(|e| e.job).collect()
+    }
 }
 
 #[cfg(test)]

@@ -123,6 +123,14 @@ pub trait PrefillScheduler {
     /// first dispatch (cache coverage is unknown until the pinning
     /// lookup), the true remainder for requeued chunked jobs.
     fn queued_tokens(&self) -> usize;
+
+    /// Crash/repartition teardown: empty the queue, returning every
+    /// queued job stripped back to its bare [`PrefillJob`] (match state
+    /// and pinned handles discarded — partially chunked jobs restart
+    /// from scratch when re-routed), in queue order.  Only sound when
+    /// the caller also discards the worker's radix cache: dropped
+    /// handles leave their prefix locked in the old cache.
+    fn drain(&mut self) -> Vec<PrefillJob>;
 }
 
 /// Remaining new-token estimate of one queued entry (see
@@ -162,6 +170,10 @@ impl RankedQueue {
 
     pub(crate) fn queued_tokens(&self) -> usize {
         self.queue.iter().map(remaining_tokens).sum()
+    }
+
+    pub(crate) fn drain_jobs(&mut self) -> Vec<PrefillJob> {
+        self.queue.drain(..).map(|e| e.job).collect()
     }
 
     /// Remove and dispatch the entry with the *lowest* score (first wins on

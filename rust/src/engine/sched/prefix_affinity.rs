@@ -54,6 +54,10 @@ impl PrefillScheduler for PrefixAffinity {
     fn queued_tokens(&self) -> usize {
         self.queue.queued_tokens()
     }
+
+    fn drain(&mut self) -> Vec<PrefillJob> {
+        self.queue.drain_jobs()
+    }
 }
 
 #[cfg(test)]

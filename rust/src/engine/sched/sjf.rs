@@ -55,6 +55,10 @@ impl PrefillScheduler for Sjf {
     fn queued_tokens(&self) -> usize {
         self.queue.queued_tokens()
     }
+
+    fn drain(&mut self) -> Vec<PrefillJob> {
+        self.queue.drain_jobs()
+    }
 }
 
 #[cfg(test)]

@@ -1,16 +1,20 @@
 //! The byte-conservation ledger: one shared statement of the identity
-//! `shipped + reused + reloaded + forked + relayed == context demand`,
-//! per prefill-compatibility class.
+//! `shipped + reused + reloaded + forked + relayed + lost == context
+//! demand`, per prefill-compatibility class.
 //!
 //! Every token of context KV a decode request needs is covered by
 //! exactly one supply channel: *shipped* over the handoff link,
 //! *reused* from the worker's retained GPU residency, *reloaded* from a
 //! host park, *forked* from a sibling group's copy-on-write shared
 //! blocks, or *relayed* from a parent's decoded output on another
-//! worker.  The identity used to be restated independently by the
-//! `--audit` hooks, the report, and two test suites — this module is
-//! the single source all of them now consume, so a new supply channel
-//! (like fork/relay) is added in one place and every checker sees it.
+//! worker — or, under `--faults`, written off as *lost* when a crash
+//! tears the call down (the torn call re-demands its context at
+//! re-issue, so demand is counted per sizing *and* per teardown and the
+//! identity stays exact at every event).  The identity used to be
+//! restated independently by the `--audit` hooks, the report, and two
+//! test suites — this module is the single source all of them now
+//! consume, so a new supply channel (like fork/relay, or the failure
+//! channel `lost`) is added in one place and every checker sees it.
 
 use crate::metrics::ServingMetrics;
 
@@ -28,12 +32,15 @@ pub struct ClassTerms {
     pub forked: u64,
     /// Tokens relayed from a parent's decoded output (`relayed_tokens`).
     pub relayed: u64,
+    /// Tokens written off to worker crashes (`lost_tokens`) — zero
+    /// without `--faults`.
+    pub lost: u64,
 }
 
 impl ClassTerms {
     /// Total context demand these channels cover.
     pub fn covered(&self) -> u64 {
-        self.shipped + self.reused + self.reloaded + self.forked + self.relayed
+        self.shipped + self.reused + self.reloaded + self.forked + self.relayed + self.lost
     }
 }
 
@@ -45,7 +52,7 @@ pub struct ConservationLedger {
 }
 
 impl ConservationLedger {
-    /// Snapshot the five supply channels from the per-class metric
+    /// Snapshot the six supply channels from the per-class metric
     /// families (families grow on demand, so lengths may differ — the
     /// ledger covers the longest).
     pub fn from_metrics(m: &ServingMetrics) -> ConservationLedger {
@@ -55,7 +62,8 @@ impl ConservationLedger {
             .max(m.decode_reuse_tokens_by_class.len())
             .max(m.host_reload_tokens_by_class.len())
             .max(m.forked_tokens_by_class.len())
-            .max(m.relayed_tokens_by_class.len());
+            .max(m.relayed_tokens_by_class.len())
+            .max(m.lost_tokens_by_class.len());
         let at = |v: &Vec<u64>, c: usize| v.get(c).copied().unwrap_or(0);
         ConservationLedger {
             by_class: (0..n)
@@ -65,6 +73,7 @@ impl ConservationLedger {
                     reloaded: at(&m.host_reload_tokens_by_class, c),
                     forked: at(&m.forked_tokens_by_class, c),
                     relayed: at(&m.relayed_tokens_by_class, c),
+                    lost: at(&m.lost_tokens_by_class, c),
                 })
                 .collect(),
         }
@@ -84,6 +93,7 @@ impl ConservationLedger {
             t.reloaded += c.reloaded;
             t.forked += c.forked;
             t.relayed += c.relayed;
+            t.lost += c.lost;
         }
         t
     }
@@ -115,12 +125,13 @@ impl ConservationLedger {
                 terms.covered(),
                 demand,
                 "conservation ({what}): class {c}: shipped {} + reused {} + reloaded {} \
-                 + forked {} + relayed {} != context demand {demand}",
+                 + forked {} + relayed {} + lost {} != context demand {demand}",
                 terms.shipped,
                 terms.reused,
                 terms.reloaded,
                 terms.forked,
                 terms.relayed,
+                terms.lost,
             );
         }
     }
@@ -144,7 +155,7 @@ mod tests {
     }
 
     #[test]
-    fn ledger_reads_all_five_channels_per_class() {
+    fn ledger_reads_all_six_channels_per_class() {
         let m = metrics_with(&[(0, 100, 20, 5, 3, 2), (2, 50, 0, 0, 10, 0)]);
         let l = ConservationLedger::from_metrics(&m);
         assert_eq!(l.by_class.len(), 3);
@@ -154,7 +165,20 @@ mod tests {
         assert_eq!(l.class(9), ClassTerms::default(), "out-of-range class is zero");
         let t = l.total();
         assert_eq!((t.shipped, t.reused, t.reloaded, t.forked, t.relayed), (150, 20, 5, 13, 2));
+        assert_eq!(t.lost, 0, "no faults, nothing lost");
         assert_eq!(t.covered(), 190);
+    }
+
+    #[test]
+    fn lost_channel_enters_the_identity() {
+        let mut m = metrics_with(&[(0, 100, 20, 5, 3, 2)]);
+        bump_class(&mut m.lost_tokens_by_class, 1, 77);
+        let l = ConservationLedger::from_metrics(&m);
+        assert_eq!(l.by_class.len(), 2, "the lost family alone grows the ledger");
+        assert_eq!(l.class(1), ClassTerms { lost: 77, ..Default::default() });
+        assert_eq!(l.class(1).covered(), 77);
+        assert_eq!(l.total().lost, 77);
+        l.assert_covers(&[130, 77], "test");
     }
 
     #[test]

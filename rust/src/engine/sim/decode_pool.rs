@@ -105,6 +105,19 @@ pub(crate) struct DecodeWorker {
     /// Requests whose stage-in transfer is in flight (space reserved).
     staging_in: usize,
     stepping: bool,
+    /// Down after a `crash:dN` fault; revives cold at recovery.
+    pub alive: bool,
+    /// Crash generation.  Every event this worker schedules is stamped
+    /// with the epoch at schedule time; a crash bumps it, so events from
+    /// the pre-crash life are recognized as stale at pop (the calendar
+    /// queue has no cancellation) and torn down instead of applied.
+    pub epoch: u64,
+    /// Straggler windows `(start, end, factor)` — decode steps run
+    /// `factor`× slower while `now` falls inside one.
+    slow: Vec<(SimTime, SimTime, f64)>,
+    /// Repartition assist: from `SimTime` on, a lent prefill GPU speeds
+    /// this worker's decode steps by `factor` (< 1).  Cleared at reclaim.
+    assist: Option<(SimTime, f64)>,
     /// In-flight host<->GPU KV copies.  Each one contends with decode
     /// compute (vLLM App. B.2: staging "increases CPU–GPU data movement,
     /// which can increase latency and reduce throughput"), so steps are
@@ -139,6 +152,10 @@ impl DecodePool {
                 pending: VecDeque::new(),
                 staging_in: 0,
                 stepping: false,
+                alive: true,
+                epoch: 0,
+                slow: Vec::new(),
+                assist: None,
                 io_inflight: 0,
                 resident_tokens: 0,
                 residency: ResidencyLedger::new(),
@@ -220,6 +237,10 @@ impl DecodePool {
         metrics: &mut ServingMetrics,
     ) {
         let kv_bytes_per_token = cfg.cost.llm.kv_bytes_per_token();
+        if !self.workers[w].alive {
+            return;
+        }
+        let epoch = self.workers[w].epoch;
         loop {
             // Reclaim retained-but-inactive KV (LRU) until the front fits,
             // so the admission policy decides over post-eviction occupancy
@@ -283,7 +304,7 @@ impl DecodePool {
                         let dur_us = secs(cfg.cost.staging_secs(tokens));
                         let bytes = (tokens as f64 * kv_bytes_per_token) as u64;
                         let at = net.stage(w, q.now(), dur_us, bytes);
-                        q.schedule(at, Ev::StageOutDone { worker: w });
+                        q.schedule(at, Ev::StageOutDone { worker: w, epoch });
                     }
                     return;
                 }
@@ -330,7 +351,7 @@ impl DecodePool {
                         req.was_deferred = false;
                         req.host_tokens = 0;
                         let at = net.stage(w, q.now(), dur_us, bytes);
-                        q.schedule(at, Ev::StageInDone { req, worker: w });
+                        q.schedule(at, Ev::StageInDone { req, worker: w, epoch });
                         return; // one IO at a time
                     } else {
                         self.workers[w].active.push(req);
@@ -369,7 +390,8 @@ impl DecodePool {
             let dur_us = secs(cfg.cost.staging_secs(tokens));
             let bytes = (tokens as f64 * cfg.cost.llm.kv_bytes_per_token()) as u64;
             let at = net.stage(w, q.now(), dur_us, bytes);
-            q.schedule(at, Ev::StageOutDone { worker: w });
+            let epoch = self.workers[w].epoch;
+            q.schedule(at, Ev::StageOutDone { worker: w, epoch });
         } else {
             self.workers[w].residency.discard(sid);
         }
@@ -390,15 +412,87 @@ impl DecodePool {
     /// Kick off a decode iteration if the worker can step.
     pub fn maybe_step(&mut self, w: usize, cfg: &ClusterConfig, q: &mut EventQueue<Ev>) {
         let dw = &mut self.workers[w];
-        if dw.stepping || dw.io_busy() || dw.active.is_empty() {
+        if dw.stepping || dw.io_busy() || dw.active.is_empty() || !dw.alive {
             return;
         }
         let batch = dw.active.len();
         let kv_total: usize = dw.active.iter().map(|r| r.ctx_len + r.generated).sum();
-        let dur_us = secs(cfg.cost.decode_step_secs(batch, kv_total));
+        let mut cost_s = cfg.cost.decode_step_secs(batch, kv_total);
+        if let Some(f) = crate::engine::faults::slow_factor(&dw.slow, q.now()) {
+            cost_s *= f;
+        }
+        if let Some((from, f)) = dw.assist {
+            if q.now() >= from {
+                cost_s *= f;
+            }
+        }
+        let dur_us = secs(cost_s);
         dw.busy_micros += dur_us;
         dw.stepping = true;
-        q.schedule_in(dur_us, Ev::DecodeStepDone { worker: w });
+        q.schedule_in(dur_us, Ev::DecodeStepDone { worker: w, epoch: dw.epoch });
+    }
+
+    /// Install a straggler window on worker `w` (`--faults straggler:dN`).
+    pub fn add_slow_window(&mut self, w: usize, start: SimTime, end: SimTime, factor: f64) {
+        self.workers[w].slow.push((start, end, factor));
+    }
+
+    /// A lent prefill GPU assists worker `w`'s decode steps (factor < 1)
+    /// once its KV migration completes at `from`.
+    pub fn set_assist(&mut self, w: usize, from: SimTime, factor: f64) {
+        self.workers[w].assist = Some((from, factor));
+    }
+
+    pub fn clear_assist(&mut self, w: usize) {
+        self.workers[w].assist = None;
+    }
+
+    /// Crash worker `w`: every request it held — active batch first (batch
+    /// order), then the pending queue — is returned torn for the caller's
+    /// `lost` accounting; the residency ledger is wiped pins-and-all; the
+    /// epoch bump invalidates every event the dead life scheduled
+    /// (`StageInDone` transfers still in flight die at their stale pop,
+    /// which is why `staging_in`/`io_inflight` reset to zero here).
+    pub fn crash(&mut self, w: usize) -> Vec<DecodeReq> {
+        let dw = &mut self.workers[w];
+        dw.alive = false;
+        dw.epoch += 1;
+        let mut torn: Vec<DecodeReq> = dw.active.drain(..).collect();
+        torn.extend(dw.pending.drain(..));
+        dw.staging_in = 0;
+        dw.stepping = false;
+        dw.io_inflight = 0;
+        dw.resident_tokens = 0;
+        dw.residency.crash_clear();
+        torn
+    }
+
+    /// Revive worker `w` cold (empty batch, empty ledger).
+    pub fn revive(&mut self, w: usize) {
+        debug_assert!(!self.workers[w].alive, "reviving a live worker");
+        self.workers[w].alive = true;
+    }
+
+    pub fn is_alive(&self, w: usize) -> bool {
+        self.workers[w].alive
+    }
+
+    /// Admission backlog of worker `w` (pending handoffs not yet in the
+    /// batch) — the repartition plane's per-worker pressure signal.
+    pub fn backlog_of(&self, w: usize) -> usize {
+        self.workers[w].pending.len()
+    }
+
+    /// Total admission backlog over alive workers — the repartition
+    /// plane's decode-pressure signal.
+    pub fn backlog_jobs(&self) -> usize {
+        self.workers.iter().filter(|d| d.alive).map(|d| d.pending.len()).sum()
+    }
+
+    /// Worker `w`'s active-batch KV footprint (what a repartition
+    /// migration would move).
+    pub fn resident_tokens(&self, w: usize) -> usize {
+        self.workers[w].resident_tokens
     }
 
     /// One decode iteration completed: every active request generated one
@@ -427,6 +521,11 @@ impl DecodePool {
                 metrics.ttft.record(t);
                 record_position(&mut metrics.ttft_by_position, metrics.mode, r.call_idx, t);
                 record_position(&mut metrics.ttft_by_depth, metrics.mode, r.depth, t);
+                if metrics.track_ttft_window {
+                    // Buffered for the control plane; the simulator drains
+                    // this after every step (`slo-shed`'s rolling p95).
+                    metrics.recent_ttfts.push(t);
+                }
             }
             if r.generated >= r.out_tokens {
                 let done = dw.active.swap_remove(i);

@@ -53,9 +53,27 @@ struct Link {
     /// rather than clones into `SimResult`, and a cfg/feature gate would
     /// silently break the conservation tests under `--release`.
     log: Vec<(SimTime, SimTime)>,
+    /// `--faults link:` degradation windows `(start, end, factor)`:
+    /// transfers *requested* inside a window run `factor`× slower.
+    /// Empty without a fault schedule.
+    slow: Vec<(SimTime, SimTime, f64)>,
 }
 
 impl Link {
+    /// Degradation-adjusted duration: each window covering `now` (the
+    /// request time — the whole copy runs at the bandwidth it started
+    /// under) multiplies the duration, rounded half away from zero like
+    /// `simtime::secs` (the Python port mirrors the rounding).
+    fn degraded(&self, now: SimTime, dur_us: SimTime) -> SimTime {
+        let mut dur = dur_us;
+        for &(s, e, f) in &self.slow {
+            if now >= s && now < e {
+                dur = (dur as f64 * f).round() as SimTime;
+            }
+        }
+        dur
+    }
+
     fn transfer(&mut self, contended: bool, now: SimTime, dur_us: SimTime, bytes: u64) -> SimTime {
         let start = if contended { now.max(self.free_at) } else { now };
         let end = start + dur_us;
@@ -115,7 +133,30 @@ impl Interconnect {
         let link = &mut self.handoff_links[w];
         link.forked_bytes += forked_bytes;
         link.relayed_bytes += relayed_bytes;
+        let dur_us = link.degraded(now, dur_us);
         link.transfer(self.contended, now, dur_us, bytes)
+    }
+
+    /// Install a `link:` degradation window on worker `w`'s handoff link
+    /// (staging links are deliberately unaffected — parks/reloads ride
+    /// the host↔GPU fabric, not the inter-GPU interconnect).
+    pub(crate) fn degrade_handoff_link(
+        &mut self,
+        w: usize,
+        start_us: SimTime,
+        end_us: SimTime,
+        factor: f64,
+    ) {
+        self.handoff_links[w].slow.push((start_us, end_us, factor));
+    }
+
+    /// Occupy worker `w`'s handoff link for a repartition KV migration:
+    /// the copy takes link time (busy span, FIFO-serialized under
+    /// contention) but carries no handoff payload bytes, so the
+    /// shipped-byte conservation identity (`Σ link bytes == handoff
+    /// tokens × kv_bytes_per_token`) is untouched.
+    pub(crate) fn occupy(&mut self, w: usize, now: SimTime, dur_us: SimTime) -> SimTime {
+        self.handoff_links[w].transfer(self.contended, now, dur_us, 0)
     }
 
     /// Queue a host↔GPU staging copy on worker `w`'s staging link.
@@ -195,6 +236,34 @@ mod tests {
         assert_eq!(s.handoff[0].forked_bytes, 40);
         assert_eq!(s.handoff[0].relayed_bytes, 60);
         assert_eq!(s.staging[0].forked_bytes, 0);
+    }
+
+    #[test]
+    fn degradation_windows_slow_only_covered_requests() {
+        let mut net = Interconnect::new(1, false);
+        net.degrade_handoff_link(0, 100, 200, 4.0);
+        assert_eq!(net.handoff(0, 50, 10, 1, 0, 0), 60, "before the window: full speed");
+        assert_eq!(net.handoff(0, 100, 10, 1, 0, 0), 140, "inside: 4x slower");
+        assert_eq!(net.handoff(0, 199, 10, 1, 0, 0), 239, "window end is exclusive of 200");
+        assert_eq!(net.handoff(0, 200, 10, 1, 0, 0), 210, "after: full speed");
+        // Staging is never degraded.
+        assert_eq!(net.stage(0, 150, 10, 1), 160);
+        let s = net.into_stats();
+        assert_eq!(s.handoff[0].bytes, 4, "degradation never changes payload bytes");
+    }
+
+    #[test]
+    fn occupy_takes_link_time_without_bytes() {
+        let mut net = Interconnect::new(1, true);
+        assert_eq!(net.handoff(0, 0, 100, 7, 0, 0), 100);
+        assert_eq!(net.occupy(0, 50, 30), 130, "migration queues FIFO behind the handoff");
+        assert_eq!(net.handoff(0, 60, 10, 3, 0, 0), 140, "later handoffs queue behind it");
+        let s = net.into_stats();
+        assert_eq!(s.handoff[0].bytes, 10, "occupancy adds no payload bytes");
+        assert_eq!(s.handoff[0].busy_micros, 140);
+        for pair in s.handoff[0].log.windows(2) {
+            assert!(pair[1].0 >= pair[0].1, "overlap: {pair:?}");
+        }
     }
 
     #[test]

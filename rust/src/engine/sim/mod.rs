@@ -73,11 +73,13 @@ pub use interconnect::{Interconnect, InterconnectStats, LinkStats};
 use decode_pool::{DecodePool, DecodeReq};
 use fork::ForkRegistry;
 use prefill_pool::PrefillPool;
-use proxy::Proxy;
+use proxy::{PlaneAction, PlaneView, Proxy, ASSIST_FACTOR};
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::engine::config::{ClusterConfig, SystemKind};
+use crate::engine::faults::FaultTarget;
 use crate::engine::sched::PrefillJob;
 use crate::metrics::{bump_class, record_position, ServingMetrics};
 use crate::simtime::{secs, to_secs, EventQueue, SimTime};
@@ -87,15 +89,34 @@ use crate::workload::{simtokens, Trace};
 // Events
 // ---------------------------------------------------------------------------
 
+/// Worker-addressed events carry the target worker's crash `epoch` as
+/// stamped at schedule time.  The event queue has no cancellation, so a
+/// crash cannot retract the dead worker's in-flight events; instead the
+/// crash bumps the worker's epoch and a mismatched event is recognized
+/// as *stale* at pop — torn down (when it carries a request) or ignored
+/// (when it only marks worker progress).  With no faults configured,
+/// every epoch stays 0 and the guard never fires.
 #[derive(Debug)]
 pub(crate) enum Ev {
     SessionArrive { sid: usize },
     /// One prefill work unit (whole job, or one chunk of it) finished.
-    PrefillDone { worker: usize },
-    HandoffDone { req: DecodeReq, worker: usize },
-    StageInDone { req: DecodeReq, worker: usize },
-    StageOutDone { worker: usize },
-    DecodeStepDone { worker: usize },
+    PrefillDone { worker: usize, epoch: u64 },
+    HandoffDone { req: DecodeReq, worker: usize, epoch: u64 },
+    StageInDone { req: DecodeReq, worker: usize, epoch: u64 },
+    StageOutDone { worker: usize, epoch: u64 },
+    DecodeStepDone { worker: usize, epoch: u64 },
+    /// A scheduled `crash:` fault fires (index into `cfg.faults`; link
+    /// and straggler windows are passive — installed at construction,
+    /// they never appear in the event stream).
+    Fault { idx: usize },
+    /// The crashed worker of `cfg.faults[idx]` revives cold.
+    Recover { idx: usize },
+    /// 1 Hz control-plane heartbeat (scheduled only when the active
+    /// plane wants ticks, so `static`/`slo-shed` runs stay tickless).
+    PlaneTick,
+    /// Flex-GPU reclaim migration finished: revive it as a prefill
+    /// worker.
+    FlexRevive { worker: usize },
 }
 
 // ---------------------------------------------------------------------------
@@ -174,6 +195,31 @@ pub struct Simulator {
     events_processed: u64,
     /// `Some` iff `cfg.audit`: per-event invariant checks, observation-only.
     audit: Option<Audit>,
+    /// Per-prefill-worker crash generation; `PrefillDone` events carry the
+    /// value current at schedule time and are ignored on mismatch.  Decode
+    /// epochs live on the workers themselves (`DecodeWorker::epoch`).
+    prefill_epoch: Vec<u64>,
+    /// Per-decode-worker torn calls `(sid, node)` awaiting the worker's
+    /// `Recover` to be re-issued as fresh prefill jobs.
+    reissue: Vec<BTreeSet<(usize, usize)>>,
+    /// Crashes whose torn calls have not all completed yet — recovery
+    /// time is the span from the crash until its torn set drains (or
+    /// until `Recover`, for a crash that tore nothing).
+    open_crashes: Vec<OpenCrash>,
+    recovery_times: Vec<f64>,
+    /// Repartition state: is the flex prefill GPU currently lent to the
+    /// decode tier, and to which decode worker.
+    flex_lent: bool,
+    flex_target: Option<usize>,
+}
+
+/// One unresolved crash: fault index, crash time, and the torn calls
+/// still outstanding.
+struct OpenCrash {
+    fault_idx: usize,
+    at: SimTime,
+    target: FaultTarget,
+    torn: BTreeSet<(usize, usize)>,
 }
 
 impl Simulator {
@@ -215,11 +261,40 @@ impl Simulator {
                 );
             }
         }
+        if let Err(e) = crate::engine::faults::validate(
+            &cfg.faults,
+            cfg.effective_prefill_workers(),
+            cfg.n_models,
+        ) {
+            panic!("invalid fault schedule: {e}");
+        }
         let proxy = Proxy::new(&cfg);
-        let prefill = PrefillPool::new(&cfg);
-        let decode = DecodePool::new(cfg.n_models);
+        let mut prefill = PrefillPool::new(&cfg);
+        let mut decode = DecodePool::new(cfg.n_models);
         let forks = ForkRegistry::new(cfg.decode_kv_tokens);
-        let net = Interconnect::new(cfg.n_models, cfg.link_contended);
+        let mut net = Interconnect::new(cfg.n_models, cfg.link_contended);
+        // Install passive fault windows (link degradation, stragglers) on
+        // the components they modulate; crashes become `Ev::Fault` events
+        // scheduled in `run()`.  With `--faults` empty none of this runs
+        // and every component is byte-identical to the pre-fault builds.
+        for f in &cfg.faults {
+            use crate::engine::faults::FaultKind;
+            let start = secs(f.start_s);
+            let end = f.end_s.map(secs).unwrap_or(SimTime::MAX);
+            match (f.kind, f.target) {
+                (FaultKind::Crash, _) => {}
+                (FaultKind::LinkDegrade, FaultTarget::Link(l)) => {
+                    net.degrade_handoff_link(l, start, end, f.factor);
+                }
+                (FaultKind::Straggler, FaultTarget::Prefill(p)) => {
+                    prefill.add_slow_window(p, start, end, f.factor);
+                }
+                (FaultKind::Straggler, FaultTarget::Decode(d)) => {
+                    decode.add_slow_window(d, start, end, f.factor);
+                }
+                _ => unreachable!("rejected by faults::validate"),
+            }
+        }
         let sys = trace.workload.sys_prompt_tokens;
         let mut sessions = Vec::with_capacity(trace.sessions.len());
         let mut nodes = Vec::with_capacity(trace.sessions.len());
@@ -244,8 +319,13 @@ impl Simulator {
             nodes.push(metas);
         }
         let q = if cfg.legacy_queue { EventQueue::legacy() } else { EventQueue::new() };
-        let metrics = ServingMetrics::with_mode(cfg.metrics);
+        let mut metrics = ServingMetrics::with_mode(cfg.metrics);
+        metrics.faults_injected = cfg.faults.len() as u64;
+        metrics.track_ttft_window =
+            cfg.control_plane == crate::engine::faults::ControlPlanePolicy::SloShed;
         let audit = if cfg.audit { Some(Audit::default()) } else { None };
+        let n_prefill = prefill.len();
+        let n_decode = decode.workers.len();
         Simulator {
             cfg,
             trace,
@@ -262,12 +342,26 @@ impl Simulator {
             first_arrival: SimTime::MAX,
             events_processed: 0,
             audit,
+            prefill_epoch: vec![0; n_prefill],
+            reissue: vec![BTreeSet::new(); n_decode],
+            open_crashes: Vec::new(),
+            recovery_times: Vec::new(),
+            flex_lent: false,
+            flex_target: None,
         }
     }
 
     pub fn run(mut self) -> SimResult {
         for sid in 0..self.trace.sessions.len() {
             self.q.schedule(self.trace.sessions[sid].arrival, Ev::SessionArrive { sid });
+        }
+        for (idx, f) in self.cfg.faults.iter().enumerate() {
+            if f.kind == crate::engine::faults::FaultKind::Crash {
+                self.q.schedule(secs(f.start_s), Ev::Fault { idx });
+            }
+        }
+        if self.proxy.plane_wants_ticks() {
+            self.q.schedule(secs(1.0), Ev::PlaneTick);
         }
         while let Some((_, ev)) = self.q.pop() {
             self.events_processed += 1;
@@ -279,11 +373,49 @@ impl Simulator {
     fn handle(&mut self, ev: Ev) {
         match ev {
             Ev::SessionArrive { sid } => self.on_arrival(sid),
-            Ev::PrefillDone { worker } => self.on_prefill_done(worker),
-            Ev::HandoffDone { req, worker } => self.on_handoff_done(req, worker),
-            Ev::StageInDone { req, worker } => self.on_stage_in_done(req, worker),
-            Ev::StageOutDone { worker } => self.on_stage_out_done(worker),
-            Ev::DecodeStepDone { worker } => self.on_decode_step_done(worker),
+            // Worker-progress events of a dead incarnation are simply
+            // dropped: the work they marked was captured (prefill) or
+            // reset (decode IO/step state) at crash time.
+            Ev::PrefillDone { worker, epoch } => {
+                if self.prefill_epoch[worker] == epoch {
+                    self.on_prefill_done(worker);
+                }
+            }
+            // Request-carrying events of a dead incarnation tear their
+            // request down — the KV in flight died with the worker.
+            Ev::HandoffDone { req, worker, epoch } => {
+                if self.decode.workers[worker].epoch == epoch {
+                    self.on_handoff_done(req, worker);
+                } else {
+                    self.teardown_req(req, worker);
+                }
+            }
+            Ev::StageInDone { req, worker, epoch } => {
+                if self.decode.workers[worker].epoch == epoch {
+                    self.on_stage_in_done(req, worker);
+                } else {
+                    self.teardown_req(req, worker);
+                }
+            }
+            Ev::StageOutDone { worker, epoch } => {
+                if self.decode.workers[worker].epoch == epoch {
+                    self.on_stage_out_done(worker);
+                }
+            }
+            Ev::DecodeStepDone { worker, epoch } => {
+                if self.decode.workers[worker].epoch == epoch {
+                    self.on_decode_step_done(worker);
+                }
+            }
+            Ev::Fault { idx } => self.on_fault(idx),
+            Ev::Recover { idx } => self.on_recover(idx),
+            Ev::PlaneTick => self.on_plane_tick(),
+            Ev::FlexRevive { worker } => {
+                if !self.prefill.is_alive(worker) {
+                    self.prefill.revive(worker);
+                    self.try_start_prefill(worker);
+                }
+            }
         }
     }
 
@@ -292,6 +424,12 @@ impl Simulator {
     fn on_arrival(&mut self, sid: usize) {
         self.metrics.sessions_arrived += 1;
         self.first_arrival = self.first_arrival.min(self.q.now());
+        if !self.proxy.plane_admit() {
+            // SLO guard: the session is turned away at the door and never
+            // enters the system (it still counts as arrived).
+            self.metrics.shed_requests += 1;
+            return;
+        }
         if self.proxy.on_arrival(sid) {
             self.start_session(sid);
         }
@@ -372,16 +510,57 @@ impl Simulator {
             issued_at: self.q.now(),
             key: self.context_key(sid, node),
         };
-        let w = match self.cfg.system {
+        let w = self.route_alive(&job);
+        self.prefill.enqueue(w, job);
+        self.try_start_prefill(w);
+    }
+
+    /// Route a prefill job, masking out dead workers: the policy picks
+    /// its worker as if the pool were whole, then the choice advances to
+    /// the first alive worker (wrapping).  With no faults every worker is
+    /// alive and the scan exits on the policy's own pick — byte-identical
+    /// to the pre-fault router (including its RNG draw sequence).
+    fn route_alive(&mut self, job: &PrefillJob) -> usize {
+        let w0 = match self.cfg.system {
             // Baseline: each model has its own dedicated prefill GPU.
             SystemKind::Baseline => job.model,
             SystemKind::PrefillShare => {
                 // Lazy snapshot: static policies (prefix-aware/round-robin/
                 // random) never read it, so it is never built for them.
                 let mut views = self.prefill.lazy_views(self.proxy.uses_load());
-                self.proxy.route(&job, &mut views)
+                self.proxy.route(job, &mut views)
             }
         };
+        let n = self.prefill.len();
+        for off in 0..n {
+            let w = (w0 + off) % n;
+            if self.prefill.is_alive(w) {
+                return w;
+            }
+        }
+        // Whole pool down: leave the job on the policy's pick — its queue
+        // drains when the worker revives.
+        w0
+    }
+
+    /// Re-issue a call torn by a decode-worker crash as a fresh prefill
+    /// job.  The call never completed, so the session's inflight/remaining
+    /// counters still carry it — only the job is rebuilt (restarting its
+    /// latency clock at `issued_at = now`; TTFT under failure measures
+    /// time since the *retry*, the wait behind the dead worker shows up
+    /// in `recovery_time` instead).
+    fn reissue_call(&mut self, sid: usize, node: usize) {
+        let script = &self.trace.sessions[sid];
+        let job = PrefillJob {
+            sid,
+            call_idx: node,
+            model: script.calls[node].model,
+            class: script.calls[node].prefill_class,
+            ctx_len: self.nodes[sid][node].ctx_len,
+            issued_at: self.q.now(),
+            key: self.context_key(sid, node),
+        };
+        let w = self.route_alive(&job);
         self.prefill.enqueue(w, job);
         self.try_start_prefill(w);
     }
@@ -427,7 +606,8 @@ impl Simulator {
 
     fn try_start_prefill(&mut self, w: usize) {
         if let Some(dur_us) = self.prefill.try_start(w, self.q.now(), &mut self.metrics) {
-            self.q.schedule_in(dur_us, Ev::PrefillDone { worker: w });
+            let epoch = self.prefill_epoch[w];
+            self.q.schedule_in(dur_us, Ev::PrefillDone { worker: w, epoch });
         }
     }
 
@@ -448,6 +628,38 @@ impl Simulator {
             let call = &self.trace.sessions[job.sid].calls[job.call_idx];
             let out_tokens = call.out_tokens;
             let dw = call.model; // decode worker hosting this task model
+            if !self.decode.is_alive(dw) {
+                // The target decode worker is down: the freshly computed
+                // KV has nowhere to land.  No handoff is sized; the whole
+                // context is lost (a balanced demand/lost pair keeps the
+                // conservation identity) and the call re-issues when the
+                // worker recovers.
+                let ctx = job.ctx_len as u64;
+                self.metrics.ctx_demand_tokens += ctx;
+                bump_class(&mut self.metrics.ctx_demand_tokens_by_class, job.class, ctx);
+                self.metrics.lost_tokens += ctx;
+                bump_class(&mut self.metrics.lost_tokens_by_class, job.class, ctx);
+                if let Some(a) = self.audit.as_mut() {
+                    bump_class(&mut a.demand_by_class, job.class, ctx);
+                }
+                // Consume this member's pending fork-sizing record and its
+                // block reference — the re-issued call will find no group
+                // and simply ship its context in full.
+                if let Some(p) = self.forks.take_pending(job.sid, job.call_idx) {
+                    self.forks.drop_ref(p.gid);
+                }
+                if let Some(oc) = self
+                    .open_crashes
+                    .iter_mut()
+                    .rev()
+                    .find(|oc| oc.target == FaultTarget::Decode(dw))
+                {
+                    oc.torn.insert((job.sid, job.call_idx));
+                }
+                self.reissue[dw].insert((job.sid, job.call_idx));
+                self.try_start_prefill(w);
+                return;
+            }
             let (sig, base) = if self.cfg.reuse.delta {
                 let script = &self.trace.sessions[job.sid];
                 (
@@ -562,6 +774,8 @@ impl Simulator {
             // cost no transfer time at all.
             let dur_us = secs(self.cfg.cost.handoff_secs(shipped + relayed));
             self.metrics.handoffs += 1;
+            self.metrics.ctx_demand_tokens += job.ctx_len as u64;
+            bump_class(&mut self.metrics.ctx_demand_tokens_by_class, job.class, job.ctx_len as u64);
             self.metrics.handoff_tokens += shipped as u64;
             bump_class(&mut self.metrics.handoff_tokens_by_class, job.class, shipped as u64);
             if reuse_tokens + host_tokens > 0 {
@@ -594,7 +808,8 @@ impl Simulator {
             let now = self.q.now();
             let at = self.net.handoff(dw, now, dur_us, bytes, forked_bytes, relayed_bytes);
             self.metrics.handoff_link_wait.record(to_secs(at - dur_us - now));
-            self.q.schedule(at, Ev::HandoffDone { req, worker: dw });
+            let epoch = self.decode.workers[dw].epoch;
+            self.q.schedule(at, Ev::HandoffDone { req, worker: dw, epoch });
         }
         self.try_start_prefill(w);
     }
@@ -714,14 +929,16 @@ impl Simulator {
         );
     }
 
-    fn on_handoff_done(&mut self, req: DecodeReq, worker: usize) {
+    fn on_handoff_done(&mut self, mut req: DecodeReq, worker: usize) {
         // The transfer has landed: release the relay source's eviction
         // shield and this member's reference on its fork group's shared
-        // blocks (the last member's drop frees them).
-        if let Some(src_w) = req.relay_src {
+        // blocks (the last member's drop frees them).  `take()` rather
+        // than read: a later crash-teardown of this request must not
+        // release either reference a second time.
+        if let Some(src_w) = req.relay_src.take() {
             self.decode.relay_unpin(src_w, req.sid);
         }
-        if let Some(gid) = req.fork_gid {
+        if let Some(gid) = req.fork_gid.take() {
             self.forks.drop_ref(gid);
         }
         self.decode.push_handoff(worker, req, self.q.now());
@@ -744,6 +961,16 @@ impl Simulator {
     fn on_decode_step_done(&mut self, w: usize) {
         let now = self.q.now();
         let finished = self.decode.advance_batch(w, now, &self.cfg, &mut self.metrics);
+        // Feed freshly recorded TTFTs to the control plane (`slo-shed`
+        // keeps a rolling window; the buffer stays empty otherwise).
+        if !self.metrics.recent_ttfts.is_empty() {
+            let mut tt = std::mem::take(&mut self.metrics.recent_ttfts);
+            for &t in &tt {
+                self.proxy.plane_record_ttft(t);
+            }
+            tt.clear();
+            self.metrics.recent_ttfts = tt;
+        }
         let n_done = finished.len();
         for req in finished {
             self.metrics.generated.record(to_secs(now), req.out_tokens as u64);
@@ -771,6 +998,22 @@ impl Simulator {
             let s = &mut self.sessions[sid];
             s.inflight -= 1;
             s.remaining -= 1;
+        }
+        // A crash is "recovered" once every call it tore has completed:
+        // record the span from the crash to the last straggler.
+        if !self.open_crashes.is_empty() {
+            let now = self.q.now();
+            let mut i = 0;
+            while i < self.open_crashes.len() {
+                if self.open_crashes[i].torn.remove(&(sid, node))
+                    && self.open_crashes[i].torn.is_empty()
+                {
+                    let oc = self.open_crashes.remove(i);
+                    self.recovery_times.push(to_secs(now - oc.at));
+                } else {
+                    i += 1;
+                }
+            }
         }
         // Unblock children; every node whose last parent this was becomes
         // ready *now* and issues immediately (ascending order — the
@@ -801,6 +1044,220 @@ impl Simulator {
             }
             if let Some(next) = self.proxy.on_session_done() {
                 self.start_session(next);
+            }
+        }
+    }
+
+    // -- failure injection + control plane --------------------------------
+
+    /// Tear down a request whose decode worker `dw` crashed out from
+    /// under it (worker-held at crash time, or carried by a stale
+    /// in-flight event).  Releases the references PR 9's structures hold
+    /// through the request (fork-group block ref, relay source shield),
+    /// accounts the destroyed KV on the `lost` conservation channel, and
+    /// books the call for re-issue.
+    ///
+    /// Accounting: the teardown opens a fresh `ctx_len` of demand (the
+    /// context must be delivered again) and covers it entirely from
+    /// `lost` — plus the host-reload tokens sized at handoff but not yet
+    /// charged at admission (`req.host_tokens` is zeroed by the
+    /// admission charge, so the residue is exactly the uncharged part),
+    /// which would otherwise break the audit's reloaded == sized
+    /// identity.  Channels already counted at the original sizing stay:
+    /// those bytes really moved before they died.
+    fn teardown_req(&mut self, mut req: DecodeReq, dw: usize) {
+        if let Some(src_w) = req.relay_src.take() {
+            // Tolerant unpin: if the *source* worker crashed too, its
+            // ledger was wiped and the entry is simply gone.
+            self.decode.relay_unpin(src_w, req.sid);
+        }
+        if let Some(gid) = req.fork_gid.take() {
+            self.forks.drop_ref(gid);
+        }
+        let ctx = req.ctx_len as u64;
+        let uncharged_reload = req.host_tokens as u64;
+        self.metrics.ctx_demand_tokens += ctx;
+        bump_class(&mut self.metrics.ctx_demand_tokens_by_class, req.class, ctx);
+        self.metrics.lost_tokens += ctx + uncharged_reload;
+        bump_class(&mut self.metrics.lost_tokens_by_class, req.class, ctx + uncharged_reload);
+        self.metrics.wasted_generated_tokens += req.generated as u64;
+        if let Some(a) = self.audit.as_mut() {
+            bump_class(&mut a.demand_by_class, req.class, ctx);
+            if uncharged_reload > 0 {
+                // The sized-but-never-charged reload moved to `lost`.
+                a.host_sized_by_class[req.class] -= uncharged_reload;
+            }
+        }
+        if let Some(oc) = self
+            .open_crashes
+            .iter_mut()
+            .rev()
+            .find(|oc| oc.target == FaultTarget::Decode(dw))
+        {
+            oc.torn.insert((req.sid, req.call_idx));
+        }
+        if self.decode.is_alive(dw) {
+            // The worker already recovered (the in-flight copy outlived
+            // the recovery window): retry immediately.
+            self.reissue_call(req.sid, req.call_idx);
+        } else {
+            self.reissue[dw].insert((req.sid, req.call_idx));
+        }
+    }
+
+    /// A scheduled crash fires (`Ev::Fault`; link/straggler windows are
+    /// passive and never get here).
+    fn on_fault(&mut self, idx: usize) {
+        let target = self.cfg.faults[idx].target;
+        let now = self.q.now();
+        match target {
+            FaultTarget::Prefill(w) => {
+                self.prefill_epoch[w] += 1;
+                let jobs = self.prefill.crash(w);
+                let torn = jobs.iter().map(|j| (j.sid, j.call_idx)).collect();
+                self.open_crashes.push(OpenCrash { fault_idx: idx, at: now, target, torn });
+                // Queued and in-flight prefill work re-routes to the
+                // survivors immediately: nothing was handed off yet, so
+                // no KV is lost — only compute is redone.
+                for job in jobs {
+                    let w2 = self.route_alive(&job);
+                    self.prefill.enqueue(w2, job);
+                    self.try_start_prefill(w2);
+                }
+            }
+            FaultTarget::Decode(w) => {
+                self.open_crashes.push(OpenCrash {
+                    fault_idx: idx,
+                    at: now,
+                    target,
+                    torn: BTreeSet::new(),
+                });
+                // Crash first (bumps the epoch, wipes batch + residency),
+                // then tear down everything the worker held; in-flight
+                // events surface at pop via the epoch guard.
+                let torn_reqs = self.decode.crash(w);
+                for req in torn_reqs {
+                    self.teardown_req(req, w);
+                }
+            }
+            FaultTarget::Link(_) => unreachable!("link faults are passive windows"),
+        }
+        self.q.schedule_in(secs(self.cfg.fault_recovery_s), Ev::Recover { idx });
+    }
+
+    /// The crashed worker of `cfg.faults[idx]` revives cold.
+    fn on_recover(&mut self, idx: usize) {
+        match self.cfg.faults[idx].target {
+            FaultTarget::Prefill(w) => {
+                if !self.prefill.is_alive(w) {
+                    self.prefill.revive(w);
+                    self.try_start_prefill(w);
+                }
+            }
+            FaultTarget::Decode(w) => {
+                self.decode.revive(w);
+                // Re-issue every call the crash tore, ascending (sid,
+                // node) — deterministic.
+                let calls = std::mem::take(&mut self.reissue[w]);
+                for (sid, node) in calls {
+                    self.reissue_call(sid, node);
+                }
+            }
+            FaultTarget::Link(_) => unreachable!("link faults are passive windows"),
+        }
+        // A crash that tore nothing recovers the moment its worker does.
+        if let Some(pos) = self
+            .open_crashes
+            .iter()
+            .position(|oc| oc.fault_idx == idx && oc.torn.is_empty())
+        {
+            let oc = self.open_crashes.remove(pos);
+            self.recovery_times.push(to_secs(self.q.now() - oc.at));
+        }
+    }
+
+    /// 1 Hz control-plane heartbeat (`repartition` only): observe queue
+    /// depths, execute at most one lend/reclaim, reschedule while work
+    /// remains.
+    fn on_plane_tick(&mut self) {
+        let view = PlaneView {
+            prefill_backlog_jobs: self.prefill.backlog_jobs(),
+            decode_backlog_jobs: self.decode.backlog_jobs(),
+            flex_lent: self.flex_lent,
+        };
+        match self.proxy.plane_tick(self.q.now(), &view) {
+            Some(PlaneAction::LendToDecode) => self.lend_flex(),
+            Some(PlaneAction::ReclaimToPrefill) => self.reclaim_flex(),
+            None => {}
+        }
+        let total = self.trace.sessions.len() as u64;
+        if self.metrics.sessions_completed + self.metrics.shed_requests < total {
+            self.q.schedule_in(secs(1.0), Ev::PlaneTick);
+        }
+    }
+
+    /// Lend the flex prefill GPU (the pool's last worker) to the decode
+    /// tier: drain it like a crash — queued jobs re-route, nothing is
+    /// lost — then pay a KV-migration occupancy on the target decode
+    /// worker's handoff link; from the migration's end the target decodes
+    /// `ASSIST_FACTOR`× faster.
+    fn lend_flex(&mut self) {
+        let flex = self.prefill.len() - 1;
+        if self.prefill.len() < 2 || !self.prefill.is_alive(flex) {
+            return;
+        }
+        self.metrics.repartition_events += 1;
+        self.flex_lent = true;
+        self.prefill_epoch[flex] += 1;
+        let jobs = self.prefill.crash(flex);
+        for job in jobs {
+            let w2 = self.route_alive(&job);
+            self.prefill.enqueue(w2, job);
+            self.try_start_prefill(w2);
+        }
+        // Assist the decode worker with the deepest admission backlog
+        // (ties keep the lowest index — deterministic).
+        let mut target = 0;
+        let mut best = self.decode.backlog_of(0);
+        for d in 1..self.decode.workers.len() {
+            let b = self.decode.backlog_of(d);
+            if b > best {
+                best = b;
+                target = d;
+            }
+        }
+        // Migrating the worker's resident KV occupies its handoff link
+        // (bytes = 0: no handoff payload crosses the fabric).
+        let resident = self.decode.resident_tokens(target);
+        let dur = secs(self.cfg.cost.handoff_secs(resident));
+        let at = self.net.occupy(target, self.q.now(), dur);
+        self.decode.set_assist(target, at, ASSIST_FACTOR);
+        self.flex_target = Some(target);
+    }
+
+    /// Reclaim the flex GPU for the prefill tier: the assist ends now,
+    /// the migration back occupies the link again, and the flex worker
+    /// revives cold when it completes (`Ev::FlexRevive`).
+    fn reclaim_flex(&mut self) {
+        if !self.flex_lent {
+            return;
+        }
+        let flex = self.prefill.len() - 1;
+        self.metrics.repartition_events += 1;
+        self.flex_lent = false;
+        match self.flex_target.take() {
+            Some(t) => {
+                self.decode.clear_assist(t);
+                let resident = self.decode.resident_tokens(t);
+                let dur = secs(self.cfg.cost.handoff_secs(resident));
+                let at = self.net.occupy(t, self.q.now(), dur);
+                self.q.schedule(at, Ev::FlexRevive { worker: flex });
+            }
+            None => {
+                if !self.prefill.is_alive(flex) {
+                    self.prefill.revive(flex);
+                    self.try_start_prefill(flex);
+                }
             }
         }
     }
@@ -844,6 +1301,24 @@ impl Simulator {
         let makespan = to_secs(self.last_completion.saturating_sub(self.first_arrival.min(self.last_completion)));
         let throughput = self.metrics.generated.tokens_per_sec(Some(makespan.max(1e-9)));
         let interconnect = self.net.into_stats();
+        // Failure-injection summary.  Goodput discounts completed output
+        // by the partial generations that crashes destroyed (compute the
+        // cluster paid for twice); without faults both correction terms
+        // are zero and goodput equals throughput.
+        let recovery_events = self.recovery_times.len() as u64;
+        let recovery_mean_s = if self.recovery_times.is_empty() {
+            0.0
+        } else {
+            self.recovery_times.iter().sum::<f64>() / self.recovery_times.len() as f64
+        };
+        let goodput_tok_s = {
+            let useful = self
+                .metrics
+                .generated
+                .tokens
+                .saturating_sub(self.metrics.wasted_generated_tokens);
+            if makespan > 0.0 { useful as f64 / makespan.max(1e-9) } else { 0.0 }
+        };
 
         SimResult {
             p50_session_latency: self.metrics.session_latency.p50(),
@@ -899,6 +1374,12 @@ impl Simulator {
             peak_session_inflight: self.metrics.peak_session_inflight,
             events_processed: self.events_processed,
             approx_peak_bytes,
+            recovery_mean_s,
+            recovery_events,
+            goodput_tok_s,
+            lost_tokens: self.metrics.lost_tokens,
+            shed_requests: self.metrics.shed_requests,
+            repartition_events: self.metrics.repartition_events,
             interconnect,
             metrics: self.metrics,
         }
@@ -985,6 +1466,22 @@ pub struct SimResult {
     /// radix arenas + metric stores + session DAG state), identical across
     /// serial/parallel runs of the same config.
     pub approx_peak_bytes: u64,
+    /// Failure-injection summary (`--faults`; all zero without a
+    /// schedule): mean crash-recovery span (crash → last torn call
+    /// completed, or → revival for crashes that tore nothing), completed
+    /// output discounted by crash-destroyed partial generations, context
+    /// KV destroyed by crashes (the sixth conservation channel), sessions
+    /// the `slo-shed` plane turned away, and flex-GPU moves the
+    /// `repartition` plane executed.
+    pub recovery_mean_s: f64,
+    /// Closed crash-recovery spans measured over the run (a crash closes
+    /// when its last torn call completes, or at revival if it tore
+    /// nothing).
+    pub recovery_events: u64,
+    pub goodput_tok_s: f64,
+    pub lost_tokens: u64,
+    pub shed_requests: u64,
+    pub repartition_events: u64,
     /// Per-link transfer accounting (conservation property tests).
     pub interconnect: InterconnectStats,
     pub metrics: ServingMetrics,
@@ -1812,5 +2309,152 @@ mod tests {
             co.ttft_mean,
             un.ttft_mean
         );
+    }
+
+    // -- failure injection + control plane --------------------------------
+
+    fn faulted(faults: &str, reuse: ReuseOpts, rate: f64) -> SimResult {
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.reuse = reuse;
+        cfg.faults = crate::engine::faults::parse_faults(faults).unwrap();
+        cfg.audit = true; // per-event six-channel identity on every test
+        simulate(cfg, small_trace(rate, 60.0))
+    }
+
+    #[test]
+    fn fault_counters_are_zero_without_faults() {
+        let r = run(SystemKind::PrefillShare, 2.0);
+        assert_eq!(r.lost_tokens, 0);
+        assert_eq!(r.shed_requests, 0);
+        assert_eq!(r.repartition_events, 0);
+        assert_eq!(r.recovery_mean_s, 0.0);
+        assert_eq!(r.metrics.wasted_generated_tokens, 0);
+        assert_eq!(r.metrics.faults_injected, 0);
+        // Without wasted output, goodput is exactly throughput.
+        assert_eq!(r.goodput_tok_s, r.throughput_tok_s);
+        // Demand is fully covered by the five healthy channels.
+        assert_eq!(
+            r.metrics.ctx_demand_tokens,
+            r.handoff_tokens + r.decode_reuse_tokens + r.host_reload_tokens
+                + r.forked_tokens + r.relayed_tokens
+        );
+    }
+
+    #[test]
+    fn decode_crash_loses_kv_but_every_session_still_completes() {
+        let trace = small_trace(2.0, 60.0);
+        let r = faulted("crash:d0@15", ReuseOpts::DELTA, 2.0);
+        assert_eq!(r.sessions_completed as usize, trace.sessions.len());
+        assert!(r.lost_tokens > 0, "a mid-run decode crash must tear something down");
+        assert!(r.recovery_mean_s > 0.0);
+        assert_eq!(r.metrics.faults_injected, 1);
+        assert!(r.goodput_tok_s <= r.throughput_tok_s);
+        // The six-channel identity held per event (audit) — restate it
+        // globally over the raw counters.
+        assert_eq!(
+            r.metrics.ctx_demand_tokens,
+            r.handoff_tokens + r.decode_reuse_tokens + r.metrics.host_reload_tokens
+                + r.forked_tokens + r.relayed_tokens + r.lost_tokens
+        );
+    }
+
+    #[test]
+    fn prefill_crash_reroutes_jobs_and_loses_nothing() {
+        let trace = small_trace(2.0, 60.0);
+        let r = faulted("crash:p1@10", ReuseOpts::OFF, 2.0);
+        assert_eq!(r.sessions_completed as usize, trace.sessions.len());
+        // Prefill work re-routes before any KV ships: compute is redone,
+        // no handoff is torn.
+        assert_eq!(r.lost_tokens, 0);
+        assert_eq!(r.metrics.wasted_generated_tokens, 0);
+    }
+
+    #[test]
+    fn straggler_and_link_windows_slow_the_run_but_conserve() {
+        let trace = small_trace(2.0, 60.0);
+        let clean = run(SystemKind::PrefillShare, 2.0);
+        let r = faulted("straggler:d0@5-40x3,link:l1@5-40x6,straggler:p0@5-40x2", ReuseOpts::OFF, 2.0);
+        assert_eq!(r.sessions_completed as usize, trace.sessions.len());
+        assert_eq!(r.lost_tokens, 0, "windows degrade, they do not destroy");
+        assert!(
+            r.mean_session_latency > clean.mean_session_latency,
+            "degraded {} vs clean {}",
+            r.mean_session_latency,
+            clean.mean_session_latency
+        );
+    }
+
+    #[test]
+    fn faulted_runs_are_deterministic() {
+        let go = || faulted("crash:d1@12,straggler:p0@5-30x2", ReuseOpts::DELTA, 2.0);
+        let (a, b) = (go(), go());
+        assert_eq!(a.metrics, b.metrics);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.recovery_mean_s, b.recovery_mean_s);
+    }
+
+    /// Satellite regression (PR 9 structures × faults): a decode crash
+    /// while fork-group members' handoffs are in flight must release
+    /// their block references (else `finish()`'s drained assert — or a
+    /// double `drop_ref` panic — fires), and relay source pins on the
+    /// crashed worker must die with its ledger instead of shielding a
+    /// ghost entry.  Fan-out at rate 3 keeps forks/relays in flight
+    /// across the whole run, so a 12 s crash lands mid-handoff.
+    #[test]
+    fn crash_during_fork_and_relay_handoffs_releases_their_refs() {
+        use crate::workload::fanout;
+        let trace = generate_trace(&fanout(), 3.0, 60.0, 42);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.reuse = ReuseOpts::DELTA_RELAY_FORK;
+        cfg.audit = true;
+        cfg.faults = crate::engine::faults::parse_faults("crash:d0@12,crash:d2@25").unwrap();
+        let r = simulate(cfg, trace.clone());
+        assert_eq!(r.sessions_completed as usize, trace.sessions.len());
+        assert!(r.forked_tokens > 0, "the fork channel must actually be exercised");
+        assert!(r.relayed_tokens > 0, "the relay channel must actually be exercised");
+        assert!(r.lost_tokens > 0);
+        // finish() already asserted the fork registry drained; the audit
+        // asserted the six-channel identity per event.
+    }
+
+    #[test]
+    fn slo_shed_sheds_under_overload_and_static_does_not() {
+        use crate::engine::faults::ControlPlanePolicy;
+        let trace = small_trace(6.0, 60.0);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.control_plane = ControlPlanePolicy::SloShed;
+        cfg.slo_ttft_ms = 40.0; // tight: overload breaches it quickly
+        let shed = simulate(cfg.clone(), trace.clone());
+        cfg.control_plane = ControlPlanePolicy::Static;
+        let stat = simulate(cfg, trace.clone());
+        assert_eq!(stat.shed_requests, 0);
+        assert_eq!(stat.sessions_completed as usize, trace.sessions.len());
+        assert!(shed.shed_requests > 0, "overload past the SLO must shed");
+        assert_eq!(
+            shed.sessions_completed + shed.shed_requests,
+            trace.sessions.len() as u64,
+            "every arrival either completes or is shed"
+        );
+        assert!(
+            shed.ttft_p95 < stat.ttft_p95,
+            "shedding must relieve tail TTFT: {} vs {}",
+            shed.ttft_p95,
+            stat.ttft_p95
+        );
+    }
+
+    #[test]
+    fn repartition_lends_the_flex_gpu_under_decode_pressure() {
+        use crate::engine::faults::ControlPlanePolicy;
+        let trace = small_trace(4.0, 60.0);
+        let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+        cfg.control_plane = ControlPlanePolicy::Repartition;
+        // Tiny decode batches pile up an admission backlog while the
+        // 4-worker prefill pool stays ahead: the imbalance streak fires.
+        cfg.max_decode_batch = 1;
+        let r = simulate(cfg, trace.clone());
+        assert!(r.repartition_events >= 1, "sustained decode pressure must lend the flex GPU");
+        assert_eq!(r.sessions_completed as usize, trace.sessions.len());
+        assert_eq!(r.lost_tokens, 0, "repartition drains, it does not destroy");
     }
 }

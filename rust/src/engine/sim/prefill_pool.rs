@@ -33,6 +33,13 @@ pub(crate) struct PrefillWorker {
     cost: CostModel,
     /// Busy-time accounting for utilization + imbalance reporting.
     pub busy_micros: u64,
+    /// Down (crashed, or lent to the decode pool by the `repartition`
+    /// control plane): dispatches nothing and must receive no jobs until
+    /// revived.
+    pub alive: bool,
+    /// Straggler windows `(start, end, factor)` — compute runs `factor`×
+    /// slower while `now` falls inside one (`--faults straggler:pN@...`).
+    slow: Vec<(SimTime, SimTime, f64)>,
 }
 
 impl PrefillWorker {
@@ -60,6 +67,8 @@ impl PrefillPool {
                     radix: RadixCache::new(kv_tokens),
                     cost,
                     busy_micros: 0,
+                    alive: true,
+                    slow: Vec::new(),
                 }
             })
             .collect();
@@ -105,7 +114,7 @@ impl PrefillPool {
     /// `PrefillDone`, `None` when busy or out of work.
     pub fn try_start(&mut self, w: usize, now: SimTime, metrics: &mut ServingMetrics) -> Option<SimTime> {
         let pw = &mut self.workers[w];
-        if pw.busy.is_some() {
+        if pw.busy.is_some() || !pw.alive {
             return None;
         }
         let unit = pw.sched.next_unit(&mut pw.radix)?;
@@ -129,7 +138,11 @@ impl PrefillPool {
         }
         metrics.prefill_chunks += 1;
 
-        let dur_us = secs(pw.cost.prefill_secs(unit.chunk_new, unit.past_tokens));
+        let mut cost_s = pw.cost.prefill_secs(unit.chunk_new, unit.past_tokens);
+        if let Some(f) = crate::engine::faults::slow_factor(&pw.slow, now) {
+            cost_s *= f;
+        }
+        let dur_us = secs(cost_s);
         pw.busy_micros += dur_us;
         pw.busy = Some(unit);
         Some(dur_us)
@@ -154,6 +167,51 @@ impl PrefillPool {
             pw.sched.requeue(unit.entry);
             None
         }
+    }
+
+    /// Install a straggler window on worker `w` (`--faults straggler:pN`).
+    pub fn add_slow_window(&mut self, w: usize, start: SimTime, end: SimTime, factor: f64) {
+        self.workers[w].slow.push((start, end, factor));
+    }
+
+    /// Take worker `w` down — a `crash:pN` fault, or the repartition
+    /// plane lending the GPU to the decode tier.  Returns every job the
+    /// worker held (the in-flight unit's job first, then the queue in
+    /// scheduler order) stripped to bare [`PrefillJob`]s for the caller
+    /// to re-route; the radix cache is wiped wholesale (pinned match
+    /// handles die with it), so partially processed jobs restart from
+    /// scratch wherever they land.  The stale `PrefillDone` event for the
+    /// in-flight unit is the caller's problem (epoch guard at pop).
+    pub fn crash(&mut self, w: usize) -> Vec<PrefillJob> {
+        let pw = &mut self.workers[w];
+        pw.alive = false;
+        let mut jobs = Vec::new();
+        if let Some(unit) = pw.busy.take() {
+            jobs.push(unit.entry.job);
+        }
+        jobs.extend(pw.sched.drain());
+        pw.radix.crash_clear();
+        jobs
+    }
+
+    /// Revive worker `w` cold (empty cache, empty queue).
+    pub fn revive(&mut self, w: usize) {
+        debug_assert!(!self.workers[w].alive, "reviving a live worker");
+        self.workers[w].alive = true;
+    }
+
+    pub fn is_alive(&self, w: usize) -> bool {
+        self.workers[w].alive
+    }
+
+    /// Total queued + in-flight jobs over alive workers — the
+    /// repartition plane's prefill-pressure signal.
+    pub fn backlog_jobs(&self) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| w.alive)
+            .map(|w| w.sched.queue_len() + usize::from(w.busy.is_some()))
+            .sum()
     }
 }
 

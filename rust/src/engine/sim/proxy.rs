@@ -1,4 +1,5 @@
-//! Cluster front door: session admission control + prefill routing.
+//! Cluster front door: session admission control + prefill routing +
+//! the pluggable SLO control plane.
 //!
 //! The proxy is the paper's entry tier (§3.3 step 1): it admits sessions
 //! under the concurrency cap (excess arrivals queue FIFO) and assigns
@@ -10,13 +11,171 @@
 //! the pre-decomposition simulator — so `random` routing stays
 //! reproducible and no other component consumes routing randomness
 //! (see `ARCHITECTURE.md`, "The determinism contract").
+//!
+//! `--control-plane` selects a [`ControlPlane`] the event loop consults
+//! on top of the concurrency cap:
+//!
+//! * `static` (default) — no-op; byte-identical to the pre-plane proxy;
+//! * `slo-shed` — sheds arriving sessions outright while the rolling
+//!   p95 TTFT breaches `--slo-ttft-ms` (load shedding trades goodput's
+//!   numerator for its latency denominator, the classic brownout move);
+//! * `repartition` — under sustained queue imbalance, moves the *flex*
+//!   GPU (the last prefill worker) between the prefill and decode
+//!   tiers, paying a drain + KV-migration cost on the interconnect.
+//!
+//! Every plane is deterministic: decisions are pure functions of
+//! observed TTFTs and queue depths at 1 Hz ticks — no randomness.
 
 use std::collections::VecDeque;
 
 use crate::engine::config::ClusterConfig;
+use crate::engine::faults::ControlPlanePolicy;
 use crate::engine::route::{make_router, Router, WorkerViewProvider};
 use crate::engine::sched::PrefillJob;
+use crate::simtime::SimTime;
 use crate::util::rng::Rng;
+
+/// Rolling-TTFT window length for `slo-shed` (samples).
+const TTFT_WINDOW: usize = 64;
+/// Minimum samples before `slo-shed` trusts its p95 and may shed.
+const TTFT_MIN_SAMPLES: usize = 16;
+/// Consecutive imbalanced ticks before `repartition` flips the flex GPU.
+const REPARTITION_STREAK: u32 = 3;
+/// Decode-step speedup on the assisted worker while the flex GPU is lent.
+pub(crate) const ASSIST_FACTOR: f64 = 0.5;
+
+/// Queue-depth snapshot the event loop hands to [`ControlPlane::tick`].
+pub(crate) struct PlaneView {
+    /// Jobs queued or in flight across *alive* prefill workers.
+    pub prefill_backlog_jobs: usize,
+    /// Requests pending admission across alive decode workers.
+    pub decode_backlog_jobs: usize,
+    /// The flex GPU is currently lent to the decode tier.
+    pub flex_lent: bool,
+}
+
+/// What a tick decided (the event loop executes drain/migration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum PlaneAction {
+    LendToDecode,
+    ReclaimToPrefill,
+}
+
+/// SLO control-plane policy: observes TTFTs and queue depths, gates
+/// admission, and may repartition the flex GPU.  Implementations must be
+/// deterministic (see the determinism contract in `ARCHITECTURE.md`).
+pub(crate) trait ControlPlane {
+    /// Consulted at session arrival *before* the concurrency slot:
+    /// `false` sheds the session outright (counted, never started).
+    fn admit(&self) -> bool {
+        true
+    }
+
+    /// A request recorded its TTFT (seconds).
+    fn record_ttft(&mut self, _ttft_s: f64) {}
+
+    /// 1 Hz heartbeat; only called when [`wants_ticks`](Self::wants_ticks).
+    fn tick(&mut self, _now: SimTime, _view: &PlaneView) -> Option<PlaneAction> {
+        None
+    }
+
+    /// Whether the event loop should schedule `PlaneTick` events at all —
+    /// `false` keeps tickless runs byte-identical to the pre-plane
+    /// simulator.
+    fn wants_ticks(&self) -> bool {
+        false
+    }
+}
+
+/// `static`: the pre-plane proxy behavior, bit for bit.
+struct StaticPlane;
+
+impl ControlPlane for StaticPlane {}
+
+/// `slo-shed`: shed arrivals while the rolling p95 TTFT breaches the SLO.
+struct SloShedPlane {
+    slo_s: f64,
+    window: VecDeque<f64>,
+}
+
+impl SloShedPlane {
+    fn p95(&self) -> Option<f64> {
+        if self.window.len() < TTFT_MIN_SAMPLES {
+            return None;
+        }
+        let mut sorted: Vec<f64> = self.window.iter().copied().collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("TTFT is finite"));
+        // Nearest-rank p95 in integer math (⌈n·0.95⌉ via (n*95+99)/100),
+        // mirrored exactly by the Python port.
+        let idx = (sorted.len() * 95 + 99) / 100 - 1;
+        Some(sorted[idx])
+    }
+}
+
+impl ControlPlane for SloShedPlane {
+    fn admit(&self) -> bool {
+        match self.p95() {
+            Some(p95) => p95 <= self.slo_s,
+            None => true,
+        }
+    }
+
+    fn record_ttft(&mut self, ttft_s: f64) {
+        self.window.push_back(ttft_s);
+        if self.window.len() > TTFT_WINDOW {
+            self.window.pop_front();
+        }
+    }
+}
+
+/// `repartition`: flip the flex GPU after [`REPARTITION_STREAK`]
+/// consecutive ticks of the same sustained imbalance (one side's backlog
+/// more than double the other's, plus a constant guard so near-empty
+/// queues never trigger).
+struct RepartitionPlane {
+    streak: u32,
+}
+
+impl ControlPlane for RepartitionPlane {
+    fn tick(&mut self, _now: SimTime, view: &PlaneView) -> Option<PlaneAction> {
+        let (want, action) = if view.flex_lent {
+            (
+                view.prefill_backlog_jobs > 2 * view.decode_backlog_jobs + 4,
+                PlaneAction::ReclaimToPrefill,
+            )
+        } else {
+            (
+                view.decode_backlog_jobs > 2 * view.prefill_backlog_jobs + 4,
+                PlaneAction::LendToDecode,
+            )
+        };
+        if want {
+            self.streak += 1;
+            if self.streak >= REPARTITION_STREAK {
+                self.streak = 0;
+                return Some(action);
+            }
+        } else {
+            self.streak = 0;
+        }
+        None
+    }
+
+    fn wants_ticks(&self) -> bool {
+        true
+    }
+}
+
+fn make_plane(cfg: &ClusterConfig) -> Box<dyn ControlPlane> {
+    match cfg.control_plane {
+        ControlPlanePolicy::Static => Box::new(StaticPlane),
+        ControlPlanePolicy::SloShed => Box::new(SloShedPlane {
+            slo_s: cfg.slo_ttft_ms / 1_000.0,
+            window: VecDeque::new(),
+        }),
+        ControlPlanePolicy::Repartition => Box::new(RepartitionPlane { streak: 0 }),
+    }
+}
 
 pub(crate) struct Proxy {
     router: Box<dyn Router>,
@@ -24,6 +183,7 @@ pub(crate) struct Proxy {
     max_concurrent: usize,
     admitted: usize,
     backlog: VecDeque<usize>,
+    plane: Box<dyn ControlPlane>,
 }
 
 impl Proxy {
@@ -34,6 +194,7 @@ impl Proxy {
             max_concurrent: cfg.max_concurrent_sessions,
             admitted: 0,
             backlog: VecDeque::new(),
+            plane: make_plane(cfg),
         }
     }
 
@@ -71,5 +232,98 @@ impl Proxy {
     /// the pool's backlog summation when the snapshot materializes).
     pub fn uses_load(&self) -> bool {
         self.router.uses_load()
+    }
+
+    /// Control-plane admission gate, consulted *before* the concurrency
+    /// slot at arrival: `false` sheds the session outright.
+    pub fn plane_admit(&self) -> bool {
+        self.plane.admit()
+    }
+
+    pub fn plane_record_ttft(&mut self, ttft_s: f64) {
+        self.plane.record_ttft(ttft_s);
+    }
+
+    pub fn plane_wants_ticks(&self) -> bool {
+        self.plane.wants_ticks()
+    }
+
+    pub fn plane_tick(&mut self, now: SimTime, view: &PlaneView) -> Option<PlaneAction> {
+        self.plane.tick(now, view)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_shed_gates_on_rolling_p95() {
+        let mut p = SloShedPlane { slo_s: 0.5, window: VecDeque::new() };
+        // Below the sample floor the plane never sheds, even on awful TTFTs.
+        for _ in 0..TTFT_MIN_SAMPLES - 1 {
+            p.record_ttft(9.0);
+            assert!(p.admit(), "must not shed under {TTFT_MIN_SAMPLES} samples");
+        }
+        // 16th sample: p95 of sixteen 9.0s breaches 0.5 — shed.
+        p.record_ttft(9.0);
+        assert!(!p.admit());
+        // Recovery: enough fast TTFTs push the breach past p95.  With 16
+        // nines and 48 fast samples (64 total), nearest-rank p95 is index
+        // ⌈64·0.95⌉−1 = 60 — still a 9.0; the window must *slide* the
+        // nines out before admission reopens.
+        for _ in 0..48 {
+            p.record_ttft(0.1);
+        }
+        assert!(!p.admit(), "16/64 slow samples still hold p95 above the SLO");
+        for _ in 0..14 {
+            p.record_ttft(0.1);
+        }
+        // 2 nines left in 64: p95 index 60 lands on a 0.1 — reopen.
+        assert!(p.admit(), "window slid the breach out");
+    }
+
+    #[test]
+    fn slo_shed_p95_is_nearest_rank() {
+        let mut p = SloShedPlane { slo_s: 1.0, window: VecDeque::new() };
+        for i in 0..20 {
+            p.record_ttft(i as f64);
+        }
+        // ⌈20·0.95⌉−1 = 18 → sorted[18] = 18.0.
+        assert_eq!(p.p95(), Some(18.0));
+    }
+
+    #[test]
+    fn repartition_needs_a_sustained_streak_and_flips_direction() {
+        let mut p = RepartitionPlane { streak: 0 };
+        let lend = PlaneView { prefill_backlog_jobs: 0, decode_backlog_jobs: 5, flex_lent: false };
+        let calm = PlaneView { prefill_backlog_jobs: 0, decode_backlog_jobs: 4, flex_lent: false };
+        assert_eq!(p.tick(0, &lend), None);
+        assert_eq!(p.tick(1, &lend), None);
+        // An intervening calm tick resets the streak.
+        assert_eq!(p.tick(2, &calm), None);
+        assert_eq!(p.tick(3, &lend), None);
+        assert_eq!(p.tick(4, &lend), None);
+        assert_eq!(p.tick(5, &lend), Some(PlaneAction::LendToDecode));
+        assert_eq!(p.streak, 0, "streak rearms after firing");
+        // Lent: the same decode-heavy view no longer triggers; a
+        // prefill-heavy streak reclaims.
+        let hold = PlaneView { prefill_backlog_jobs: 0, decode_backlog_jobs: 50, flex_lent: true };
+        let back = PlaneView { prefill_backlog_jobs: 9, decode_backlog_jobs: 2, flex_lent: true };
+        assert_eq!(p.tick(6, &hold), None);
+        assert_eq!(p.tick(7, &back), None);
+        assert_eq!(p.tick(8, &back), None);
+        assert_eq!(p.tick(9, &back), Some(PlaneAction::ReclaimToPrefill));
+    }
+
+    #[test]
+    fn static_plane_is_inert() {
+        let mut p = StaticPlane;
+        assert!(p.admit());
+        assert!(!p.wants_ticks());
+        p.record_ttft(99.0);
+        let v = PlaneView { prefill_backlog_jobs: 0, decode_backlog_jobs: 99, flex_lent: false };
+        assert_eq!(p.tick(0, &v), None);
+        assert!(p.admit(), "static never sheds");
     }
 }

@@ -310,6 +310,20 @@ impl ResidencyLedger {
         e.tokens
     }
 
+    /// Worker-crash teardown: the GPU pool and its host staging copies are
+    /// gone, so wipe *every* entry unconditionally — handoff pins and
+    /// relay shields included.  The normal-path `debug_assert`s in
+    /// [`release`](Self::release) guard against *logic* bugs (freeing KV a
+    /// live transfer references); here the transfers themselves are being
+    /// torn down by the fault machinery, which accounts their context as
+    /// `lost`, so force-dropping pinned entries is the correct semantics,
+    /// not a violation.  `peak_retained` survives as a high-water mark of
+    /// the pre-crash run.
+    pub fn crash_clear(&mut self) {
+        self.sessions.clear();
+        self.retained_gpu_tokens = 0;
+    }
+
     /// The session completed: free whatever this worker still retains for
     /// it (GPU or host).  No-op when the worker holds nothing.
     pub fn release(&mut self, sid: usize) {
@@ -474,6 +488,27 @@ mod tests {
         l.consume(1);
         l.relay_unpin(1);
         assert_eq!(l.retained_gpu_tokens, 200);
+    }
+
+    #[test]
+    fn crash_clear_wipes_even_pinned_and_relay_shielded_entries() {
+        let mut l = ResidencyLedger::new();
+        l.retain(1, 0, 100, 60, chain_sig(&[40]));
+        l.retain(2, 0, 200, 60, chain_sig(&[140]));
+        l.retain(3, 0, 300, 60, chain_sig(&[240]));
+        l.park_to_host(3);
+        l.pin_for_handoff(1, 0, &chain_sig(&[40, 8])); // handoff in flight
+        l.relay_pin(2); // relay source in flight
+        l.crash_clear();
+        assert_eq!(l.retained_gpu_tokens, 0);
+        assert_eq!(l.lru_victim(), None);
+        assert_eq!(l.entry_gpu_tokens(1), 0);
+        assert_eq!(l.pin_for_handoff(2, 0, &chain_sig(&[140])), (0, 0));
+        assert_eq!(l.pin_for_handoff(3, 0, &chain_sig(&[240])), (0, 0), "host copy gone too");
+        assert_eq!(l.peak_retained, 600, "high-water mark survives the crash");
+        // The ledger is reusable after the wipe.
+        l.retain(4, 0, 50, 30, chain_sig(&[20]));
+        assert_eq!(l.retained_gpu_tokens, 50);
     }
 
     #[test]

@@ -544,6 +544,28 @@ impl RadixCache {
         }
     }
 
+    /// Worker-crash teardown: drop the entire tree — *pinned* extents
+    /// included, since the KV pages behind them are gone — keeping only
+    /// the configured capacity and the cumulative `stats`.  The wiped
+    /// tokens count as evicted so `inserted == evicted + resident` still
+    /// balances across the crash.  Every outstanding [`MatchHandle`]
+    /// against the old tree must be discarded, never `unlock`ed.
+    pub fn crash_clear(&mut self) {
+        self.stats.evicted_tokens += self.resident_tokens as u64;
+        self.resident_tokens = 0;
+        self.nodes.clear();
+        self.nodes.push(Node {
+            edge: Seg::EMPTY,
+            children: Children::None,
+            parent: None,
+            last_access: 0,
+            pins: Vec::new(),
+        });
+        self.free_nodes.clear();
+        self.arena = TokenArena::default();
+        self.clock = 0;
+    }
+
     /// Deterministic footprint estimate: node arena + token arena + child
     /// spill vecs + pin vecs.  Counter/capacity-derived (no allocator
     /// introspection), so identical op sequences report identical bytes.
@@ -804,6 +826,26 @@ mod tests {
         // without growing the arena.
         c.insert(&[5, 6, 7]);
         assert!(c.arena.data.len() <= arena_high_water, "free ranges not reused");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn crash_clear_wipes_pinned_extents_but_keeps_stats() {
+        let mut c = RadixCache::new(100);
+        c.insert(&[1, 2, 3, 4]);
+        c.insert(&[1, 2, 9, 9]);
+        let _h = c.match_prefix(&[1, 2, 3, 4]); // pinned across the crash
+        let inserted = c.stats.inserted_tokens;
+        c.crash_clear();
+        assert_eq!(c.resident_tokens(), 0, "pinned extents wiped too");
+        assert_eq!(c.capacity_tokens(), 100);
+        assert_eq!(c.stats.inserted_tokens, inserted);
+        assert_eq!(c.stats.evicted_tokens, inserted, "wiped tokens count as evicted");
+        assert_eq!(c.peek_prefix(&[1, 2, 3, 4]), 0);
+        // The cache is fully reusable after the wipe (handle `_h` is
+        // deliberately leaked, never unlocked against the new tree).
+        c.insert(&[5, 6, 7]);
+        assert_eq!(c.peek_prefix(&[5, 6, 7]), 3);
         c.check_invariants().unwrap();
     }
 

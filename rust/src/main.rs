@@ -20,7 +20,10 @@
 use anyhow::{bail, Result};
 
 use prefillshare::costmodel::GpuSpec;
-use prefillshare::engine::config::{ClusterConfig, ReuseOpts, RoutingPolicy, SystemKind};
+use prefillshare::engine::config::{
+    ClusterConfig, ControlPlanePolicy, ReuseOpts, RoutingPolicy, SystemKind,
+};
+use prefillshare::engine::faults::{self, FaultSpec};
 use prefillshare::engine::experiments as sx;
 use prefillshare::engine::report::{format_row, header, save_rows, Row};
 use prefillshare::engine::sched::SchedPolicy;
@@ -63,13 +66,16 @@ fn help_text() -> String {
     format!(
         "prefillshare {} — PrefillShare reproduction (see README.md, ARCHITECTURE.md)\n\n\
          USAGE: prefillshare <serve|bench-serving|sim|ablation|accuracy|train|workload|lint> [--options]\n\n\
-         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout|prefillshare|forkrelay|simscale\n\
+         bench-serving --experiment fig3|fig4|fig5|fig6|sched|routes|reuse|fanout|prefillshare|forkrelay|faults|simscale\n\
                        [--seed N] [--threads N] [--scale N,N,...] [--out file.json]\n\
          sim           [--system baseline|prefillshare] [--sched fifo|sjf|prefix-affinity|chunked]\n\
                        [--chunk-tokens N] [--route prefix-aware|round-robin|random|cache-aware|load-aware]\n\
                        [--link-gbps G] [--prefill-gpus a100,a10,...] [--n-prefill N]\n\
                        [--prefill-classes shared|private|c0,c1,...]\n\
                        [--reuse off|delta|delta+relay|delta+relay+fork] [--workload {workloads}]\n\
+                       [--faults crash:p1@10,link:l0@5-20,straggler:d2@5-30x2|random[:K]]\n\
+                       [--faults-seed N] [--fault-recovery-s S]\n\
+                       [--control-plane static|slo-shed|repartition] [--slo-ttft-ms MS]\n\
                        [--rate R] [--duration S]\n\
                        [--arrivals poisson|mmpp] [--burst B] [--burst-dwell S]\n\
                        [--max-sessions N] [--legacy-queue] [--metrics exact|sketch]\n\
@@ -126,6 +132,39 @@ fn parse_prefill_classes(args: &Args, n_models: usize) -> Result<Vec<usize>> {
             Ok(classes)
         }
     }
+}
+
+/// Parse `--faults`: the explicit schedule grammar
+/// (`crash:p1@10,link:l0@5-20x4,...`) or `random[:K]` resolved through
+/// `--faults-seed` at parse time, so the simulator only ever sees
+/// concrete schedules.  Explicit schedules are validated against the
+/// cluster topology here so junk fails on the CLI, not mid-run.
+fn parse_faults_arg(
+    args: &Args,
+    n_prefill: usize,
+    n_decode: usize,
+    duration_s: f64,
+) -> Result<Vec<FaultSpec>> {
+    let Some(spec) = args.get("faults") else {
+        return Ok(Vec::new());
+    };
+    if spec == "random" || spec.starts_with("random:") {
+        let k = match spec.strip_prefix("random").unwrap().strip_prefix(':') {
+            None => faults::DEFAULT_RANDOM_FAULTS,
+            Some(n) => n
+                .parse::<usize>()
+                .ok()
+                .filter(|&k| k > 0)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("--faults random:K expects a positive count, got `{spec}`")
+                })?,
+        };
+        let fault_seed = args.get_u64("faults-seed", 0);
+        return Ok(faults::sample_random(k, n_prefill, n_decode, duration_s, fault_seed));
+    }
+    let fs = faults::parse_faults(spec).map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+    faults::validate(&fs, n_prefill, n_decode).map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+    Ok(fs)
 }
 
 /// Parse `--arrivals` (+ `--burst`, `--burst-dwell` for MMPP).
@@ -220,6 +259,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
         "fanout" => sx::fanout_experiment(seed, threads),
         "prefillshare" => sx::prefillshare_experiment(seed, threads),
         "forkrelay" => sx::forkrelay_experiment(seed, threads),
+        "faults" => sx::faults_experiment(seed, threads),
         // Not a paper figure: lets CI drivers that only know bench-serving
         // gate on the static determinism/soundness pass.
         "lint" => return cmd_lint(args),
@@ -338,6 +378,24 @@ fn cmd_sim(args: &Args) -> Result<()> {
     // class isolation); byte-identical results with or without it.
     cfg.audit = args.bool_flag("audit");
     cfg.seed = seed;
+    // Failure injection + control plane: `--faults` (explicit schedule or
+    // `random[:K]` via `--faults-seed`), crash recovery horizon, and the
+    // admission/repartition policy with its TTFT SLO.
+    cfg.faults = parse_faults_arg(args, cfg.effective_prefill_workers(), cfg.n_models, duration)?;
+    cfg.fault_recovery_s = args.get_f64("fault-recovery-s", cfg.fault_recovery_s);
+    if !cfg.fault_recovery_s.is_finite() || cfg.fault_recovery_s <= 0.0 {
+        bail!("--fault-recovery-s expects a positive duration in seconds");
+    }
+    cfg.control_plane = args.get_choice(
+        "control-plane",
+        ControlPlanePolicy::Static,
+        ControlPlanePolicy::by_name,
+        "static,slo-shed,repartition",
+    );
+    cfg.slo_ttft_ms = args.get_f64("slo-ttft-ms", cfg.slo_ttft_ms);
+    if !cfg.slo_ttft_ms.is_finite() || cfg.slo_ttft_ms <= 0.0 {
+        bail!("--slo-ttft-ms expects a positive TTFT budget in milliseconds");
+    }
     // Prefill-module compatibility classes, applied to workload + cluster.
     let classes = parse_prefill_classes(args, cfg.n_models)?;
     cfg.prefill_classes = classes.clone();
@@ -361,9 +419,19 @@ fn cmd_sim(args: &Args) -> Result<()> {
         ArrivalProcess::Poisson => String::new(),
         ArrivalProcess::Mmpp { burst, dwell_s } => format!(" / mmpp(x{burst},{dwell_s}s)"),
     };
+    let faults_tag = if cfg.faults.is_empty() {
+        String::new()
+    } else {
+        format!(" / faults={}", cfg.faults.len())
+    };
+    let plane_tag = if cfg.control_plane == ControlPlanePolicy::Static {
+        String::new()
+    } else {
+        format!(" / plane={}", cfg.control_plane.label())
+    };
     let result = simulate(cfg, trace);
     println!(
-        "== sim: {} / sched={} / route={}{link}{reuse}{classes_tag} / {wl_name}{bursty} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
+        "== sim: {} / sched={} / route={}{link}{reuse}{classes_tag}{faults_tag}{plane_tag} / {wl_name}{bursty} @ {rate}/s for {duration}s (seed {seed}, {n_sessions} sessions) ==",
         system.label(),
         sched.label(),
         routing.label(),
@@ -421,6 +489,18 @@ fn cmd_sim(args: &Args) -> Result<()> {
                 row.result.metrics.handoffs_relayed,
             );
         }
+    }
+    if !faults_tag.is_empty() || !plane_tag.is_empty() {
+        println!(
+            "faults: {} injected | lost {} tokens | shed {} requests | recovery mean {:.2}s | \
+             goodput {:.0} tok/s | repartitions {}",
+            row.result.metrics.faults_injected,
+            row.result.lost_tokens,
+            row.result.shed_requests,
+            row.result.recovery_mean_s,
+            row.result.goodput_tok_s,
+            row.result.repartition_events,
+        );
     }
     if let Some(out) = args.get("out") {
         save_rows(out, &[row])?;
@@ -568,6 +648,32 @@ mod tests {
         );
         assert!(parse_scale_counts(&parse("bench-serving --scale many")).is_err());
         assert!(parse_scale_counts(&parse("bench-serving --scale 0")).is_err());
+    }
+
+    #[test]
+    fn faults_flag_parses_and_rejects_junk() {
+        let parse = |s: &str| Args::parse(s.split_whitespace().map(String::from));
+        assert!(parse_faults_arg(&parse("sim"), 4, 4, 60.0).unwrap().is_empty());
+        let fs = parse_faults_arg(&parse("sim --faults crash:d0@5,link:l1@3-9x2"), 4, 4, 60.0)
+            .unwrap();
+        assert_eq!(fs.len(), 2);
+        // `random[:K]` resolves through --faults-seed at parse time and is
+        // deterministic in it.
+        let a = parse_faults_arg(&parse("sim --faults random:4 --faults-seed 9"), 4, 4, 60.0)
+            .unwrap();
+        let b = parse_faults_arg(&parse("sim --faults random:4 --faults-seed 9"), 4, 4, 60.0)
+            .unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(a, b);
+        assert_eq!(
+            parse_faults_arg(&parse("sim --faults random"), 4, 4, 60.0).unwrap().len(),
+            faults::DEFAULT_RANDOM_FAULTS
+        );
+        assert!(parse_faults_arg(&parse("sim --faults crash:z9@5"), 4, 4, 60.0).is_err());
+        assert!(parse_faults_arg(&parse("sim --faults random:zero"), 4, 4, 60.0).is_err());
+        assert!(parse_faults_arg(&parse("sim --faults random:0"), 4, 4, 60.0).is_err());
+        // Out-of-topology targets fail at the CLI, not mid-run.
+        assert!(parse_faults_arg(&parse("sim --faults crash:d7@5"), 4, 4, 60.0).is_err());
     }
 
     #[test]

@@ -526,6 +526,34 @@ pub struct ServingMetrics {
     pub host_reload_tokens_by_class: Vec<u64>,
     pub forked_tokens_by_class: Vec<u64>,
     pub relayed_tokens_by_class: Vec<u64>,
+    /// Context-KV demand: every token of input context a decode request
+    /// was sized for, counted once per handoff-sizing event *and* once
+    /// per fault teardown (a torn call re-demands its context when it
+    /// re-issues).  The six-channel conservation identity's right-hand
+    /// side: `shipped + reused + reloaded + forked + relayed + lost ==
+    /// ctx_demand` per class.  Without faults this equals the trace's
+    /// static context demand.
+    pub ctx_demand_tokens: u64,
+    pub ctx_demand_tokens_by_class: Vec<u64>,
+    /// Failure accounting (`--faults`, all zero without a schedule):
+    /// context tokens destroyed by worker crashes (the sixth conservation
+    /// channel — covers the demand of every torn handoff/call), decode
+    /// tokens generated then lost with the batch, crash events injected,
+    /// sessions shed by the `slo-shed` plane, and flex-GPU repartition
+    /// flips performed by the `repartition` plane.
+    pub lost_tokens: u64,
+    pub lost_tokens_by_class: Vec<u64>,
+    pub wasted_generated_tokens: u64,
+    pub faults_injected: u64,
+    pub shed_requests: u64,
+    pub repartition_events: u64,
+    /// Rolling-TTFT feed for the SLO control plane: when `track_ttft_window`
+    /// is set (slo-shed policy), every TTFT sample is also pushed here and
+    /// drained into the plane by the event loop after each decode step.
+    /// Off (and empty) by default, so metric equality across compared runs
+    /// is unaffected.
+    pub track_ttft_window: bool,
+    pub recent_ttfts: Vec<f64>,
 }
 
 /// Record `v` into the position-indexed histogram family, growing it to

@@ -1,0 +1,136 @@
+//! Chaos matrix: every fault type crossed with routing policy and reuse
+//! rung, with the per-event `--audit` hooks armed the whole time.
+//!
+//! The matrix asserts the properties the failure subsystem must hold
+//! *everywhere*, not just at the golden fixture's pinned points:
+//!
+//!   * **Six-channel conservation** — `shipped + reused + reloaded +
+//!     forked + relayed + lost == sized context demand`, per class, under
+//!     every fault schedule (the demand ledger re-counts torn calls at
+//!     re-issue, so the identity is exact even mid-crash).
+//!   * **Channel exclusivity** — `lost` is a crash-only channel (link
+//!     degradation and stragglers lose nothing), and the reuse channels
+//!     stay zero when their rung is off, faults or not.
+//!   * **Completion** — under the `static` plane every session still
+//!     completes: crashes tear calls down, recovery re-issues them.
+//!   * **Determinism** — a faulted run replays byte-identically.
+
+use prefillshare::engine::config::{ClusterConfig, ReuseOpts, SystemKind};
+use prefillshare::engine::faults::parse_faults;
+use prefillshare::engine::route::RoutePolicy;
+use prefillshare::engine::sim::{simulate, ConservationLedger, SimResult};
+use prefillshare::workload::{generate_trace, workload_by_name, Trace};
+
+const MATRIX_RATE: f64 = 2.0;
+const MATRIX_DURATION: f64 = 30.0;
+const MATRIX_SEED: u64 = 42;
+
+fn matrix_trace() -> Trace {
+    // Fan-out DAGs engage every reuse channel (delta, relay, fork), so
+    // the crash-teardown paths for all of them get exercised.
+    let spec = workload_by_name("fanout").expect("fanout workload registered");
+    generate_trace(&spec, MATRIX_RATE, MATRIX_DURATION, MATRIX_SEED)
+}
+
+fn run_cell(faults: &str, routing: RoutePolicy, reuse: ReuseOpts) -> SimResult {
+    let mut cfg = ClusterConfig::paper_default(SystemKind::PrefillShare);
+    cfg.routing = routing;
+    cfg.reuse = reuse;
+    cfg.audit = true;
+    cfg.faults = parse_faults(faults).expect("matrix schedule must parse");
+    cfg.fault_recovery_s = 8.0;
+    simulate(cfg, matrix_trace())
+}
+
+/// (schedule, contains a crash) — one row per fault type plus a combined
+/// storm that overlaps all three kinds.
+const SCHEDULES: [(&str, bool); 6] = [
+    ("", false),
+    ("crash:p1@8", true),
+    ("crash:d0@10", true),
+    ("link:l1@5-25x6", false),
+    ("straggler:d2@5-25x3", false),
+    ("crash:p0@6,crash:d1@12,link:l0@4-20x5,straggler:p2@8-28x2", true),
+];
+
+#[test]
+fn chaos_matrix_conserves_and_completes() {
+    let routings = [RoutePolicy::PrefixAware, RoutePolicy::RoundRobin, RoutePolicy::CacheAware];
+    let rungs = ["off", "delta", "delta+relay+fork"];
+    let sessions = matrix_trace().sessions.len() as u64;
+    let mut crash_lost_total = 0u64;
+
+    for (schedule, has_crash) in SCHEDULES {
+        for routing in routings {
+            for rung in rungs {
+                let reuse = ReuseOpts::by_name(rung).unwrap();
+                let r = run_cell(schedule, routing, reuse);
+                let cell = format!("faults=[{schedule}] routing={routing:?} reuse={rung}");
+
+                // Six-channel conservation, per class and in total.
+                let ledger = ConservationLedger::from_metrics(&r.metrics);
+                ledger.assert_covers(&r.metrics.ctx_demand_tokens_by_class, &cell);
+                assert_eq!(
+                    ledger.total().covered(),
+                    r.metrics.ctx_demand_tokens,
+                    "{cell}: global identity"
+                );
+
+                // Static plane: nothing sheds, everything completes.
+                assert_eq!(r.shed_requests, 0, "{cell}: static plane shed");
+                assert_eq!(r.repartition_events, 0, "{cell}: static plane repartitioned");
+                assert_eq!(
+                    r.metrics.sessions_completed, sessions,
+                    "{cell}: sessions lost to a fault"
+                );
+                assert_eq!(
+                    r.metrics.faults_injected,
+                    parse_faults(schedule).unwrap().len() as u64,
+                    "{cell}: schedule miscounted"
+                );
+
+                // lost is a crash-only channel.
+                if !has_crash {
+                    assert_eq!(r.lost_tokens, 0, "{cell}: lost without a crash");
+                    assert_eq!(r.recovery_events, 0, "{cell}: recovery without a crash");
+                    assert_eq!(
+                        r.metrics.wasted_generated_tokens, 0,
+                        "{cell}: waste without a crash"
+                    );
+                } else {
+                    assert!(r.recovery_events >= 1, "{cell}: crash never recovered");
+                    crash_lost_total += r.lost_tokens;
+                }
+
+                // Reuse channels stay dark when their rung is off —
+                // faults must not leak tokens into them.
+                if !reuse.delta {
+                    assert_eq!(r.metrics.decode_reuse_tokens, 0, "{cell}: reuse leak");
+                    assert_eq!(r.metrics.host_reload_tokens, 0, "{cell}: reload leak");
+                }
+                if !reuse.fork {
+                    assert_eq!(r.metrics.forked_tokens, 0, "{cell}: fork leak");
+                }
+                if !reuse.relay {
+                    assert_eq!(r.metrics.relayed_tokens, 0, "{cell}: relay leak");
+                }
+            }
+        }
+    }
+
+    // Decode crashes must actually destroy KV somewhere in the matrix —
+    // otherwise the lost channel (and this whole matrix) is vacuous.
+    assert!(crash_lost_total > 0, "no cell ever lost tokens to a crash");
+}
+
+#[test]
+fn faulted_run_is_deterministic() {
+    let reuse = ReuseOpts::by_name("delta+relay+fork").unwrap();
+    let a = run_cell(SCHEDULES[5].0, RoutePolicy::CacheAware, reuse);
+    let b = run_cell(SCHEDULES[5].0, RoutePolicy::CacheAware, reuse);
+    assert_eq!(a.metrics, b.metrics, "faulted replay diverged");
+    assert_eq!(a.lost_tokens, b.lost_tokens);
+    assert_eq!(a.recovery_events, b.recovery_events);
+    assert_eq!(a.recovery_mean_s.to_bits(), b.recovery_mean_s.to_bits());
+    assert_eq!(a.goodput_tok_s.to_bits(), b.goodput_tok_s.to_bits());
+}

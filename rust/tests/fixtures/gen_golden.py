@@ -391,7 +391,8 @@ def staging_secs(tokens):
 
 def cluster_config(
     system, routing="prefix", link_contended=False, handoff_bps=HANDOFF_BPS, decode_reuse=False,
-    relay=False, fork=False, spec=REACT,
+    relay=False, fork=False, spec=REACT, faults=(), fault_recovery_s=10.0,
+    control_plane="static", slo_ttft_ms=500.0,
 ):
     usable = max(MEM_BYTES * 0.9 - weight_bytes(), 1e9)
     return {
@@ -415,7 +416,87 @@ def cluster_config(
         # Prefill-module compatibility classes (model -> class); empty =
         # one shared class 0 (the pre-class behaviour the goldens pin).
         "prefill_classes": spec.get("prefill_classes", []),
+        # Failure injection + SLO control plane (engine/faults.rs +
+        # engine/sim/proxy.rs): an empty schedule and the `static` plane
+        # leave every code path byte-identical to the pre-fault port.
+        "faults": list(faults),
+        "fault_recovery_s": fault_recovery_s,
+        "control_plane": control_plane,  # "static" | "slo-shed" | "repartition"
+        "slo_ttft_ms": slo_ttft_ms,
     }
+
+
+# ---------------------------------------------------------------------------
+# engine/faults.rs — deterministic fault schedule + control-plane consts
+# ---------------------------------------------------------------------------
+
+FAULT_SEED_XOR = 0x00FA075E
+# proxy.rs control-plane constants.
+TTFT_WINDOW = 64
+TTFT_MIN_SAMPLES = 16
+REPARTITION_STREAK = 3
+ASSIST_FACTOR = 0.5
+
+
+def fault(kind, tier, idx, start_s, end_s=None, factor=1.0):
+    """One FaultSpec (faults.rs): kind is "crash" | "link" | "straggler";
+    tier is "p" (prefill worker), "d" (decode worker) or "l" (the decode
+    worker's handoff link)."""
+    return {"kind": kind, "tier": tier, "idx": idx,
+            "start_s": start_s, "end_s": end_s, "factor": factor}
+
+
+def sample_random(k, n_prefill, n_decode, duration_s, seed):
+    """faults.rs::sample_random — every RNG draw mirrored exactly, so the
+    same (k, topology, duration, seed) yields the identical schedule on
+    both sides."""
+    rng = Rng(seed ^ FAULT_SEED_XOR)
+
+    def pick(r, n):
+        return min(int(r * n), max(n - 1, 0))
+
+    out = []
+    for _ in range(k):
+        kind = int(rng.f64() * 3.0)
+        if kind == 0:
+            # Crash — never a prefill worker when the pool has only one.
+            side = rng.f64()
+            t = rng.f64()
+            if n_prefill >= 2 and side < 0.5:
+                tier, idx = "p", pick(t, n_prefill)
+            else:
+                tier, idx = "d", pick(t, n_decode)
+            start = 1.0 + rng.f64() * (duration_s * 0.5)
+            out.append(fault("crash", tier, idx, start))
+        elif kind == 1:
+            tier, idx = "l", pick(rng.f64(), n_decode)
+            start = 1.0 + rng.f64() * (duration_s * 0.5)
+            ln = duration_s * (0.1 + 0.2 * rng.f64())
+            factor = 2.0 + 6.0 * rng.f64()
+            out.append(fault("link", tier, idx, start, start + ln, factor))
+        else:
+            side = rng.f64()
+            t = rng.f64()
+            if side < 0.5:
+                tier, idx = "p", pick(t, n_prefill)
+            else:
+                tier, idx = "d", pick(t, n_decode)
+            start = 1.0 + rng.f64() * (duration_s * 0.5)
+            ln = duration_s * (0.1 + 0.2 * rng.f64())
+            factor = 1.5 + 2.5 * rng.f64()
+            out.append(fault("straggler", tier, idx, start, start + ln, factor))
+    return out
+
+
+def slow_factor(windows, now):
+    """faults.rs::slow_factor — product of every covering straggler
+    window's factor, None outside all of them (so fault-free float
+    arithmetic stays byte-identical to the pre-fault port)."""
+    f = None
+    for (s, e, fac) in windows:
+        if s <= now < e:
+            f = fac if f is None else f * fac
+    return f
 
 
 # ---------------------------------------------------------------------------
@@ -726,6 +807,11 @@ class Simulator:
                 "busy": None,
                 "radix": RadixCache(cfg["prefill_kv_tokens"]),
                 "busy_micros": 0,
+                # Failure injection (prefill_pool.rs): liveness + passive
+                # straggler windows.  Always-alive + empty windows keeps
+                # fault-free runs byte-identical.
+                "alive": True,
+                "slow": [],
             }
             for _ in range(n_prefill)
         ]
@@ -748,6 +834,13 @@ class Simulator:
                 "res_clock": 0,
                 "retained_gpu": 0,
                 "peak_retained": 0,
+                # Failure injection (decode_pool.rs): liveness, crash
+                # epoch (stale-event guard), straggler windows, and the
+                # repartition-plane assist (at, factor).
+                "alive": True,
+                "epoch": 0,
+                "slow": [],
+                "assist": None,
             }
             for _ in range(cfg["n_models"])
         ]
@@ -858,6 +951,50 @@ class Simulator:
         self.tput_last = None
         self.last_completion = 0
         self.first_arrival = MASK  # SimTime::MAX
+        # -- failure injection + control plane (faults.rs, sim/mod.rs,
+        #    proxy.rs).  With an empty schedule and the `static` plane,
+        #    epochs stay 0, every worker stays alive and none of this
+        #    state alters a single event.
+        self.faults = list(cfg.get("faults", ()))
+        self.prefill_epoch = [0] * n_prefill
+        # Per-decode-worker handoff-link degradation windows
+        # (interconnect.rs::Link::slow); staging links are never degraded.
+        self.link_slow = [[] for _ in range(cfg["n_models"])]
+        for f in self.faults:
+            start = secs(f["start_s"])
+            end = secs(f["end_s"]) if f["end_s"] is not None else MASK
+            if f["kind"] == "link":
+                self.link_slow[f["idx"]].append((start, end, f["factor"]))
+            elif f["kind"] == "straggler":
+                pool = self.prefill if f["tier"] == "p" else self.decode
+                pool[f["idx"]]["slow"].append((start, end, f["factor"]))
+        # Open crash records: a crash is "recovered" once every call it
+        # tore down has completed (sim/mod.rs::OpenCrash).
+        self.open_crashes = []  # {idx, at, tier, target, torn:set}
+        self.recovery_times = []
+        self.reissue = [set() for _ in range(cfg["n_models"])]
+        self.flex_lent = False
+        self.flex_target = None
+        self.plane = cfg.get("control_plane", "static")
+        self.slo_s = cfg.get("slo_ttft_ms", 500.0) / 1000.0
+        self.ttft_recent = deque()  # proxy.rs::SloShedPlane window
+        self.plane_streak = 0
+        # Fault counters (metrics.rs) kept out of `self.m` so the six
+        # pre-fault fixtures' counter schema (and bytes) stays untouched —
+        # only golden_faults.json pins them.
+        self.faultm = {
+            "faults_injected": len(self.faults),
+            "shed_requests": 0,
+            "lost_tokens": 0,
+            "wasted_generated_tokens": 0,
+            "repartition_events": 0,
+        }
+        self.lost_by_class = []
+        # Per-event audit ledgers (sim/mod.rs --audit); previously lazily
+        # created at the first handoff, now owned here so the lost channel
+        # can post before any handoff happens.
+        self.audit_demand = {}
+        self.audit_host_sized = {}
 
     # -- event queue ------------------------------------------------------
 
@@ -871,22 +1008,51 @@ class Simulator:
     def run(self):
         for sid, s in enumerate(self.trace):
             self.schedule(s["arrival"], ("arrive", sid))
+        # Crash faults become events; link/straggler windows are passive
+        # (installed in __init__).  Only the repartition plane ticks.
+        for i, f in enumerate(self.faults):
+            if f["kind"] == "crash":
+                self.schedule(secs(f["start_s"]), ("fault", i))
+        if self.plane == "repartition":
+            self.schedule(secs(1.0), ("plane_tick",))
         while self.heap:
             t, _, ev = heapq.heappop(self.heap)
             self.now = t
             kind = ev[0]
+            # Epoch guards (sim/mod.rs::handle): worker-progress events of
+            # a dead incarnation are dropped; request-carrying events of a
+            # dead incarnation tear their request down instead.
             if kind == "arrive":
                 self.on_arrival(ev[1])
             elif kind == "prefill_done":
-                self.on_prefill_done(ev[1])
+                if ev[2] == self.prefill_epoch[ev[1]]:
+                    self.on_prefill_done(ev[1])
             elif kind == "handoff_done":
-                self.on_handoff_done(ev[1], ev[2])
+                if ev[3] == self.decode[ev[2]]["epoch"]:
+                    self.on_handoff_done(ev[1], ev[2])
+                else:
+                    self.teardown_req(ev[1], ev[2])
             elif kind == "stage_in":
-                self.on_stage_in_done(ev[1], ev[2])
+                if ev[3] == self.decode[ev[2]]["epoch"]:
+                    self.on_stage_in_done(ev[1], ev[2])
+                else:
+                    self.teardown_req(ev[1], ev[2])
             elif kind == "stage_out":
-                self.on_stage_out_done(ev[1])
+                if ev[2] == self.decode[ev[1]]["epoch"]:
+                    self.on_stage_out_done(ev[1])
             elif kind == "step_done":
-                self.on_decode_step_done(ev[1])
+                if ev[2] == self.decode[ev[1]]["epoch"]:
+                    self.on_decode_step_done(ev[1])
+            elif kind == "fault":
+                self.on_fault(ev[1])
+            elif kind == "recover":
+                self.on_recover(ev[1])
+            elif kind == "plane_tick":
+                self.on_plane_tick()
+            elif kind == "flex_revive":
+                if not self.prefill[ev[1]]["alive"]:
+                    self.prefill[ev[1]]["alive"] = True
+                    self.try_start_prefill(ev[1])
         return self.finish()
 
     # -- sessions ---------------------------------------------------------
@@ -894,10 +1060,31 @@ class Simulator:
     def on_arrival(self, sid):
         self.m["sessions_arrived"] += 1
         self.first_arrival = min(self.first_arrival, self.now)
+        if not self.plane_admit():
+            # SLO guard (proxy.rs::SloShedPlane): turned away at the
+            # door, never enters the system (still counts as arrived).
+            self.faultm["shed_requests"] += 1
+            return
         if self.admitted < self.cfg["max_concurrent_sessions"]:
             self.admit(sid)
         else:
             self.admission_queue.append(sid)
+
+    def plane_admit(self):
+        # proxy.rs::ControlPlane::admit — only `slo-shed` ever sheds, and
+        # only once the sliding TTFT window has enough samples.
+        if self.plane != "slo-shed" or len(self.ttft_recent) < TTFT_MIN_SAMPLES:
+            return True
+        s = sorted(self.ttft_recent)
+        p95 = s[(len(s) * 95 + 99) // 100 - 1]
+        return p95 <= self.slo_s
+
+    def plane_record_ttft(self, t):
+        if self.plane != "slo-shed":
+            return
+        self.ttft_recent.append(t)
+        if len(self.ttft_recent) > TTFT_WINDOW:
+            self.ttft_recent.popleft()
 
     def admit(self, sid):
         self.admitted += 1
@@ -1009,10 +1196,39 @@ class Simulator:
             "issued_at": self.now,
             "key": self.node_key(sid, node),
         }
+        w = self.route_alive(job)
+        self.prefill[w]["queue"].append(job)
+        self.try_start_prefill(w)
+
+    def route_alive(self, job):
+        # sim/mod.rs::route_alive — the routing policy picks as if the
+        # pool were whole (its RNG/tie-break sequence is preserved), then
+        # the choice advances to the first alive worker, wrapping.
         if self.cfg["system"] == "baseline":
-            w = job["model"]
+            w0 = job["model"]
         else:
-            w = self.route(job)
+            w0 = self.route(job)
+        n = len(self.prefill)
+        for off in range(n):
+            w = (w0 + off) % n
+            if self.prefill[w]["alive"]:
+                return w
+        return w0
+
+    def reissue_call(self, sid, node):
+        # sim/mod.rs::reissue_call — the call never completed, so the
+        # session's inflight/remaining counters still carry it; only the
+        # prefill job is rebuilt (its latency clock restarts at `now`).
+        job = {
+            "sid": sid,
+            "call_idx": node,
+            "model": self.trace[sid]["calls"][node]["model"],
+            "cls": self.trace[sid]["calls"][node]["cls"],
+            "ctx_len": self.meta[sid][node]["ctx"],
+            "issued_at": self.now,
+            "key": self.node_key(sid, node),
+        }
+        w = self.route_alive(job)
         self.prefill[w]["queue"].append(job)
         self.try_start_prefill(w)
 
@@ -1063,7 +1279,7 @@ class Simulator:
 
     def try_start_prefill(self, w):
         pw = self.prefill[w]
-        if pw["busy"] is not None or not pw["queue"]:
+        if pw["busy"] is not None or not pw["queue"] or not pw["alive"]:
             return
         job = pw["queue"].popleft()
         path, matched = pw["radix"].match_prefix(job["key"])
@@ -1076,10 +1292,16 @@ class Simulator:
         self.m["prefill_jobs"] += 1
         self.queue_delay.record(to_secs(self.now - job["issued_at"]))
         self.m["prefill_chunks"] += 1
-        dur_us = secs(prefill_secs(new_tokens, matched))
+        cost = prefill_secs(new_tokens, matched)
+        f = slow_factor(pw["slow"], self.now)
+        if f is not None:
+            # Straggler GPU (prefill_pool.rs): the float cost is inflated
+            # before rounding so fault-free math stays byte-identical.
+            cost *= f
+        dur_us = secs(cost)
         pw["busy_micros"] += dur_us
         pw["busy"] = (job, path, matched)
-        self.schedule_in(dur_us, ("prefill_done", w))
+        self.schedule_in(dur_us, ("prefill_done", w, self.prefill_epoch[w]))
 
     def on_prefill_done(self, w):
         pw = self.prefill[w]
@@ -1091,6 +1313,26 @@ class Simulator:
         call = self.trace[sid]["calls"][node]
         model, out_tokens = call["model"], call["out"]
         meta = self.meta[sid][node]
+        if not self.decode[model]["alive"]:
+            # sim/mod.rs::on_prefill_done dead-target branch: the freshly
+            # computed KV has nowhere to land.  No handoff is sized; a
+            # balanced demand/lost pair keeps the conservation identity
+            # and the call re-issues when the worker recovers.
+            ctx = job["ctx_len"]
+            cls = job["cls"]
+            self.audit_demand[cls] = self.audit_demand.get(cls, 0) + ctx
+            self.faultm["lost_tokens"] += ctx
+            self.bump_lost(cls, ctx)
+            p = self.fork_pending.pop((sid, node), None)
+            if p is not None:
+                self.fork_drop_ref(p[0])
+            for oc in reversed(self.open_crashes):
+                if oc["tier"] == "d" and oc["target"] == model:
+                    oc["torn"].add((sid, node))
+                    break
+            self.reissue[model].add((sid, node))
+            self.try_start_prefill(w)
+            return
         # Decode reuse (sim/mod.rs::on_prefill_done): the decode worker may
         # retain part of the session's context — size the delta against the
         # longest common prefix of the retained signature and this node's
@@ -1213,11 +1455,8 @@ class Simulator:
             slots[job["cls"]] += relayed
         # Per-event per-class identity (--audit): host reload is charged
         # later, at decode admission, so track the *sized* host tokens here
-        # and require shipped + reused + sized to cover the class demand at
-        # every handoff (not only at end of run).
-        if not hasattr(self, "audit_demand"):
-            self.audit_demand = {}
-            self.audit_host_sized = {}
+        # and require shipped + reused + sized + lost to cover the class
+        # demand at every handoff (not only at end of run).
         cls = job["cls"]
         self.audit_demand[cls] = self.audit_demand.get(cls, 0) + job["ctx_len"]
         self.audit_host_sized[cls] = self.audit_host_sized.get(cls, 0) + host_tokens
@@ -1225,22 +1464,41 @@ class Simulator:
         reused_c = pad_get(self.by_class["decode_reuse_tokens"], cls)
         forked_c = pad_get(self.forkrelay_by_class["forked_tokens"], cls)
         relayed_c = pad_get(self.forkrelay_by_class["relayed_tokens"], cls)
+        lost_c = pad_get(self.lost_by_class, cls)
         assert (
-            shipped_c + reused_c + self.audit_host_sized[cls] + forked_c + relayed_c
+            shipped_c + reused_c + self.audit_host_sized[cls] + forked_c + relayed_c + lost_c
             == self.audit_demand[cls]
         ), (sid, node, "class", cls, "lost tokens at handoff")
         # Interconnect (engine/sim/interconnect.rs): FIFO per ingress link
         # when contended, fire-and-forget otherwise.  Shipped and relayed
         # tokens both occupy the transfer window; forked tokens are a CoW
-        # block reference and cost no transfer time.
+        # block reference and cost no transfer time.  A degraded link
+        # stretches the transfer, but the queue-wait metric is still
+        # recorded against the undegraded duration (interconnect.rs).
         dur = secs(handoff_secs(shipped + relayed, self.cfg.get("handoff_bps", HANDOFF_BPS)))
         now = self.now
+        ddur = self.link_degraded(model, now, dur)
         start = max(now, self.link_free[model]) if self.cfg.get("link_contended") else now
-        end = start + dur
+        end = start + ddur
         self.link_free[model] = max(self.link_free[model], end)
         self.handoff_wait.record(to_secs(end - dur - now))
-        self.schedule(end, ("handoff_done", req, model))
+        self.schedule(end, ("handoff_done", req, model, self.decode[model]["epoch"]))
         self.try_start_prefill(w)
+
+    def link_degraded(self, w, now, dur):
+        # interconnect.rs::Link::degraded — each covering window inflates
+        # the duration in turn, rounding half away from zero; staging
+        # links are deliberately unaffected.
+        for (s, e, f) in self.link_slow[w]:
+            if s <= now < e:
+                dur = int(rust_round(dur * f))
+        return dur
+
+    def bump_lost(self, cls, tokens):
+        slots = self.lost_by_class
+        while len(slots) <= cls:
+            slots.append(0)
+        slots[cls] += tokens
 
     # -- decode -----------------------------------------------------------
 
@@ -1262,8 +1520,13 @@ class Simulator:
             e = self.decode[req.relay_src]["residency"].get(req.sid)
             if e is not None:
                 e["relay_pins"] = max(e["relay_pins"] - 1, 0)
+            # Cleared rather than kept (Rust `take()`): a later
+            # crash-teardown of this request must not release either
+            # reference a second time.
+            req.relay_src = None
         if req.fork_gid is not None:
             self.fork_drop_ref(req.fork_gid)
+            req.fork_gid = None
         req.arrived_at = self.now
         self.decode[w]["pending"].append(req)
         self.try_admit_decode(w)
@@ -1298,7 +1561,7 @@ class Simulator:
             self.m["staging_events"] += 1
             self.m["staged_tokens"] += tokens
             end = self.stage_transfer(w, secs(staging_secs(tokens)))
-            self.schedule(end, ("stage_out", w))
+            self.schedule(end, ("stage_out", w, dw["epoch"]))
         else:
             del dw["residency"][sid]
             dw["retained_gpu"] -= tokens
@@ -1312,6 +1575,8 @@ class Simulator:
 
     def try_admit_decode(self, w):
         cap = self.cfg["decode_kv_tokens"]
+        if not self.decode[w]["alive"]:
+            return
         while True:
             dw = self.decode[w]
             # Eviction pre-pass (decode_pool.rs::try_admit): reclaim
@@ -1346,7 +1611,7 @@ class Simulator:
                     park = front.shipped_tokens + front.relayed_tokens
                     self.m["staged_tokens"] += park
                     end = self.stage_transfer(w, secs(staging_secs(park)))
-                    self.schedule(end, ("stage_out", w))
+                    self.schedule(end, ("stage_out", w, dw["epoch"]))
                 return
             req = dw["pending"].popleft()
             dw["resident"] += fp
@@ -1376,7 +1641,7 @@ class Simulator:
                 req.was_deferred = False
                 req.host_tokens = 0
                 end = self.stage_transfer(w, secs(staging_secs(reload)))
-                self.schedule(end, ("stage_in", req, w))
+                self.schedule(end, ("stage_in", req, w, dw["epoch"]))
                 return
             dw["active"].append(req)
 
@@ -1395,15 +1660,25 @@ class Simulator:
 
     def maybe_step(self, w):
         dw = self.decode[w]
-        if dw["stepping"] or dw["io_inflight"] > 0 or not dw["active"]:
+        if dw["stepping"] or dw["io_inflight"] > 0 or not dw["active"] or not dw["alive"]:
             return
         kv_total = 0
         for r in dw["active"]:
             kv_total += r.ctx_len + r.generated
-        dur_us = secs(decode_step_secs(len(dw["active"]), kv_total))
+        cost = decode_step_secs(len(dw["active"]), kv_total)
+        f = slow_factor(dw["slow"], self.now)
+        if f is not None:
+            # Straggler GPU (decode_pool.rs::maybe_step): float cost
+            # inflated before rounding.
+            cost *= f
+        if dw["assist"] is not None and self.now >= dw["assist"][0]:
+            # Repartition-plane assist: the lent flex GPU halves step cost
+            # once its KV migration has landed.
+            cost *= dw["assist"][1]
+        dur_us = secs(cost)
         dw["busy_micros"] += dur_us
         dw["stepping"] = True
-        self.schedule_in(dur_us, ("step_done", w))
+        self.schedule_in(dur_us, ("step_done", w, dw["epoch"]))
 
     def on_decode_step_done(self, w):
         dw = self.decode[w]
@@ -1420,6 +1695,11 @@ class Simulator:
                 self.ttft.record(t)
                 record_pos(self.ttft_pos, r.call_idx, t)
                 record_pos(self.ttft_depth, r.depth, t)
+                # metrics.recent_ttfts (sim/mod.rs): buffered during the
+                # step and drained to the slo-shed plane right after it —
+                # the plane is only read at arrival events, so feeding it
+                # inline here is observationally identical.
+                self.plane_record_ttft(t)
             if r.generated >= r.out_tokens:
                 done = swap_remove(dw["active"], i)
                 dw["resident"] -= done.footprint()
@@ -1466,6 +1746,20 @@ class Simulator:
         st = self.sessions[sid]
         st["inflight"] -= 1
         st["remaining"] -= 1
+        if self.open_crashes:
+            # A crash is "recovered" once every call it tore down has
+            # finally completed (sim/mod.rs::on_call_complete).
+            now = self.now
+            i = 0
+            while i < len(self.open_crashes):
+                oc = self.open_crashes[i]
+                if (sid, node) in oc["torn"]:
+                    oc["torn"].discard((sid, node))
+                    if not oc["torn"]:
+                        self.open_crashes.pop(i)
+                        self.recovery_times.append(to_secs(now - oc["at"]))
+                        continue
+                i += 1
         # Unblock children; every node whose last parent this was issues
         # now as ONE batch, ascending node order, so same-class siblings
         # unblocked together can CoW-fork (sim/mod.rs::on_call_complete).
@@ -1490,6 +1784,214 @@ class Simulator:
             self.admitted -= 1
             if self.admission_queue:
                 self.admit(self.admission_queue.popleft())
+
+    # -- failure injection + control plane --------------------------------
+
+    def teardown_req(self, req, dw_idx):
+        # sim/mod.rs::teardown_req — the request's decode worker crashed
+        # out from under it: release PR 9's references, open a balanced
+        # demand/lost pair (plus the sized-but-never-charged host reload
+        # residue), and book the call for re-issue.
+        if req.relay_src is not None:
+            e = self.decode[req.relay_src]["residency"].get(req.sid)
+            if e is not None:
+                e["relay_pins"] = max(e["relay_pins"] - 1, 0)
+            req.relay_src = None
+        if req.fork_gid is not None:
+            self.fork_drop_ref(req.fork_gid)
+            req.fork_gid = None
+        ctx = req.ctx_len
+        uncharged = req.host_tokens
+        cls = req.cls
+        self.audit_demand[cls] = self.audit_demand.get(cls, 0) + ctx
+        self.faultm["lost_tokens"] += ctx + uncharged
+        self.bump_lost(cls, ctx + uncharged)
+        self.faultm["wasted_generated_tokens"] += req.generated
+        if uncharged > 0:
+            # The reload was sized at handoff but will never be charged:
+            # it moves to the lost channel instead.
+            self.audit_host_sized[cls] -= uncharged
+        for oc in reversed(self.open_crashes):
+            if oc["tier"] == "d" and oc["target"] == dw_idx:
+                oc["torn"].add((req.sid, req.call_idx))
+                break
+        if self.decode[dw_idx]["alive"]:
+            # Stale event landed after the worker already recovered:
+            # re-issue immediately.
+            self.reissue_call(req.sid, req.call_idx)
+        else:
+            self.reissue[dw_idx].add((req.sid, req.call_idx))
+
+    def prefill_crash(self, w):
+        # prefill_pool.rs::crash — busy unit's job first, then the queue;
+        # the radix cache is wiped wholesale (wiped tokens count as
+        # evicted, the LRU clock restarts, capacity survives).
+        pw = self.prefill[w]
+        pw["alive"] = False
+        jobs = []
+        if pw["busy"] is not None:
+            job, _path, _matched = pw["busy"]
+            pw["busy"] = None
+            jobs.append(job)
+        jobs.extend(pw["queue"])
+        pw["queue"].clear()
+        old = pw["radix"]
+        fresh = RadixCache(old.capacity)
+        fresh.evicted_tokens = old.evicted_tokens + old.resident
+        pw["radix"] = fresh
+        return jobs
+
+    def on_fault(self, idx):
+        f = self.faults[idx]
+        now = self.now
+        if f["tier"] == "p":
+            w = f["idx"]
+            self.prefill_epoch[w] += 1
+            jobs = self.prefill_crash(w)
+            torn = set((j["sid"], j["call_idx"]) for j in jobs)
+            self.open_crashes.append(
+                {"idx": idx, "at": now, "tier": "p", "target": w, "torn": torn})
+            # Queued and in-flight prefill work re-routes to the survivors
+            # immediately: nothing was handed off yet, so no KV is lost.
+            for job in jobs:
+                w2 = self.route_alive(job)
+                self.prefill[w2]["queue"].append(job)
+                self.try_start_prefill(w2)
+        else:
+            w = f["idx"]
+            # The record is pushed before the teardowns so teardown_req's
+            # reverse scan finds this crash (sim/mod.rs::on_fault).
+            self.open_crashes.append(
+                {"idx": idx, "at": now, "tier": "d", "target": w, "torn": set()})
+            dw = self.decode[w]
+            dw["alive"] = False
+            dw["epoch"] += 1
+            torn_reqs = list(dw["active"]) + list(dw["pending"])
+            dw["active"] = []
+            dw["pending"].clear()
+            dw["staging_in"] = 0
+            dw["stepping"] = False
+            dw["io_inflight"] = 0
+            dw["resident"] = 0
+            # residency.rs::crash_clear — sessions + GPU-retained count
+            # only; the ledger clock and peak figures survive the crash.
+            dw["residency"].clear()
+            dw["retained_gpu"] = 0
+            for req in torn_reqs:
+                self.teardown_req(req, w)
+        self.schedule_in(secs(self.cfg.get("fault_recovery_s", 10.0)), ("recover", idx))
+
+    def on_recover(self, idx):
+        f = self.faults[idx]
+        if f["tier"] == "p":
+            w = f["idx"]
+            if not self.prefill[w]["alive"]:
+                self.prefill[w]["alive"] = True
+                self.try_start_prefill(w)
+        else:
+            w = f["idx"]
+            self.decode[w]["alive"] = True
+            # Re-issue every call the crash tore, ascending (sid, node)
+            # (the rust side drains a BTreeSet).
+            calls = sorted(self.reissue[w])
+            self.reissue[w] = set()
+            for (sid, node) in calls:
+                self.reissue_call(sid, node)
+        # A crash that tore nothing down recovers the moment its worker
+        # does (sim/mod.rs::on_recover).
+        for i, oc in enumerate(self.open_crashes):
+            if oc["idx"] == idx and not oc["torn"]:
+                self.open_crashes.pop(i)
+                self.recovery_times.append(to_secs(self.now - oc["at"]))
+                break
+
+    def on_plane_tick(self):
+        # sim/mod.rs::on_plane_tick + proxy.rs::RepartitionPlane::tick —
+        # backlogs are read over alive workers only; an action needs
+        # REPARTITION_STREAK consecutive wanting ticks.
+        prefill_backlog = sum(
+            len(pw["queue"]) + (1 if pw["busy"] is not None else 0)
+            for pw in self.prefill if pw["alive"]
+        )
+        decode_backlog = sum(
+            len(dw["pending"]) for dw in self.decode if dw["alive"]
+        )
+        if self.flex_lent:
+            want = prefill_backlog > 2 * decode_backlog + 4
+        else:
+            want = decode_backlog > 2 * prefill_backlog + 4
+        act = None
+        if want:
+            self.plane_streak += 1
+            if self.plane_streak >= REPARTITION_STREAK:
+                self.plane_streak = 0
+                act = "reclaim" if self.flex_lent else "lend"
+        else:
+            self.plane_streak = 0
+        if act == "lend":
+            self.lend_flex()
+        elif act == "reclaim":
+            self.reclaim_flex()
+        total = len(self.trace)
+        if self.m["sessions_completed"] + self.faultm["shed_requests"] < total:
+            self.schedule_in(secs(1.0), ("plane_tick",))
+
+    def occupy(self, w, dur):
+        # interconnect.rs::occupy — link time without payload bytes (and
+        # without degradation: a KV migration is not a handoff).
+        start = max(self.now, self.link_free[w]) if self.cfg.get("link_contended") else self.now
+        end = start + dur
+        self.link_free[w] = max(self.link_free[w], end)
+        return end
+
+    def lend_flex(self):
+        # sim/mod.rs::lend_flex — drain the flex prefill GPU like a crash
+        # (nothing is lost: jobs re-route), then assist the deepest-
+        # backlog decode worker once a KV migration occupies its handoff
+        # link.
+        flex = len(self.prefill) - 1
+        if len(self.prefill) < 2 or not self.prefill[flex]["alive"]:
+            return
+        self.faultm["repartition_events"] += 1
+        self.flex_lent = True
+        self.prefill_epoch[flex] += 1
+        jobs = self.prefill_crash(flex)
+        for job in jobs:
+            w2 = self.route_alive(job)
+            self.prefill[w2]["queue"].append(job)
+            self.try_start_prefill(w2)
+        target = 0
+        best = len(self.decode[0]["pending"])
+        for d in range(1, len(self.decode)):
+            b = len(self.decode[d]["pending"])
+            if b > best:
+                best = b
+                target = d
+        dur = secs(handoff_secs(
+            self.decode[target]["resident"], self.cfg.get("handoff_bps", HANDOFF_BPS)))
+        at = self.occupy(target, dur)
+        self.decode[target]["assist"] = (at, ASSIST_FACTOR)
+        self.flex_target = target
+
+    def reclaim_flex(self):
+        # sim/mod.rs::reclaim_flex — undo the assist, pay the migration
+        # back, revive the flex prefill GPU when the link frees.
+        if not self.flex_lent:
+            return
+        flex = len(self.prefill) - 1
+        self.faultm["repartition_events"] += 1
+        self.flex_lent = False
+        t = self.flex_target
+        self.flex_target = None
+        if t is not None:
+            self.decode[t]["assist"] = None
+            dur = secs(handoff_secs(
+                self.decode[t]["resident"], self.cfg.get("handoff_bps", HANDOFF_BPS)))
+            at = self.occupy(t, dur)
+            self.schedule(at, ("flex_revive", flex))
+        elif not self.prefill[flex]["alive"]:
+            self.prefill[flex]["alive"] = True
+            self.try_start_prefill(flex)
 
     # -- results ----------------------------------------------------------
 
@@ -1567,6 +2069,21 @@ class Simulator:
         dag = {
             "ttft_depth0_mean": self.ttft_depth[0].mean() if self.ttft_depth else float("nan"),
             "ttft_depth_last_mean": self.ttft_depth[-1].mean() if self.ttft_depth else float("nan"),
+        }
+        # Failure-injection summary (sim/mod.rs::finish) — kept out of the
+        # returned counters/floats so the six pre-fault fixtures' schemas
+        # (and bytes) stay untouched; golden_faults.json reads this.
+        if self.recovery_times:
+            recovery_mean = sum(self.recovery_times) / float(len(self.recovery_times))
+        else:
+            recovery_mean = 0.0
+        useful = max(self.m["generated_tokens"] - self.faultm["wasted_generated_tokens"], 0)
+        goodput = (float(useful) / span) if makespan > 0.0 else 0.0
+        self.fault_counters = dict(self.faultm)
+        self.fault_counters["recovery_events"] = len(self.recovery_times)
+        self.fault_floats = {
+            "recovery_mean_s": recovery_mean,
+            "goodput_tok_s": goodput,
         }
         return counters, floats, extra, dag
 
@@ -2106,6 +2623,227 @@ def main():
         "scenarios": fr_scenarios,
     }
     write_fixture("golden_forkrelay.json", fr_fixture)
+
+    # -- golden_faults.json: failure injection + SLO control plane ---------
+    # Pins the fault subsystem end to end: prefill/decode crashes (with
+    # epoch-guarded teardown + re-issue), link degradation windows,
+    # straggler GPUs, the slo-shed and repartition control planes, the
+    # sixth conservation channel (`lost`), the recovery/goodput figures
+    # and the `--faults random` schedule sampler.
+    FAULTS_RECOVERY_S = 10.0
+    FAULTS_OVERLOAD_RATE = 6.0    # experiments.rs::FAULTS_OVERLOAD_RATE
+    FAULTS_SLO_TTFT_MS = 40.0     # experiments.rs::FAULTS_SLO_TTFT_MS
+    FAULTS_REPARTITION_RATE = 4.0  # experiments.rs::FAULTS_REPARTITION_RATE
+    FAULTS_SHORT_DURATION = 40.0
+
+    def reuse_kwargs(label):
+        return {
+            "off": {},
+            "delta": {"decode_reuse": True},
+            "delta+relay": {"decode_reuse": True, "relay": True},
+            "delta+relay+fork": {"decode_reuse": True, "relay": True, "fork": True},
+        }[label]
+
+    fault_scenarios = []
+    fault_traces = {}
+
+    def run_faults(name, wl, rate, duration, seed, reuse, faults,
+                   control_plane="static", slo_ttft_ms=500.0,
+                   max_decode_batch=None, link_contended=False):
+        spec = WORKLOADS[wl]
+        tkey = f"{wl}-r{rate}-d{duration}-s{seed}"
+        if tkey not in fault_traces:
+            tr = generate_trace(spec, rate, duration, seed)
+            fault_traces[tkey] = {
+                "workload": wl,
+                "rate": rate,
+                "duration_s": duration,
+                "seed": seed,
+                "sessions": len(tr),
+                "calls": sum(len(s["calls"]) for s in tr),
+                "_trace": tr,
+            }
+        tr = fault_traces[tkey]["_trace"]
+        cfg = cluster_config(
+            "prefillshare", spec=spec, link_contended=link_contended,
+            faults=faults, fault_recovery_s=FAULTS_RECOVERY_S,
+            control_plane=control_plane, slo_ttft_ms=slo_ttft_ms,
+            **reuse_kwargs(reuse),
+        )
+        if max_decode_batch is not None:
+            cfg["max_decode_batch"] = max_decode_batch
+        sim = Simulator(cfg, tr)
+        counters, floats, extra, dag = sim.run()
+        fc = sim.fault_counters
+        fr = sim.forkrelay
+        # Six-channel conservation: every sized context token is shipped,
+        # gpu-reused, host-reloaded, forked, relayed or lost — per class
+        # and in total (demand is re-posted for every re-issued call, so
+        # the target is the audit ledger, not the static trace demand).
+        demand_by_class = sim.audit_demand
+        demand = sum(demand_by_class.values())
+        demand_list = []
+        for c, v in sorted(demand_by_class.items()):
+            while len(demand_list) <= c:
+                demand_list.append(0)
+            demand_list[c] = v
+        covered = (
+            counters["handoff_tokens"]
+            + counters["decode_reuse_tokens"]
+            + counters["host_reload_tokens"]
+            + fr["forked_tokens"]
+            + fr["relayed_tokens"]
+            + fc["lost_tokens"]
+        )
+        assert covered == demand, (name, "six-channel accounting", covered, demand)
+        for c, want in demand_by_class.items():
+            got = (
+                pad_get(sim.by_class["handoff_tokens"], c)
+                + pad_get(sim.by_class["decode_reuse_tokens"], c)
+                + pad_get(sim.by_class["host_reload_tokens"], c)
+                + pad_get(sim.forkrelay_by_class["forked_tokens"], c)
+                + pad_get(sim.forkrelay_by_class["relayed_tokens"], c)
+                + pad_get(sim.lost_by_class, c)
+            )
+            assert got == want, (name, "class", c, "six-channel accounting")
+        # Lost is a crash-only channel; shed is an slo-shed-only outcome.
+        if not any(f["kind"] == "crash" for f in faults):
+            assert fc["lost_tokens"] == 0, (name, fc)
+            assert fc["recovery_events"] == 0, (name, fc)
+        if control_plane != "slo-shed":
+            assert fc["shed_requests"] == 0, (name, fc)
+        if control_plane != "repartition":
+            assert fc["repartition_events"] == 0, (name, fc)
+        # Every non-shed session still completes: crashes tear calls down
+        # but re-issue recovers each one.
+        assert counters["sessions_completed"] == len(tr) - fc["shed_requests"], (
+            name, counters["sessions_completed"], len(tr), fc)
+        fault_scenarios.append(
+            {
+                "name": name,
+                "workload": wl,
+                "rate": rate,
+                "duration_s": duration,
+                "seed": seed,
+                "reuse": reuse,
+                "link_contended": link_contended,
+                "control_plane": control_plane,
+                "slo_ttft_ms": slo_ttft_ms,
+                "fault_recovery_s": FAULTS_RECOVERY_S,
+                "max_decode_batch": cfg["max_decode_batch"],
+                "faults": [dict(f) for f in faults],
+                "counters": {
+                    **counters, **fr, **fc,
+                    "lost_tokens_by_class": list(sim.lost_by_class),
+                    "ctx_demand_tokens": demand,
+                    "ctx_demand_tokens_by_class": demand_list,
+                },
+                "floats": {**floats, **extra, **dag, **sim.fault_floats},
+            }
+        )
+        print(
+            f"  {name}: lost {fc['lost_tokens']}, shed {fc['shed_requests']}, "
+            f"recoveries {fc['recovery_events']} "
+            f"(mean {sim.fault_floats['recovery_mean_s']:.2f}s), "
+            f"goodput {sim.fault_floats['goodput_tok_s']:.0f} tok/s"
+        )
+        return fault_scenarios[-1]
+
+    # Clean reference run for the degradation-direction asserts below.
+    clean = run_faults("clean-baseline", "react", GOLDEN_RATE, GOLDEN_DURATION,
+                       GOLDEN_TRACE_SEED, "off", [])
+    crash_p = run_faults("crash-prefill", "react", GOLDEN_RATE, GOLDEN_DURATION,
+                         GOLDEN_TRACE_SEED, "off",
+                         [fault("crash", "p", 1, 10.0)])
+    # A prefill crash loses nothing: queued work re-routes pre-handoff.
+    assert crash_p["counters"]["lost_tokens"] == 0, crash_p["counters"]
+    assert crash_p["counters"]["recovery_events"] >= 1, crash_p["counters"]
+
+    crash_d = run_faults("crash-decode", "react", GOLDEN_RATE, GOLDEN_DURATION,
+                         GOLDEN_TRACE_SEED, "delta",
+                         [fault("crash", "d", 0, 15.0)])
+    assert crash_d["counters"]["lost_tokens"] > 0, crash_d["counters"]
+    assert crash_d["counters"]["recovery_events"] >= 1, crash_d["counters"]
+
+    crash_fr = run_faults("crash-decode-forkrelay", "fanout", FORKRELAY_RATE,
+                          GOLDEN_DURATION, 0, "delta+relay+fork",
+                          [fault("crash", "d", 0, 15.0)])
+    assert crash_fr["counters"]["lost_tokens"] > 0, crash_fr["counters"]
+    assert crash_fr["counters"]["forked_tokens"] > 0, crash_fr["counters"]
+    assert crash_fr["counters"]["relayed_tokens"] > 0, crash_fr["counters"]
+
+    link_deg = run_faults("link-degrade", "react", GOLDEN_RATE, GOLDEN_DURATION,
+                          GOLDEN_TRACE_SEED, "off",
+                          [fault("link", "l", 0, 5.0, 40.0, 8.0)],
+                          link_contended=True)
+    link_clean = run_faults("link-clean", "react", GOLDEN_RATE, GOLDEN_DURATION,
+                            GOLDEN_TRACE_SEED, "off", [], link_contended=True)
+    assert (
+        link_deg["floats"]["handoff_link_wait_mean"]
+        > link_clean["floats"]["handoff_link_wait_mean"]
+    ), "a degraded link must queue handoffs it would otherwise absorb"
+
+    strag_p = run_faults("straggler-prefill", "react", GOLDEN_RATE, GOLDEN_DURATION,
+                         GOLDEN_TRACE_SEED, "off",
+                         [fault("straggler", "p", 0, 5.0, 40.0, 2.5)])
+    strag_d = run_faults("straggler-decode", "react", GOLDEN_RATE, GOLDEN_DURATION,
+                         GOLDEN_TRACE_SEED, "off",
+                         [fault("straggler", "d", 1, 5.0, 40.0, 3.0)])
+    for s in (strag_p, strag_d):
+        assert s["floats"]["p95_session_latency"] > clean["floats"]["p95_session_latency"], (
+            s["name"], "a straggler window must stretch tail latency")
+
+    # SLO control plane under overload: the slo-shed plane trades shed
+    # sessions for a strictly better served-TTFT tail (the `faults`
+    # experiment's pinned acceptance direction).
+    ov_static = run_faults("overload-static", "react", FAULTS_OVERLOAD_RATE,
+                           FAULTS_SHORT_DURATION, GOLDEN_TRACE_SEED, "off", [],
+                           control_plane="static", slo_ttft_ms=FAULTS_SLO_TTFT_MS)
+    ov_shed = run_faults("overload-slo-shed", "react", FAULTS_OVERLOAD_RATE,
+                         FAULTS_SHORT_DURATION, GOLDEN_TRACE_SEED, "off", [],
+                         control_plane="slo-shed", slo_ttft_ms=FAULTS_SLO_TTFT_MS)
+    assert ov_shed["counters"]["shed_requests"] > 0, ov_shed["counters"]
+    assert (
+        ov_shed["floats"]["ttft_p95"] < ov_static["floats"]["ttft_p95"]
+    ), ("slo-shed must strictly improve p95 TTFT at the pinned overload point",
+        ov_shed["floats"]["ttft_p95"], ov_static["floats"]["ttft_p95"])
+
+    repart = run_faults("repartition", "react", FAULTS_REPARTITION_RATE,
+                        FAULTS_SHORT_DURATION, GOLDEN_TRACE_SEED, "off", [],
+                        control_plane="repartition", max_decode_batch=1)
+    assert repart["counters"]["repartition_events"] >= 1, repart["counters"]
+
+    # `--faults random`: the sampled schedule is a pure function of
+    # (k, topology, duration, seed) — pin it field-for-field and run it.
+    rnd = sample_random(3, 4, 4, GOLDEN_DURATION, 7)
+    assert rnd == sample_random(3, 4, 4, GOLDEN_DURATION, 7), "sampler must be deterministic"
+    run_faults("random-faults", "react", GOLDEN_RATE, GOLDEN_DURATION,
+               GOLDEN_TRACE_SEED, "delta", rnd)
+
+    for t in fault_traces.values():
+        del t["_trace"]
+    faults_fixture = {
+        "description": "Golden failure-injection + SLO control-plane metrics: "
+        "prefill/decode crashes (epoch-guarded teardown and re-issue), handoff-"
+        "link degradation windows, straggler GPUs, the slo-shed and repartition "
+        "control planes, the six-channel conservation identity shipped + reused "
+        "+ reloaded + forked + relayed + lost == sized context demand, recovery "
+        "time and goodput-under-failure, plus the `--faults random` schedule "
+        "sampler; generated by gen_golden.py (bit-faithful port of the rust "
+        "simulator). Counters compare exactly, floats to 1e-6 relative "
+        "tolerance.",
+        "traces": fault_traces,
+        "random_schedule": {
+            "k": 3,
+            "n_prefill": 4,
+            "n_decode": 4,
+            "duration_s": GOLDEN_DURATION,
+            "seed": 7,
+            "faults": rnd,
+        },
+        "scenarios": fault_scenarios,
+    }
+    write_fixture("golden_faults.json", faults_fixture)
 
 
 if __name__ == "__main__":
